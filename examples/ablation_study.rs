@@ -1,0 +1,75 @@
+//! Ablation study over the design choices DESIGN.md calls out:
+//! - streaming granularity (per-expert chunks vs whole-cluster loads)
+//! - switch in-network aggregation factor
+//! - group DRAM concurrency
+//! - a2a/stream link sharing (occupancy)
+//!
+//! Each row re-simulates Mozart-C on Qwen3 (seq 256, HBM2) with one knob
+//! moved, quantifying its contribution — the evidence behind the paper's
+//! Q2 answer.
+//!
+//! Run: cargo run --release --example ablation_study
+
+use mozart::config::{DramKind, Method, ModelId};
+use mozart::coordinator::sweep::{cell_config, Cell};
+
+fn run_with(
+    label: &str,
+    base_latency: Option<f64>,
+    tweak: impl Fn(&mut mozart::config::ExperimentConfig),
+) -> f64 {
+    let cell = Cell {
+        model: ModelId::Qwen3_30B_A3B,
+        method: Method::MozartC,
+        seq_len: 256,
+        dram: DramKind::Hbm2,
+    };
+    let mut cfg = cell_config(cell, 2, 7);
+    tweak(&mut cfg);
+    let r = mozart::coordinator::run_experiment(&cfg);
+    match base_latency {
+        None => println!("{label:<46} {:.3} s/step (reference)", r.latency),
+        Some(b) => println!(
+            "{label:<46} {:.3} s/step ({:+.1}%)",
+            r.latency,
+            (r.latency / b - 1.0) * 100.0
+        ),
+    }
+    r.latency
+}
+
+fn main() {
+    println!("ablation: Mozart-C, Qwen3-30B-A3B, seq 256, HBM2\n");
+    let base = run_with("calibrated configuration", None, |_| {});
+
+    run_with("no switch in-network aggregation (agg=1)", Some(base), |c| {
+        c.hw.knobs.switch_agg_factor = 1.0;
+    });
+    run_with("stronger aggregation (agg=4)", Some(base), |c| {
+        c.hw.knobs.switch_agg_factor = 4.0;
+    });
+    run_with("single-stream group DRAM (concurrency=1)", Some(base), |c| {
+        c.hw.knobs.group_concurrency = 1;
+    });
+    run_with("fully parallel group DRAM (concurrency=4)", Some(base), |c| {
+        c.hw.knobs.group_concurrency = 4;
+    });
+    run_with("a2a monopolizes chiplet links (occ=1.0)", Some(base), |c| {
+        c.hw.knobs.a2a_link_occupancy = 1.0;
+    });
+    run_with("a2a on dedicated links (occ=0.0)", Some(base), |c| {
+        c.hw.knobs.a2a_link_occupancy = 0.0;
+    });
+    run_with("2x chunk overhead (coarser streaming)", Some(base), |c| {
+        c.hw.knobs.chunk_overhead_us *= 2.0;
+    });
+    run_with("heavier optimizer traffic (opt=4x)", Some(base), |c| {
+        c.hw.knobs.opt_traffic_factor = 4.0;
+    });
+    run_with("micro-batch 16 (coarser token streaming)", Some(base), |c| {
+        c.micro_batch = 16;
+    });
+    run_with("micro-batch 4 (finer token streaming)", Some(base), |c| {
+        c.micro_batch = 4;
+    });
+}

@@ -1,0 +1,147 @@
+//! Calibration harness: grid-search the simulator's free knobs against the
+//! paper's anchors (baseline Qwen3 seq-256 HBM2 = 4.87 s; Table 4
+//! normalized latencies for Mozart-A/B/C on all three models).
+//!
+//! Routing workloads are sampled once per (model, method) — they do not
+//! depend on the knobs — so the search only re-plans and re-simulates.
+//!
+//! Run: `cargo run --release --example calibrate [-- --fine]`
+
+use mozart::config::{DramKind, ExperimentConfig, HwConfig, Method, ModelConfig, ModelId};
+use mozart::coordinator::layouts_for;
+use mozart::pipeline::{build_step_plan, StepInputs, StepWorkload};
+use mozart::sim::Simulator;
+use mozart::trace::TraceGen;
+use mozart::util::rng::Rng;
+
+struct Prepared {
+    cfg: ExperimentConfig,
+    layouts: Vec<mozart::allocation::ExpertLayout>,
+    workload: StepWorkload,
+}
+
+fn prepare(model: ModelId, method: Method, seed: u64) -> Prepared {
+    let m = ModelConfig::preset(model);
+    let mut cfg = ExperimentConfig::paper_default(m, method.config());
+    cfg.hw = HwConfig::paper_for_model(model, DramKind::Hbm2);
+    cfg.seed = seed;
+    let gen = TraceGen::for_model(&cfg.model, cfg.seed);
+    let layouts = layouts_for(&cfg, &gen);
+    let mut rng = Rng::new(seed ^ 0x5EED).fork(0);
+    let workload =
+        StepWorkload::sample(&cfg, &gen, &layouts, cfg.method.efficient_a2a, &mut rng);
+    Prepared {
+        cfg,
+        layouts,
+        workload,
+    }
+}
+
+fn latency(p: &Prepared, knobs: &mozart::config::CalibrationKnobs) -> f64 {
+    let mut cfg = p.cfg.clone();
+    cfg.hw.knobs = knobs.clone();
+    let plan = build_step_plan(&StepInputs {
+        cfg: &cfg,
+        layouts: &p.layouts,
+        workload: &p.workload,
+    });
+    Simulator::run(&plan).makespan
+}
+
+fn main() {
+    let fine = std::env::args().any(|a| a == "--fine");
+    // paper anchors: normalized latency A/B/C per model + qwen3 baseline abs
+    let anchors: [(ModelId, [f64; 3]); 3] = [
+        (ModelId::Qwen3_30B_A3B, [0.73, 0.59, 0.52]),
+        (ModelId::OlmoE_1B_7B, [0.63, 0.48, 0.422]),
+        (ModelId::DeepSeekMoE_16B, [0.67, 0.56, 0.46]),
+    ];
+    let methods = Method::ALL;
+
+    eprintln!("preparing workloads (sampled once per model x method)...");
+    let prepared: Vec<Vec<Prepared>> = anchors
+        .iter()
+        .map(|(model, _)| {
+            methods
+                .iter()
+                .map(|&meth| prepare(*model, meth, 7))
+                .collect()
+        })
+        .collect();
+
+    let occs: &[f64] = if fine {
+        &[0.2, 0.3, 0.35, 0.4, 0.45]
+    } else {
+        &[0.0, 0.1, 0.2, 0.35]
+    };
+    let aggs: &[f64] = if fine {
+        &[1.3, 1.45, 1.6, 1.8, 2.0]
+    } else {
+        &[1.0, 1.3, 1.6, 2.4, 3.2]
+    };
+    let opts: &[f64] = if fine {
+        &[0.75, 1.0, 1.25, 1.5]
+    } else {
+        &[0.25, 0.5, 1.0]
+    };
+    let effs: &[f64] = if fine {
+        &[0.36, 0.38, 0.4, 0.42, 0.44]
+    } else {
+        &[0.40, 0.44, 0.5, 0.56]
+    };
+    let concs: &[usize] = if fine { &[3, 4, 5] } else { &[2, 4, 6] };
+
+    let mut best_err = f64::INFINITY;
+    let mut best = mozart::config::CalibrationKnobs::default();
+    for &conc in concs {
+        for &occ in occs {
+            for &agg in aggs {
+                for &opt in opts {
+                    for &eff in effs {
+                        let mut k = mozart::config::CalibrationKnobs::default();
+                        k.group_concurrency = conc;
+                        k.a2a_link_occupancy = occ;
+                        k.switch_agg_factor = agg;
+                        k.opt_traffic_factor = opt;
+                        k.nop_eff = eff;
+                        let mut err = 0.0;
+                        for (mi, (_, norms)) in anchors.iter().enumerate() {
+                            let base = latency(&prepared[mi][0], &k);
+                            if mi == 0 {
+                                err += ((base - 4.87) / 4.87).powi(2);
+                            }
+                            for (j, &paper_norm) in norms.iter().enumerate() {
+                                let lat = latency(&prepared[mi][j + 1], &k);
+                                err += (lat / base - paper_norm).powi(2);
+                            }
+                        }
+                        if err < best_err {
+                            best_err = err;
+                            best = k.clone();
+                            eprintln!(
+                                "err={err:.4} conc={conc} occ={occ} agg={agg} opt={opt} nop_eff={eff}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    println!("\nbest knobs: {best:?} (err {best_err:.4})");
+    println!("\nfit with best knobs:");
+    println!("model, method, norm_sim, norm_paper, abs_sim");
+    for (mi, (model, norms)) in anchors.iter().enumerate() {
+        let base = latency(&prepared[mi][0], &best);
+        println!("{}, Baseline, 1.000, 1.000, {base:.3}", model.name());
+        for (j, &paper_norm) in norms.iter().enumerate() {
+            let lat = latency(&prepared[mi][j + 1], &best);
+            println!(
+                "{}, {}, {:.3}, {paper_norm:.3}, {lat:.3}",
+                model.name(),
+                methods[j + 1].name(),
+                lat / base
+            );
+        }
+    }
+}

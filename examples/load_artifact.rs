@@ -1,0 +1,73 @@
+//! Debug/utility example: load, compile, and optionally execute one HLO-text
+//! artifact. Usage:
+//!   cargo run --release --example load_artifact -- <path> [--run-init]
+
+use anyhow::Result;
+use mozart::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let path = args.first().expect("usage: load_artifact <path> [--run-init]");
+    let rt = Runtime::cpu()?;
+    eprintln!("parsing + compiling {path} ...");
+    let exe = rt.load_hlo_text(path)?;
+    eprintln!("compiled OK: {}", exe.name());
+    if args.iter().any(|a| a == "--run-init") {
+        eprintln!("executing with no args ...");
+        let outs = exe.run(&[])?;
+        eprintln!("executed OK: {} outputs", outs.len());
+    }
+    if args.iter().any(|a| a == "--run-step") {
+        // init -> step smoke with host literals (no device buffers)
+        let init = rt.load_hlo_text("artifacts/tiny_moe_init.hlo.txt")?;
+        let state = init.run(&[])?;
+        eprintln!("init gave {} state arrays", state.len());
+        let meta = mozart::train::ArtifactMeta::load("artifacts")?;
+        let mut corpus = mozart::train::data::Corpus::new(meta.vocab, 1);
+        let (tok, tgt) = corpus.batch(meta.batch, meta.seq);
+        let mut lits = state;
+        lits.push(
+            xla::Literal::vec1(&tok).reshape(&[meta.batch as i64, meta.seq as i64])?,
+        );
+        lits.push(
+            xla::Literal::vec1(&tgt).reshape(&[meta.batch as i64, meta.seq as i64])?,
+        );
+        eprintln!("executing step with {} literal args ...", lits.len());
+        let outs = exe.run(&lits)?;
+        eprintln!("executed OK: {} outputs", outs.len());
+        let loss = outs[outs.len() - 2].get_first_element::<f32>()?;
+        eprintln!("loss = {loss}");
+    }
+    if args.iter().any(|a| a == "--run-step-b") {
+        // same but through device buffers (the trainer's hot path)
+        let init = rt.load_hlo_text("artifacts/tiny_moe_init.hlo.txt")?;
+        let state = init.run(&[])?;
+        eprintln!("init gave {} state arrays", state.len());
+        let meta = mozart::train::ArtifactMeta::load("artifacts")?;
+        let mut corpus = mozart::train::data::Corpus::new(meta.vocab, 1);
+        let mut params: Vec<xla::PjRtBuffer> = state
+            .iter()
+            .map(|l| rt.to_device(l))
+            .collect::<Result<_>>()?;
+        for s in 0..3 {
+            let (tok, tgt) = corpus.batch(meta.batch, meta.seq);
+            let tok_lit =
+                xla::Literal::vec1(&tok).reshape(&[meta.batch as i64, meta.seq as i64])?;
+            let tgt_lit =
+                xla::Literal::vec1(&tgt).reshape(&[meta.batch as i64, meta.seq as i64])?;
+            let mut bufs = params;
+            bufs.push(rt.to_device(&tok_lit)?);
+            bufs.push(rt.to_device(&tgt_lit)?);
+            eprintln!("step {s}: executing with {} buffers ...", bufs.len());
+            let mut outs = exe.run_b(&bufs)?;
+            eprintln!("step {s}: got {} outputs", outs.len());
+            let counts = outs.pop().unwrap();
+            let loss = outs.pop().unwrap();
+            params = outs;
+            let l = loss.to_literal_sync()?.get_first_element::<f32>()?;
+            let _ = counts.to_literal_sync()?;
+            eprintln!("step {s}: loss = {l}");
+        }
+    }
+    Ok(())
+}

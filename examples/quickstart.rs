@@ -1,0 +1,85 @@
+//! Quickstart: the full Mozart algorithm pipeline on one model, in six
+//! steps — profile the routing prior, cluster the experts (Algorithm 1),
+//! allocate clusters to chiplet groups (Eq. 5), measure the all-to-all
+//! complexity C_T, and simulate Baseline vs Mozart-C end-to-end.
+//!
+//! Run: cargo run --release --example quickstart
+
+use mozart::allocation::ExpertLayout;
+use mozart::comm::A2aStats;
+use mozart::config::{DramKind, ExperimentConfig, Method, ModelConfig, ModelId};
+use mozart::coordinator::sweep::{cell_config, Cell};
+use mozart::trace::{Priors, TraceGen};
+use mozart::util::rng::Rng;
+
+fn main() {
+    let model = ModelConfig::preset(ModelId::OlmoE_1B_7B);
+    println!(
+        "model: {} — {} experts, top-{}, {} MoE layers\n",
+        model.id.name(),
+        model.n_experts,
+        model.top_k,
+        model.n_moe_layers()
+    );
+
+    // 1. profile the routing prior (paper §3.2: prefill an instruction set)
+    let gen = TraceGen::for_model(&model, 7);
+    let mut rng = Rng::new(8);
+    let trace = gen.sample_layer(0, 8_192, &mut rng);
+    let priors = Priors::from_trace(&trace);
+    let hottest = priors.hottest_pair();
+    println!("1. profiled 8192 tokens: hottest co-activated pair = {hottest:?}");
+
+    // 2. Algorithm 1 clustering
+    let clustering = mozart::clustering::cluster_experts(&priors, 16);
+    println!(
+        "2. clustered {} experts into 16 clusters: intra-collab {:.4} (contiguous: {:.4})",
+        model.n_experts,
+        clustering.intra_collab(&priors),
+        mozart::clustering::Clustering::contiguous(model.n_experts, 16).intra_collab(&priors)
+    );
+
+    // 3. Eq. 5 allocation
+    let workloads = clustering.cluster_workloads(&priors);
+    let allocation = mozart::allocation::allocate(&workloads, 4);
+    println!(
+        "3. allocated clusters to 4 groups: per-group workload {:?}",
+        allocation
+            .group_workloads(&workloads)
+            .iter()
+            .map(|w| format!("{w:.4}"))
+            .collect::<Vec<_>>()
+    );
+
+    // 4. C_T under both layouts (paper §3.3)
+    let mozart_layout = ExpertLayout::new(clustering, allocation, 4);
+    let contiguous = ExpertLayout::contiguous(model.n_experts, 16, 4);
+    let mut rng2 = Rng::new(9);
+    let fresh = gen.sample_layer(0, 8_192, &mut rng2);
+    let ct_cont = A2aStats::evaluate(&fresh, &contiguous, true).c_t;
+    let ct_mozart = A2aStats::evaluate(&fresh, &mozart_layout, true).c_t;
+    println!(
+        "4. all-to-all complexity C_T: k={} -> contiguous {:.2} -> clustered {:.2}",
+        model.top_k, ct_cont, ct_mozart
+    );
+
+    // 5+6. end-to-end simulation, Baseline vs Mozart-C
+    for method in [Method::Baseline, Method::MozartC] {
+        let cell = Cell {
+            model: ModelId::OlmoE_1B_7B,
+            method,
+            seq_len: 256,
+            dram: DramKind::Hbm2,
+        };
+        let cfg: ExperimentConfig = cell_config(cell, 2, 7);
+        let r = mozart::coordinator::run_experiment(&cfg);
+        println!(
+            "5. simulate {:<9}: {:.3} s/step   C_T {:.2}   energy {:.0} J/step",
+            method.name(),
+            r.latency,
+            r.c_t,
+            r.energy.total_j()
+        );
+    }
+    println!("\ndone — see `mozart report all` for every paper table/figure");
+}

@@ -1,0 +1,39 @@
+//! End-to-end driver (session requirement): train a real MoE transformer
+//! for a few hundred steps through the full three-layer stack — Pallas
+//! kernels (L1) lowered inside the JAX model (L2) into an HLO artifact the
+//! rust coordinator (L3) executes via PJRT — on a synthetic bigram corpus,
+//! logging the loss curve and capturing the real routing prior.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example train_tiny_moe -- [steps]
+
+use mozart::train::{run, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let steps = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let cfg = TrainConfig {
+        artifacts_dir: "artifacts".to_string(),
+        steps,
+        log_every: (steps / 20).max(1),
+        seed: 7,
+    };
+    let summary = run(&cfg)?;
+    println!("{}", summary.render());
+
+    // the real routing prior captured from training (paper §3.2 Eq. 3)
+    let v = summary.workload_vectors();
+    println!("real per-layer expert workload vectors (Eq. 3), layer 0:");
+    for (e, w) in v[0].iter().enumerate() {
+        println!("  expert {e:>2}: {:.4} {}", w, "#".repeat((w * 400.0) as usize));
+    }
+    let max = v[0].iter().cloned().fold(0.0f64, f64::max);
+    let min = v[0].iter().cloned().fold(1.0f64, f64::min);
+    println!(
+        "specialization emerges even in a tiny model: max/min workload = {:.2}x",
+        max / min.max(1e-9)
+    );
+    Ok(())
+}

@@ -1,0 +1,94 @@
+"""AOT lowering: JAX/Pallas model -> HLO *text* artifacts for the rust
+runtime. Python runs once here and never on the request path.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the published xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts [--report-vmem]
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.moe_ffn import vmem_report
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (with return_tuple=True, so
+    the rust side unpacks one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_init(cfg: model.TinyMoEConfig) -> str:
+    def init():
+        return tuple(model.init_state(cfg, seed=0))
+
+    return to_hlo_text(jax.jit(init).lower())
+
+
+def lower_step(cfg: model.TinyMoEConfig) -> str:
+    state = model.init_state(cfg, seed=0)
+    spec = [jax.ShapeDtypeStruct(s.shape, s.dtype) for s in state]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), "int32")
+
+    def step(*args):
+        return model.train_step(cfg, *args)
+
+    return to_hlo_text(jax.jit(step).lower(*spec, tok, tok))
+
+
+def write_meta(cfg: model.TinyMoEConfig, path: str) -> None:
+    with open(path, "w") as f:
+        f.write("# artifact metadata (KvConfig format, read by rust/src/train)\n")
+        f.write(f"n_params = {model.n_state_arrays(cfg)}\n")
+        f.write(f"batch = {cfg.batch}\n")
+        f.write(f"seq = {cfg.seq}\n")
+        f.write(f"vocab = {cfg.vocab}\n")
+        f.write(f"n_layers = {cfg.n_layers}\n")
+        f.write(f"n_experts = {cfg.n_experts}\n")
+        f.write(f"top_k = {cfg.top_k}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--report-vmem", action="store_true",
+                    help="print the L1 kernel's VMEM/MXU estimate and exit")
+    args = ap.parse_args()
+
+    cfg = model.TinyMoEConfig()
+    if args.report_vmem:
+        rep = vmem_report(cfg.n_experts, cfg.capacity, cfg.hidden,
+                          cfg.expert_intermediate)
+        for k, v in rep.items():
+            print(f"{k}: {v}")
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    init_hlo = lower_init(cfg)
+    with open(os.path.join(args.out_dir, "tiny_moe_init.hlo.txt"), "w") as f:
+        f.write(init_hlo)
+    print(f"wrote tiny_moe_init.hlo.txt ({len(init_hlo)} chars)")
+
+    step_hlo = lower_step(cfg)
+    with open(os.path.join(args.out_dir, "tiny_moe_step.hlo.txt"), "w") as f:
+        f.write(step_hlo)
+    print(f"wrote tiny_moe_step.hlo.txt ({len(step_hlo)} chars)")
+
+    write_meta(cfg, os.path.join(args.out_dir, "tiny_moe_meta.kv"))
+    print("wrote tiny_moe_meta.kv")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: causal self-attention for one (batch, head) slab.
+
+One grid step computes softmax(q k^T / sqrt(d) + causal) v for a whole
+[T, d] head. The tiny end-to-end model uses short sequences, so one block
+holds the full head in VMEM; the BlockSpec still expresses the HBM->VMEM
+schedule per (batch*head) grid step (the attention chiplet's SRAM residency
+in the paper's architecture).
+
+interpret=True for the same reason as moe_ffn: CPU PJRT cannot run Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0]  # [T, d]
+    k = k_ref[0]
+    v = v_ref[0]
+    t, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # causal mask
+    row = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    scores = jnp.where(col <= row, scores, -1e30)
+    # numerically-stable softmax
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _attn_bwd_kernel(q_ref, k_ref, v_ref, dy_ref, dq_ref, dk_ref, dv_ref):
+    """Backward of one head's causal attention (recomputes the probability
+    matrix, flash-style)."""
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    dy = dy_ref[0]
+    t, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    row = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    scores = jnp.where(col <= row, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    dv = jnp.dot(p.T, dy, preferred_element_type=jnp.float32)
+    dp = jnp.dot(dy, v.T, preferred_element_type=jnp.float32)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.dot(ds, k, preferred_element_type=jnp.float32) * scale
+    dk = jnp.dot(ds.T, q, preferred_element_type=jnp.float32) * scale
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _attention(q, k, v, interpret):
+    return _attention_fwd_call(q, k, v, interpret)
+
+
+def _attention_fwd_call(q, k, v, interpret):
+    bh, t, d = q.shape
+    spec = pl.BlockSpec((1, t, d), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(bh,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _attention_fwd(q, k, v, interpret):
+    return _attention_fwd_call(q, k, v, interpret), (q, k, v)
+
+
+def _attention_bwd(interpret, res, dy):
+    q, k, v = res
+    bh, t, d = q.shape
+    spec = pl.BlockSpec((1, t, d), lambda i: (i, 0, 0))
+    dq, dk, dv = pl.pallas_call(
+        _attn_bwd_kernel,
+        grid=(bh,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, t, d), k.dtype),
+            jax.ShapeDtypeStruct((bh, t, d), v.dtype),
+        ],
+        interpret=interpret,
+    )(q, k, v, dy)
+    return dq, dk, dv
+
+
+_attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def causal_attention(q, k, v, *, interpret=True):
+    """Multi-head causal attention.
+
+    Args:
+      q, k, v: [BH, T, d] (batch*heads merged in the leading dim).
+    Returns:
+      o: [BH, T, d]
+    """
+    bh, t, d = q.shape
+    assert k.shape == (bh, t, d) and v.shape == (bh, t, d)
+    return _attention(q, k, v, interpret)

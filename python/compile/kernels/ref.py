@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package must match its oracle to numerical tolerance
+across shapes and dtypes (see python/tests/test_kernels.py, which sweeps
+them with hypothesis).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn_ref(x, w_gate, w_up, w_down):
+    """Reference grouped expert FFN: y[e] = silu(x@wg) * (x@wu) @ wd."""
+    g = jnp.einsum("ech,ehi->eci", x, w_gate)
+    u = jnp.einsum("ech,ehi->eci", x, w_up)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("eci,eih->ech", h, w_down).astype(x.dtype)
+
+
+def causal_attention_ref(q, k, v):
+    """Reference causal attention over [BH, T, d]."""
+    t = q.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("btd,bsd->bts", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v).astype(q.dtype)

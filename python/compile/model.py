@@ -1,0 +1,207 @@
+"""L2: the tiny MoE decoder transformer in JAX (build-time only).
+
+Mirrors the rust `ModelConfig::TinyMoE` preset: vocab 512, hidden 128,
+4 layers, 4 heads (head_dim 32), 16 routed experts, top-2 routing, expert
+intermediate 256. Capacity-based dispatch (GShard-style) keeps the dispatch
+dense and Pallas-friendly; dropped-token fraction is negligible at capacity
+factor 2 and is reported by the router stats anyway.
+
+Calls the L1 Pallas kernels (`kernels.moe_ffn`, `kernels.attention`) inside
+the forward pass so they lower into the same HLO artifact the rust runtime
+executes. Adam is the optimizer; the full training state (params + both
+moments + step counter) is threaded through `train_step` so the rust side
+can keep everything on device between steps.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import causal_attention
+from compile.kernels.moe_ffn import moe_ffn
+
+
+@dataclass(frozen=True)
+class TinyMoEConfig:
+    vocab: int = 512
+    hidden: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32
+    n_experts: int = 16
+    top_k: int = 2
+    expert_intermediate: int = 256
+    batch: int = 4
+    seq: int = 64
+    capacity_factor: float = 2.0
+    lr: float = 3e-3
+    adam_b1: float = 0.9
+    adam_b2: float = 0.99
+    adam_eps: float = 1e-8
+
+    @property
+    def capacity(self) -> int:
+        tokens = self.batch * self.seq
+        return int(self.capacity_factor * tokens * self.top_k / self.n_experts)
+
+
+# parameter tree is a flat, ordered list of named arrays so the AOT artifact
+# has a stable, documented calling convention for the rust runtime
+PARAM_NAMES = [
+    "embed",      # [V, H]
+    "wq", "wk", "wv", "wo",   # [L, H, H] each
+    "router",     # [L, H, E]
+    "w_gate", "w_up",         # [L, E, H, I]
+    "w_down",     # [L, E, I, H]
+    "norm_attn", "norm_moe",  # [L, H]
+    "norm_out",   # [H]
+    "head",       # [H, V]
+]
+
+
+def init_params(cfg: TinyMoEConfig, seed: int = 0):
+    """Deterministic parameter init; returns the ordered param list."""
+    k = jax.random.split(jax.random.PRNGKey(seed), 16)
+    h, v, l, e, i = cfg.hidden, cfg.vocab, cfg.n_layers, cfg.n_experts, cfg.expert_intermediate
+    s = lambda *dims: (2.0 / sum(dims[-2:])) ** 0.5  # he-ish scale
+
+    def rnd(key, *dims):
+        return jax.random.normal(key, dims, jnp.float32) * s(*dims)
+
+    return [
+        rnd(k[0], v, h),
+        rnd(k[1], l, h, h),
+        rnd(k[2], l, h, h),
+        rnd(k[3], l, h, h),
+        rnd(k[4], l, h, h),
+        rnd(k[5], l, h, e),
+        rnd(k[6], l, e, h, i),
+        rnd(k[7], l, e, h, i),
+        rnd(k[8], l, e, i, h),
+        jnp.ones((l, h), jnp.float32),
+        jnp.ones((l, h), jnp.float32),
+        jnp.ones((h,), jnp.float32),
+        rnd(k[9], h, v),
+    ]
+
+
+def _top_k(x, k):
+    """top-k via iterated argmax: lowers to plain HLO (the xla_extension
+    0.5.1 text parser predates the TopK op's `largest` attribute)."""
+    vals, idxs = [], []
+    cur = x
+    for _ in range(k):
+        i = jnp.argmax(cur, axis=-1)  # [T]
+        v = jnp.take_along_axis(cur, i[:, None], axis=-1)[:, 0]
+        vals.append(v)
+        idxs.append(i)
+        cur = cur - jax.nn.one_hot(i, x.shape[-1], dtype=cur.dtype) * 1e30
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def _rms_norm(x, w):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * w
+
+
+def _moe_layer(cfg: TinyMoEConfig, x, router_w, w_gate, w_up, w_down):
+    """Top-k capacity-dispatch MoE layer; returns (y, per-expert counts)."""
+    t, h = x.shape
+    e, c, k = cfg.n_experts, cfg.capacity, cfg.top_k
+
+    gates = jax.nn.softmax(x @ router_w, axis=-1)  # [T, E]
+    topv, topi = _top_k(gates, k)  # [T, k]
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(topi.reshape(-1), e, dtype=jnp.float32)  # [T*k, E]
+    counts = jnp.sum(onehot, axis=0)  # [E] — the routing prior Eq. 3 feeds on
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos_in_e = jnp.sum(pos * onehot, axis=-1)  # [T*k]
+    keep = (pos_in_e < c).astype(jnp.float32)
+    pos_onehot = jax.nn.one_hot(pos_in_e, c, dtype=jnp.float32)  # [T*k, C]
+    disp = (
+        onehot[:, :, None] * pos_onehot[:, None, :] * keep[:, None, None]
+    ).reshape(t, k, e, c)
+
+    x_e = jnp.einsum("tkec,th->ech", disp, x)
+    y_e = moe_ffn(x_e, w_gate, w_up, w_down)  # L1 Pallas kernel
+    y = jnp.einsum("tkec,ech,tk->th", disp, y_e, topv)
+    return y, counts
+
+
+def forward(cfg: TinyMoEConfig, params, tokens):
+    """Forward pass. tokens: i32 [B, T] -> (logits [B, T, V], counts [L, E])."""
+    (embed, wq, wk, wv, wo, router, w_gate, w_up, w_down,
+     norm_attn, norm_moe, norm_out, head) = params
+    b, t = tokens.shape
+    h, nh, dh = cfg.hidden, cfg.n_heads, cfg.head_dim
+
+    x = embed[tokens]  # [B, T, H]
+    all_counts = []
+    for l in range(cfg.n_layers):
+        # attention (L1 Pallas kernel for the score/value path)
+        xa = _rms_norm(x, norm_attn[l])
+        q = (xa @ wq[l]).reshape(b, t, nh, dh).transpose(0, 2, 1, 3).reshape(b * nh, t, dh)
+        kk = (xa @ wk[l]).reshape(b, t, nh, dh).transpose(0, 2, 1, 3).reshape(b * nh, t, dh)
+        vv = (xa @ wv[l]).reshape(b, t, nh, dh).transpose(0, 2, 1, 3).reshape(b * nh, t, dh)
+        o = causal_attention(q, kk, vv)
+        o = o.reshape(b, nh, t, dh).transpose(0, 2, 1, 3).reshape(b, t, h)
+        x = x + o @ wo[l]
+
+        # MoE FFN
+        xm = _rms_norm(x, norm_moe[l]).reshape(b * t, h)
+        y, counts = _moe_layer(cfg, xm, router[l], w_gate[l], w_up[l], w_down[l])
+        x = x + y.reshape(b, t, h)
+        all_counts.append(counts)
+
+    logits = _rms_norm(x, norm_out) @ head
+    return logits, jnp.stack(all_counts)  # [L, E]
+
+
+def loss_fn(cfg: TinyMoEConfig, params, tokens, targets):
+    logits, counts = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).squeeze(-1)
+    return jnp.mean(nll), counts
+
+
+def init_state(cfg: TinyMoEConfig, seed: int = 0):
+    """Full Adam state: params + first/second moments + step counter."""
+    params = init_params(cfg, seed)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    step = jnp.zeros((), jnp.float32)
+    return params + m + v + [step]
+
+
+def n_state_arrays(cfg: TinyMoEConfig) -> int:
+    return 3 * len(PARAM_NAMES) + 1
+
+
+def train_step(cfg: TinyMoEConfig, *args):
+    """One Adam step.
+
+    args = (*state, tokens, targets) where state is the flat list from
+    `init_state`. Returns (*new_state, loss, router_counts).
+    """
+    n = len(PARAM_NAMES)
+    state, tokens, targets = list(args[:-2]), args[-2], args[-1]
+    params, m, v, step = state[:n], state[n:2 * n], state[2 * n:3 * n], state[3 * n]
+
+    (loss, counts), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, targets), has_aux=True
+    )(params)
+
+    step = step + 1.0
+    b1, b2, eps, lr = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps, cfg.lr
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        mhat = mi / (1 - b1 ** step)
+        vhat = vi / (1 - b2 ** step)
+        new_params.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+
+    return tuple(new_params + new_m + new_v + [step, loss, counts])

@@ -1,0 +1,162 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; fixed-seed numpy provides the data.
+These are the CORE correctness signal for the compute layer — the same
+kernels lower into the AOT artifact the rust runtime executes.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import causal_attention
+from compile.kernels.moe_ffn import moe_ffn, vmem_report
+from compile.kernels.ref import causal_attention_ref, moe_ffn_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+# ---------------- moe_ffn ----------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    e=st.sampled_from([1, 2, 4, 8]),
+    c=st.sampled_from([1, 8, 32, 64]),
+    h=st.sampled_from([8, 32, 128]),
+    i=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moe_ffn_matches_ref(e, c, h, i, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, e, c, h)
+    wg = rand(rng, e, h, i)
+    wu = rand(rng, e, h, i)
+    wd = rand(rng, e, i, h)
+    got = moe_ffn(x, wg, wu, wd)
+    want = moe_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_moe_ffn_dtypes(dtype):
+    # the kernel accumulates in f32 regardless of input dtype, so compare
+    # against the f32 ground truth with a tolerance set by the input dtype's
+    # representational error (the fp16 ref itself rounds per-op and is the
+    # *less* accurate of the two)
+    rng = np.random.default_rng(0)
+    x = rand(rng, 2, 16, 32, dtype=dtype)
+    wg = rand(rng, 2, 32, 64, dtype=dtype)
+    wu = rand(rng, 2, 32, 64, dtype=dtype)
+    wd = rand(rng, 2, 64, 32, dtype=dtype)
+    got = moe_ffn(x, wg, wu, wd)
+    want32 = moe_ffn_ref(
+        x.astype(np.float32), wg.astype(np.float32),
+        wu.astype(np.float32), wd.astype(np.float32),
+    )
+    assert got.dtype == x.dtype
+    scale = float(np.max(np.abs(want32)))
+    tol = 1e-4 if dtype == np.float32 else 5e-3
+    np.testing.assert_allclose(
+        got.astype(np.float32), want32, rtol=2e-2, atol=tol * scale
+    )
+
+
+def test_moe_ffn_experts_are_independent():
+    # zeroing one expert's input must not change another expert's output
+    rng = np.random.default_rng(1)
+    x = rand(rng, 4, 8, 16)
+    wg = rand(rng, 4, 16, 32)
+    wu = rand(rng, 4, 16, 32)
+    wd = rand(rng, 4, 32, 16)
+    base = moe_ffn(x, wg, wu, wd)
+    x2 = x.at[0].set(0.0)
+    out = moe_ffn(x2, wg, wu, wd)
+    np.testing.assert_allclose(out[1:], base[1:], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out[0], base[0])
+
+
+def test_moe_ffn_gradients_match_ref():
+    # custom_vjp backward kernel vs autodiff of the oracle
+    rng = np.random.default_rng(2)
+    x = rand(rng, 2, 8, 16)
+    wg = rand(rng, 2, 16, 32)
+    wu = rand(rng, 2, 16, 32)
+    wd = rand(rng, 2, 32, 16)
+
+    def loss_pallas(*a):
+        return jnp.sum(moe_ffn(*a) ** 2)
+
+    def loss_ref(*a):
+        return jnp.sum(moe_ffn_ref(*a) ** 2)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+
+
+def test_vmem_report_structure():
+    rep = vmem_report(16, 64, 128, 256)
+    assert rep["fits_16mb_vmem"]
+    assert 0.0 < rep["mxu_utilization_est"] <= 1.0
+    assert rep["flops_per_step"] == 2 * 64 * 128 * 256 * 3
+
+
+# ---------------- attention ----------------
+
+@settings(max_examples=16, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2, 8]),
+    t=st.sampled_from([1, 4, 16, 64]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(bh, t, d, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, bh, t, d)
+    k = rand(rng, bh, t, d)
+    v = rand(rng, bh, t, d)
+    got = causal_attention(q, k, v)
+    want = causal_attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_is_causal():
+    # changing future keys/values must not change earlier outputs
+    rng = np.random.default_rng(3)
+    q = rand(rng, 1, 8, 16)
+    k = rand(rng, 1, 8, 16)
+    v = rand(rng, 1, 8, 16)
+    base = causal_attention(q, k, v)
+    k2 = k.at[:, -1].add(10.0)
+    v2 = v.at[:, -1].add(10.0)
+    out = causal_attention(q, k2, v2)
+    np.testing.assert_allclose(out[:, :-1], base[:, :-1], rtol=1e-5, atol=1e-5)
+
+
+def test_attention_first_token_copies_v():
+    # token 0 can only attend to itself -> output == v[0]
+    rng = np.random.default_rng(4)
+    q = rand(rng, 2, 6, 8)
+    k = rand(rng, 2, 6, 8)
+    v = rand(rng, 2, 6, 8)
+    out = causal_attention(q, k, v)
+    np.testing.assert_allclose(out[:, 0], v[:, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_attention_gradients_match_ref():
+    rng = np.random.default_rng(5)
+    q = rand(rng, 2, 8, 16)
+    k = rand(rng, 2, 8, 16)
+    v = rand(rng, 2, 8, 16)
+
+    gp = jax.grad(lambda *a: jnp.sum(causal_attention(*a) ** 2), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda *a: jnp.sum(causal_attention_ref(*a) ** 2), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)

@@ -1,0 +1,84 @@
+"""L2 model tests: shapes, routing invariants, and learning signal."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = model.TinyMoEConfig(
+    vocab=64, hidden=32, n_layers=2, n_heads=2, head_dim=16,
+    n_experts=8, top_k=2, expert_intermediate=64, batch=2, seq=16,
+)
+
+
+def test_init_shapes():
+    params = model.init_params(SMALL)
+    assert len(params) == len(model.PARAM_NAMES)
+    by_name = dict(zip(model.PARAM_NAMES, params))
+    assert by_name["embed"].shape == (64, 32)
+    assert by_name["wq"].shape == (2, 32, 32)
+    assert by_name["router"].shape == (2, 32, 8)
+    assert by_name["w_gate"].shape == (2, 8, 32, 64)
+    assert by_name["w_down"].shape == (2, 8, 64, 32)
+    assert by_name["head"].shape == (32, 64)
+
+
+def test_forward_shapes_and_counts():
+    params = model.init_params(SMALL)
+    tokens = jnp.zeros((SMALL.batch, SMALL.seq), jnp.int32)
+    logits, counts = model.forward(SMALL, params, tokens)
+    assert logits.shape == (SMALL.batch, SMALL.seq, SMALL.vocab)
+    assert counts.shape == (SMALL.n_layers, SMALL.n_experts)
+    # every token picks exactly top_k experts per layer
+    tk = SMALL.batch * SMALL.seq * SMALL.top_k
+    np.testing.assert_allclose(np.asarray(counts).sum(axis=-1), tk)
+
+
+def test_initial_loss_near_uniform():
+    params = model.init_params(SMALL)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, SMALL.vocab, (SMALL.batch, SMALL.seq)), jnp.int32)
+    loss, _ = model.loss_fn(SMALL, params, tokens, tokens)
+    assert abs(float(loss) - np.log(SMALL.vocab)) < 1.0
+
+
+def test_train_step_reduces_loss_on_fixed_batch():
+    state = model.init_state(SMALL, seed=0)
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, SMALL.vocab, (SMALL.batch, SMALL.seq)), jnp.int32)
+    targets = jnp.roll(tokens, -1, axis=1)
+    step = jax.jit(lambda *a: model.train_step(SMALL, *a))
+    first = None
+    for _ in range(8):
+        out = step(*state, tokens, targets)
+        state = list(out[:-2])
+        loss = float(out[-2])
+        if first is None:
+            first = loss
+    assert loss < first, f"{loss} !< {first}"
+
+
+def test_top_k_matches_lax():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    v_ours, i_ours = model._top_k(x, 4)
+    v_lax, i_lax = jax.lax.top_k(x, 4)
+    np.testing.assert_allclose(v_ours, v_lax, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i_ours), np.asarray(i_lax))
+
+
+def test_capacity_drops_are_bounded():
+    # with capacity factor 2 and near-uniform routing at init, drops are rare
+    params = model.init_params(SMALL)
+    rng = np.random.default_rng(3)
+    tokens = jnp.asarray(rng.integers(0, SMALL.vocab, (SMALL.batch, SMALL.seq)), jnp.int32)
+    _, counts = model.forward(SMALL, params, tokens)
+    # no expert can receive more slots than exist
+    assert np.asarray(counts).max() <= SMALL.batch * SMALL.seq * SMALL.top_k
+
+
+def test_n_state_arrays_matches_init():
+    assert len(model.init_state(SMALL)) == model.n_state_arrays(SMALL)

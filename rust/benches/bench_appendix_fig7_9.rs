@@ -1,0 +1,15 @@
+//! Bench for appendix Figures 7/8/9: the full normalized-latency grid at
+//! sequence lengths 128 / 256 / 512.
+use mozart::report::{appendix_fig, ReportOpts};
+use mozart::testkit::bench;
+
+fn main() {
+    let opts = ReportOpts { iters: 1, seed: 7 };
+    for seq in [128usize, 256, 512] {
+        let mut rendered = String::new();
+        bench(&format!("fig{}: full grid seq {seq}", match seq { 128 => 7, 256 => 8, _ => 9 }), 1, || {
+            rendered = appendix_fig(seq, opts);
+        });
+        println!("\n{rendered}");
+    }
+}

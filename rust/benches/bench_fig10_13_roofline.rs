@@ -1,0 +1,12 @@
+//! Bench for appendix Figures 10-13: attention-vs-FFN roofline study over
+//! OLMo-2 scales.
+use mozart::report::fig10_13;
+use mozart::testkit::bench;
+
+fn main() {
+    let mut rendered = String::new();
+    bench("fig10-13: OLMo-2 roofline, 4 scales x 3 seqs", 50, || {
+        rendered = fig10_13();
+    });
+    println!("\n{rendered}");
+}

@@ -1,0 +1,13 @@
+//! Bench for appendix Figures 14-16: GPU power/memory dynamism under 4-way
+//! expert parallelism.
+use mozart::report::{fig14_16, ReportOpts};
+use mozart::testkit::bench;
+
+fn main() {
+    let opts = ReportOpts { iters: 1, seed: 7 };
+    let mut rendered = String::new();
+    bench("fig14-16: 40s EP monitor simulation", 5, || {
+        rendered = fig14_16(opts);
+    });
+    println!("\n{rendered}");
+}

@@ -1,0 +1,11 @@
+//! Bench for paper Figure 1: parameter distribution across module types.
+use mozart::report::fig1;
+use mozart::testkit::bench;
+
+fn main() {
+    let mut rendered = String::new();
+    bench("fig1: parameter distribution", 50, || {
+        rendered = fig1();
+    });
+    println!("\n{rendered}");
+}

@@ -1,0 +1,13 @@
+//! Bench for paper Figure 3: activation-frequency and co-activation priors
+//! (the profiling pass of §3.2).
+use mozart::report::{fig3, ReportOpts};
+use mozart::testkit::bench;
+
+fn main() {
+    let opts = ReportOpts { iters: 1, seed: 7 };
+    let mut rendered = String::new();
+    bench("fig3: 16k-token profiling + priors", 5, || {
+        rendered = fig3(opts);
+    });
+    println!("\n{rendered}");
+}

@@ -1,0 +1,16 @@
+//! Bench for paper Figure 6(b) sequence-length study and 6(c) DRAM study.
+use mozart::report::{fig6b, fig6c, ReportOpts};
+use mozart::testkit::bench;
+
+fn main() {
+    let opts = ReportOpts { iters: 2, seed: 7 };
+    let mut b = String::new();
+    let mut c = String::new();
+    bench("fig6b: seq sweep 128/256/512 x 4 methods", 2, || {
+        b = fig6b(opts);
+    });
+    bench("fig6c: HBM2 vs SSD x 4 methods", 2, || {
+        c = fig6c(opts);
+    });
+    println!("\n{b}\n{c}");
+}

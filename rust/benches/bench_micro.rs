@@ -1,0 +1,62 @@
+//! Micro-benches over the L3 hot paths: trace sampling, prior computation,
+//! clustering, allocation, plan building, and the discrete-event engine.
+//! These are the targets of the EXPERIMENTS.md §Perf iteration log.
+use mozart::allocation::ExpertLayout;
+use mozart::config::{ExperimentConfig, MethodConfig, ModelConfig, ModelId};
+use mozart::coordinator::layouts_for;
+use mozart::pipeline::{build_step_plan, StepInputs, StepWorkload};
+use mozart::sim::Simulator;
+use mozart::testkit::bench;
+use mozart::trace::{Priors, TraceGen};
+use mozart::util::rng::Rng;
+
+fn main() {
+    let model = ModelConfig::preset(ModelId::Qwen3_30B_A3B);
+    let gen = TraceGen::for_model(&model, 7);
+
+    bench("trace: sample_layer 8192 tokens top-8/128", 20, || {
+        let mut rng = Rng::new(3);
+        gen.sample_layer(0, 8192, &mut rng)
+    });
+
+    let mut rng = Rng::new(4);
+    let tr = gen.sample_layer(0, 8192, &mut rng);
+    bench("priors: V + 128x128 co-activation", 20, || {
+        Priors::from_trace(&tr)
+    });
+
+    let priors = Priors::from_trace(&tr);
+    bench("clustering: Algorithm 1, 128 experts -> 16", 20, || {
+        mozart::clustering::cluster_experts(&priors, 16)
+    });
+
+    let clustering = mozart::clustering::cluster_experts(&priors, 16);
+    let workloads = clustering.cluster_workloads(&priors);
+    bench("allocation: exact B&B, 16 clusters -> 4 groups", 20, || {
+        mozart::allocation::allocate(&workloads, 4)
+    });
+
+    let cfg = ExperimentConfig::paper_default(model.clone(), MethodConfig::mozart_c());
+    let layouts = layouts_for(&cfg, &gen);
+    let mut rng = Rng::new(5);
+    let workload = StepWorkload::sample(&cfg, &gen, &layouts, true, &mut rng);
+    bench("workload: full-step sampling (48 layers x 4 mb)", 5, || {
+        let mut r = Rng::new(6);
+        StepWorkload::sample(&cfg, &gen, &layouts, true, &mut r)
+    });
+
+    bench("plan: build step DAG (~60k tasks)", 10, || {
+        build_step_plan(&StepInputs { cfg: &cfg, layouts: &layouts, workload: &workload })
+    });
+
+    let plan = build_step_plan(&StepInputs { cfg: &cfg, layouts: &layouts, workload: &workload });
+    println!("  (plan has {} tasks)", plan.n_tasks());
+    bench("sim: discrete-event engine over the step DAG", 10, || {
+        Simulator::run(&plan)
+    });
+
+    bench("a2a: C_T evaluation, 8192 tokens", 20, || {
+        let layout = ExpertLayout::contiguous(128, 16, 4);
+        mozart::comm::A2aStats::evaluate(&tr, &layout, true)
+    });
+}

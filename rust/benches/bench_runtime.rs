@@ -1,0 +1,30 @@
+//! Runtime benches: PJRT artifact load/compile latency and real train-step
+//! throughput through the three-layer stack (requires `make artifacts`).
+use mozart::testkit::bench;
+use mozart::train::{run, ArtifactMeta, TrainConfig};
+
+fn main() {
+    if ArtifactMeta::load("artifacts").is_err() {
+        eprintln!("skipping runtime bench: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    bench("runtime: load+compile tiny_moe_step HLO", 2, || {
+        let rt = mozart::runtime::Runtime::cpu().unwrap();
+        rt.load_hlo_text("artifacts/tiny_moe_step.hlo.txt").unwrap()
+    });
+    let mut summary = None;
+    bench("runtime: 5 real train steps (B4 x T64)", 2, || {
+        summary = Some(
+            run(&TrainConfig {
+                artifacts_dir: "artifacts".into(),
+                steps: 5,
+                log_every: 5,
+                seed: 7,
+            })
+            .unwrap(),
+        );
+    });
+    if let Some(s) = summary {
+        println!("  throughput: {:.2} steps/s", s.steps_per_sec);
+    }
+}

@@ -1,0 +1,11 @@
+//! Bench for paper Table 2: the analytic 28nm area/power model.
+use mozart::report::table2;
+use mozart::testkit::bench;
+
+fn main() {
+    let mut rendered = String::new();
+    bench("table2: analytic area/power model", 50, || {
+        rendered = table2();
+    });
+    println!("\n{rendered}");
+}

@@ -1,0 +1,14 @@
+//! Bench for paper Table 3 / Figure 6(a): end-to-end latency of all four
+//! methods on all three models (seq 256, HBM2), printing the same rows the
+//! paper reports plus harness timings for the simulation itself.
+use mozart::report::{table3, ReportOpts};
+use mozart::testkit::bench;
+
+fn main() {
+    let opts = ReportOpts { iters: 2, seed: 7 };
+    let mut rendered = String::new();
+    bench("table3: 3 models x 4 methods (2 sim iters)", 3, || {
+        rendered = table3(opts).0;
+    });
+    println!("\n{rendered}");
+}

@@ -1,0 +1,12 @@
+//! Bench for paper Table 4: C_T vs normalized latency across methods.
+use mozart::report::{table4, ReportOpts};
+use mozart::testkit::bench;
+
+fn main() {
+    let opts = ReportOpts { iters: 2, seed: 7 };
+    let mut rendered = String::new();
+    bench("table4: C_T vs normalized latency", 3, || {
+        rendered = table4(opts);
+    });
+    println!("\n{rendered}");
+}

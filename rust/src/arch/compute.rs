@@ -1,0 +1,115 @@
+//! Systolic-array compute-timing model.
+//!
+//! An `s x s` output-stationary systolic array computes a tile of C = A.B by
+//! streaming K partial products: one `s x s` output tile over a reduction
+//! depth K costs ~`K + 2s` cycles (fill + drain). A chiplet schedules output
+//! tiles across its `n_sas` arrays; the per-matmul cycle count is the
+//! critical path over that schedule. This is the same granularity the
+//! paper's cycle-accurate simulator models for QKV projection / expert FFN
+//! mapping onto SA tiles (§4.4 Algorithm-to-Hardware Mapping).
+
+use crate::util::div_ceil;
+
+/// Dense matmul shape: `[m x k] . [k x n]`.
+#[derive(Clone, Copy, Debug)]
+pub struct MatmulShape {
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+}
+
+impl MatmulShape {
+    pub fn flops(&self) -> u64 {
+        2 * self.m * self.k * self.n
+    }
+}
+
+/// Cycles for one matmul on `n_sas` systolic arrays of `sa_dim x sa_dim`
+/// PEs, assuming perfect tile-level parallelism (the paper's local adder
+/// trees aggregate partial sums within a tile).
+pub fn matmul_cycles(shape: MatmulShape, n_sas: u64, sa_dim: u64) -> u64 {
+    if shape.m == 0 || shape.k == 0 || shape.n == 0 {
+        return 0;
+    }
+    let tiles_m = div_ceil(shape.m, sa_dim);
+    let tiles_n = div_ceil(shape.n, sa_dim);
+    let total_tiles = tiles_m * tiles_n;
+    // each output tile costs K (stream) + 2*sa_dim (fill/drain)
+    let cycles_per_tile = shape.k + 2 * sa_dim;
+    let waves = div_ceil(total_tiles, n_sas);
+    waves * cycles_per_tile
+}
+
+/// Wall-clock seconds for the matmul at `freq_ghz`, derated by `util`
+/// (sustained utilization, a calibration knob).
+pub fn matmul_time(shape: MatmulShape, n_sas: u64, sa_dim: u64, freq_ghz: f64, util: f64) -> f64 {
+    assert!(util > 0.0 && util <= 1.0);
+    matmul_cycles(shape, n_sas, sa_dim) as f64 / (freq_ghz * 1e9) / util
+}
+
+/// Effective FLOP/s achieved by the array on this shape (useful for
+/// roofline reporting).
+pub fn achieved_flops(shape: MatmulShape, n_sas: u64, sa_dim: u64, freq_ghz: f64, util: f64) -> f64 {
+    let t = matmul_time(shape, n_sas, sa_dim, freq_ghz, util);
+    if t == 0.0 {
+        0.0
+    } else {
+        shape.flops() as f64 / t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_shapes_cost_nothing() {
+        assert_eq!(
+            matmul_cycles(MatmulShape { m: 0, k: 5, n: 5 }, 4, 16),
+            0
+        );
+    }
+
+    #[test]
+    fn single_tile_cost() {
+        // one 16x16 tile, K=64: 64 + 32 cycles
+        let c = matmul_cycles(MatmulShape { m: 16, k: 64, n: 16 }, 16, 16);
+        assert_eq!(c, 96);
+    }
+
+    #[test]
+    fn tiles_parallelize_across_sas() {
+        let shape = MatmulShape { m: 64, k: 128, n: 64 }; // 16 tiles of 16x16
+        let c1 = matmul_cycles(shape, 1, 16);
+        let c16 = matmul_cycles(shape, 16, 16);
+        assert_eq!(c1, 16 * c16);
+    }
+
+    #[test]
+    fn cycles_monotone_in_k() {
+        let base = MatmulShape { m: 32, k: 100, n: 32 };
+        let deeper = MatmulShape { m: 32, k: 200, n: 32 };
+        assert!(matmul_cycles(deeper, 4, 16) > matmul_cycles(base, 4, 16));
+    }
+
+    #[test]
+    fn time_and_flops_consistent() {
+        let s = MatmulShape { m: 256, k: 256, n: 256 };
+        let t = matmul_time(s, 16, 16, 1.0, 0.5);
+        let f = achieved_flops(s, 16, 16, 1.0, 0.5);
+        assert!(((f * t - s.flops() as f64).abs() / s.flops() as f64) < 1e-12);
+    }
+
+    #[test]
+    fn achieved_below_peak() {
+        // achieved FLOP/s can never exceed the array's peak
+        let s = MatmulShape { m: 4096, k: 4096, n: 4096 };
+        let n_sas = 16u64;
+        let sa_dim = 24u64;
+        let peak = (n_sas * sa_dim * sa_dim * 2) as f64 * 1e9;
+        let f = achieved_flops(s, n_sas, sa_dim, 1.0, 1.0);
+        assert!(f <= peak, "f={f} peak={peak}");
+        // ...and large square matmuls should come close (>70%)
+        assert!(f > 0.7 * peak, "f={f} peak={peak}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Architecture models: systolic-array compute timing, memory tiers, and
+//! the 28nm area/power analytic model that regenerates paper Table 2.
+
+pub mod area;
+pub mod compute;
+
+pub use area::{HwMetrics, PowerBreakdown};
+pub use compute::{matmul_cycles, matmul_time, MatmulShape};

@@ -1,0 +1,257 @@
+//! Expert clustering (paper §4.2 Stage-1, Algorithm 1).
+//!
+//! Farthest-point-sampling-inspired greedy: the first cluster is seeded with
+//! the two most co-activated experts; each subsequent cluster is seeded with
+//! the unselected expert *least* co-activated with everything selected so
+//! far; clusters are then filled greedily with the unselected expert of
+//! highest average co-activation with the cluster's current members. All
+//! clusters have exactly `n_experts / n_clusters` members.
+
+use crate::trace::Priors;
+
+/// The result of Algorithm 1: `clusters[c]` lists the expert ids of cluster
+/// `c`; every expert appears in exactly one cluster.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    pub clusters: Vec<Vec<usize>>,
+    pub n_experts: usize,
+}
+
+impl Clustering {
+    /// Cluster size (uniform by construction).
+    pub fn cluster_size(&self) -> usize {
+        self.n_experts / self.clusters.len()
+    }
+
+    /// Inverse map: expert -> cluster index.
+    pub fn expert_to_cluster(&self) -> Vec<usize> {
+        let mut map = vec![usize::MAX; self.n_experts];
+        for (c, members) in self.clusters.iter().enumerate() {
+            for &e in members {
+                map[e] = c;
+            }
+        }
+        map
+    }
+
+    /// The trivial contiguous clustering (experts 0..s to cluster 0, etc.) —
+    /// the default layout used by Baseline / Mozart-A / Mozart-B.
+    pub fn contiguous(n_experts: usize, n_clusters: usize) -> Clustering {
+        assert_eq!(n_experts % n_clusters, 0);
+        let s = n_experts / n_clusters;
+        Clustering {
+            clusters: (0..n_clusters)
+                .map(|c| (c * s..(c + 1) * s).collect())
+                .collect(),
+            n_experts,
+        }
+    }
+
+    /// Structural invariants: partition of 0..n_experts into equal parts.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let s = self.cluster_size();
+        anyhow::ensure!(s * self.clusters.len() == self.n_experts, "uneven sizes");
+        let mut seen = vec![false; self.n_experts];
+        for cl in &self.clusters {
+            anyhow::ensure!(cl.len() == s, "cluster size {} != {s}", cl.len());
+            for &e in cl {
+                anyhow::ensure!(e < self.n_experts, "expert {e} out of range");
+                anyhow::ensure!(!seen[e], "expert {e} in two clusters");
+                seen[e] = true;
+            }
+        }
+        anyhow::ensure!(seen.iter().all(|&b| b), "some expert unassigned");
+        Ok(())
+    }
+
+    /// Mean intra-cluster collaboration (higher is better).
+    pub fn intra_collab(&self, priors: &Priors) -> f64 {
+        let s: f64 = self
+            .clusters
+            .iter()
+            .map(|c| priors.intra_collab(c))
+            .sum::<f64>();
+        s / self.clusters.len() as f64
+    }
+
+    /// Mean inter-cluster collaboration over all cluster pairs (lower is
+    /// better).
+    pub fn inter_collab(&self, priors: &Priors) -> f64 {
+        let nc = self.clusters.len();
+        if nc < 2 {
+            return 0.0;
+        }
+        let mut s = 0.0;
+        let mut pairs = 0usize;
+        for a in 0..nc {
+            for b in (a + 1)..nc {
+                s += priors.inter_collab(&self.clusters[a], &self.clusters[b]);
+                pairs += 1;
+            }
+        }
+        s / pairs as f64
+    }
+
+    /// Per-cluster workload shares under the priors.
+    pub fn cluster_workloads(&self, priors: &Priors) -> Vec<f64> {
+        self.clusters
+            .iter()
+            .map(|c| priors.set_workload(c))
+            .collect()
+    }
+}
+
+/// Algorithm 1 (paper §4.2). `n_clusters` equals the number of MoE chiplets;
+/// `n_experts` must be divisible by `n_clusters` (the paper asserts both).
+pub fn cluster_experts(priors: &Priors, n_clusters: usize) -> Clustering {
+    let n = priors.n_experts;
+    assert!(n_clusters >= 1 && n % n_clusters == 0, "N_e % N_c != 0");
+    let size = n / n_clusters;
+    let mut selected = vec![false; n];
+    let mut clusters: Vec<Vec<usize>> = Vec::with_capacity(n_clusters);
+
+    for c in 0..n_clusters {
+        let mut members: Vec<usize> = Vec::with_capacity(size);
+        if c == 0 {
+            // seed with the two most highly co-activated experts
+            let (i, j) = priors.hottest_pair();
+            members.push(i);
+            selected[i] = true;
+            if size > 1 {
+                members.push(j);
+                selected[j] = true;
+            }
+        } else {
+            // farthest-point step: the unselected expert with the lowest
+            // total co-activation with everything already selected
+            let all_selected: Vec<usize> =
+                (0..n).filter(|&e| selected[e]).collect();
+            let seed = (0..n)
+                .filter(|&e| !selected[e])
+                .min_by(|&a, &b| {
+                    let fa: f64 = all_selected.iter().map(|&s| priors.p(a, s)).sum();
+                    let fb: f64 = all_selected.iter().map(|&s| priors.p(b, s)).sum();
+                    fa.partial_cmp(&fb).unwrap().then(a.cmp(&b))
+                })
+                .expect("experts remain");
+            members.push(seed);
+            selected[seed] = true;
+        }
+        // fill: unselected expert with the highest average co-activation
+        // with the cluster's current members
+        while members.len() < size {
+            let next = (0..n)
+                .filter(|&e| !selected[e])
+                .max_by(|&a, &b| {
+                    let fa: f64 =
+                        members.iter().map(|&m| priors.p(a, m)).sum::<f64>();
+                    let fb: f64 =
+                        members.iter().map(|&m| priors.p(b, m)).sum::<f64>();
+                    fa.partial_cmp(&fb).unwrap().then(b.cmp(&a))
+                })
+                .expect("experts remain");
+            members.push(next);
+            selected[next] = true;
+        }
+        clusters.push(members);
+    }
+
+    let out = Clustering {
+        clusters,
+        n_experts: n,
+    };
+    debug_assert!(out.validate().is_ok());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ModelId};
+    use crate::trace::{Priors, TraceGen};
+    use crate::util::rng::Rng;
+
+    /// Priors with two perfectly-collaborating planted blocks {0,1} {2,3}.
+    fn planted_priors() -> Priors {
+        use crate::trace::RoutingTrace;
+        let mut choices = Vec::new();
+        for _ in 0..50 {
+            choices.extend_from_slice(&[0, 1]);
+            choices.extend_from_slice(&[2, 3]);
+        }
+        // a little cross-noise
+        choices.extend_from_slice(&[0, 2]);
+        Priors::from_trace(&RoutingTrace {
+            n_experts: 4,
+            top_k: 2,
+            choices,
+        })
+    }
+
+    #[test]
+    fn recovers_planted_blocks() {
+        let p = planted_priors();
+        let cl = cluster_experts(&p, 2);
+        cl.validate().unwrap();
+        let mut sets: Vec<Vec<usize>> = cl
+            .clusters
+            .iter()
+            .map(|c| {
+                let mut v = c.clone();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        sets.sort();
+        assert_eq!(sets, vec![vec![0, 1], vec![2, 3]]);
+    }
+
+    #[test]
+    fn clustered_beats_contiguous_on_synthetic_traces() {
+        let m = ModelConfig::preset(ModelId::OlmoE_1B_7B);
+        let g = TraceGen::for_model(&m, 3);
+        let mut rng = Rng::new(4);
+        let tr = g.sample_layer(0, 6_000, &mut rng);
+        let p = Priors::from_trace(&tr);
+        let clustered = cluster_experts(&p, 16);
+        let contiguous = Clustering::contiguous(m.n_experts, 16);
+        assert!(
+            clustered.intra_collab(&p) > contiguous.intra_collab(&p),
+            "clustered {} <= contiguous {}",
+            clustered.intra_collab(&p),
+            contiguous.intra_collab(&p)
+        );
+    }
+
+    #[test]
+    fn partition_invariants_on_all_models() {
+        for id in ModelId::PAPER_MODELS {
+            let m = ModelConfig::preset(id);
+            let g = TraceGen::for_model(&m, 9);
+            let mut rng = Rng::new(10);
+            let tr = g.sample_layer(0, 2_000, &mut rng);
+            let p = Priors::from_trace(&tr);
+            let cl = cluster_experts(&p, 16);
+            cl.validate().unwrap();
+            assert_eq!(cl.cluster_size(), m.n_experts / 16);
+            // inverse map covers everyone
+            let inv = cl.expert_to_cluster();
+            assert!(inv.iter().all(|&c| c < 16));
+        }
+    }
+
+    #[test]
+    fn contiguous_layout_shape() {
+        let c = Clustering::contiguous(8, 4);
+        c.validate().unwrap();
+        assert_eq!(c.clusters[1], vec![2, 3]);
+    }
+
+    #[test]
+    fn degenerate_single_cluster() {
+        let p = planted_priors();
+        let cl = cluster_experts(&p, 1);
+        cl.validate().unwrap();
+        assert_eq!(cl.clusters[0].len(), 4);
+    }
+}

@@ -1,0 +1,222 @@
+//! All-to-all communication model (paper §3.3, Appendix D).
+//!
+//! The paper quantifies dispatch-stage communication by C_T, the average
+//! number of replications per token — proven (Appendix D) to be the least
+//! upper bound of `actual data volume / token count`. Under standard expert
+//! parallelism C_T = k; if several of a token's top-k experts share a
+//! chiplet, one replica serves them all, so an expert layout that co-locates
+//! co-activated experts drives C_T below k (the `efficient_a2a` feature of
+//! Mozart-B/C).
+
+use crate::allocation::ExpertLayout;
+use crate::trace::RoutingTrace;
+
+/// Per-trace all-to-all statistics.
+#[derive(Clone, Debug)]
+pub struct A2aStats {
+    /// Average replications per token (C_T).
+    pub c_t: f64,
+    /// Total dispatch replicas over the trace.
+    pub dispatch_replicas: u64,
+    /// Token-slots (tokens x experts) handled by each chiplet — the MoE
+    /// compute workload distribution.
+    pub chiplet_token_slots: Vec<u64>,
+    /// Dispatch replicas received by each chiplet (activation transfers in).
+    pub chiplet_replicas_in: Vec<u64>,
+    pub n_tokens: u64,
+    pub top_k: usize,
+}
+
+impl A2aStats {
+    /// Evaluate a routing trace against an expert layout.
+    ///
+    /// `coalesce` turns on replica elision (Mozart-B/C): a token routed to
+    /// several experts on the same chiplet is shipped there once. Without it
+    /// (Baseline / Mozart-A) each of the k routed experts receives its own
+    /// replica, so C_T == k exactly.
+    pub fn evaluate(trace: &RoutingTrace, layout: &ExpertLayout, coalesce: bool) -> A2aStats {
+        let nc = layout.n_chiplets;
+        let mut slots = vec![0u64; nc];
+        let mut replicas_in = vec![0u64; nc];
+        let mut total_replicas = 0u64;
+        let mut hit = vec![false; nc];
+        for t in 0..trace.n_tokens() {
+            let picks = trace.token(t);
+            if coalesce {
+                let mut touched: Vec<usize> = Vec::with_capacity(picks.len());
+                for &e in picks {
+                    let c = layout.expert_to_chiplet[e as usize];
+                    slots[c] += 1;
+                    if !hit[c] {
+                        hit[c] = true;
+                        touched.push(c);
+                        replicas_in[c] += 1;
+                        total_replicas += 1;
+                    }
+                }
+                for c in touched {
+                    hit[c] = false;
+                }
+            } else {
+                for &e in picks {
+                    let c = layout.expert_to_chiplet[e as usize];
+                    slots[c] += 1;
+                    replicas_in[c] += 1;
+                    total_replicas += 1;
+                }
+            }
+        }
+        let n_tokens = trace.n_tokens() as u64;
+        A2aStats {
+            c_t: if n_tokens == 0 {
+                0.0
+            } else {
+                total_replicas as f64 / n_tokens as f64
+            },
+            dispatch_replicas: total_replicas,
+            chiplet_token_slots: slots,
+            chiplet_replicas_in: replicas_in,
+            n_tokens,
+            top_k: trace.top_k,
+        }
+    }
+
+    /// Per-group token-slot workloads (sums over the group's chiplets).
+    pub fn group_token_slots(&self, n_groups: usize) -> Vec<u64> {
+        let per = self.chiplet_token_slots.len() / n_groups;
+        (0..n_groups)
+            .map(|g| {
+                self.chiplet_token_slots[g * per..(g + 1) * per]
+                    .iter()
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+/// Byte volumes of one all-to-all phase pair (dispatch + combine) for a
+/// micro-batch, derived from C_T and the hidden size.
+#[derive(Clone, Copy, Debug)]
+pub struct A2aVolume {
+    /// Bytes leaving the attention chiplet toward expert chiplets.
+    pub dispatch_bytes: f64,
+    /// Bytes returning from expert chiplets after (optional) in-network
+    /// switch aggregation.
+    pub combine_bytes: f64,
+}
+
+impl A2aVolume {
+    /// `c_t` — measured replication factor; `switch_agg` — in-network
+    /// aggregation divisor for the combine stage (1.0 = none; Mozart-B/C use
+    /// the switch's reduction capability, paper §4.4 ②).
+    pub fn from_c_t(
+        n_tokens: usize,
+        token_bytes: u64,
+        c_t: f64,
+        switch_agg: f64,
+    ) -> A2aVolume {
+        assert!(switch_agg >= 1.0);
+        let dispatch = n_tokens as f64 * c_t * token_bytes as f64;
+        // combine returns one weighted partial per replica, reduced in the
+        // tree by the switch aggregation factor
+        let combine = dispatch / switch_agg;
+        A2aVolume {
+            dispatch_bytes: dispatch,
+            combine_bytes: combine,
+        }
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.dispatch_bytes + self.combine_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::ExpertLayout;
+    use crate::config::{ModelConfig, ModelId};
+    use crate::trace::{Priors, TraceGen};
+    use crate::util::rng::Rng;
+
+    fn toy_trace() -> RoutingTrace {
+        // 4 experts on 2 chiplets (contiguous: {0,1} {2,3}), k=2
+        // token0 -> (0,1): same chiplet; token1 -> (0,2): two chiplets
+        RoutingTrace {
+            n_experts: 4,
+            top_k: 2,
+            choices: vec![0, 1, 0, 2],
+        }
+    }
+
+    #[test]
+    fn ct_equals_k_without_coalescing() {
+        let layout = ExpertLayout::contiguous(4, 2, 1);
+        let s = A2aStats::evaluate(&toy_trace(), &layout, false);
+        assert_eq!(s.c_t, 2.0);
+        assert_eq!(s.dispatch_replicas, 4);
+    }
+
+    #[test]
+    fn coalescing_elides_co_located_replicas() {
+        let layout = ExpertLayout::contiguous(4, 2, 1);
+        let s = A2aStats::evaluate(&toy_trace(), &layout, true);
+        // token0 needs 1 replica, token1 needs 2 -> C_T = 1.5
+        assert_eq!(s.c_t, 1.5);
+        assert_eq!(s.chiplet_replicas_in, vec![2, 1]);
+        // compute workload is unchanged by coalescing
+        assert_eq!(s.chiplet_token_slots, vec![3, 1]);
+    }
+
+    #[test]
+    fn ct_bounds_hold_on_synthetic_traces() {
+        // Appendix D: C_T <= k always; >= k/experts_per_chiplet trivially.
+        for id in ModelId::PAPER_MODELS {
+            let m = ModelConfig::preset(id);
+            let g = TraceGen::for_model(&m, 31);
+            let mut rng = Rng::new(32);
+            let tr = g.sample_layer(0, 4_000, &mut rng);
+            let layout = ExpertLayout::contiguous(m.n_experts, 16, 4);
+            let s = A2aStats::evaluate(&tr, &layout, true);
+            assert!(s.c_t <= m.top_k as f64 + 1e-9);
+            assert!(s.c_t >= 1.0);
+        }
+    }
+
+    #[test]
+    fn clustered_layout_reduces_ct() {
+        let m = ModelConfig::preset(ModelId::Qwen3_30B_A3B);
+        let g = TraceGen::for_model(&m, 41);
+        let mut rng = Rng::new(42);
+        let tr = g.sample_layer(0, 8_000, &mut rng);
+        let p = Priors::from_trace(&tr);
+        let contiguous = ExpertLayout::contiguous(m.n_experts, 16, 4);
+        let clustered = ExpertLayout::mozart(&p, 16, 4);
+        let mut r2 = Rng::new(43);
+        let fresh = g.sample_layer(0, 8_000, &mut r2); // held-out trace
+        let s_cont = A2aStats::evaluate(&fresh, &contiguous, true);
+        let s_clus = A2aStats::evaluate(&fresh, &clustered, true);
+        assert!(
+            s_clus.c_t < s_cont.c_t,
+            "clustered {} !< contiguous {}",
+            s_clus.c_t,
+            s_cont.c_t
+        );
+    }
+
+    #[test]
+    fn volume_scaling() {
+        let v = A2aVolume::from_c_t(1000, 4096, 6.0, 3.0);
+        assert_eq!(v.dispatch_bytes, 1000.0 * 6.0 * 4096.0);
+        assert_eq!(v.combine_bytes, v.dispatch_bytes / 3.0);
+        assert_eq!(v.total_bytes(), v.dispatch_bytes + v.combine_bytes);
+    }
+
+    #[test]
+    fn group_slots_sum() {
+        let layout = ExpertLayout::contiguous(4, 2, 2);
+        let s = A2aStats::evaluate(&toy_trace(), &layout, true);
+        let g = s.group_token_slots(2);
+        assert_eq!(g.iter().sum::<u64>(), 4);
+    }
+}

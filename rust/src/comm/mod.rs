@@ -1,0 +1,9 @@
+//! On-package communication models: the all-to-all dispatch/combine stages
+//! of expert parallelism (paper §3.3 + Appendix D) and the 2.5D NoP-tree
+//! interconnect (paper §4.4).
+
+pub mod a2a;
+pub mod nop;
+
+pub use a2a::{A2aStats, A2aVolume};
+pub use nop::NopTree;

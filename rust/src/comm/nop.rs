@@ -1,0 +1,177 @@
+//! 2.5D NoP-tree interconnect model (paper §4.4 ②).
+//!
+//! Three-level tree: the attention chiplet at the root, `n_groups` switch
+//! nodes, and `chiplets_per_group` MoE chiplets under each switch. Switches
+//! have in-network compute to aggregate MoE outputs locally. DRAM stacks
+//! attach at the switches (group channels) and at the root (attention
+//! channels).
+
+use crate::config::HwConfig;
+
+/// Node identifiers in the tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Node {
+    /// The central attention chiplet (root, dispatcher).
+    Attention,
+    /// Switch `g` (one per MoE group).
+    Switch(usize),
+    /// MoE chiplet (flat index, group-major).
+    Moe(usize),
+    /// DRAM stack attached to switch `g`.
+    GroupDram(usize),
+    /// DRAM stacks attached to the attention chiplet.
+    AttnDram,
+}
+
+/// The NoP-tree topology with per-hop bandwidths.
+#[derive(Clone, Debug)]
+pub struct NopTree {
+    pub n_groups: usize,
+    pub chiplets_per_group: usize,
+    /// Root <-> switch bandwidth (GB/s), one trunk per group.
+    pub trunk_bw: f64,
+    /// Switch <-> leaf bandwidth (GB/s), per chiplet.
+    pub leaf_bw: f64,
+    /// Per-hop latency (s): router traversal + serialization setup.
+    pub hop_latency: f64,
+}
+
+impl NopTree {
+    pub fn from_hw(hw: &HwConfig) -> NopTree {
+        NopTree {
+            n_groups: hw.n_groups,
+            chiplets_per_group: hw.chiplets_per_group(),
+            // the root fans its edges across the group trunks
+            trunk_bw: hw.attn_nop_bw() / hw.n_groups as f64,
+            leaf_bw: hw.chiplet_nop_bw(),
+            hop_latency: 50e-9, // ~50 ns per NoP router hop at 1 GHz
+        }
+    }
+
+    pub fn n_chiplets(&self) -> usize {
+        self.n_groups * self.chiplets_per_group
+    }
+
+    pub fn group_of(&self, chiplet: usize) -> usize {
+        chiplet / self.chiplets_per_group
+    }
+
+    /// Parent of a node in the tree (None for the root).
+    pub fn parent(&self, n: Node) -> Option<Node> {
+        match n {
+            Node::Attention => None,
+            Node::AttnDram => Some(Node::Attention),
+            Node::Switch(_) => Some(Node::Attention),
+            Node::GroupDram(g) => Some(Node::Switch(g)),
+            Node::Moe(c) => Some(Node::Switch(self.group_of(c))),
+        }
+    }
+
+    /// Number of tree hops between two nodes (tree distance via the deepest
+    /// common ancestor).
+    pub fn hops(&self, a: Node, b: Node) -> usize {
+        let path = |mut n: Node| -> Vec<Node> {
+            let mut v = vec![n];
+            while let Some(p) = self.parent(n) {
+                v.push(p);
+                n = p;
+            }
+            v
+        };
+        let pa = path(a);
+        let pb = path(b);
+        for (i, x) in pa.iter().enumerate() {
+            if let Some(j) = pb.iter().position(|y| y == x) {
+                return i + j;
+            }
+        }
+        unreachable!("NoP tree is connected")
+    }
+
+    /// Time to move `bytes` from the attention root to chiplets of one
+    /// group's switch subtree: limited by the trunk into that group.
+    pub fn root_to_group_time(&self, bytes: f64) -> f64 {
+        bytes / (self.trunk_bw * 1e9) + 2.0 * self.hop_latency
+    }
+
+    /// Time for the all-to-all phase: the per-group trunks run in parallel,
+    /// so the finish time is set by the most-loaded group trunk; add leaf
+    /// delivery on the most-loaded chiplet edge.
+    ///
+    /// `group_bytes[g]` — bytes crossing the root<->switch trunk of group g;
+    /// `max_leaf_bytes` — bytes into the most-loaded chiplet.
+    pub fn a2a_phase_time(&self, group_bytes: &[f64], max_leaf_bytes: f64) -> f64 {
+        assert_eq!(group_bytes.len(), self.n_groups);
+        let trunk = group_bytes
+            .iter()
+            .cloned()
+            .fold(0.0f64, f64::max)
+            / (self.trunk_bw * 1e9);
+        let leaf = max_leaf_bytes / (self.leaf_bw * 1e9);
+        // dispatch pipelines through switch: total ~ max of stages + hops
+        trunk.max(leaf) + 2.0 * self.hop_latency
+    }
+
+    /// Aggregate bisection bandwidth root<->leaves (GB/s).
+    pub fn bisection_bw(&self) -> f64 {
+        self.trunk_bw * self.n_groups as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DramKind, HwConfig};
+
+    fn tree() -> NopTree {
+        NopTree::from_hw(&HwConfig::mozart_wafer(DramKind::Hbm2))
+    }
+
+    #[test]
+    fn shape_matches_paper() {
+        let t = tree();
+        assert_eq!(t.n_groups, 4);
+        assert_eq!(t.chiplets_per_group, 4);
+        assert_eq!(t.n_chiplets(), 16);
+    }
+
+    #[test]
+    fn hop_counts() {
+        let t = tree();
+        assert_eq!(t.hops(Node::Attention, Node::Switch(0)), 1);
+        assert_eq!(t.hops(Node::Attention, Node::Moe(0)), 2);
+        assert_eq!(t.hops(Node::Moe(0), Node::Moe(1)), 2); // same switch
+        assert_eq!(t.hops(Node::Moe(0), Node::Moe(5)), 4); // cross switch
+        assert_eq!(t.hops(Node::GroupDram(1), Node::Moe(4)), 2);
+        assert_eq!(t.hops(Node::Moe(4), Node::Moe(4)), 0);
+        assert_eq!(t.hops(Node::AttnDram, Node::Attention), 1);
+        assert_eq!(t.hops(Node::AttnDram, Node::Moe(0)), 3);
+    }
+
+    #[test]
+    fn group_membership() {
+        let t = tree();
+        assert_eq!(t.group_of(0), 0);
+        assert_eq!(t.group_of(7), 1);
+        assert_eq!(t.group_of(15), 3);
+    }
+
+    #[test]
+    fn a2a_time_follows_max_trunk() {
+        let t = tree();
+        let even = t.a2a_phase_time(&[1e9, 1e9, 1e9, 1e9], 0.25e9);
+        let skew = t.a2a_phase_time(&[4e9, 0.0, 0.0, 0.0], 0.25e9);
+        assert!(skew > even * 2.0);
+    }
+
+    #[test]
+    fn bandwidth_sanity() {
+        let hw = HwConfig::mozart_wafer(DramKind::Hbm2);
+        let t = tree();
+        // leaf edge = 256 links * 0.125 GB/s * nop_eff
+        let expect = 256.0 * 0.125 * hw.knobs.nop_eff;
+        assert!((t.leaf_bw - expect).abs() < 1e-9, "leaf={}", t.leaf_bw);
+        assert!(t.trunk_bw > t.leaf_bw); // root edges are wider
+        assert_eq!(t.bisection_bw(), t.trunk_bw * 4.0);
+    }
+}

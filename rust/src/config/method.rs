@@ -1,0 +1,143 @@
+//! Optimization-method configurations (paper Table 3).
+//!
+//! The paper ablates three techniques incrementally:
+//!
+//! | technique                              | Baseline | A | B | C |
+//! |----------------------------------------|----------|---|---|---|
+//! | specialized expert layout (§4.2)       |          |   |   | x |
+//! | efficient all-to-all (§4.2)            |          |   | x | x |
+//! | communication-computation overlap (§4.3)|         | x | x | x |
+
+/// Named method presets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Baseline,
+    MozartA,
+    MozartB,
+    MozartC,
+}
+
+impl Method {
+    pub const ALL: [Method; 4] = [
+        Method::Baseline,
+        Method::MozartA,
+        Method::MozartB,
+        Method::MozartC,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Baseline => "Baseline",
+            Method::MozartA => "Mozart-A",
+            Method::MozartB => "Mozart-B",
+            Method::MozartC => "Mozart-C",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline" => Some(Method::Baseline),
+            "mozart-a" | "a" => Some(Method::MozartA),
+            "mozart-b" | "b" => Some(Method::MozartB),
+            "mozart-c" | "c" => Some(Method::MozartC),
+            _ => None,
+        }
+    }
+
+    pub fn config(&self) -> MethodConfig {
+        match self {
+            Method::Baseline => MethodConfig::baseline(),
+            Method::MozartA => MethodConfig::mozart_a(),
+            Method::MozartB => MethodConfig::mozart_b(),
+            Method::MozartC => MethodConfig::mozart_c(),
+        }
+    }
+}
+
+/// Feature toggles for one configuration (paper Table 3 columns).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MethodConfig {
+    pub method: Method,
+    /// §4.2 stage 1+2: collaboration-aware clustering + balanced allocation.
+    pub expert_layout: bool,
+    /// §4.2 / §3.3: co-location replica elision + in-network aggregation.
+    pub efficient_a2a: bool,
+    /// §4.3: streaming experts + streaming tokens overlap.
+    pub overlap: bool,
+}
+
+impl MethodConfig {
+    pub fn baseline() -> Self {
+        MethodConfig {
+            method: Method::Baseline,
+            expert_layout: false,
+            efficient_a2a: false,
+            overlap: false,
+        }
+    }
+
+    pub fn mozart_a() -> Self {
+        MethodConfig {
+            method: Method::MozartA,
+            expert_layout: false,
+            efficient_a2a: false,
+            overlap: true,
+        }
+    }
+
+    pub fn mozart_b() -> Self {
+        MethodConfig {
+            method: Method::MozartB,
+            expert_layout: false,
+            efficient_a2a: true,
+            overlap: true,
+        }
+    }
+
+    pub fn mozart_c() -> Self {
+        MethodConfig {
+            method: Method::MozartC,
+            expert_layout: true,
+            efficient_a2a: true,
+            overlap: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_feature_matrix() {
+        let b = MethodConfig::baseline();
+        assert!(!b.expert_layout && !b.efficient_a2a && !b.overlap);
+        let a = MethodConfig::mozart_a();
+        assert!(!a.expert_layout && !a.efficient_a2a && a.overlap);
+        let mb = MethodConfig::mozart_b();
+        assert!(!mb.expert_layout && mb.efficient_a2a && mb.overlap);
+        let c = MethodConfig::mozart_c();
+        assert!(c.expert_layout && c.efficient_a2a && c.overlap);
+    }
+
+    #[test]
+    fn features_are_monotone_along_the_ablation() {
+        // Each step of the ablation only adds features.
+        let cfgs: Vec<_> = Method::ALL.iter().map(|m| m.config()).collect();
+        let count = |c: &MethodConfig| {
+            c.expert_layout as u8 + c.efficient_a2a as u8 + c.overlap as u8
+        };
+        for w in cfgs.windows(2) {
+            assert!(count(&w[0]) < count(&w[1]));
+        }
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Method::from_name("b"), Some(Method::MozartB));
+        assert_eq!(Method::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,340 @@
+//! MoE-LLM model configurations (paper Table 1).
+//!
+//! The shapes below are the real published architectures of the three
+//! evaluation models; the derived parameter counts reproduce the paper's
+//! Table 1 (total / activated parameters) and Figure 1 (routed-expert
+//! parameter share >90%) from first principles.
+
+#[allow(non_camel_case_types)]
+/// The three evaluation models of the paper plus a tiny config used by the
+/// real end-to-end training example.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelId {
+    Qwen3_30B_A3B,
+    OlmoE_1B_7B,
+    DeepSeekMoE_16B,
+    /// Tiny model actually trained end-to-end through the PJRT runtime.
+    TinyMoE,
+}
+
+impl ModelId {
+    pub const PAPER_MODELS: [ModelId; 3] = [
+        ModelId::Qwen3_30B_A3B,
+        ModelId::OlmoE_1B_7B,
+        ModelId::DeepSeekMoE_16B,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelId::Qwen3_30B_A3B => "Qwen3-30B-A3B",
+            ModelId::OlmoE_1B_7B => "OLMoE-1B-7B-0924",
+            ModelId::DeepSeekMoE_16B => "deepseek-moe-16b-base",
+            ModelId::TinyMoE => "tiny-moe",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ModelId> {
+        let t = s.to_ascii_lowercase();
+        if t.contains("qwen") {
+            Some(ModelId::Qwen3_30B_A3B)
+        } else if t.contains("olmoe") {
+            Some(ModelId::OlmoE_1B_7B)
+        } else if t.contains("deepseek") {
+            Some(ModelId::DeepSeekMoE_16B)
+        } else if t.contains("tiny") {
+            Some(ModelId::TinyMoE)
+        } else {
+            None
+        }
+    }
+}
+
+/// Decoder-only MoE transformer shape.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub id: ModelId,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub n_layers: usize,
+    /// Layers that use a dense FFN instead of MoE (DeepSeek-MoE layer 0).
+    pub n_dense_layers: usize,
+    /// Dense-FFN intermediate size (only for the dense layers).
+    pub dense_intermediate: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// Routed experts per MoE layer.
+    pub n_experts: usize,
+    /// Shared (always-active) experts per MoE layer.
+    pub n_shared_experts: usize,
+    /// Per-expert gated-FFN intermediate size.
+    pub expert_intermediate: usize,
+    /// top-k routing fanout.
+    pub top_k: usize,
+    /// Bytes per parameter / activation element (FP16 = 2).
+    pub bytes_per_param: usize,
+}
+
+impl ModelConfig {
+    pub fn preset(id: ModelId) -> ModelConfig {
+        match id {
+            ModelId::Qwen3_30B_A3B => ModelConfig {
+                id,
+                vocab: 151_936,
+                hidden: 2048,
+                n_layers: 48,
+                n_dense_layers: 0,
+                dense_intermediate: 0,
+                n_heads: 32,
+                n_kv_heads: 4,
+                head_dim: 128,
+                n_experts: 128,
+                n_shared_experts: 0,
+                expert_intermediate: 768,
+                top_k: 8,
+                bytes_per_param: 2,
+            },
+            ModelId::OlmoE_1B_7B => ModelConfig {
+                id,
+                vocab: 50_304,
+                hidden: 2048,
+                n_layers: 16,
+                n_dense_layers: 0,
+                dense_intermediate: 0,
+                n_heads: 16,
+                n_kv_heads: 16,
+                head_dim: 128,
+                n_experts: 64,
+                n_shared_experts: 0,
+                expert_intermediate: 1024,
+                top_k: 8,
+                bytes_per_param: 2,
+            },
+            ModelId::DeepSeekMoE_16B => ModelConfig {
+                id,
+                vocab: 102_400,
+                hidden: 2048,
+                n_layers: 28,
+                n_dense_layers: 1,
+                dense_intermediate: 10_944,
+                n_heads: 16,
+                n_kv_heads: 16,
+                head_dim: 128,
+                n_experts: 64,
+                n_shared_experts: 2,
+                expert_intermediate: 1408,
+                top_k: 6,
+                bytes_per_param: 2,
+            },
+            ModelId::TinyMoE => ModelConfig {
+                id,
+                vocab: 512,
+                hidden: 128,
+                n_layers: 4,
+                n_dense_layers: 0,
+                dense_intermediate: 0,
+                n_heads: 4,
+                n_kv_heads: 4,
+                head_dim: 32,
+                n_experts: 16,
+                n_shared_experts: 0,
+                expert_intermediate: 256,
+                top_k: 2,
+                bytes_per_param: 2,
+            },
+        }
+    }
+
+    /// Number of MoE layers.
+    pub fn n_moe_layers(&self) -> usize {
+        self.n_layers - self.n_dense_layers
+    }
+
+    /// Parameters in one routed expert (gated FFN: gate + up + down).
+    pub fn params_per_expert(&self) -> u64 {
+        3 * self.hidden as u64 * self.expert_intermediate as u64
+    }
+
+    /// Attention parameters per layer (q, k, v, o projections).
+    pub fn attn_params_per_layer(&self) -> u64 {
+        let h = self.hidden as u64;
+        let q = h * (self.n_heads * self.head_dim) as u64;
+        let kv = 2 * h * (self.n_kv_heads * self.head_dim) as u64;
+        let o = (self.n_heads * self.head_dim) as u64 * h;
+        q + kv + o
+    }
+
+    /// Router (gating) parameters per MoE layer.
+    pub fn router_params_per_layer(&self) -> u64 {
+        self.hidden as u64 * self.n_experts as u64
+    }
+
+    /// All routed-expert parameters in the model.
+    pub fn routed_expert_params(&self) -> u64 {
+        self.n_moe_layers() as u64 * self.n_experts as u64 * self.params_per_expert()
+    }
+
+    /// Shared-expert parameters in the model.
+    pub fn shared_expert_params(&self) -> u64 {
+        self.n_moe_layers() as u64 * self.n_shared_experts as u64 * self.params_per_expert()
+    }
+
+    /// Dense-FFN parameters (DeepSeek's first layer).
+    pub fn dense_ffn_params(&self) -> u64 {
+        3 * self.n_dense_layers as u64 * self.hidden as u64 * self.dense_intermediate as u64
+    }
+
+    /// Embedding + (untied) LM-head parameters.
+    pub fn embedding_params(&self) -> u64 {
+        2 * self.vocab as u64 * self.hidden as u64
+    }
+
+    /// Total parameters.
+    pub fn total_params(&self) -> u64 {
+        self.routed_expert_params()
+            + self.shared_expert_params()
+            + self.dense_ffn_params()
+            + self.n_layers as u64 * self.attn_params_per_layer()
+            + self.n_moe_layers() as u64 * self.router_params_per_layer()
+            + self.embedding_params()
+    }
+
+    /// Activated parameters per token (top-k experts + shared + attention +
+    /// dense layers + embeddings), the quantity Table 1 reports.
+    pub fn activated_params(&self) -> u64 {
+        self.n_moe_layers() as u64 * self.top_k as u64 * self.params_per_expert()
+            + self.shared_expert_params()
+            + self.dense_ffn_params()
+            + self.n_layers as u64 * self.attn_params_per_layer()
+            + self.n_moe_layers() as u64 * self.router_params_per_layer()
+            + self.embedding_params()
+    }
+
+    /// Fraction of total parameters held in routed experts (paper Figure 1:
+    /// >90% across all three models).
+    pub fn routed_expert_fraction(&self) -> f64 {
+        self.routed_expert_params() as f64 / self.total_params() as f64
+    }
+
+    /// Bytes of routed-expert weights in one MoE layer (the per-layer DRAM
+    /// weight-streaming payload).
+    pub fn expert_layer_bytes(&self) -> u64 {
+        self.n_experts as u64 * self.params_per_expert() * self.bytes_per_param as u64
+    }
+
+    /// Bytes of one routed expert's weights.
+    pub fn expert_bytes(&self) -> u64 {
+        self.params_per_expert() * self.bytes_per_param as u64
+    }
+
+    /// Bytes of attention (+ router + shared + dense) weights in one layer.
+    pub fn attn_layer_bytes(&self) -> u64 {
+        (self.attn_params_per_layer()
+            + self.router_params_per_layer()
+            + self.n_shared_experts as u64 * self.params_per_expert())
+            * self.bytes_per_param as u64
+    }
+
+    /// FLOPs of one token through one routed expert (fwd): 3 matmuls.
+    pub fn flops_per_token_per_expert(&self) -> u64 {
+        2 * 3 * self.hidden as u64 * self.expert_intermediate as u64
+    }
+
+    /// FLOPs of one token through attention in one layer (fwd),
+    /// including the O(seq) score/value terms.
+    pub fn attn_flops_per_token(&self, seq_len: usize) -> u64 {
+        let proj = 2 * self.attn_params_per_layer();
+        let qk = 2 * (self.n_heads * self.head_dim) as u64 * seq_len as u64;
+        let av = 2 * (self.n_heads * self.head_dim) as u64 * seq_len as u64;
+        proj + qk + av
+    }
+
+    /// Activation bytes a token must carry through all-to-all (hidden
+    /// vector in FP16).
+    pub fn token_activation_bytes(&self) -> u64 {
+        self.hidden as u64 * self.bytes_per_param as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(actual: u64, expect_b: f64, tol: f64) -> bool {
+        let a = actual as f64 / 1e9;
+        (a - expect_b).abs() / expect_b < tol
+    }
+
+    #[test]
+    fn qwen3_matches_table1() {
+        let m = ModelConfig::preset(ModelId::Qwen3_30B_A3B);
+        assert!(
+            close(m.total_params(), 30.5, 0.03),
+            "total={}",
+            m.total_params()
+        );
+        assert!(
+            close(m.activated_params(), 3.3, 0.05),
+            "active={}",
+            m.activated_params()
+        );
+    }
+
+    #[test]
+    fn olmoe_matches_table1() {
+        let m = ModelConfig::preset(ModelId::OlmoE_1B_7B);
+        assert!(close(m.total_params(), 6.92, 0.03), "total={}", m.total_params());
+        assert!(
+            close(m.activated_params(), 1.3, 0.05),
+            "active={}",
+            m.activated_params()
+        );
+    }
+
+    #[test]
+    fn deepseek_matches_table1() {
+        let m = ModelConfig::preset(ModelId::DeepSeekMoE_16B);
+        assert!(close(m.total_params(), 16.4, 0.03), "total={}", m.total_params());
+        assert!(
+            close(m.activated_params(), 2.7, 0.06),
+            "active={}",
+            m.activated_params()
+        );
+    }
+
+    #[test]
+    fn figure1_routed_share_over_90pct() {
+        for id in ModelId::PAPER_MODELS {
+            let m = ModelConfig::preset(id);
+            assert!(
+                m.routed_expert_fraction() > 0.90,
+                "{}: {}",
+                id.name(),
+                m.routed_expert_fraction()
+            );
+        }
+    }
+
+    #[test]
+    fn expert_layer_bytes_qwen3() {
+        let m = ModelConfig::preset(ModelId::Qwen3_30B_A3B);
+        // 128 experts x 3*2048*768 params x 2 B = ~1.21 GB
+        let gb = m.expert_layer_bytes() as f64 / 1e9;
+        assert!((gb - 1.208).abs() < 0.01, "gb={gb}");
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for id in ModelId::PAPER_MODELS {
+            assert_eq!(ModelId::from_name(id.name()), Some(id));
+        }
+        assert_eq!(ModelId::from_name("tiny"), Some(ModelId::TinyMoE));
+        assert_eq!(ModelId::from_name("gpt-5"), None);
+    }
+
+    #[test]
+    fn moe_layer_count() {
+        assert_eq!(ModelConfig::preset(ModelId::DeepSeekMoE_16B).n_moe_layers(), 27);
+        assert_eq!(ModelConfig::preset(ModelId::Qwen3_30B_A3B).n_moe_layers(), 48);
+    }
+}

@@ -1,0 +1,149 @@
+//! Key=value config-file loader (a TOML subset; the `toml`/`serde` crates
+//! are not available offline). Supports `[section]` headers, `key = value`
+//! pairs, `#` comments, strings, numbers, and booleans. Used by the CLI's
+//! `--config file` option to override any calibration knob or workload
+//! parameter without recompiling.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Flat parsed config: `section.key -> raw string value`.
+#[derive(Clone, Debug, Default)]
+pub struct KvConfig {
+    pub entries: BTreeMap<String, String>,
+}
+
+impl KvConfig {
+    pub fn parse(text: &str) -> Result<KvConfig> {
+        let mut out = KvConfig::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = if section.is_empty() {
+                    k.trim().to_string()
+                } else {
+                    format!("{section}.{}", k.trim())
+                };
+                if key.ends_with('.') || key.starts_with('.') || k.trim().is_empty() {
+                    bail!("line {}: empty key", lineno + 1);
+                }
+                let mut val = v.trim().to_string();
+                if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                    val = val[1..val.len() - 1].to_string();
+                }
+                out.entries.insert(key, val);
+            } else {
+                bail!("line {}: expected `key = value` or `[section]`", lineno + 1);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn load(path: &str) -> Result<KvConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config file {path}"))?;
+        KvConfig::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .with_context(|| format!("config key {key}: invalid float {s}")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .with_context(|| format!("config key {key}: invalid integer {s}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(s) => bail!("config key {key}: invalid bool {s}"),
+        }
+    }
+
+    /// Apply any `knobs.*` overrides to a calibration-knob struct.
+    pub fn apply_knobs(&self, k: &mut super::CalibrationKnobs) -> Result<()> {
+        k.dram_eff = self.get_f64("knobs.dram_eff", k.dram_eff)?;
+        k.nop_eff = self.get_f64("knobs.nop_eff", k.nop_eff)?;
+        k.mxu_util = self.get_f64("knobs.mxu_util", k.mxu_util)?;
+        k.group_concurrency = self.get_usize("knobs.group_concurrency", k.group_concurrency)?;
+        k.switch_agg_factor = self.get_f64("knobs.switch_agg_factor", k.switch_agg_factor)?;
+        k.chunk_overhead_us = self.get_f64("knobs.chunk_overhead_us", k.chunk_overhead_us)?;
+        k.a2a_link_occupancy =
+            self.get_f64("knobs.a2a_link_occupancy", k.a2a_link_occupancy)?;
+        k.opt_traffic_factor =
+            self.get_f64("knobs.opt_traffic_factor", k.opt_traffic_factor)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = KvConfig::parse(
+            "top = 1\n[knobs]\ndram_eff = 0.5 # comment\nname = \"x y\"\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("top"), Some("1"));
+        assert_eq!(c.get_f64("knobs.dram_eff", 0.0).unwrap(), 0.5);
+        assert_eq!(c.get("knobs.name"), Some("x y"));
+        assert!(c.get_bool("knobs.flag", false).unwrap());
+        assert_eq!(c.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(KvConfig::parse("not a kv line").is_err());
+        assert!(KvConfig::parse("[unterminated").is_err());
+        assert!(KvConfig::parse("= novalue").is_err());
+    }
+
+    #[test]
+    fn knob_overrides() {
+        let c = KvConfig::parse("[knobs]\nmxu_util = 0.9\ngroup_concurrency = 4\n").unwrap();
+        let mut k = crate::config::CalibrationKnobs::default();
+        c.apply_knobs(&mut k).unwrap();
+        assert_eq!(k.mxu_util, 0.9);
+        assert_eq!(k.group_concurrency, 4);
+        // untouched knobs keep defaults
+        assert_eq!(k.nop_eff, crate::config::CalibrationKnobs::default().nop_eff);
+    }
+
+    #[test]
+    fn bad_types_error() {
+        let c = KvConfig::parse("[knobs]\ndram_eff = abc\n").unwrap();
+        let mut k = crate::config::CalibrationKnobs::default();
+        assert!(c.apply_knobs(&mut k).is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! L3 coordinator: orchestrates one experiment — profile the routing prior,
+//! derive the expert layout for the configured method, sample per-step
+//! routing workloads, build and simulate the training-step plans, and
+//! aggregate latency / C_T / breakdown / energy across iterations.
+//!
+//! This is the module that composes the paper's three algorithm
+//! contributions (§4.2 clustering+allocation, §3.3/§4.2 efficient
+//! all-to-all, §4.3 fine-grained scheduling) over the architecture model
+//! (§4.4) into end-to-end numbers.
+
+pub mod sweep;
+
+use crate::allocation::ExpertLayout;
+use crate::config::ExperimentConfig;
+use crate::metrics::energy::{step_energy, EnergyBreakdown};
+use crate::pipeline::{build_step_plan, StepInputs, StepWorkload};
+use crate::sim::{Simulator, Tag};
+use crate::trace::{Priors, TraceGen};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Aggregated outcome of one experiment cell.
+#[derive(Clone, Debug)]
+pub struct ExperimentResult {
+    /// Mean end-to-end latency per training step (seconds).
+    pub latency: f64,
+    pub latency_std: f64,
+    /// Mean all-to-all replication factor C_T (Table 4 metric).
+    pub c_t: f64,
+    /// Mean busy seconds per tag per step.
+    pub tag_busy: Vec<(Tag, f64)>,
+    /// Mean critical-path seconds per tag per step.
+    pub critical: Vec<(Tag, f64)>,
+    /// Mean per-step energy.
+    pub energy: EnergyBreakdown,
+    /// Workload imbalance across groups (max/mean of token-slots).
+    pub group_imbalance: f64,
+    /// Mean MoE-compute utilization (busy / makespan, averaged chiplets).
+    pub moe_utilization: f64,
+    pub iters: usize,
+}
+
+impl ExperimentResult {
+    pub fn tag_time(&self, tag: Tag) -> f64 {
+        self.tag_busy
+            .iter()
+            .find(|(t, _)| *t == tag)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0)
+    }
+
+    pub fn critical_time(&self, tag: Tag) -> f64 {
+        self.critical
+            .iter()
+            .find(|(t, _)| *t == tag)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Derive the per-layer expert layouts for a method: Mozart-C profiles the
+/// prior of every MoE layer (the paper's §3.2 pre-deployment profiling) and
+/// runs Algorithm 1 clustering + Eq. 5 allocation per layer; everything
+/// else keeps the default contiguous layout (paper Table 3).
+pub fn layouts_for(cfg: &ExperimentConfig, gen: &TraceGen) -> Vec<ExpertLayout> {
+    let hw = &cfg.hw;
+    let n_layers = cfg.model.n_moe_layers();
+    if cfg.method.expert_layout {
+        let profile_tokens = 4096;
+        let traces = gen.profile(profile_tokens, cfg.seed ^ 0x50F1_1E);
+        traces
+            .iter()
+            .map(|tr| {
+                let priors = Priors::from_trace(tr);
+                ExpertLayout::mozart(&priors, hw.n_moe_chiplets, hw.n_groups)
+            })
+            .collect()
+    } else {
+        vec![
+            ExpertLayout::contiguous(cfg.model.n_experts, hw.n_moe_chiplets, hw.n_groups);
+            n_layers
+        ]
+    }
+}
+
+/// Run one experiment cell: `cfg.iters` simulated training steps with fresh
+/// routing each step, averaged.
+pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
+    let gen = TraceGen::for_model(&cfg.model, cfg.seed);
+    let layouts = layouts_for(cfg, &gen);
+    for layout in &layouts {
+        layout.validate().expect("layout invariants");
+    }
+    let coalesce = cfg.method.efficient_a2a;
+
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut latencies = Vec::with_capacity(cfg.iters);
+    let mut cts = Vec::with_capacity(cfg.iters);
+    let mut tag_busy: Vec<(Tag, f64)> = Tag::ALL.iter().map(|&t| (t, 0.0)).collect();
+    let mut critical: Vec<(Tag, f64)> = Tag::ALL.iter().map(|&t| (t, 0.0)).collect();
+    let mut energy_acc: Option<EnergyBreakdown> = None;
+    let mut imbalance_acc = 0.0;
+    let mut util_acc = 0.0;
+
+    for it in 0..cfg.iters {
+        let mut step_rng = rng.fork(it as u64);
+        let workload = StepWorkload::sample(cfg, &gen, &layouts, coalesce, &mut step_rng);
+        let plan = build_step_plan(&StepInputs {
+            cfg,
+            layouts: &layouts,
+            workload: &workload,
+        });
+        let res = Simulator::run(&plan);
+        latencies.push(res.makespan);
+        cts.push(workload.mean_c_t);
+        for (i, (_, v)) in res.tag_busy.iter().enumerate() {
+            tag_busy[i].1 += v / cfg.iters as f64;
+        }
+        for (i, (_, v)) in res.critical_path.iter().enumerate() {
+            critical[i].1 += v / cfg.iters as f64;
+        }
+        let e = step_energy(cfg, &res);
+        energy_acc = Some(match energy_acc {
+            None => e.scale(1.0 / cfg.iters as f64),
+            Some(acc) => acc.add(&e.scale(1.0 / cfg.iters as f64)),
+        });
+
+        // group imbalance over the step's token-slots
+        let per = cfg.hw.chiplets_per_group();
+        let mut group_slots = vec![0.0f64; cfg.hw.n_groups];
+        for row in &workload.cells {
+            for cell in row {
+                for g in 0..cfg.hw.n_groups {
+                    group_slots[g] += cell.chiplet_slots[g * per..(g + 1) * per]
+                        .iter()
+                        .sum::<u64>() as f64;
+                }
+            }
+        }
+        imbalance_acc += stats::imbalance(&group_slots) / cfg.iters as f64;
+
+        // MoE compute utilization: moe resources are indexed after
+        // attn-compute, attn-dram and the group streams
+        let first_moe = 2 + cfg.hw.n_groups;
+        let mut u = 0.0;
+        for c in 0..cfg.hw.n_moe_chiplets {
+            u += res.utilization(first_moe + c);
+        }
+        util_acc += u / cfg.hw.n_moe_chiplets as f64 / cfg.iters as f64;
+    }
+
+    ExperimentResult {
+        latency: stats::mean(&latencies),
+        latency_std: stats::std(&latencies),
+        c_t: stats::mean(&cts),
+        tag_busy,
+        critical,
+        energy: energy_acc.expect("at least one iteration"),
+        group_imbalance: imbalance_acc,
+        moe_utilization: util_acc,
+        iters: cfg.iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, Method, ModelConfig, ModelId};
+
+    fn cfg(method: Method) -> ExperimentConfig {
+        let mut c = ExperimentConfig::paper_default(
+            ModelConfig::preset(ModelId::OlmoE_1B_7B),
+            method.config(),
+        );
+        c.seq_len = 64;
+        c.iters = 2;
+        c
+    }
+
+    #[test]
+    fn experiment_runs_and_aggregates() {
+        let r = run_experiment(&cfg(Method::MozartC));
+        assert!(r.latency > 0.0);
+        assert!(r.c_t > 1.0 && r.c_t <= 8.0);
+        assert!(r.energy.total_j() > 0.0);
+        assert_eq!(r.iters, 2);
+        assert!(r.moe_utilization > 0.0 && r.moe_utilization <= 1.0);
+    }
+
+    #[test]
+    fn method_ablation_ordering() {
+        let base = run_experiment(&cfg(Method::Baseline)).latency;
+        let a = run_experiment(&cfg(Method::MozartA)).latency;
+        let c = run_experiment(&cfg(Method::MozartC)).latency;
+        assert!(a < base);
+        assert!(c < a * 1.02);
+    }
+
+    #[test]
+    fn mozart_c_reduces_ct() {
+        let b = run_experiment(&cfg(Method::MozartB));
+        let c = run_experiment(&cfg(Method::MozartC));
+        assert!(c.c_t < b.c_t, "C {} !< B {}", c.c_t, b.c_t);
+        // balance stays within a sane envelope (Eq. 5 balances the expected
+        // workload; per-step sampling noise remains)
+        assert!(c.group_imbalance < 1.3, "imbalance {}", c.group_imbalance);
+    }
+
+    #[test]
+    fn baseline_ct_is_k() {
+        let r = run_experiment(&cfg(Method::MozartA));
+        assert!((r.c_t - 8.0).abs() < 1e-9); // no elision -> C_T == k
+    }
+
+    #[test]
+    fn memory_bound_q1() {
+        // paper §5.4 Q1: weight streaming dominates the critical path
+        let r = run_experiment(&cfg(Method::MozartC));
+        let stream = r.critical_time(Tag::WeightStream);
+        let compute: f64 = r
+            .critical
+            .iter()
+            .filter(|(t, _)| matches!(t, Tag::MoeCompute | Tag::AttnCompute))
+            .map(|(_, v)| v)
+            .sum();
+        assert!(
+            stream > compute,
+            "stream {stream} !> compute {compute} (should be memory-bound)"
+        );
+    }
+}

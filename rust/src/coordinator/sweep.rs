@@ -1,0 +1,164 @@
+//! Parameter sweeps over the experiment grid (models x methods x sequence
+//! lengths x DRAM kinds), the workhorse behind the Table 3 / Table 4 /
+//! Figure 6-9 reports and benches.
+
+use crate::config::{
+    DramKind, ExperimentConfig, Method, ModelConfig, ModelId,
+};
+use crate::coordinator::{run_experiment, ExperimentResult};
+
+/// One grid cell specification.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    pub model: ModelId,
+    pub method: Method,
+    pub seq_len: usize,
+    pub dram: DramKind,
+}
+
+/// A cell's outcome along with its spec.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub cell: Cell,
+    pub result: ExperimentResult,
+}
+
+/// Build the `ExperimentConfig` for a cell with the paper's workload
+/// defaults and this run's iteration budget.
+pub fn cell_config(cell: Cell, iters: usize, seed: u64) -> ExperimentConfig {
+    let model = ModelConfig::preset(cell.model);
+    let mut cfg = ExperimentConfig::paper_default(model, cell.method.config());
+    cfg.hw = crate::config::HwConfig::paper_for_model(cell.model, cell.dram);
+    cfg.seq_len = cell.seq_len;
+    cfg.iters = iters;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Run a list of cells sequentially (deterministic order and seeds).
+pub fn run_cells(cells: &[Cell], iters: usize, seed: u64) -> Vec<CellResult> {
+    cells
+        .iter()
+        .map(|&cell| CellResult {
+            cell,
+            result: run_experiment(&cell_config(cell, iters, seed)),
+        })
+        .collect()
+}
+
+/// The Table 3 / Figure 6(a) grid: 3 models x 4 methods at seq 256, HBM2.
+pub fn table3_cells() -> Vec<Cell> {
+    let mut v = Vec::new();
+    for model in ModelId::PAPER_MODELS {
+        for method in Method::ALL {
+            v.push(Cell {
+                model,
+                method,
+                seq_len: 256,
+                dram: DramKind::Hbm2,
+            });
+        }
+    }
+    v
+}
+
+/// Figure 6(b): sequence-length sweep on Qwen3 / HBM2.
+pub fn fig6b_cells() -> Vec<Cell> {
+    let mut v = Vec::new();
+    for seq_len in [128, 256, 512] {
+        for method in Method::ALL {
+            v.push(Cell {
+                model: ModelId::Qwen3_30B_A3B,
+                method,
+                seq_len,
+                dram: DramKind::Hbm2,
+            });
+        }
+    }
+    v
+}
+
+/// Figure 6(c): DRAM sweep on Qwen3 / seq 256.
+pub fn fig6c_cells() -> Vec<Cell> {
+    let mut v = Vec::new();
+    for dram in [DramKind::Hbm2, DramKind::Ssd] {
+        for method in Method::ALL {
+            v.push(Cell {
+                model: ModelId::Qwen3_30B_A3B,
+                method,
+                seq_len: 256,
+                dram,
+            });
+        }
+    }
+    v
+}
+
+/// Appendix Figures 7/8/9: the full grid at one sequence length.
+pub fn appendix_cells(seq_len: usize) -> Vec<Cell> {
+    let mut v = Vec::new();
+    for model in ModelId::PAPER_MODELS {
+        for dram in [DramKind::Hbm2, DramKind::Ssd] {
+            for method in Method::ALL {
+                v.push(Cell {
+                    model,
+                    method,
+                    seq_len,
+                    dram,
+                });
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_have_expected_sizes() {
+        assert_eq!(table3_cells().len(), 12);
+        assert_eq!(fig6b_cells().len(), 12);
+        assert_eq!(fig6c_cells().len(), 8);
+        assert_eq!(appendix_cells(128).len(), 24);
+    }
+
+    #[test]
+    fn cell_config_applies_spec() {
+        let cell = Cell {
+            model: ModelId::DeepSeekMoE_16B,
+            method: Method::MozartB,
+            seq_len: 512,
+            dram: DramKind::Ssd,
+        };
+        let cfg = cell_config(cell, 3, 42);
+        assert_eq!(cfg.seq_len, 512);
+        assert_eq!(cfg.iters, 3);
+        assert_eq!(cfg.model.id, ModelId::DeepSeekMoE_16B);
+        assert_eq!(cfg.hw.mem.dram, DramKind::Ssd);
+        assert!(cfg.method.efficient_a2a && !cfg.method.expert_layout);
+    }
+
+    #[test]
+    fn run_small_grid() {
+        // a 2-cell smoke of the sweep machinery at tiny workload
+        let cells = vec![
+            Cell {
+                model: ModelId::OlmoE_1B_7B,
+                method: Method::Baseline,
+                seq_len: 128,
+                dram: DramKind::Hbm2,
+            },
+            Cell {
+                model: ModelId::OlmoE_1B_7B,
+                method: Method::MozartC,
+                seq_len: 128,
+                dram: DramKind::Hbm2,
+            },
+        ];
+        let res = run_cells(&cells, 1, 7);
+        assert_eq!(res.len(), 2);
+        assert!(res[1].result.latency < res[0].result.latency);
+    }
+}

@@ -1,0 +1,35 @@
+//! # Mozart — reproduction of *Modularized and Efficient MoE Training on
+//! # 3.5D Wafer-Scale Chiplet Architectures* (NeurIPS 2025)
+//!
+//! An algorithm–hardware co-design framework for efficient post-training of
+//! MoE-LLMs on a 3.5D wafer-scale chiplet platform, implemented as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)**: the coordinator — the paper's expert clustering /
+//!   allocation / all-to-all / fine-grained-scheduling algorithms, the
+//!   wafer-scale platform's discrete-event simulator, the report generators
+//!   for every table and figure of the paper, and the PJRT runtime that
+//!   executes real AOT-compiled MoE training steps.
+//! - **L2** (`python/compile/model.py`): the JAX MoE transformer, lowered
+//!   once to HLO text by `python/compile/aot.py`.
+//! - **L1** (`python/compile/kernels/`): Pallas kernels for the expert-FFN
+//!   hot path, verified against a pure-jnp oracle.
+//!
+//! See DESIGN.md for the system inventory and per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod allocation;
+pub mod arch;
+pub mod clustering;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod pipeline;
+pub mod report;
+pub mod sim;
+pub mod runtime;
+pub mod testkit;
+pub mod trace;
+pub mod train;
+pub mod util;

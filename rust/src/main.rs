@@ -1,0 +1,228 @@
+//! `mozart` CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//! - `report <what>` — regenerate a paper table/figure
+//!   (`table1|table2|table3|table4|fig1|fig3|fig6b|fig6c|fig7|fig8|fig9|
+//!    fig10_13|fig14_16|q1|q2|all`)
+//! - `simulate` — run one experiment cell
+//!   (`--model qwen3|olmoe|deepseek --method baseline|a|b|c --seq N
+//!    --dram hbm2|ssd --iters N --seed N [--config file]`)
+//! - `layout` — show the clustering + allocation for a model
+//! - `train` — end-to-end real training of the tiny MoE through the PJRT
+//!   runtime (`--steps N --artifacts DIR`)
+//! - `platform` — print PJRT platform info (runtime smoke check)
+
+use anyhow::{bail, Context, Result};
+use mozart::config::{DramKind, ExperimentConfig, Method, ModelConfig, ModelId};
+use mozart::coordinator::sweep::{cell_config, Cell};
+use mozart::report::{self, ReportOpts};
+use mozart::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "report" => cmd_report(&args),
+        "simulate" => cmd_simulate(&args),
+        "layout" => cmd_layout(&args),
+        "train" => cmd_train(&args),
+        "platform" => cmd_platform(),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `mozart help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "mozart — MoE training on 3.5D wafer-scale chiplets (NeurIPS 2025 reproduction)\n\
+         \n\
+         USAGE: mozart <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+           report <what>   regenerate a paper table/figure: table1 table2 table3\n\
+                           table4 fig1 fig3 fig6b fig6c fig7 fig8 fig9 fig10_13\n\
+                           fig14_16 q1 q2 all   [--iters N] [--seed N]\n\
+           simulate        one experiment cell: --model qwen3|olmoe|deepseek\n\
+                           --method baseline|a|b|c [--seq N] [--dram hbm2|ssd]\n\
+                           [--iters N] [--seed N] [--config file]\n\
+           layout          expert clustering + allocation: --model ... [--seed N]\n\
+           train           real end-to-end training of the tiny MoE via PJRT:\n\
+                           [--steps N] [--artifacts artifacts/] [--log-every N]\n\
+           platform        print the PJRT platform (runtime smoke check)"
+    );
+}
+
+fn report_opts(args: &Args) -> Result<ReportOpts> {
+    Ok(ReportOpts {
+        iters: args.get_parse("iters", 4)?,
+        seed: args.get_parse("seed", 7)?,
+    })
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let opts = report_opts(args)?;
+    let emit = |name: &str| -> Result<()> {
+        let out = match name {
+            "table1" => report::table1(),
+            "table2" => report::table2(),
+            "table3" => report::table3(opts).0,
+            "table4" => report::table4(opts),
+            "fig1" => report::fig1(),
+            "fig3" => report::fig3(opts),
+            "fig6b" => report::fig6b(opts),
+            "fig6c" => report::fig6c(opts),
+            "fig7" => report::appendix_fig(128, opts),
+            "fig8" => report::appendix_fig(256, opts),
+            "fig9" => report::appendix_fig(512, opts),
+            "fig10_13" => report::fig10_13(),
+            "fig14_16" => report::fig14_16(opts),
+            "q1" => report::q1(opts),
+            "q2" => report::q2(opts),
+            other => bail!("unknown report `{other}`"),
+        };
+        println!("{out}");
+        Ok(())
+    };
+    if what == "all" {
+        for name in [
+            "table1", "table2", "table3", "table4", "fig1", "fig3", "fig6b", "fig6c",
+            "fig7", "fig8", "fig9", "fig10_13", "fig14_16", "q1", "q2",
+        ] {
+            emit(name)?;
+        }
+        Ok(())
+    } else {
+        emit(what)
+    }
+}
+
+fn parse_cell(args: &Args) -> Result<Cell> {
+    let model = ModelId::from_name(args.get_or("model", "qwen3"))
+        .context("unknown --model (qwen3|olmoe|deepseek|tiny)")?;
+    let method = Method::from_name(args.get_or("method", "c"))
+        .context("unknown --method (baseline|a|b|c)")?;
+    let dram = match args.get_or("dram", "hbm2").to_ascii_lowercase().as_str() {
+        "hbm2" | "hbm" => DramKind::Hbm2,
+        "ssd" => DramKind::Ssd,
+        other => bail!("unknown --dram {other}"),
+    };
+    Ok(Cell {
+        model,
+        method,
+        seq_len: args.get_parse("seq", 256)?,
+        dram,
+    })
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cell = parse_cell(args)?;
+    let iters = args.get_parse("iters", 4)?;
+    let seed = args.get_parse("seed", 7)?;
+    let mut cfg: ExperimentConfig = cell_config(cell, iters, seed);
+    if let Some(path) = args.get("config") {
+        let kv = mozart::config::parse::KvConfig::load(path)?;
+        kv.apply_knobs(&mut cfg.hw.knobs)?;
+        cfg.seq_len = kv.get_usize("workload.seq_len", cfg.seq_len)?;
+        cfg.batch_size = kv.get_usize("workload.batch_size", cfg.batch_size)?;
+        cfg.micro_batch = kv.get_usize("workload.micro_batch", cfg.micro_batch)?;
+    }
+    let r = mozart::coordinator::run_experiment(&cfg);
+    println!(
+        "model={} method={} seq={} dram={} iters={}",
+        cell.model.name(),
+        cell.method.name(),
+        cell.seq_len,
+        cell.dram.name(),
+        iters
+    );
+    println!(
+        "latency: {:.4} s/step (std {:.4})   C_T: {:.2}   energy: {:.1} J/step",
+        r.latency,
+        r.latency_std,
+        r.c_t,
+        r.energy.total_j()
+    );
+    println!(
+        "group imbalance: {:.3}   MoE utilization: {:.3}",
+        r.group_imbalance, r.moe_utilization
+    );
+    println!("\nbusy time per component (s/step):");
+    let mut rows = r.tag_busy.clone();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (tag, v) in rows.iter().filter(|(_, v)| *v > 0.0) {
+        println!("  {:<18} {:.4}", tag.name(), v);
+    }
+    println!("\ncritical path (s/step):");
+    let mut rows = r.critical.clone();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (tag, v) in rows.iter().filter(|(_, v)| *v > 0.0) {
+        println!("  {:<18} {:.4}", tag.name(), v);
+    }
+    Ok(())
+}
+
+fn cmd_layout(args: &Args) -> Result<()> {
+    use mozart::trace::{Priors, TraceGen};
+    let model_id = ModelId::from_name(args.get_or("model", "qwen3"))
+        .context("unknown --model")?;
+    let seed: u64 = args.get_parse("seed", 7)?;
+    let model = ModelConfig::preset(model_id);
+    let gen = TraceGen::for_model(&model, seed);
+    let traces = gen.profile(4096, seed ^ 0x50F1_1E);
+    let refs: Vec<&mozart::trace::RoutingTrace> = traces.iter().collect();
+    let priors = Priors::from_traces(&refs);
+    let layout = mozart::allocation::ExpertLayout::mozart(&priors, 16, 4);
+    let contiguous =
+        mozart::allocation::ExpertLayout::contiguous(model.n_experts, 16, 4);
+    println!("model: {}  experts: {}  top-{}", model_id.name(), model.n_experts, model.top_k);
+    println!(
+        "intra-cluster collaboration: clustered {:.4} vs contiguous {:.4}",
+        layout.clustering.intra_collab(&priors),
+        contiguous.clustering.intra_collab(&priors)
+    );
+    println!(
+        "inter-cluster collaboration: clustered {:.4} vs contiguous {:.4}",
+        layout.clustering.inter_collab(&priors),
+        contiguous.clustering.inter_collab(&priors)
+    );
+    let wl = layout.clustering.cluster_workloads(&priors);
+    let gl = layout.allocation.group_workloads(&wl);
+    println!("group workloads after Eq.5 allocation: {gl:?}");
+    for (c, members) in layout.clustering.clusters.iter().enumerate() {
+        let chiplet = layout.allocation.chiplet_of_cluster()[c];
+        println!(
+            "cluster {c:>2} -> chiplet {chiplet:>2} (group {}): {:?}",
+            chiplet / 4,
+            members
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let steps = args.get_parse("steps", 200)?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let log_every = args.get_parse("log-every", 10)?;
+    let cfg = mozart::train::TrainConfig {
+        artifacts_dir: artifacts.to_string(),
+        steps,
+        log_every,
+        seed: args.get_parse("seed", 7)?,
+    };
+    let summary = mozart::train::run(&cfg)?;
+    println!("{}", summary.render());
+    Ok(())
+}
+
+fn cmd_platform() -> Result<()> {
+    println!("PJRT platform: {}", mozart::runtime::platform()?);
+    Ok(())
+}

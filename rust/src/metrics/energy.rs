@@ -1,0 +1,194 @@
+//! Per-step energy accounting from the simulator's byte/FLOP tallies plus
+//! static power over the makespan (the paper evaluates latency *and*
+//! energy, §5.1).
+
+use crate::arch::area::constants;
+use crate::config::ExperimentConfig;
+use crate::sim::{SimResult, Tag};
+
+/// Energy decomposition for one training step (Joules).
+#[derive(Clone, Debug)]
+pub struct EnergyBreakdown {
+    /// MAC energy of all compute tasks.
+    pub compute_j: f64,
+    /// DRAM access energy (weight streaming, activations, optimizer).
+    pub dram_j: f64,
+    /// NoP link energy (all-to-all phases).
+    pub nop_j: f64,
+    /// SRAM access energy (modeled as a fraction of compute traffic).
+    pub sram_j: f64,
+    /// Leakage + idle power over the step's makespan.
+    pub static_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.compute_j + self.dram_j + self.nop_j + self.sram_j + self.static_j
+    }
+
+    pub fn scale(&self, s: f64) -> EnergyBreakdown {
+        EnergyBreakdown {
+            compute_j: self.compute_j * s,
+            dram_j: self.dram_j * s,
+            nop_j: self.nop_j * s,
+            sram_j: self.sram_j * s,
+            static_j: self.static_j * s,
+        }
+    }
+
+    pub fn add(&self, other: &EnergyBreakdown) -> EnergyBreakdown {
+        EnergyBreakdown {
+            compute_j: self.compute_j + other.compute_j,
+            dram_j: self.dram_j + other.dram_j,
+            nop_j: self.nop_j + other.nop_j,
+            sram_j: self.sram_j + other.sram_j,
+            static_j: self.static_j + other.static_j,
+        }
+    }
+}
+
+/// Which tags move bytes over DRAM channels vs the NoP tree.
+fn is_dram_tag(tag: Tag) -> bool {
+    matches!(
+        tag,
+        Tag::WeightStream
+            | Tag::AttnWeightLoad
+            | Tag::ActSave
+            | Tag::ActLoad
+            | Tag::GradWriteback
+            | Tag::OptimUpdate
+    )
+}
+
+fn is_nop_tag(tag: Tag) -> bool {
+    matches!(tag, Tag::A2aDispatch | Tag::A2aCombine)
+}
+
+/// Compute the energy of one simulated step.
+pub fn step_energy(cfg: &ExperimentConfig, res: &SimResult) -> EnergyBreakdown {
+    let hw = &cfg.hw;
+    let mut dram_bytes = 0.0;
+    let mut nop_bytes = 0.0;
+    let mut flops = 0.0;
+    for &(tag, b) in &res.tag_bytes {
+        if is_dram_tag(tag) {
+            dram_bytes += b;
+        } else if is_nop_tag(tag) {
+            nop_bytes += b;
+        }
+    }
+    for &(_, f) in &res.tag_flops {
+        flops += f;
+    }
+
+    // MACs = flops / 2; MAC energy from the 28nm constants
+    let compute_j = flops / 2.0 * constants::MAC_ENERGY_PJ * 1e-12;
+    let dram_j = dram_bytes * hw.mem.dram.energy_pj_per_byte() * 1e-12;
+    // every DRAM byte and every a2a byte also traverses NoP links once
+    let nop_j = (nop_bytes + dram_bytes) * hw.nop.energy_pj_per_byte * 1e-12;
+    // SRAM: activations are read/written locally around each MAC tile;
+    // model as operand traffic = 3 words/MAC amortized by tile reuse (~1/8)
+    let sram_bytes = flops / 2.0 * 3.0 * 2.0 / 8.0;
+    let sram_j = sram_bytes * hw.mem.sram_energy_pj_per_byte * 1e-12;
+    // static: leakage of all PEs + switch/NoP idle over the makespan
+    let n_pes = hw.n_moe_chiplets as f64
+        * hw.moe_chiplet.tiles as f64
+        * hw.moe_chiplet.sas_per_tile as f64
+        * hw.moe_chiplet.pes_per_sa as f64
+        + hw.attn_chiplet.tiles as f64
+            * hw.attn_chiplet.sas_per_tile as f64
+            * hw.attn_chiplet.pes_per_sa as f64;
+    let static_w = n_pes * constants::PE_LEAKAGE_W
+        + hw.n_groups as f64 * constants::SWITCH_W
+        + constants::NOP_W;
+    let static_j = static_w * res.makespan;
+
+    EnergyBreakdown {
+        compute_j,
+        dram_j,
+        nop_j,
+        sram_j,
+        static_j,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, MethodConfig, ModelConfig, ModelId};
+    use crate::sim::{Plan, Simulator, Tag, TaskSpec};
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig::paper_default(
+            ModelConfig::preset(ModelId::Qwen3_30B_A3B),
+            MethodConfig::mozart_c(),
+        )
+    }
+
+    fn result_with(tag: Tag, bytes: f64, flops: f64, duration: f64) -> SimResult {
+        let mut p = Plan::new();
+        let r = p.add_resource("r");
+        p.add_task(TaskSpec {
+            resource: Some(r),
+            duration,
+            deps: vec![],
+            priority: 0,
+            tag,
+            bytes,
+            flops,
+        });
+        Simulator::run(&p)
+    }
+
+    #[test]
+    fn dram_bytes_account() {
+        let res = result_with(Tag::WeightStream, 1e9, 0.0, 0.01);
+        let e = step_energy(&cfg(), &res);
+        // 1 GB at 31.2 pJ/B = 31.2 mJ
+        assert!((e.dram_j - 1e9 * 31.2e-12).abs() / e.dram_j < 1e-9);
+        assert!(e.compute_j == 0.0);
+        assert!(e.static_j > 0.0);
+    }
+
+    #[test]
+    fn compute_flops_account() {
+        let res = result_with(Tag::MoeCompute, 0.0, 2e12, 0.01);
+        let e = step_energy(&cfg(), &res);
+        // 1e12 MACs at 0.56 pJ = 0.56 J
+        assert!((e.compute_j - 0.56).abs() < 1e-9, "{}", e.compute_j);
+        assert!(e.sram_j > 0.0);
+        assert!(e.dram_j == 0.0);
+    }
+
+    #[test]
+    fn a2a_goes_to_nop() {
+        let res = result_with(Tag::A2aDispatch, 1e9, 0.0, 0.001);
+        let e = step_energy(&cfg(), &res);
+        assert!(e.nop_j > 0.0);
+        assert_eq!(e.dram_j, 0.0);
+    }
+
+    #[test]
+    fn ssd_costs_more_energy_per_byte() {
+        let res = result_with(Tag::WeightStream, 1e9, 0.0, 0.01);
+        let mut ssd_cfg = cfg();
+        ssd_cfg.hw = crate::config::HwConfig::mozart_wafer(crate::config::DramKind::Ssd);
+        let hbm = step_energy(&cfg(), &res);
+        let ssd = step_energy(&ssd_cfg, &res);
+        assert!(ssd.dram_j > hbm.dram_j);
+    }
+
+    #[test]
+    fn breakdown_arithmetic() {
+        let e = EnergyBreakdown {
+            compute_j: 1.0,
+            dram_j: 2.0,
+            nop_j: 3.0,
+            sram_j: 4.0,
+            static_j: 5.0,
+        };
+        assert_eq!(e.total_j(), 15.0);
+        assert_eq!(e.scale(2.0).total_j(), 30.0);
+        assert_eq!(e.add(&e).total_j(), 30.0);
+    }
+}

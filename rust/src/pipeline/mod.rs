@@ -1,0 +1,10 @@
+//! Training-step pipeline: builds the task-DAG plan the simulator executes
+//! (paper §4.3 fine-grained scheduling + §4.4 algorithm-to-hardware
+//! mapping), and the per-step byte/FLOP workload model behind it.
+
+pub mod epsim;
+pub mod plan_builder;
+pub mod workload;
+
+pub use plan_builder::{build_step_plan, StepInputs};
+pub use workload::{LayerMbStats, StepWorkload};

@@ -1,0 +1,182 @@
+//! Per-step workload statistics: routing-trace-derived quantities for every
+//! (MoE layer, micro-batch) cell, plus the byte/FLOP model shared by the
+//! plan builder and the energy accounting.
+
+use crate::allocation::ExpertLayout;
+use crate::comm::A2aStats;
+use crate::config::ExperimentConfig;
+use crate::trace::TraceGen;
+use crate::util::rng::Rng;
+
+/// Routing-derived statistics for one (layer, micro-batch) cell.
+#[derive(Clone, Debug)]
+pub struct LayerMbStats {
+    /// Dispatch replicas after (optional) co-location elision.
+    pub replicas: u64,
+    /// Token-slots per expert (compute workload of each expert).
+    pub expert_slots: Vec<u64>,
+    /// Token-slots per chiplet.
+    pub chiplet_slots: Vec<u64>,
+    /// C_T of this cell.
+    pub c_t: f64,
+    pub n_tokens: u64,
+}
+
+/// All routing statistics for one simulated training step.
+#[derive(Clone, Debug)]
+pub struct StepWorkload {
+    /// `cells[layer][mb]`.
+    pub cells: Vec<Vec<LayerMbStats>>,
+    /// Mean C_T over all cells (the Table 4 metric).
+    pub mean_c_t: f64,
+}
+
+impl StepWorkload {
+    /// Sample a fresh step's routing and evaluate it against the per-layer
+    /// expert layouts (the paper places each decoder layer's experts
+    /// independently; `layouts[l]` is layer l's placement).
+    ///
+    /// `coalesce` mirrors `A2aStats::evaluate`: replica elision on
+    /// co-located experts (the `efficient_a2a` feature).
+    pub fn sample(
+        cfg: &ExperimentConfig,
+        gen: &TraceGen,
+        layouts: &[ExpertLayout],
+        coalesce: bool,
+        rng: &mut Rng,
+    ) -> StepWorkload {
+        let n_layers = cfg.model.n_moe_layers();
+        let n_mb = cfg.n_micro_batches();
+        let tokens_mb = cfg.tokens_per_micro_batch();
+        assert_eq!(layouts.len(), n_layers, "one layout per MoE layer");
+        let mut cells = Vec::with_capacity(n_layers);
+        let mut ct_sum = 0.0;
+        for l in 0..n_layers {
+            let mut row = Vec::with_capacity(n_mb);
+            for m in 0..n_mb {
+                let mut r = rng.fork((l * 131 + m) as u64);
+                let tr = gen.sample_layer(l, tokens_mb, &mut r);
+                let stats = A2aStats::evaluate(&tr, &layouts[l], coalesce);
+                ct_sum += stats.c_t;
+                row.push(LayerMbStats {
+                    replicas: stats.dispatch_replicas,
+                    expert_slots: tr.expert_token_counts(),
+                    chiplet_slots: stats.chiplet_token_slots,
+                    c_t: stats.c_t,
+                    n_tokens: stats.n_tokens,
+                });
+            }
+            cells.push(row);
+        }
+        let mean_c_t = ct_sum / (n_layers * n_mb) as f64;
+        StepWorkload { cells, mean_c_t }
+    }
+}
+
+/// Byte/FLOP model for one decoder layer (shared by plan builder, energy
+/// accounting and the roofline study).
+#[derive(Clone, Debug)]
+pub struct LayerBytes {
+    /// Expert weights per chiplet (cluster) in bytes.
+    pub cluster_bytes: f64,
+    /// Expert weights of one expert in bytes.
+    pub expert_bytes: f64,
+    /// Attention-side weights (attn + router + shared experts [+ dense
+    /// FFN for dense layers]) in bytes.
+    pub attn_bytes: f64,
+    /// Activation bytes saved per token-slot on MoE chiplets (input +
+    /// intermediate + output rows of the expert FFN).
+    pub moe_act_bytes_per_slot: f64,
+    /// Activation bytes saved per token on the attention chiplet
+    /// (q, k, v, attention output, FFN input).
+    pub attn_act_bytes_per_token: f64,
+}
+
+impl LayerBytes {
+    pub fn of(cfg: &ExperimentConfig) -> LayerBytes {
+        let m = &cfg.model;
+        let bpp = m.bytes_per_param as f64;
+        LayerBytes {
+            cluster_bytes: m.expert_layer_bytes() as f64 / cfg.hw.n_moe_chiplets as f64,
+            expert_bytes: m.expert_bytes() as f64,
+            attn_bytes: m.attn_layer_bytes() as f64,
+            moe_act_bytes_per_slot: (2.0 * m.hidden as f64 + m.expert_intermediate as f64) * bpp,
+            attn_act_bytes_per_token: 5.0 * m.hidden as f64 * bpp,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::ExpertLayout;
+    use crate::config::{ExperimentConfig, MethodConfig, ModelConfig, ModelId};
+    use crate::trace::TraceGen;
+
+    fn cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::paper_default(
+            ModelConfig::preset(ModelId::OlmoE_1B_7B),
+            MethodConfig::mozart_c(),
+        );
+        c.seq_len = 64;
+        c.batch_size = 8;
+        c.micro_batch = 2;
+        c
+    }
+
+    #[test]
+    fn sample_covers_all_cells() {
+        let c = cfg();
+        let gen = TraceGen::for_model(&c.model, 1);
+        let layouts = vec![
+            ExpertLayout::contiguous(c.model.n_experts, 16, 4);
+            c.model.n_moe_layers()
+        ];
+        let mut rng = Rng::new(2);
+        let w = StepWorkload::sample(&c, &gen, &layouts, true, &mut rng);
+        assert_eq!(w.cells.len(), c.model.n_moe_layers());
+        assert_eq!(w.cells[0].len(), 4);
+        for row in &w.cells {
+            for cell in row {
+                assert_eq!(cell.n_tokens as usize, c.tokens_per_micro_batch());
+                assert_eq!(
+                    cell.expert_slots.iter().sum::<u64>(),
+                    cell.n_tokens * c.model.top_k as u64
+                );
+                assert_eq!(
+                    cell.chiplet_slots.iter().sum::<u64>(),
+                    cell.n_tokens * c.model.top_k as u64
+                );
+                assert!(cell.c_t <= c.model.top_k as f64 + 1e-9);
+                assert!(cell.replicas <= cell.n_tokens * c.model.top_k as u64);
+            }
+        }
+        assert!(w.mean_c_t > 1.0 && w.mean_c_t <= c.model.top_k as f64);
+    }
+
+    #[test]
+    fn no_coalesce_replicas_equal_k_tokens() {
+        let c = cfg();
+        let gen = TraceGen::for_model(&c.model, 1);
+        let layouts = vec![
+            ExpertLayout::contiguous(c.model.n_experts, 16, 4);
+            c.model.n_moe_layers()
+        ];
+        let mut rng = Rng::new(3);
+        let w = StepWorkload::sample(&c, &gen, &layouts, false, &mut rng);
+        assert!((w.mean_c_t - c.model.top_k as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layer_bytes_qwen3() {
+        let c = ExperimentConfig::paper_default(
+            ModelConfig::preset(ModelId::Qwen3_30B_A3B),
+            MethodConfig::baseline(),
+        );
+        let lb = LayerBytes::of(&c);
+        // 1.208 GB of expert weights across 16 chiplets
+        assert!((lb.cluster_bytes - 1.208e9 / 16.0).abs() / lb.cluster_bytes < 0.01);
+        assert!((lb.expert_bytes - 3.0 * 2048.0 * 768.0 * 2.0).abs() < 1.0);
+        assert!(lb.moe_act_bytes_per_slot > 0.0);
+    }
+}

@@ -1,0 +1,536 @@
+//! Report generators: one function per paper table/figure, each returning
+//! rendered markdown (tables + ASCII bar charts) with the paper's reported
+//! numbers alongside ours where the paper gives absolute anchors.
+
+use crate::arch::area::{hw_metrics, paper_table2_anchor};
+use crate::config::{DramKind, HwConfig, Method, ModelConfig, ModelId};
+use crate::coordinator::sweep::{self, run_cells, CellResult};
+use crate::metrics::roofline::{profile_decoder_layer, Olmo2Scale};
+use crate::pipeline::epsim::{self, EpSimConfig};
+use crate::sim::Tag;
+use crate::util::table::{bar_chart, Table};
+
+/// Run options shared by the reports (iteration budget, seed).
+#[derive(Clone, Copy, Debug)]
+pub struct ReportOpts {
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for ReportOpts {
+    fn default() -> Self {
+        ReportOpts { iters: 4, seed: 7 }
+    }
+}
+
+fn f(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+/// Table 1: model configurations (regenerated from the presets).
+pub fn table1() -> String {
+    let mut t = Table::new(
+        "Table 1 — MoE-LLM configurations",
+        &[
+            "Model",
+            "Total params",
+            "Activated",
+            "Routed experts",
+            "Shared",
+            "Hidden",
+            "Layers",
+            "Routing",
+        ],
+    );
+    for id in ModelId::PAPER_MODELS {
+        let m = ModelConfig::preset(id);
+        t.row(&[
+            id.name().to_string(),
+            format!("{:.2}B", m.total_params() as f64 / 1e9),
+            format!("{:.2}B", m.activated_params() as f64 / 1e9),
+            m.n_experts.to_string(),
+            m.n_shared_experts.to_string(),
+            m.hidden.to_string(),
+            m.n_layers.to_string(),
+            format!("top-{}", m.top_k),
+        ]);
+    }
+    t.render()
+}
+
+/// Table 2: hardware metrics from the analytic 28nm area/power model.
+pub fn table2() -> String {
+    let mut t = Table::new(
+        "Table 2 — hardware metrics (analytic 28nm model vs paper)",
+        &[
+            "Model",
+            "Area (mm^2)",
+            "paper",
+            "Power (kW)",
+            "paper",
+            "DRAM&SRAM cap (MB)",
+            "DRAM&SRAM BW (GB/s)",
+            "2.5D link (GB/s @ um)",
+        ],
+    );
+    for id in ModelId::PAPER_MODELS {
+        let m = ModelConfig::preset(id);
+        let hw = HwConfig::paper_for_model(id, DramKind::Hbm2);
+        let x = hw_metrics(&m, &hw);
+        let (pa, pp) = paper_table2_anchor(id).unwrap();
+        t.row(&[
+            id.name().to_string(),
+            f(x.total_area_mm2, 0),
+            f(pa, 0),
+            f(x.total_power_kw, 2),
+            f(pp, 2),
+            format!("{:.0} & {:.3}", x.dram_cap_mib, x.sram_per_tile_mib),
+            format!("{:.0} & {:.0}", x.dram_bw_gbps, x.sram_bw_gbps),
+            format!("{:.3} @ {:.0}", x.nop_link_bw_gbps, x.nop_pitch_um),
+        ]);
+    }
+    t.render()
+}
+
+/// Figure 1: parameter distribution across module types.
+pub fn fig1() -> String {
+    let mut t = Table::new(
+        "Figure 1 — parameter distribution (routed experts >90%)",
+        &["Model", "Routed experts", "Attention", "Embedding", "Other", "Routed share"],
+    );
+    for id in ModelId::PAPER_MODELS {
+        let m = ModelConfig::preset(id);
+        let total = m.total_params() as f64;
+        let routed = m.routed_expert_params() as f64;
+        let attn = (m.n_layers as u64 * m.attn_params_per_layer()) as f64;
+        let emb = m.embedding_params() as f64;
+        let other = total - routed - attn - emb;
+        t.row(&[
+            id.name().to_string(),
+            format!("{:.1}%", routed / total * 100.0),
+            format!("{:.1}%", attn / total * 100.0),
+            format!("{:.1}%", emb / total * 100.0),
+            format!("{:.1}%", other / total * 100.0),
+            format!("{:.3}", m.routed_expert_fraction()),
+        ]);
+    }
+    t.render()
+}
+
+/// Figure 3: activation-frequency skew + co-activation structure of the
+/// (synthetic) routing prior for DeepSeek-MoE's final layer.
+pub fn fig3(opts: ReportOpts) -> String {
+    use crate::trace::{Priors, TraceGen};
+    use crate::util::rng::Rng;
+    let m = ModelConfig::preset(ModelId::DeepSeekMoE_16B);
+    let gen = TraceGen::for_model(&m, opts.seed);
+    let mut rng = Rng::new(opts.seed ^ 1);
+    let layer = m.n_moe_layers() - 1; // final layer, as in the paper
+    let tr = gen.sample_layer(layer, 16_384, &mut rng);
+    let p = Priors::from_trace(&tr);
+
+    let mut sorted = p.workload.clone();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let labels: Vec<String> = (0..8).map(|i| format!("rank-{i}")).collect();
+    let top: Vec<f64> = sorted.iter().take(8).map(|&w| w * 100.0).collect();
+    let mut out = bar_chart(
+        "Figure 3 (left) — activation frequency, top-8 experts (% of slots)",
+        &labels,
+        &top,
+        "%",
+    );
+    let uniform = 100.0 / m.n_experts as f64;
+    out.push_str(&format!(
+        "(uniform would be {uniform:.2}% per expert; max/min = {:.1}x -> expert specialization)\n\n",
+        sorted[0] / sorted[m.n_experts - 1].max(1e-12)
+    ));
+    // co-activation summary: hottest pairs vs median pair
+    let (hi, hj) = p.hottest_pair();
+    let mut pairs: Vec<f64> = Vec::new();
+    for i in 0..m.n_experts {
+        for j in (i + 1)..m.n_experts {
+            pairs.push(p.p(i, j));
+        }
+    }
+    let med = crate::util::stats::percentile(&pairs, 50.0);
+    out.push_str(&format!(
+        "Figure 3 (right) — co-activation: hottest pair ({hi},{hj}) P=1.00, median pair P={med:.3} -> expert collaboration structure\n"
+    ));
+    out
+}
+
+/// Table 3 / Figure 6(a): optimization effectiveness per model.
+pub fn table3(opts: ReportOpts) -> (String, Vec<CellResult>) {
+    let cells = sweep::table3_cells();
+    let results = run_cells(&cells, opts.iters, opts.seed);
+    let paper_speedup = [1.92, 2.37, 2.17];
+    let mut t = Table::new(
+        "Table 3 / Figure 6(a) — latency per step, seq 256, HBM2",
+        &[
+            "Model",
+            "Method",
+            "Latency (s)",
+            "Normalized",
+            "Speedup",
+            "paper speedup",
+        ],
+    );
+    for (mi, model) in ModelId::PAPER_MODELS.iter().enumerate() {
+        let base = results
+            .iter()
+            .find(|r| r.cell.model == *model && r.cell.method == Method::Baseline)
+            .unwrap()
+            .result
+            .latency;
+        for method in Method::ALL {
+            let r = results
+                .iter()
+                .find(|r| r.cell.model == *model && r.cell.method == method)
+                .unwrap();
+            let lat = r.result.latency;
+            t.row(&[
+                model.name().to_string(),
+                method.name().to_string(),
+                f(lat, 3),
+                f(lat / base, 3),
+                format!("{:.2}x", base / lat),
+                if method == Method::MozartC {
+                    format!("{:.2}x", paper_speedup[mi])
+                } else {
+                    "-".to_string()
+                },
+            ]);
+        }
+    }
+    (t.render(), results)
+}
+
+/// Table 4: C_T vs normalized latency.
+pub fn table4(opts: ReportOpts) -> String {
+    let cells = sweep::table3_cells();
+    let results = run_cells(&cells, opts.iters, opts.seed);
+    // paper anchors: (normalized latency, C_T) for A/B/C per model
+    let paper: [(&str, [f64; 3], [f64; 3]); 3] = [
+        ("Qwen3-30B-A3B", [0.73, 0.59, 0.52], [8.0, 6.58, 5.77]),
+        ("OLMoE-1B-7B-0924", [0.63, 0.48, 0.422], [8.0, 6.84, 5.63]),
+        ("deepseek-moe-16b-base", [0.67, 0.56, 0.46], [6.0, 5.56, 4.32]),
+    ];
+    let mut t = Table::new(
+        "Table 4 — all-to-all complexity C_T vs normalized latency",
+        &[
+            "Model", "Method", "Norm. latency", "paper", "C_T", "paper C_T",
+        ],
+    );
+    for (mi, model) in ModelId::PAPER_MODELS.iter().enumerate() {
+        let base = results
+            .iter()
+            .find(|r| r.cell.model == *model && r.cell.method == Method::Baseline)
+            .unwrap()
+            .result
+            .latency;
+        for (i, method) in [Method::MozartA, Method::MozartB, Method::MozartC]
+            .iter()
+            .enumerate()
+        {
+            let r = results
+                .iter()
+                .find(|r| r.cell.model == *model && r.cell.method == *method)
+                .unwrap();
+            t.row(&[
+                model.name().to_string(),
+                method.name().to_string(),
+                f(r.result.latency / base, 3),
+                f(paper[mi].1[i], 3),
+                f(r.result.c_t, 2),
+                f(paper[mi].2[i], 2),
+            ]);
+        }
+    }
+    t.render()
+}
+
+/// Figure 6(b): sequence-length sweep (Qwen3, HBM2).
+pub fn fig6b(opts: ReportOpts) -> String {
+    let results = run_cells(&sweep::fig6b_cells(), opts.iters, opts.seed);
+    let mut t = Table::new(
+        "Figure 6(b) — sequence-length study (Qwen3-30B-A3B, HBM2)",
+        &["Seq len", "Method", "Latency (s)", "Speedup vs baseline"],
+    );
+    for seq in [128usize, 256, 512] {
+        let base = results
+            .iter()
+            .find(|r| r.cell.seq_len == seq && r.cell.method == Method::Baseline)
+            .unwrap()
+            .result
+            .latency;
+        for method in Method::ALL {
+            let r = results
+                .iter()
+                .find(|r| r.cell.seq_len == seq && r.cell.method == method)
+                .unwrap();
+            t.row(&[
+                seq.to_string(),
+                method.name().to_string(),
+                f(r.result.latency, 3),
+                format!("{:.2}x", base / r.result.latency),
+            ]);
+        }
+    }
+    let mut s = t.render();
+    s.push_str(
+        "(paper anchors: baseline 3.88 s @128 -> 7.64 s @512; Mozart-C speedup 1.47x @128, 2.34x @512)\n",
+    );
+    s
+}
+
+/// Figure 6(c): DRAM-bandwidth study (Qwen3, seq 256).
+pub fn fig6c(opts: ReportOpts) -> String {
+    let results = run_cells(&sweep::fig6c_cells(), opts.iters, opts.seed);
+    let mut t = Table::new(
+        "Figure 6(c) — DRAM study (Qwen3-30B-A3B, seq 256)",
+        &["DRAM", "Method", "Latency (s)", "Speedup vs baseline"],
+    );
+    for dram in [DramKind::Hbm2, DramKind::Ssd] {
+        let base = results
+            .iter()
+            .find(|r| r.cell.dram == dram && r.cell.method == Method::Baseline)
+            .unwrap()
+            .result
+            .latency;
+        for method in Method::ALL {
+            let r = results
+                .iter()
+                .find(|r| r.cell.dram == dram && r.cell.method == method)
+                .unwrap();
+            t.row(&[
+                dram.name().to_string(),
+                method.name().to_string(),
+                f(r.result.latency, 3),
+                format!("{:.2}x", base / r.result.latency),
+            ]);
+        }
+    }
+    let mut s = t.render();
+    s.push_str("(paper: max 9.17 s; optimization gains are larger under HBM2 than SSD)\n");
+    s
+}
+
+/// Appendix Figures 7/8/9: the full normalized-latency grid at a sequence
+/// length (128 -> Fig 7, 256 -> Fig 8, 512 -> Fig 9).
+pub fn appendix_fig(seq_len: usize, opts: ReportOpts) -> String {
+    let results = run_cells(&sweep::appendix_cells(seq_len), opts.iters, opts.seed);
+    let fig_no = match seq_len {
+        128 => 7,
+        256 => 8,
+        512 => 9,
+        _ => 0,
+    };
+    let mut t = Table::new(
+        &format!("Figure {fig_no} — normalized latency, seq {seq_len}"),
+        &["Model", "DRAM", "Baseline", "Mozart-A", "Mozart-B", "Mozart-C", "max wall-clock (s)"],
+    );
+    for model in ModelId::PAPER_MODELS {
+        for dram in [DramKind::Hbm2, DramKind::Ssd] {
+            let get = |m: Method| {
+                results
+                    .iter()
+                    .find(|r| {
+                        r.cell.model == model && r.cell.dram == dram && r.cell.method == m
+                    })
+                    .unwrap()
+                    .result
+                    .latency
+            };
+            let base = get(Method::Baseline);
+            t.row(&[
+                model.name().to_string(),
+                dram.name().to_string(),
+                "1.000".to_string(),
+                f(get(Method::MozartA) / base, 3),
+                f(get(Method::MozartB) / base, 3),
+                f(get(Method::MozartC) / base, 3),
+                f(base, 2),
+            ]);
+        }
+    }
+    t.render()
+}
+
+/// Appendix Figures 10-13: attention vs FFN roofline study.
+pub fn fig10_13() -> String {
+    let mut t = Table::new(
+        "Figures 10-13 — attention (memory-bound) vs FFN (compute-bound), OLMo-2, batch 4",
+        &[
+            "Model",
+            "Seq",
+            "FFN FLOPs share",
+            "FFN latency share",
+            "Attn latency (ms)",
+            "FFN latency (ms)",
+        ],
+    );
+    for scale in Olmo2Scale::ALL {
+        for seq in [512usize, 1024, 2048] {
+            let r = profile_decoder_layer(scale, 4, seq);
+            t.row(&[
+                scale.name().to_string(),
+                seq.to_string(),
+                format!("{:.1}%", r.flops_share_ffn() * 100.0),
+                format!("{:.1}%", r.latency_share_ffn() * 100.0),
+                f(r.attn_latency * 1e3, 3),
+                f(r.ffn_latency * 1e3, 3),
+            ]);
+        }
+    }
+    let mut s = t.render();
+    s.push_str("(paper: FFN counts more FLOPs but less wall-clock latency at every scale)\n");
+    s
+}
+
+/// Appendix Figures 14-16: GPU power/memory dynamism under expert
+/// parallelism.
+pub fn fig14_16(opts: ReportOpts) -> String {
+    let m = ModelConfig::preset(ModelId::OlmoE_1B_7B);
+    let samples = epsim::simulate(&m, &EpSimConfig::default(), 40.0, opts.seed);
+    let d = epsim::summarize(&samples);
+    let mut t = Table::new(
+        "Figures 14-16 — GPU behaviour monitor (OLMoE, 4-way EP, 0.1 s interval)",
+        &[
+            "GPU",
+            "Power mean CV",
+            "Power range (W)",
+            "Mem CV",
+            "Mem range (GiB)",
+        ],
+    );
+    for g in 0..4 {
+        t.row(&[
+            format!("gpu{g}"),
+            f(d.power_cv[g], 3),
+            format!("{:.0}-{:.0}", d.power_range[g].0, d.power_range[g].1),
+            f(d.mem_cv[g], 3),
+            format!("{:.1}-{:.1}", d.mem_range[g].0, d.mem_range[g].1),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str(
+        "(paper: both GPU power and memory show high dynamism under MoE expert parallelism)\n",
+    );
+    s
+}
+
+/// §5.4 Q1: is Mozart memory-bound or compute-bound?
+pub fn q1(opts: ReportOpts) -> String {
+    let cell = sweep::Cell {
+        model: ModelId::Qwen3_30B_A3B,
+        method: Method::MozartC,
+        seq_len: 256,
+        dram: DramKind::Hbm2,
+    };
+    let r = crate::coordinator::run_experiment(&sweep::cell_config(cell, opts.iters, opts.seed));
+    let mut t = Table::new(
+        "Q1 — critical-path decomposition (Qwen3, Mozart-C, seq 256, HBM2)",
+        &["Component", "Critical-path share"],
+    );
+    let total: f64 = r.critical.iter().map(|(_, v)| v).sum();
+    let mut rows: Vec<(Tag, f64)> = r.critical.clone();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (tag, v) in rows.iter().filter(|(_, v)| *v > 0.0) {
+        t.row(&[tag.name().to_string(), format!("{:.1}%", v / total * 100.0)]);
+    }
+    // memory-bound = all DRAM-traffic categories vs compute categories
+    let memory: f64 = r
+        .critical
+        .iter()
+        .filter(|(t, _)| {
+            matches!(
+                t,
+                Tag::WeightStream
+                    | Tag::AttnWeightLoad
+                    | Tag::ActSave
+                    | Tag::ActLoad
+                    | Tag::GradWriteback
+                    | Tag::OptimUpdate
+            )
+        })
+        .map(|(_, v)| v)
+        .sum();
+    let compute: f64 = r
+        .critical
+        .iter()
+        .filter(|(t, _)| matches!(t, Tag::MoeCompute | Tag::AttnCompute | Tag::Router))
+        .map(|(_, v)| v)
+        .sum();
+    let mut s = t.render();
+    s.push_str(&format!(
+        "=> {} (DRAM traffic {:.0}% vs compute {:.0}% of the critical path). Paper's answer: memory-bound.\n",
+        if memory > 0.4 * total && memory > compute {
+            "MEMORY-BOUND"
+        } else {
+            "not memory-bound"
+        },
+        memory / total * 100.0,
+        compute / total * 100.0
+    ));
+    s
+}
+
+/// §5.4 Q2: which algorithmic design matters most?
+pub fn q2(opts: ReportOpts) -> String {
+    let (_, results) = table3(opts);
+    let mut t = Table::new(
+        "Q2 — incremental contribution of each technique",
+        &["Model", "Overlap (base->A)", "Eff. all-to-all (A->B)", "Layout (B->C)", "paper overlap"],
+    );
+    let paper_overlap = [1.33, 1.58, 1.49];
+    for (mi, model) in ModelId::PAPER_MODELS.iter().enumerate() {
+        let get = |m: Method| {
+            results
+                .iter()
+                .find(|r| r.cell.model == *model && r.cell.method == m)
+                .unwrap()
+                .result
+                .latency
+        };
+        t.row(&[
+            model.name().to_string(),
+            format!("{:.2}x", get(Method::Baseline) / get(Method::MozartA)),
+            format!("{:.2}x", get(Method::MozartA) / get(Method::MozartB)),
+            format!("{:.2}x", get(Method::MozartB) / get(Method::MozartC)),
+            format!("{:.2}x", paper_overlap[mi]),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str("(paper ordering: overlap > efficient all-to-all > expert layout)\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> ReportOpts {
+        ReportOpts { iters: 1, seed: 3 }
+    }
+
+    #[test]
+    fn static_reports_render() {
+        assert!(table1().contains("Qwen3-30B-A3B"));
+        assert!(table2().contains("14175") || table2().contains("Area"));
+        assert!(fig1().contains("Routed share"));
+        assert!(fig10_13().contains("OLMo-2"));
+    }
+
+    #[test]
+    fn fig3_renders() {
+        let s = fig3(fast());
+        assert!(s.contains("specialization"));
+        assert!(s.contains("collaboration"));
+    }
+
+    #[test]
+    fn fig14_16_renders() {
+        let s = fig14_16(fast());
+        assert!(s.contains("gpu0"));
+    }
+}

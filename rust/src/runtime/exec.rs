@@ -1,0 +1,124 @@
+//! Executable loading and invocation over the PJRT C API (`xla` crate).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client plus the executables loaded from the artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client (the only backend in this offline image;
+    /// the same code path works for TPU/GPU PJRT plugins).
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path.display().to_string(),
+        })
+    }
+
+    /// Move a host literal onto the device (for long-lived state like model
+    /// parameters — avoids a host->device copy on every step).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .context("uploading literal to device")
+    }
+}
+
+/// A compiled computation. All artifacts are lowered with
+/// `return_tuple=True`, so outputs arrive as one tuple literal.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with host literals in, tuple of host literals out.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        tuple.to_tuple().context("destructuring result tuple")
+    }
+
+    /// Execute with device buffers in. NOTE: the artifacts are lowered with
+    /// `return_tuple=True` and this crate's PJRT wrapper does not set
+    /// `untuple_result`, so the result arrives as a SINGLE tuple buffer —
+    /// callers must `to_literal_sync()?.to_tuple()` it. For multi-output
+    /// training steps prefer [`Executable::run`], which does that for you;
+    /// `run_b` is the zero-copy path for single-output executables.
+    pub fn run_b(&self, args: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        Ok(out.swap_remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end runtime smoke: build a computation with the XlaBuilder
+    /// (no python needed), compile and run it through the same client.
+    #[test]
+    fn builder_roundtrip() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform_name(), "cpu");
+        let b = xla::XlaBuilder::new("t");
+        let p = b
+            .parameter_s(0, &xla::Shape::array::<f32>(vec![2]), "p")
+            .unwrap();
+        let comp = (p.clone() * p).unwrap().build().unwrap();
+        let exe = rt.client.compile(&comp).unwrap();
+        let x = xla::Literal::vec1(&[3f32, 4f32]);
+        let out = exe.execute::<xla::Literal>(&[x]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![9.0, 16.0]);
+    }
+
+    #[test]
+    fn device_buffer_roundtrip() {
+        let rt = Runtime::cpu().unwrap();
+        let lit = xla::Literal::vec1(&[1f32, 2f32, 3f32]);
+        let buf = rt.to_device(&lit).unwrap();
+        let back = buf.to_literal_sync().unwrap();
+        assert_eq!(back.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load_hlo_text("/nonexistent/x.hlo.txt").is_err());
+    }
+}

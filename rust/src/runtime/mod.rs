@@ -1,0 +1,21 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the rust hot path. Python never runs at request time — `make artifacts`
+//! lowers the JAX/Pallas model once, and this module does
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute(_b)`.
+//!
+//! HLO *text* is the interchange format (not `.serialize()`): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids and round-trips cleanly.
+
+pub mod exec;
+
+pub use exec::{Executable, Runtime};
+
+use anyhow::Result;
+
+/// Smoke helper: create a CPU PJRT client and report the platform name.
+pub fn platform() -> Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(client.platform_name())
+}

@@ -1,0 +1,369 @@
+//! Event-driven list-scheduling engine over a task-DAG plan.
+//!
+//! Tasks become *ready* when all dependencies finish; ready tasks contend
+//! for their (sequential) resource and are served in (ready-time, priority,
+//! id) order. The engine records start/finish per task, per-tag and
+//! per-resource busy time, the makespan, and the critical path (the chain
+//! of dependency/resource waits that determined the final finish time).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::plan::{Plan, Tag, TaskId};
+
+/// Heap entry: min-heap by (ready_time, priority, id).
+#[derive(PartialEq)]
+struct Entry {
+    ready: f64,
+    priority: i64,
+    id: TaskId,
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reverse for min-heap
+        other
+            .ready
+            .partial_cmp(&self.ready)
+            .unwrap()
+            .then(other.priority.cmp(&self.priority))
+            .then(other.id.cmp(&self.id))
+    }
+}
+
+/// What determined a task's start time (for critical-path extraction).
+#[derive(Clone, Copy, Debug)]
+enum StartCause {
+    /// No wait: started at its ready time with the resource idle.
+    Dep(TaskId),
+    /// Waited for the resource; the blocking task is recorded.
+    Resource(TaskId),
+    /// Source task (no deps, no wait).
+    Source,
+}
+
+/// Simulation output.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub makespan: f64,
+    pub start: Vec<f64>,
+    pub finish: Vec<f64>,
+    /// Busy seconds per tag (sum of task durations).
+    pub tag_busy: Vec<(Tag, f64)>,
+    /// Busy seconds per resource.
+    pub resource_busy: Vec<f64>,
+    /// Seconds of the critical path attributed to each tag.
+    pub critical_path: Vec<(Tag, f64)>,
+    /// Total bytes and flops (energy accounting inputs) per tag.
+    pub tag_bytes: Vec<(Tag, f64)>,
+    pub tag_flops: Vec<(Tag, f64)>,
+}
+
+impl SimResult {
+    pub fn tag_time(&self, tag: Tag) -> f64 {
+        self.tag_busy
+            .iter()
+            .find(|(t, _)| *t == tag)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0)
+    }
+
+    pub fn critical_time(&self, tag: Tag) -> f64 {
+        self.critical_path
+            .iter()
+            .find(|(t, _)| *t == tag)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0)
+    }
+
+    pub fn bytes(&self, tag: Tag) -> f64 {
+        self.tag_bytes
+            .iter()
+            .find(|(t, _)| *t == tag)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0)
+    }
+
+    pub fn flops(&self, tag: Tag) -> f64 {
+        self.tag_flops
+            .iter()
+            .find(|(t, _)| *t == tag)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0)
+    }
+
+    /// Utilization of a resource relative to the makespan.
+    pub fn utilization(&self, resource: usize) -> f64 {
+        if self.makespan == 0.0 {
+            0.0
+        } else {
+            self.resource_busy[resource] / self.makespan
+        }
+    }
+}
+
+/// The engine. Stateless; `run` consumes a plan reference.
+pub struct Simulator;
+
+impl Simulator {
+    /// Execute the plan, returning timing and accounting.
+    pub fn run(plan: &Plan) -> SimResult {
+        let n = plan.tasks.len();
+        let mut indeg = vec![0usize; n];
+        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        for (i, t) in plan.tasks.iter().enumerate() {
+            indeg[i] = t.deps.len();
+            for &d in &t.deps {
+                dependents[d].push(i);
+            }
+        }
+
+        let mut ready_time = vec![0.0f64; n];
+        // which dep finished last (start cause candidate)
+        let mut last_dep: Vec<Option<TaskId>> = vec![None; n];
+        let mut heap: BinaryHeap<Entry> = BinaryHeap::new();
+        for i in 0..n {
+            if indeg[i] == 0 {
+                heap.push(Entry {
+                    ready: 0.0,
+                    priority: plan.tasks[i].priority,
+                    id: i,
+                });
+            }
+        }
+
+        let nres = plan.resource_names.len();
+        let mut res_free = vec![0.0f64; nres];
+        let mut res_last: Vec<Option<TaskId>> = vec![None; nres];
+        let mut res_busy = vec![0.0f64; nres];
+
+        let mut start = vec![0.0f64; n];
+        let mut finish = vec![0.0f64; n];
+        let mut cause: Vec<StartCause> = vec![StartCause::Source; n];
+        let mut done = 0usize;
+
+        while let Some(e) = heap.pop() {
+            let i = e.id;
+            let t = &plan.tasks[i];
+            let (s, c) = match t.resource {
+                Some(r) => {
+                    if res_free[r] > e.ready {
+                        (res_free[r], StartCause::Resource(res_last[r].unwrap()))
+                    } else {
+                        match last_dep[i] {
+                            Some(d) => (e.ready, StartCause::Dep(d)),
+                            None => (e.ready, StartCause::Source),
+                        }
+                    }
+                }
+                None => match last_dep[i] {
+                    Some(d) => (e.ready, StartCause::Dep(d)),
+                    None => (e.ready, StartCause::Source),
+                },
+            };
+            let f = s + t.duration;
+            start[i] = s;
+            finish[i] = f;
+            cause[i] = c;
+            if let Some(r) = t.resource {
+                res_free[r] = f;
+                res_last[r] = Some(i);
+                res_busy[r] += t.duration;
+            }
+            done += 1;
+            for &j in &dependents[i] {
+                if f > ready_time[j] {
+                    ready_time[j] = f;
+                    last_dep[j] = Some(i);
+                }
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    heap.push(Entry {
+                        ready: ready_time[j],
+                        priority: plan.tasks[j].priority,
+                        id: j,
+                    });
+                }
+            }
+        }
+        assert_eq!(done, n, "plan contains a cycle (validate() first)");
+
+        let makespan = finish.iter().cloned().fold(0.0f64, f64::max);
+
+        // per-tag accounting
+        let mut tag_busy: Vec<(Tag, f64)> = Tag::ALL.iter().map(|&t| (t, 0.0)).collect();
+        let mut tag_bytes: Vec<(Tag, f64)> = Tag::ALL.iter().map(|&t| (t, 0.0)).collect();
+        let mut tag_flops: Vec<(Tag, f64)> = Tag::ALL.iter().map(|&t| (t, 0.0)).collect();
+        let idx = |tag: Tag| Tag::ALL.iter().position(|&t| t == tag).unwrap();
+        for t in &plan.tasks {
+            tag_busy[idx(t.tag)].1 += t.duration;
+            tag_bytes[idx(t.tag)].1 += t.bytes;
+            tag_flops[idx(t.tag)].1 += t.flops;
+        }
+
+        // critical path: walk back from the last-finishing task
+        let mut critical: Vec<(Tag, f64)> = Tag::ALL.iter().map(|&t| (t, 0.0)).collect();
+        if n > 0 {
+            let mut cur = (0..n)
+                .max_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap())
+                .unwrap();
+            loop {
+                critical[idx(plan.tasks[cur].tag)].1 += plan.tasks[cur].duration;
+                match cause[cur] {
+                    StartCause::Source => break,
+                    StartCause::Dep(d) => cur = d,
+                    StartCause::Resource(p) => cur = p,
+                }
+            }
+        }
+
+        SimResult {
+            makespan,
+            start,
+            finish,
+            tag_busy,
+            resource_busy: res_busy,
+            critical_path: critical,
+            tag_bytes,
+            tag_flops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::plan::{Plan, Tag, TaskSpec};
+
+    fn spec(resource: Option<usize>, duration: f64, deps: &[usize], priority: i64) -> TaskSpec {
+        TaskSpec {
+            resource,
+            duration,
+            deps: deps.to_vec(),
+            priority,
+            tag: Tag::Barrier,
+            bytes: 0.0,
+            flops: 0.0,
+        }
+    }
+
+    #[test]
+    fn chain_accumulates() {
+        let mut p = Plan::new();
+        let r = p.add_resource("r");
+        let a = p.add_task(spec(Some(r), 1.0, &[], 0));
+        let b = p.add_task(spec(Some(r), 2.0, &[a], 0));
+        let res = Simulator::run(&p);
+        assert_eq!(res.finish[b], 3.0);
+        assert_eq!(res.makespan, 3.0);
+        assert_eq!(res.utilization(r), 1.0);
+    }
+
+    #[test]
+    fn independent_tasks_on_distinct_resources_overlap() {
+        let mut p = Plan::new();
+        let r1 = p.add_resource("r1");
+        let r2 = p.add_resource("r2");
+        p.add_task(spec(Some(r1), 3.0, &[], 0));
+        p.add_task(spec(Some(r2), 2.0, &[], 0));
+        let res = Simulator::run(&p);
+        assert_eq!(res.makespan, 3.0);
+    }
+
+    #[test]
+    fn same_resource_serializes() {
+        let mut p = Plan::new();
+        let r = p.add_resource("r");
+        p.add_task(spec(Some(r), 3.0, &[], 0));
+        p.add_task(spec(Some(r), 2.0, &[], 0));
+        let res = Simulator::run(&p);
+        assert_eq!(res.makespan, 5.0);
+    }
+
+    #[test]
+    fn priority_orders_contenders() {
+        let mut p = Plan::new();
+        let r = p.add_resource("r");
+        let lo = p.add_task(spec(Some(r), 1.0, &[], 10));
+        let hi = p.add_task(spec(Some(r), 1.0, &[], -10));
+        let res = Simulator::run(&p);
+        assert!(res.start[hi] < res.start[lo]);
+    }
+
+    #[test]
+    fn diamond_dependencies() {
+        let mut p = Plan::new();
+        let r1 = p.add_resource("r1");
+        let r2 = p.add_resource("r2");
+        let a = p.add_task(spec(Some(r1), 1.0, &[], 0));
+        let b = p.add_task(spec(Some(r1), 2.0, &[a], 0));
+        let c = p.add_task(spec(Some(r2), 5.0, &[a], 0));
+        let d = p.add_task(spec(None, 0.0, &[b, c], 0));
+        let res = Simulator::run(&p);
+        assert_eq!(res.finish[d], 6.0); // gated by the longer branch
+        assert_eq!(res.makespan, 6.0);
+    }
+
+    #[test]
+    fn critical_path_follows_bottleneck() {
+        let mut p = Plan::new();
+        let dram = p.add_resource("dram");
+        let comp = p.add_resource("compute");
+        // long load gates a short compute: critical path is mostly load
+        let mut load_spec = spec(Some(dram), 10.0, &[], 0);
+        load_spec.tag = Tag::WeightStream;
+        let l = p.add_task(load_spec);
+        let mut comp_spec = spec(Some(comp), 1.0, &[l], 0);
+        comp_spec.tag = Tag::MoeCompute;
+        p.add_task(comp_spec);
+        let res = Simulator::run(&p);
+        assert_eq!(res.makespan, 11.0);
+        assert_eq!(res.critical_time(Tag::WeightStream), 10.0);
+        assert_eq!(res.critical_time(Tag::MoeCompute), 1.0);
+    }
+
+    #[test]
+    fn resource_wait_appears_in_critical_path() {
+        let mut p = Plan::new();
+        let r = p.add_resource("r");
+        let a = p.add_task(spec(Some(r), 4.0, &[], -1));
+        let b = p.add_task(spec(Some(r), 1.0, &[], 0));
+        let res = Simulator::run(&p);
+        // b waits for a on the resource; critical path includes both
+        assert_eq!(res.makespan, 5.0);
+        assert_eq!(res.finish[b], 5.0);
+        assert_eq!(res.start[b], res.finish[a]);
+    }
+
+    #[test]
+    fn empty_plan() {
+        let p = Plan::new();
+        let res = Simulator::run(&p);
+        assert_eq!(res.makespan, 0.0);
+    }
+
+    #[test]
+    fn busy_times_by_tag() {
+        let mut p = Plan::new();
+        let r = p.add_resource("r");
+        let mut s1 = spec(Some(r), 2.0, &[], 0);
+        s1.tag = Tag::A2aDispatch;
+        s1.bytes = 100.0;
+        p.add_task(s1);
+        let mut s2 = spec(Some(r), 3.0, &[], 0);
+        s2.tag = Tag::A2aDispatch;
+        s2.bytes = 50.0;
+        p.add_task(s2);
+        let res = Simulator::run(&p);
+        assert_eq!(res.tag_time(Tag::A2aDispatch), 5.0);
+        assert_eq!(res.bytes(Tag::A2aDispatch), 150.0);
+    }
+}

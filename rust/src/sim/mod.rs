@@ -1,0 +1,17 @@
+//! Discrete-event simulation of the wafer-scale platform.
+//!
+//! The simulator executes a *plan*: a DAG of tasks, each bound to at most
+//! one sequential hardware resource (a DRAM channel, a chiplet's compute
+//! array, the NoP tree, ...) with a fixed duration. Event-driven list
+//! scheduling resolves dependency readiness and resource contention; the
+//! result carries the makespan, per-tag/per-resource busy times, and the
+//! critical path — which is exactly the granularity the paper's
+//! cycle-accurate simulator reports at the micro-batch x layer x stream-
+//! chunk level (its per-cycle detail is only used to *validate* those
+//! aggregates against Verilog, which we cannot ship).
+
+pub mod engine;
+pub mod plan;
+
+pub use engine::{SimResult, Simulator};
+pub use plan::{Plan, ResourceId, Tag, TaskId, TaskSpec};

@@ -1,0 +1,242 @@
+//! Task-DAG plan representation consumed by the simulator engine.
+
+pub type TaskId = usize;
+pub type ResourceId = usize;
+
+/// Semantic label of a task, used for latency breakdowns (paper §5.4 Q1/Q2)
+/// and energy accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tag {
+    /// Expert weight streaming DRAM -> chiplet (fwd or bwd reload).
+    WeightStream,
+    /// Attention weight load on the attention DRAM channels.
+    AttnWeightLoad,
+    /// Attention compute (QKV projection, scores, output projection).
+    AttnCompute,
+    /// Router/gating compute.
+    Router,
+    /// All-to-all dispatch (attention -> expert chiplets).
+    A2aDispatch,
+    /// Expert FFN compute on an MoE chiplet.
+    MoeCompute,
+    /// All-to-all combine (expert chiplets -> attention), switch-aggregated.
+    A2aCombine,
+    /// Saving activations to DRAM for the backward pass.
+    ActSave,
+    /// Re-reading activations during backward.
+    ActLoad,
+    /// Gradient writeback to DRAM.
+    GradWriteback,
+    /// Optimizer update (near-memory read-modify-write of weights+state).
+    OptimUpdate,
+    /// Synchronization / barrier placeholder (zero or small duration).
+    Barrier,
+}
+
+impl Tag {
+    pub const ALL: [Tag; 12] = [
+        Tag::WeightStream,
+        Tag::AttnWeightLoad,
+        Tag::AttnCompute,
+        Tag::Router,
+        Tag::A2aDispatch,
+        Tag::MoeCompute,
+        Tag::A2aCombine,
+        Tag::ActSave,
+        Tag::ActLoad,
+        Tag::GradWriteback,
+        Tag::OptimUpdate,
+        Tag::Barrier,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tag::WeightStream => "weight-stream",
+            Tag::AttnWeightLoad => "attn-weight-load",
+            Tag::AttnCompute => "attn-compute",
+            Tag::Router => "router",
+            Tag::A2aDispatch => "a2a-dispatch",
+            Tag::MoeCompute => "moe-compute",
+            Tag::A2aCombine => "a2a-combine",
+            Tag::ActSave => "act-save",
+            Tag::ActLoad => "act-load",
+            Tag::GradWriteback => "grad-writeback",
+            Tag::OptimUpdate => "optim-update",
+            Tag::Barrier => "barrier",
+        }
+    }
+}
+
+/// One schedulable unit of work.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    /// Sequential resource this task occupies (None = pure dependency node).
+    pub resource: Option<ResourceId>,
+    /// Service time on the resource, seconds.
+    pub duration: f64,
+    /// Tasks that must finish before this one may start.
+    pub deps: Vec<TaskId>,
+    /// Scheduling priority among same-resource contenders (lower = sooner);
+    /// the streaming-experts scheduler uses this to load hot clusters first.
+    pub priority: i64,
+    pub tag: Tag,
+    /// Bytes moved (memory/NoP tasks) — for energy accounting.
+    pub bytes: f64,
+    /// FLOPs executed (compute tasks) — for energy accounting.
+    pub flops: f64,
+}
+
+/// A full plan: resources + task DAG.
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    pub resource_names: Vec<String>,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl Plan {
+    pub fn new() -> Plan {
+        Plan::default()
+    }
+
+    pub fn add_resource(&mut self, name: impl Into<String>) -> ResourceId {
+        self.resource_names.push(name.into());
+        self.resource_names.len() - 1
+    }
+
+    /// Add a task; returns its id.
+    pub fn add_task(&mut self, spec: TaskSpec) -> TaskId {
+        debug_assert!(spec.duration >= 0.0);
+        self.tasks.push(spec);
+        self.tasks.len() - 1
+    }
+
+    /// Convenience builder for common tasks.
+    pub fn task(
+        &mut self,
+        tag: Tag,
+        resource: Option<ResourceId>,
+        duration: f64,
+        deps: &[TaskId],
+    ) -> TaskId {
+        self.add_task(TaskSpec {
+            resource,
+            duration,
+            deps: deps.to_vec(),
+            priority: 0,
+            tag,
+            bytes: 0.0,
+            flops: 0.0,
+        })
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Validate: deps reference earlier-or-existing tasks, resources exist,
+    /// and the graph is acyclic (guaranteed if deps < id, checked here).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, t) in self.tasks.iter().enumerate() {
+            if let Some(r) = t.resource {
+                anyhow::ensure!(
+                    r < self.resource_names.len(),
+                    "task {i}: resource {r} undefined"
+                );
+            }
+            anyhow::ensure!(t.duration.is_finite() && t.duration >= 0.0);
+            for &d in &t.deps {
+                anyhow::ensure!(d < self.tasks.len(), "task {i}: dep {d} out of range");
+                anyhow::ensure!(d != i, "task {i}: self-dependency");
+            }
+        }
+        // cycle check via Kahn's algorithm
+        let mut indeg = vec![0usize; self.tasks.len()];
+        let mut out: Vec<Vec<TaskId>> = vec![Vec::new(); self.tasks.len()];
+        for (i, t) in self.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                indeg[i] += 1;
+                out[d].push(i);
+            }
+        }
+        let mut stack: Vec<TaskId> = (0..self.tasks.len())
+            .filter(|&i| indeg[i] == 0)
+            .collect();
+        let mut seen = 0usize;
+        while let Some(i) = stack.pop() {
+            seen += 1;
+            for &j in &out[i] {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    stack.push(j);
+                }
+            }
+        }
+        anyhow::ensure!(seen == self.tasks.len(), "plan contains a cycle");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_validate() {
+        let mut p = Plan::new();
+        let r = p.add_resource("dram");
+        let a = p.task(Tag::WeightStream, Some(r), 1.0, &[]);
+        let b = p.task(Tag::MoeCompute, Some(r), 2.0, &[a]);
+        assert_eq!(p.n_tasks(), 2);
+        assert_eq!(p.tasks[b].deps, vec![a]);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_bad_resource() {
+        let mut p = Plan::new();
+        p.add_task(TaskSpec {
+            resource: Some(3),
+            duration: 1.0,
+            deps: vec![],
+            priority: 0,
+            tag: Tag::Barrier,
+            bytes: 0.0,
+            flops: 0.0,
+        });
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_cycle() {
+        let mut p = Plan::new();
+        let r = p.add_resource("x");
+        // manual cycle 0 -> 1 -> 0
+        p.add_task(TaskSpec {
+            resource: Some(r),
+            duration: 1.0,
+            deps: vec![1],
+            priority: 0,
+            tag: Tag::Barrier,
+            bytes: 0.0,
+            flops: 0.0,
+        });
+        p.add_task(TaskSpec {
+            resource: Some(r),
+            duration: 1.0,
+            deps: vec![0],
+            priority: 0,
+            tag: Tag::Barrier,
+            bytes: 0.0,
+            flops: 0.0,
+        });
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn tag_names_unique() {
+        let mut names: Vec<&str> = Tag::ALL.iter().map(|t| t.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Tag::ALL.len());
+    }
+}

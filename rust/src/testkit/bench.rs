@@ -1,0 +1,73 @@
+//! Minimal timing harness for `harness = false` benches.
+
+use crate::util::stats;
+
+/// Timing summary of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} iters={:<3} mean={:<12} p50={:<12} p95={:<12} min={}",
+            self.name,
+            self.iters,
+            crate::util::fmt_secs(self.mean_s),
+            crate::util::fmt_secs(self.p50_s),
+            crate::util::fmt_secs(self.p95_s),
+            crate::util::fmt_secs(self.min_s),
+        )
+    }
+}
+
+/// Run `f` with one warmup pass, then time `iters` passes and print a
+/// summary line. The closure's return value is black-boxed to prevent the
+/// optimizer from eliding the work.
+pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters >= 1);
+    std::hint::black_box(f()); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples),
+        std_s: stats::std(&samples),
+        min_s: stats::min(&samples),
+        p50_s: stats::percentile(&samples, 50.0),
+        p95_s: stats::percentile(&samples, 95.0),
+    };
+    println!("{}", r.render());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_sane() {
+        let r = bench("spin", 3, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(r.iters, 3);
+        assert!(r.mean_s >= 0.0 && r.min_s <= r.mean_s);
+        assert!(r.p50_s <= r.p95_s + 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! Test/bench substrate: a small timing harness and a property-testing
+//! helper. The offline crate set has neither `criterion` nor `proptest`;
+//! these provide the subset we need — warmup + repeated timing with summary
+//! statistics for `cargo bench` (benches declare `harness = false`), and
+//! seeded random-case generation with failure reproduction for property
+//! tests.
+
+pub mod bench;
+pub mod prop;
+
+pub use bench::{bench, BenchResult};
+pub use prop::forall;

@@ -1,0 +1,69 @@
+//! Seeded property-testing helper: runs a property over `cases` random
+//! inputs generated from a deterministic RNG; on failure, reports the case
+//! seed so the exact input reproduces with `forall_seeded`.
+
+use crate::util::rng::Rng;
+
+/// Run `property(rng)` for `cases` independent seeded RNGs; panics with the
+/// failing seed on the first error.
+pub fn forall(name: &str, cases: usize, property: impl Fn(&mut Rng) -> Result<(), String>) {
+    let mut root = Rng::new(0xF0_4A11 ^ name.len() as u64);
+    for case in 0..cases {
+        let seed = root.next_u64();
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property `{name}` failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn forall_seeded(
+    name: &str,
+    seed: u64,
+    property: impl Fn(&mut Rng) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = property(&mut rng) {
+        panic!("property `{name}` failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assertion helpers for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn passing_property() {
+        super::forall("commutes", 50, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            prop_assert!(a + b == b + a, "addition must commute");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_reports_seed() {
+        super::forall("always-fails", 5, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn seeded_reproduction() {
+        super::forall_seeded("det", 42, |rng| {
+            let v = rng.below(10);
+            let mut rng2 = crate::util::rng::Rng::new(42);
+            prop_assert!(v == rng2.below(10), "same seed, same draw");
+            Ok(())
+        });
+    }
+}

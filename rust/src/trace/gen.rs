@@ -1,0 +1,272 @@
+//! Synthetic routing-trace generator.
+//!
+//! Generative model per MoE layer (see DESIGN.md §Substitutions):
+//!
+//! - **Specialization**: expert popularity follows a Zipf law over a random
+//!   permutation of the index space (popularity is uncorrelated with index,
+//!   as in real checkpoints).
+//! - **Collaboration**: `n_topics` latent topics, each with an affinity set
+//!   of experts chosen by *stratified* sampling over the index space — one
+//!   expert per contiguous index stratum — so co-activated experts are
+//!   spread out in the arbitrary index order (the paper's Figure 3 shows
+//!   off-diagonal co-activation mass; a default contiguous expert layout
+//!   therefore co-locates slightly *worse* than chance, consistent with
+//!   Table 4 where the un-clustered Mozart-B C_T sits above the uniform
+//!   expectation).
+//! - A token is *topical* with probability `topic_prob`; a topical token
+//!   draws `in_topic` of its k experts from its topic's affinity set
+//!   (popularity-weighted) and the rest globally; a non-topical token draws
+//!   all k globally by popularity.
+
+use crate::config::ModelConfig;
+use crate::util::rng::{zipf_weights, AliasTable, Rng};
+
+use super::RoutingTrace;
+
+/// Generator parameters; tuned per model so the derived C_T statistics land
+/// on the paper's Table 4 anchors (see `report::table4` and EXPERIMENTS.md).
+#[derive(Clone, Debug)]
+pub struct TraceParams {
+    /// Zipf exponent for expert popularity.
+    pub alpha: f64,
+    /// Number of latent collaboration topics per layer.
+    pub n_topics: usize,
+    /// Affinity-set size of each topic.
+    pub topic_size: usize,
+    /// Probability a token is topical.
+    pub topic_prob: f64,
+    /// How many of a topical token's k picks come from its topic set.
+    pub in_topic: usize,
+}
+
+impl TraceParams {
+    /// Defaults tuned against Table 4 (see EXPERIMENTS.md for the fit):
+    /// topics partition the expert space into `n_experts / topic_size`
+    /// disjoint affinity sets of one expert per stratum; a topical token
+    /// takes `in_topic` picks from its set.
+    pub fn for_model(m: &ModelConfig) -> TraceParams {
+        let topic_size = (m.n_experts / 16).max(2);
+        TraceParams {
+            alpha: 0.45,
+            n_topics: m.n_experts / topic_size,
+            topic_size,
+            topic_prob: 0.42,
+            in_topic: topic_size.min((m.top_k / 2).max(2)).min(m.top_k),
+        }
+    }
+}
+
+/// Per-layer latent state.
+#[derive(Clone, Debug)]
+struct LayerModel {
+    /// Unnormalized popularity weights.
+    popularity: Vec<f64>,
+    /// O(1) sampler over `popularity` (the hot path).
+    popularity_alias: AliasTable,
+    /// Affinity sets, one per topic.
+    topics: Vec<Vec<usize>>,
+    /// Topic draw weights (some topics are hotter than others).
+    topic_weights: Vec<f64>,
+}
+
+/// Deterministic trace generator for all MoE layers of one model.
+#[derive(Clone, Debug)]
+pub struct TraceGen {
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub params: TraceParams,
+    layers: Vec<LayerModel>,
+}
+
+impl TraceGen {
+    /// Build the latent per-layer models from `seed`.
+    pub fn new(model: &ModelConfig, params: TraceParams, seed: u64) -> TraceGen {
+        let mut root = Rng::new(seed);
+        let n = model.n_experts;
+        let layers = (0..model.n_moe_layers())
+            .map(|l| {
+                let mut rng = root.fork(l as u64);
+                let perm = rng.permutation(n);
+                let popularity = zipf_weights(n, params.alpha, &perm);
+                // Stratified *partition* into affinity sets: the index
+                // space splits into `topic_size` strata of `n_topics`
+                // experts; a random within-stratum permutation deals one
+                // member of every stratum to each topic. Topics are
+                // disjoint, jointly exhaustive, and spread across the
+                // arbitrary index order.
+                let n_strata = params.topic_size;
+                let stratum = n / n_strata; // experts per stratum == n_topics
+                assert_eq!(stratum, params.n_topics, "topics must partition");
+                let deals: Vec<Vec<usize>> =
+                    (0..n_strata).map(|_| rng.permutation(stratum)).collect();
+                let topics = (0..params.n_topics)
+                    .map(|t| {
+                        (0..n_strata)
+                            .map(|s| s * stratum + deals[s][t])
+                            .collect::<Vec<_>>()
+                    })
+                    .collect::<Vec<_>>();
+                let topic_perm = rng.permutation(params.n_topics);
+                let topic_weights = zipf_weights(params.n_topics, 0.5, &topic_perm);
+                LayerModel {
+                    popularity_alias: AliasTable::new(&popularity),
+                    popularity,
+                    topics,
+                    topic_weights,
+                }
+            })
+            .collect();
+        TraceGen {
+            n_experts: n,
+            top_k: model.top_k,
+            params,
+            layers,
+        }
+    }
+
+    /// Convenience: default params for the model.
+    pub fn for_model(model: &ModelConfig, seed: u64) -> TraceGen {
+        TraceGen::new(model, TraceParams::for_model(model), seed)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Sample the routing of `n_tokens` tokens through MoE layer `layer`.
+    /// `rng` carries the per-step randomness so successive training steps
+    /// see fresh tokens from the same stationary distribution.
+    pub fn sample_layer(&self, layer: usize, n_tokens: usize, rng: &mut Rng) -> RoutingTrace {
+        let lm = &self.layers[layer % self.layers.len()];
+        let k = self.top_k;
+        let mut choices = Vec::with_capacity(n_tokens * k);
+        let mut mask = vec![false; self.n_experts];
+        // scratch buffers hoisted out of the token loop (this is the hot
+        // path of every simulated experiment — see EXPERIMENTS.md #Perf)
+        let mut picked: Vec<u32> = Vec::with_capacity(k);
+        let max_topic = self.params.topic_size;
+        let mut topic_w: Vec<f64> = vec![0.0; max_topic];
+        for _ in 0..n_tokens {
+            picked.clear();
+            let topical = rng.f64() < self.params.topic_prob;
+            if topical {
+                let t = rng.weighted(&lm.topic_weights);
+                let set = &lm.topics[t];
+                // popularity-weighted draw within the affinity set,
+                // in-place masked sampling without replacement
+                let take = self.params.in_topic.min(k).min(set.len());
+                for (slot, &e) in set.iter().enumerate() {
+                    topic_w[slot] = lm.popularity[e];
+                }
+                for _ in 0..take {
+                    let idx = rng.weighted(&topic_w[..set.len()]);
+                    topic_w[idx] = 0.0;
+                    let e = set[idx] as u32;
+                    if !mask[e as usize] {
+                        mask[e as usize] = true;
+                        picked.push(e);
+                    }
+                }
+            }
+            // fill the remaining slots from the global popularity law
+            while picked.len() < k {
+                let e = lm.popularity_alias.sample(rng) as u32;
+                if !mask[e as usize] {
+                    mask[e as usize] = true;
+                    picked.push(e);
+                }
+            }
+            for &e in &picked {
+                mask[e as usize] = false;
+            }
+            choices.extend_from_slice(&picked);
+        }
+        RoutingTrace {
+            n_experts: self.n_experts,
+            top_k: k,
+            choices,
+        }
+    }
+
+    /// Sample a profiling batch: all layers, `n_tokens` each (the paper runs
+    /// the prefill of an instruction-tuning set through the model once).
+    pub fn profile(&self, n_tokens: usize, seed: u64) -> Vec<RoutingTrace> {
+        let mut rng = Rng::new(seed ^ 0x9E3779B97F4A7C15);
+        (0..self.n_layers())
+            .map(|l| {
+                let mut r = rng.fork(l as u64);
+                self.sample_layer(l, n_tokens, &mut r)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ModelId};
+
+    fn qwen_gen() -> TraceGen {
+        let m = ModelConfig::preset(ModelId::Qwen3_30B_A3B);
+        TraceGen::for_model(&m, 7)
+    }
+
+    #[test]
+    fn traces_are_structurally_valid() {
+        let g = qwen_gen();
+        let mut rng = Rng::new(1);
+        let tr = g.sample_layer(0, 500, &mut rng);
+        assert_eq!(tr.n_tokens(), 500);
+        tr.validate().unwrap();
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g1 = qwen_gen();
+        let g2 = qwen_gen();
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        assert_eq!(
+            g1.sample_layer(3, 100, &mut r1).choices,
+            g2.sample_layer(3, 100, &mut r2).choices
+        );
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let g = qwen_gen();
+        let mut rng = Rng::new(2);
+        let tr = g.sample_layer(0, 20_000, &mut rng);
+        let counts = tr.expert_token_counts();
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        // Figure 3 shows clearly unbalanced activation frequencies.
+        assert!(max / min.max(1.0) > 2.0, "max={max} min={min}");
+    }
+
+    #[test]
+    fn all_layers_profile() {
+        let m = ModelConfig::preset(ModelId::OlmoE_1B_7B);
+        let g = TraceGen::for_model(&m, 11);
+        let prof = g.profile(64, 3);
+        assert_eq!(prof.len(), m.n_moe_layers());
+        for tr in &prof {
+            tr.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn topics_are_stratified() {
+        // every stratum of the index space contributes exactly one member
+        let m = ModelConfig::preset(ModelId::Qwen3_30B_A3B);
+        let p = TraceParams::for_model(&m);
+        let g = TraceGen::new(&m, p.clone(), 13);
+        let stratum = m.n_experts / p.topic_size;
+        for lm_topic in &g.layers[0].topics {
+            let mut strata: Vec<usize> = lm_topic.iter().map(|e| e / stratum).collect();
+            strata.sort_unstable();
+            strata.dedup();
+            assert_eq!(strata.len(), p.topic_size);
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Routing traces and expert-activation priors (paper §3.2).
+//!
+//! The paper profiles pre-trained MoE-LLMs on Alpaca with A100 servers to
+//! obtain (a) the per-expert workload distribution `V` (Eq. 3) and (b) the
+//! pairwise co-activation matrix `C`/`P` (Eq. 4). We cannot run 30B-param
+//! models here, so [`gen::TraceGen`] synthesizes routing traces with the two
+//! empirical properties the paper's Figure 3 documents — *expert
+//! specialization* (power-law activation frequencies) and *expert
+//! collaboration* (latent groups of co-activated experts, scattered across
+//! the arbitrary expert-index order) — and the tiny real model trained in
+//! `examples/train_tiny_moe.rs` provides a real-trace cross-check.
+
+pub mod gen;
+pub mod prior;
+
+pub use gen::{TraceGen, TraceParams};
+pub use prior::{coactivation, workload_vector, Priors};
+
+/// Routing decisions for one MoE layer over a batch of tokens: `choices`
+/// holds `n_tokens * top_k` expert indices (row-major per token). Within a
+/// token the k experts are distinct.
+#[derive(Clone, Debug)]
+pub struct RoutingTrace {
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub choices: Vec<u32>,
+}
+
+impl RoutingTrace {
+    pub fn n_tokens(&self) -> usize {
+        debug_assert_eq!(self.choices.len() % self.top_k, 0);
+        self.choices.len() / self.top_k
+    }
+
+    /// The k experts chosen by token `t`.
+    pub fn token(&self, t: usize) -> &[u32] {
+        &self.choices[t * self.top_k..(t + 1) * self.top_k]
+    }
+
+    /// Tokens routed to each expert (the per-expert workload in tokens).
+    pub fn expert_token_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.n_experts];
+        for &e in &self.choices {
+            counts[e as usize] += 1;
+        }
+        counts
+    }
+
+    /// Validate structural invariants (indices in range, distinct within a
+    /// token). Used by tests and debug assertions.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.top_k >= 1 && self.top_k <= self.n_experts);
+        anyhow::ensure!(self.choices.len() % self.top_k == 0);
+        let mut seen = vec![u32::MAX; self.n_experts];
+        for t in 0..self.n_tokens() {
+            for &e in self.token(t) {
+                anyhow::ensure!(
+                    (e as usize) < self.n_experts,
+                    "expert index {e} out of range"
+                );
+                anyhow::ensure!(
+                    seen[e as usize] != t as u32,
+                    "token {t} routed to expert {e} twice"
+                );
+                seen[e as usize] = t as u32;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_accessors() {
+        let tr = RoutingTrace {
+            n_experts: 4,
+            top_k: 2,
+            choices: vec![0, 1, 2, 3, 0, 2],
+        };
+        assert_eq!(tr.n_tokens(), 3);
+        assert_eq!(tr.token(1), &[2, 3]);
+        assert_eq!(tr.expert_token_counts(), vec![2, 1, 2, 1]);
+        tr.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        let tr = RoutingTrace {
+            n_experts: 2,
+            top_k: 1,
+            choices: vec![5],
+        };
+        assert!(tr.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_duplicates_within_token() {
+        let tr = RoutingTrace {
+            n_experts: 4,
+            top_k: 2,
+            choices: vec![1, 1],
+        };
+        assert!(tr.validate().is_err());
+    }
+}

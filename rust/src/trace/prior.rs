@@ -1,0 +1,198 @@
+//! Expert-activation priors (paper §3.2, Eq. 3 and Eq. 4).
+
+use super::RoutingTrace;
+
+/// The two profiling statistics the paper's algorithms consume.
+#[derive(Clone, Debug)]
+pub struct Priors {
+    /// Normalized workload distribution V (Eq. 3): fraction of routed
+    /// token-slots landing on each expert. Sums to 1.
+    pub workload: Vec<f64>,
+    /// Raw co-activation counts C (Eq. 4, left).
+    pub coact_counts: Vec<u64>,
+    /// Max-normalized co-activation matrix P in [0,1] (Eq. 4, right).
+    pub coact: Vec<f64>,
+    pub n_experts: usize,
+}
+
+impl Priors {
+    /// Compute priors over a profiling batch (one or more layer traces with
+    /// identical shapes — the paper computes per-layer priors; callers pass
+    /// a single layer's trace, or several to pool).
+    pub fn from_traces(traces: &[&RoutingTrace]) -> Priors {
+        assert!(!traces.is_empty());
+        let n = traces[0].n_experts;
+        let mut v = vec![0u64; n];
+        let mut c = vec![0u64; n * n];
+        for tr in traces {
+            assert_eq!(tr.n_experts, n, "mixed trace widths");
+            for t in 0..tr.n_tokens() {
+                let picks = tr.token(t);
+                for &e in picks {
+                    v[e as usize] += 1;
+                }
+                for i in 0..picks.len() {
+                    for j in (i + 1)..picks.len() {
+                        let (a, b) = (picks[i] as usize, picks[j] as usize);
+                        c[a * n + b] += 1;
+                        c[b * n + a] += 1;
+                    }
+                }
+            }
+        }
+        let total: u64 = v.iter().sum();
+        let workload: Vec<f64> = v
+            .iter()
+            .map(|&x| {
+                if total == 0 {
+                    0.0
+                } else {
+                    x as f64 / total as f64
+                }
+            })
+            .collect();
+        let cmax = c.iter().copied().max().unwrap_or(0).max(1) as f64;
+        let coact: Vec<f64> = c.iter().map(|&x| x as f64 / cmax).collect();
+        Priors {
+            workload,
+            coact_counts: c,
+            coact,
+            n_experts: n,
+        }
+    }
+
+    pub fn from_trace(tr: &RoutingTrace) -> Priors {
+        Priors::from_traces(&[tr])
+    }
+
+    /// P[i,j] accessor.
+    pub fn p(&self, i: usize, j: usize) -> f64 {
+        self.coact[i * self.n_experts + j]
+    }
+
+    /// The (i, j) pair with the highest co-activation, i < j.
+    pub fn hottest_pair(&self) -> (usize, usize) {
+        let n = self.n_experts;
+        let mut best = (0, 1);
+        let mut best_v = f64::NEG_INFINITY;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if self.p(i, j) > best_v {
+                    best_v = self.p(i, j);
+                    best = (i, j);
+                }
+            }
+        }
+        best
+    }
+
+    /// Workload share of a set of experts.
+    pub fn set_workload(&self, experts: &[usize]) -> f64 {
+        experts.iter().map(|&e| self.workload[e]).sum()
+    }
+
+    /// Average pairwise co-activation within a set (intra-cluster
+    /// collaboration, paper §4.2 stage 1).
+    pub fn intra_collab(&self, set: &[usize]) -> f64 {
+        if set.len() < 2 {
+            return 0.0;
+        }
+        let mut s = 0.0;
+        let mut pairs = 0usize;
+        for i in 0..set.len() {
+            for j in (i + 1)..set.len() {
+                s += self.p(set[i], set[j]);
+                pairs += 1;
+            }
+        }
+        s / pairs as f64
+    }
+
+    /// Average pairwise co-activation across two disjoint sets
+    /// (inter-cluster collaboration).
+    pub fn inter_collab(&self, a: &[usize], b: &[usize]) -> f64 {
+        if a.is_empty() || b.is_empty() {
+            return 0.0;
+        }
+        let mut s = 0.0;
+        for &i in a {
+            for &j in b {
+                s += self.p(i, j);
+            }
+        }
+        s / (a.len() * b.len()) as f64
+    }
+}
+
+/// Eq. 3 standalone helper.
+pub fn workload_vector(tr: &RoutingTrace) -> Vec<f64> {
+    Priors::from_trace(tr).workload
+}
+
+/// Eq. 4 standalone helper: max-normalized co-activation matrix.
+pub fn coactivation(tr: &RoutingTrace) -> Vec<f64> {
+    Priors::from_trace(tr).coact
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> RoutingTrace {
+        // 3 tokens, k=2, 4 experts: (0,1) (0,1) (2,3)
+        RoutingTrace {
+            n_experts: 4,
+            top_k: 2,
+            choices: vec![0, 1, 0, 1, 2, 3],
+        }
+    }
+
+    #[test]
+    fn workload_normalized() {
+        let p = Priors::from_trace(&toy());
+        let sum: f64 = p.workload.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!((p.workload[0] - 2.0 / 6.0).abs() < 1e-12);
+        assert!((p.workload[3] - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coactivation_symmetric_and_normalized() {
+        let p = Priors::from_trace(&toy());
+        assert_eq!(p.p(0, 1), 1.0); // hottest pair (2 co-activations)
+        assert_eq!(p.p(1, 0), 1.0);
+        assert_eq!(p.p(2, 3), 0.5);
+        assert_eq!(p.p(0, 2), 0.0);
+        assert_eq!(p.hottest_pair(), (0, 1));
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((p.p(i, j) - p.p(j, i)).abs() < 1e-12);
+                assert!((0.0..=1.0).contains(&p.p(i, j)));
+            }
+        }
+    }
+
+    #[test]
+    fn collab_metrics() {
+        let p = Priors::from_trace(&toy());
+        assert_eq!(p.intra_collab(&[0, 1]), 1.0);
+        assert_eq!(p.intra_collab(&[0]), 0.0);
+        assert_eq!(p.inter_collab(&[0, 1], &[2, 3]), 0.0);
+        assert!((p.set_workload(&[0, 1]) - 4.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pooling_traces_accumulates() {
+        let t = toy();
+        let single = Priors::from_trace(&t);
+        let double = Priors::from_traces(&[&t, &t]);
+        // normalized quantities are invariant under pooling identical traces
+        for i in 0..4 {
+            assert!((single.workload[i] - double.workload[i]).abs() < 1e-12);
+        }
+        assert_eq!(
+            double.coact_counts[1], // (0,1) counted 4 times
+            4
+        );
+    }
+}

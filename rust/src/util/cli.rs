@@ -1,0 +1,136 @@
+//! Minimal CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus key/value options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: everything after is positional
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if a.starts_with('-') && a.len() > 1 && !a[1..].chars().next().unwrap().is_ascii_digit() {
+                bail!("short options are not supported: {a}");
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option lookup with a default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .with_context(|| format!("invalid value for --{name}: {s}")),
+        }
+    }
+
+    /// Required typed option.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        let s = self
+            .get(name)
+            .with_context(|| format!("missing required option --{name}"))?;
+        s.parse::<T>()
+            .with_context(|| format!("invalid value for --{name}: {s}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["report", "table3", "--seed", "7", "--seq=256", "--verbose"]);
+        assert_eq!(a.positional, vec!["report", "table3"]);
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get("seq"), Some("256"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["--steps", "100"]);
+        assert_eq!(a.get_parse::<u32>("steps", 5).unwrap(), 100);
+        assert_eq!(a.get_parse::<u32>("other", 5).unwrap(), 5);
+        assert!(a.get_parse::<u32>("steps", 5).is_ok());
+        assert!(a.require::<u32>("missing").is_err());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--x", "1", "--", "--not-an-option"]);
+        assert_eq!(a.get("x"), Some("1"));
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn negative_number_is_positional() {
+        let a = parse(&["-3.5"]);
+        assert_eq!(a.positional, vec!["-3.5"]);
+    }
+
+    #[test]
+    fn short_options_rejected() {
+        assert!(Args::parse(vec!["-v".to_string()]).is_err());
+    }
+}

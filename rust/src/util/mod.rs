@@ -1,0 +1,75 @@
+//! Small self-contained utilities.
+//!
+//! This repo builds fully offline against a vendored crate set that does not
+//! include `rand`, `serde`, `clap`, or `criterion`, so the handful of
+//! facilities we need from those crates are implemented here from scratch:
+//! a counter-based PRNG ([`rng`]), summary statistics ([`stats`]), an ASCII
+//! table printer ([`table`]), and a tiny CLI argument parser ([`cli`]).
+
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a byte count with binary units (e.g. `1.21 GiB`).
+pub fn fmt_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes;
+    let mut i = 0;
+    while v >= 1024.0 && i + 1 < UNITS.len() {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{v:.0} {}", UNITS[i])
+    } else {
+        format!("{v:.2} {}", UNITS[i])
+    }
+}
+
+/// Format a duration given in seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Integer ceiling division.
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+        assert_eq!(fmt_bytes(1.5 * 1024.0 * 1024.0 * 1024.0), "1.50 GiB");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(0.0025), "2.500 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500 us");
+        assert_eq!(fmt_secs(2.5e-8), "25.0 ns");
+    }
+
+    #[test]
+    fn div_ceil_basic() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(0, 3), 0);
+        assert_eq!(div_ceil(1, 1), 1);
+    }
+}

@@ -1,0 +1,329 @@
+//! Deterministic PRNG (splitmix64 + xoshiro256**) with the sampling helpers
+//! the trace generator needs. `rand` is not available offline; this is a
+//! faithful, tested implementation of the standard public-domain generators.
+
+/// xoshiro256** seeded via splitmix64. Deterministic across platforms.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream (e.g. per layer / per worker).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Uses rejection sampling to avoid modulo bias.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weighted() with all-zero weights");
+        let mut u = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            if u < w {
+                return i;
+            }
+            u -= w;
+        }
+        weights.len() - 1 // numerical tail
+    }
+
+    /// Sample `k` distinct indices from unnormalized weights (without
+    /// replacement), by iterative masked draws. O(k * n).
+    pub fn weighted_distinct(&mut self, weights: &[f64], k: usize) -> Vec<usize> {
+        assert!(k <= weights.len());
+        let mut w = weights.to_vec();
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let idx = self.weighted(&w);
+            out.push(idx);
+            w[idx] = 0.0;
+        }
+        out
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+}
+
+/// Walker alias table for O(1) sampling from a fixed discrete distribution.
+/// Used by the trace generator's global popularity draws (the hot path of
+/// every simulated experiment).
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    pub fn new(weights: &[f64]) -> AliasTable {
+        let n = weights.len();
+        assert!(n > 0);
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0);
+        let mut prob: Vec<f64> = weights.iter().map(|&w| w * n as f64 / total).collect();
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s] = l;
+            prob[l] = (prob[l] + prob[s]) - 1.0;
+            if prob[l] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // leftovers are 1.0 up to rounding
+        for &i in small.iter().chain(large.iter()) {
+            prob[i] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// Draw one index.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+/// Zipf-like unnormalized weights: w_i = 1 / (i + 1)^alpha over a permuted
+/// index order, so popularity is not correlated with expert index.
+pub fn zipf_weights(n: usize, alpha: f64, perm: &[usize]) -> Vec<f64> {
+    assert_eq!(perm.len(), n);
+    let mut w = vec![0.0; n];
+    for (rank, &i) in perm.iter().enumerate() {
+        w[i] = 1.0 / ((rank + 1) as f64).powf(alpha);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn weighted_respects_zero_mass() {
+        let mut r = Rng::new(9);
+        for _ in 0..1_000 {
+            let i = r.weighted(&[0.0, 1.0, 0.0]);
+            assert_eq!(i, 1);
+        }
+    }
+
+    #[test]
+    fn weighted_distinct_no_dupes() {
+        let mut r = Rng::new(11);
+        let w = vec![1.0; 16];
+        for _ in 0..200 {
+            let picks = r.weighted_distinct(&w, 8);
+            let mut sorted = picks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 8);
+        }
+    }
+
+    #[test]
+    fn weighted_roughly_proportional() {
+        let mut r = Rng::new(13);
+        let w = [1.0, 3.0];
+        let mut c = [0usize; 2];
+        for _ in 0..40_000 {
+            c[r.weighted(&w)] += 1;
+        }
+        let frac = c[1] as f64 / 40_000.0;
+        assert!((frac - 0.75).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(17);
+        let n = 50_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = r.normal();
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(19);
+        let p = r.permutation(100);
+        let mut q = p.clone();
+        q.sort_unstable();
+        assert_eq!(q, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn alias_table_matches_distribution() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let at = AliasTable::new(&w);
+        let mut r = Rng::new(23);
+        let mut c = [0usize; 4];
+        let n = 100_000;
+        for _ in 0..n {
+            c[at.sample(&mut r)] += 1;
+        }
+        for i in 0..4 {
+            let expect = w[i] / 10.0;
+            let got = c[i] as f64 / n as f64;
+            assert!((got - expect).abs() < 0.01, "i={i} got={got} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn alias_table_degenerate_mass() {
+        let at = AliasTable::new(&[0.0, 5.0, 0.0]);
+        let mut r = Rng::new(29);
+        for _ in 0..1_000 {
+            assert_eq!(at.sample(&mut r), 1);
+        }
+    }
+
+    #[test]
+    fn zipf_sums_and_skews() {
+        let perm: Vec<usize> = (0..8).collect();
+        let w = zipf_weights(8, 1.0, &perm);
+        assert!(w[0] > w[7]);
+        assert!((w[0] - 1.0).abs() < 1e-12);
+    }
+}

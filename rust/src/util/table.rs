@@ -1,0 +1,138 @@
+//! ASCII table printer used by all report generators. Produces GitHub-style
+//! markdown tables so the benchmark harness output can be pasted straight
+//! into EXPERIMENTS.md.
+
+/// A simple column-aligned markdown table builder.
+#[derive(Clone, Debug)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience for rows of &str.
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as a markdown table with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push(' ');
+                s.push_str(&cells[i]);
+                s.push_str(&" ".repeat(widths[i] - cells[i].len()));
+                s.push_str(" |");
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n", self.title));
+        }
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('|');
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Render a series as a compact ASCII bar chart (one bar per label), used by
+/// the figure generators where the paper shows bar plots.
+pub fn bar_chart(title: &str, labels: &[String], values: &[f64], unit: &str) -> String {
+    assert_eq!(labels.len(), values.len());
+    let maxv = values.iter().cloned().fold(0.0f64, f64::max).max(1e-12);
+    let width = 48usize;
+    let label_w = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = format!("### {title}\n");
+    for (l, &v) in labels.iter().zip(values) {
+        let n = ((v / maxv) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{l:<label_w$} | {} {v:.4} {unit}\n",
+            "#".repeat(n.max(if v > 0.0 { 1 } else { 0 }))
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_alignment() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row_str(&["xx", "y"]);
+        let r = t.render();
+        assert!(r.contains("### T"));
+        assert!(r.contains("| a  | bbbb |"));
+        assert!(r.contains("| xx | y    |"));
+        assert!(r.contains("|----|------|"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart(
+            "B",
+            &["x".into(), "y".into()],
+            &[1.0, 2.0],
+            "s",
+        );
+        assert!(s.contains("### B"));
+        // the larger value gets the full-width bar
+        assert!(s.contains(&"#".repeat(48)));
+    }
+}

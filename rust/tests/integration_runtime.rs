@@ -1,0 +1,98 @@
+//! Runtime integration tests over the AOT artifacts: the full L1->L2->L3
+//! contract. These require `make artifacts`; if the artifacts are missing
+//! the tests skip (so `cargo test` works in a fresh checkout), but the
+//! Makefile's `test` target always builds them first.
+
+use mozart::runtime::Runtime;
+use mozart::train::{run, ArtifactMeta, TrainConfig};
+
+fn artifacts_ready() -> bool {
+    ArtifactMeta::load("artifacts").is_ok()
+}
+
+#[test]
+fn pjrt_platform_is_cpu() {
+    assert_eq!(Runtime::cpu().unwrap().platform_name(), "cpu");
+}
+
+#[test]
+fn init_artifact_produces_documented_state() {
+    if !artifacts_ready() {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    }
+    let meta = ArtifactMeta::load("artifacts").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let init = rt.load_hlo_text("artifacts/tiny_moe_init.hlo.txt").unwrap();
+    let state = init.run(&[]).unwrap();
+    assert_eq!(state.len(), meta.n_params);
+    // embed is the first param: [vocab, hidden] f32
+    let embed_elems = state[0].element_count();
+    assert_eq!(embed_elems % meta.vocab, 0);
+}
+
+#[test]
+fn one_training_step_runs_and_loss_is_sane() {
+    if !artifacts_ready() {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    }
+    let meta = ArtifactMeta::load("artifacts").unwrap();
+    let summary = run(&TrainConfig {
+        artifacts_dir: "artifacts".into(),
+        steps: 2,
+        log_every: 1,
+        seed: 11,
+    })
+    .unwrap();
+    // initial loss near ln(vocab) for a fresh model
+    let expect = (meta.vocab as f64).ln();
+    assert!(
+        (summary.initial_loss() - expect).abs() < 1.5,
+        "initial loss {} far from ln(vocab) {expect}",
+        summary.initial_loss()
+    );
+    // router counts populated for every layer
+    for layer in &summary.router_counts {
+        assert_eq!(layer.len(), meta.n_experts);
+        assert!(layer.iter().sum::<f64>() > 0.0);
+    }
+}
+
+#[test]
+fn training_is_deterministic_given_seed() {
+    if !artifacts_ready() {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    }
+    let cfg = TrainConfig {
+        artifacts_dir: "artifacts".into(),
+        steps: 2,
+        log_every: 1,
+        seed: 21,
+    };
+    let a = run(&cfg).unwrap();
+    let b = run(&cfg).unwrap();
+    assert_eq!(a.losses, b.losses);
+}
+
+#[test]
+fn short_training_reduces_loss() {
+    if !artifacts_ready() {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    }
+    let summary = run(&TrainConfig {
+        artifacts_dir: "artifacts".into(),
+        steps: 30,
+        log_every: 29,
+        seed: 7,
+    })
+    .unwrap();
+    assert!(
+        summary.final_loss() < summary.initial_loss(),
+        "loss did not decrease: {} -> {}",
+        summary.initial_loss(),
+        summary.final_loss()
+    );
+}

@@ -1,0 +1,184 @@
+//! Integration tests across the coordinator/pipeline/sim stack: every paper
+//! model x method cell runs end to end, the headline orderings hold, and
+//! results are deterministic under a fixed seed.
+
+use mozart::config::{DramKind, Method, ModelId};
+use mozart::coordinator::sweep::{cell_config, run_cells, Cell};
+use mozart::coordinator::{layouts_for, run_experiment};
+use mozart::sim::Tag;
+use mozart::trace::TraceGen;
+
+fn cell(model: ModelId, method: Method, seq: usize, dram: DramKind) -> Cell {
+    Cell {
+        model,
+        method,
+        seq_len: seq,
+        dram,
+    }
+}
+
+/// Reduced-iteration run of one cell (short sequences keep CI fast; the
+/// mechanisms under test are seq-independent).
+fn quick(model: ModelId, method: Method, seq: usize, dram: DramKind) -> f64 {
+    run_experiment(&cell_config(cell(model, method, seq, dram), 1, 7)).latency
+}
+
+#[test]
+fn every_model_method_cell_runs() {
+    for model in ModelId::PAPER_MODELS {
+        for method in Method::ALL {
+            let lat = quick(model, method, 64, DramKind::Hbm2);
+            assert!(lat.is_finite() && lat > 0.0, "{model:?}/{method:?}: {lat}");
+        }
+    }
+}
+
+#[test]
+fn table3_orderings_hold_per_model() {
+    for model in ModelId::PAPER_MODELS {
+        let base = quick(model, Method::Baseline, 128, DramKind::Hbm2);
+        let a = quick(model, Method::MozartA, 128, DramKind::Hbm2);
+        let b = quick(model, Method::MozartB, 128, DramKind::Hbm2);
+        let c = quick(model, Method::MozartC, 128, DramKind::Hbm2);
+        assert!(a < base, "{model:?}: A {a} !< base {base}");
+        assert!(b < a, "{model:?}: B {b} !< A {a}");
+        assert!(c < b * 1.03, "{model:?}: C {c} !<~ B {b}");
+        // paper's headline: Mozart-C speedup is >1.5x at seq>=128
+        assert!(base / c > 1.3, "{model:?}: speedup only {}", base / c);
+    }
+}
+
+#[test]
+fn latency_grows_with_sequence_length() {
+    let l128 = quick(ModelId::Qwen3_30B_A3B, Method::Baseline, 128, DramKind::Hbm2);
+    let l256 = quick(ModelId::Qwen3_30B_A3B, Method::Baseline, 256, DramKind::Hbm2);
+    let l512 = quick(ModelId::Qwen3_30B_A3B, Method::Baseline, 512, DramKind::Hbm2);
+    assert!(l128 < l256 && l256 < l512, "{l128} {l256} {l512}");
+    // paper Fig 6(b): latency roughly doubles from 128 to 512, far from 4x
+    let ratio = l512 / l128;
+    assert!(
+        (1.5..3.2).contains(&ratio),
+        "512/128 ratio {ratio} outside the paper's regime"
+    );
+}
+
+#[test]
+fn ssd_is_slower_and_compresses_gains() {
+    // paper Fig 6(c): SSD slows everything; optimization gains shrink
+    let base_h = quick(ModelId::Qwen3_30B_A3B, Method::Baseline, 128, DramKind::Hbm2);
+    let c_h = quick(ModelId::Qwen3_30B_A3B, Method::MozartC, 128, DramKind::Hbm2);
+    let base_s = quick(ModelId::Qwen3_30B_A3B, Method::Baseline, 128, DramKind::Ssd);
+    let c_s = quick(ModelId::Qwen3_30B_A3B, Method::MozartC, 128, DramKind::Ssd);
+    assert!(base_s > base_h, "SSD baseline not slower");
+    assert!(c_s > c_h, "SSD Mozart-C not slower");
+    let speedup_h = base_h / c_h;
+    let speedup_s = base_s / c_s;
+    assert!(
+        speedup_s < speedup_h,
+        "SSD speedup {speedup_s} should trail HBM2 {speedup_h}"
+    );
+}
+
+#[test]
+fn deterministic_under_seed() {
+    let a = run_experiment(&cell_config(
+        cell(ModelId::OlmoE_1B_7B, Method::MozartC, 64, DramKind::Hbm2),
+        2,
+        13,
+    ));
+    let b = run_experiment(&cell_config(
+        cell(ModelId::OlmoE_1B_7B, Method::MozartC, 64, DramKind::Hbm2),
+        2,
+        13,
+    ));
+    assert_eq!(a.latency, b.latency);
+    assert_eq!(a.c_t, b.c_t);
+    assert_eq!(a.energy.total_j(), b.energy.total_j());
+}
+
+#[test]
+fn q1_memory_bound_across_models() {
+    // weight streaming dominates compute on the critical path for all models
+    for model in ModelId::PAPER_MODELS {
+        let r = run_experiment(&cell_config(
+            cell(model, Method::MozartC, 128, DramKind::Hbm2),
+            1,
+            7,
+        ));
+        let stream = r.critical_time(Tag::WeightStream)
+            + r.critical_time(Tag::OptimUpdate)
+            + r.critical_time(Tag::GradWriteback);
+        let compute = r.critical_time(Tag::MoeCompute) + r.critical_time(Tag::AttnCompute);
+        assert!(
+            stream > compute,
+            "{model:?}: memory {stream} !> compute {compute}"
+        );
+    }
+}
+
+#[test]
+fn q2_overlap_is_the_biggest_single_lever() {
+    // paper Q2: overlap > efficient all-to-all > layout
+    for model in ModelId::PAPER_MODELS {
+        let base = quick(model, Method::Baseline, 256, DramKind::Hbm2);
+        let a = quick(model, Method::MozartA, 256, DramKind::Hbm2);
+        let b = quick(model, Method::MozartB, 256, DramKind::Hbm2);
+        let c = quick(model, Method::MozartC, 256, DramKind::Hbm2);
+        let overlap_gain = base / a;
+        let a2a_gain = a / b;
+        let layout_gain = b / c;
+        assert!(
+            overlap_gain > a2a_gain && a2a_gain > layout_gain * 0.99,
+            "{model:?}: ordering violated ({overlap_gain:.3} / {a2a_gain:.3} / {layout_gain:.3})"
+        );
+    }
+}
+
+#[test]
+fn sweep_grids_run_end_to_end() {
+    let cells = vec![
+        cell(ModelId::OlmoE_1B_7B, Method::Baseline, 64, DramKind::Hbm2),
+        cell(ModelId::OlmoE_1B_7B, Method::MozartC, 64, DramKind::Ssd),
+    ];
+    let res = run_cells(&cells, 1, 3);
+    assert_eq!(res.len(), 2);
+    for r in &res {
+        assert!(r.result.latency > 0.0);
+        assert!(r.result.moe_utilization > 0.0);
+    }
+}
+
+#[test]
+fn energy_tracks_dram_kind() {
+    let h = run_experiment(&cell_config(
+        cell(ModelId::OlmoE_1B_7B, Method::Baseline, 64, DramKind::Hbm2),
+        1,
+        7,
+    ));
+    let s = run_experiment(&cell_config(
+        cell(ModelId::OlmoE_1B_7B, Method::Baseline, 64, DramKind::Ssd),
+        1,
+        7,
+    ));
+    // SSD: higher per-byte energy AND longer static window
+    assert!(s.energy.dram_j > h.energy.dram_j);
+    assert!(s.energy.static_j > h.energy.static_j);
+}
+
+#[test]
+fn mozart_layouts_differ_per_layer() {
+    // the per-layer clustering must actually produce distinct layouts
+    let cfg = cell_config(
+        cell(ModelId::OlmoE_1B_7B, Method::MozartC, 64, DramKind::Hbm2),
+        1,
+        7,
+    );
+    let gen = TraceGen::for_model(&cfg.model, cfg.seed);
+    let layouts = layouts_for(&cfg, &gen);
+    assert_eq!(layouts.len(), cfg.model.n_moe_layers());
+    let distinct = layouts
+        .windows(2)
+        .filter(|w| w[0].expert_to_chiplet != w[1].expert_to_chiplet)
+        .count();
+    assert!(distinct > 0, "all layers got identical layouts");
+}

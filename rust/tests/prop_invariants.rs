@@ -1,0 +1,281 @@
+//! Property-based tests over the core invariants (hand-rolled `forall`
+//! harness from `mozart::testkit`; proptest is unavailable offline).
+
+use mozart::allocation::{allocate, Allocation, ExpertLayout};
+use mozart::clustering::{cluster_experts, Clustering};
+use mozart::comm::A2aStats;
+use mozart::prop_assert;
+use mozart::sim::{Plan, Simulator, Tag, TaskSpec};
+use mozart::testkit::forall;
+use mozart::trace::{Priors, RoutingTrace};
+use mozart::util::rng::Rng;
+
+/// Random routing trace with valid structure.
+fn random_trace(rng: &mut Rng) -> RoutingTrace {
+    let n_experts = *[16usize, 32, 64, 128].iter().nth(rng.below(4)).unwrap();
+    let top_k = 1 + rng.below(8.min(n_experts));
+    let n_tokens = 1 + rng.below(300);
+    let mut choices = Vec::with_capacity(n_tokens * top_k);
+    let weights: Vec<f64> = (0..n_experts).map(|_| rng.f64() + 0.01).collect();
+    for _ in 0..n_tokens {
+        choices.extend(
+            rng.weighted_distinct(&weights, top_k)
+                .into_iter()
+                .map(|e| e as u32),
+        );
+    }
+    RoutingTrace {
+        n_experts,
+        top_k,
+        choices,
+    }
+}
+
+#[test]
+fn prop_priors_are_normalized_and_symmetric() {
+    forall("priors-normalized", 40, |rng| {
+        let tr = random_trace(rng);
+        tr.validate().map_err(|e| e.to_string())?;
+        let p = Priors::from_trace(&tr);
+        let sum: f64 = p.workload.iter().sum();
+        prop_assert!((sum - 1.0).abs() < 1e-9, "workload sums to {sum}");
+        for i in 0..tr.n_experts {
+            prop_assert!(p.p(i, i) == 0.0, "diagonal must be empty");
+            for j in 0..tr.n_experts {
+                let (a, b) = (p.p(i, j), p.p(j, i));
+                prop_assert!((a - b).abs() < 1e-12, "asymmetric at ({i},{j})");
+                prop_assert!((0.0..=1.0).contains(&a), "P out of [0,1]: {a}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_clustering_partitions() {
+    forall("clustering-partitions", 30, |rng| {
+        let tr = random_trace(rng);
+        let p = Priors::from_trace(&tr);
+        // any divisor of n_experts up to 16 clusters
+        let divisors: Vec<usize> = (1..=16).filter(|d| tr.n_experts % d == 0).collect();
+        let nc = divisors[rng.below(divisors.len())];
+        let cl = cluster_experts(&p, nc);
+        cl.validate().map_err(|e| e.to_string())?;
+        prop_assert!(cl.clusters.len() == nc, "wrong cluster count");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_clustering_never_below_contiguous_intra() {
+    // Algorithm 1 maximizes intra-cluster collaboration greedily; on any
+    // trace it should do at least as well as the arbitrary contiguous split
+    // minus numerical noise.
+    forall("clustering-intra", 20, |rng| {
+        let tr = random_trace(rng);
+        let p = Priors::from_trace(&tr);
+        if tr.n_experts % 16 != 0 {
+            return Ok(());
+        }
+        let ours = cluster_experts(&p, 16).intra_collab(&p);
+        let cont = Clustering::contiguous(tr.n_experts, 16).intra_collab(&p);
+        prop_assert!(
+            ours >= cont - 1e-9,
+            "clustered intra {ours} < contiguous {cont}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allocation_constraints_and_optimality() {
+    forall("allocation", 40, |rng| {
+        let n_groups = [2usize, 4, 8][rng.below(3)];
+        let per = 1 + rng.below(4);
+        let n = n_groups * per;
+        let w: Vec<f64> = (0..n).map(|_| rng.f64() + 0.001).collect();
+        let a = allocate(&w, n_groups);
+        a.validate().map_err(|e| e.to_string())?;
+        // never worse than the identity assignment
+        let id = Allocation::identity(n, n_groups);
+        prop_assert!(
+            a.objective(&w) <= id.objective(&w) + 1e-12,
+            "worse than identity: {} > {}",
+            a.objective(&w),
+            id.objective(&w)
+        );
+        // objective is consistent with group workloads
+        let target: f64 = w.iter().sum::<f64>() / n_groups as f64;
+        let manual: f64 = a
+            .group_workloads(&w)
+            .iter()
+            .map(|g| (g - target).abs())
+            .sum();
+        prop_assert!((manual - a.objective(&w)).abs() < 1e-12, "objective mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ct_bounds() {
+    forall("ct-bounds", 40, |rng| {
+        let tr = random_trace(rng);
+        if tr.n_experts % 16 != 0 {
+            return Ok(());
+        }
+        let layout = ExpertLayout::contiguous(tr.n_experts, 16, 4);
+        let coalesced = A2aStats::evaluate(&tr, &layout, true);
+        let raw = A2aStats::evaluate(&tr, &layout, false);
+        // Appendix D: C_T == k without elision; <= k with elision; >= 1
+        prop_assert!((raw.c_t - tr.top_k as f64).abs() < 1e-12, "raw C_T != k");
+        prop_assert!(coalesced.c_t <= raw.c_t + 1e-12, "elision increased C_T");
+        prop_assert!(tr.n_tokens() == 0 || coalesced.c_t >= 1.0, "C_T < 1");
+        // elision never changes compute workload
+        prop_assert!(
+            coalesced.chiplet_token_slots == raw.chiplet_token_slots,
+            "elision changed token slots"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_better_colocation_never_hurts_ct() {
+    // moving a token's second expert onto the first expert's chiplet can
+    // only reduce total replicas
+    forall("colocation-monotone", 30, |rng| {
+        let tr = random_trace(rng);
+        if tr.n_experts % 16 != 0 || tr.top_k < 2 {
+            return Ok(());
+        }
+        let contiguous = ExpertLayout::contiguous(tr.n_experts, 16, 4);
+        // random permuted layout
+        let perm = rng.permutation(tr.n_experts);
+        let clusters: Vec<Vec<usize>> = perm
+            .chunks(tr.n_experts / 16)
+            .map(|c| c.to_vec())
+            .collect();
+        let scrambled = ExpertLayout::new(
+            mozart::clustering::Clustering {
+                clusters,
+                n_experts: tr.n_experts,
+            },
+            mozart::allocation::Allocation::identity(16, 4),
+            4,
+        );
+        let a = A2aStats::evaluate(&tr, &contiguous, true);
+        let b = A2aStats::evaluate(&tr, &scrambled, true);
+        // both bounded by k; no ordering guaranteed between arbitrary
+        // layouts, but totals must be consistent
+        prop_assert!(a.c_t <= tr.top_k as f64 + 1e-12, "a out of bound");
+        prop_assert!(b.c_t <= tr.top_k as f64 + 1e-12, "b out of bound");
+        prop_assert!(
+            a.chiplet_token_slots.iter().sum::<u64>()
+                == b.chiplet_token_slots.iter().sum::<u64>(),
+            "layouts changed total compute"
+        );
+        Ok(())
+    });
+}
+
+/// Random DAG plan for engine properties.
+fn random_plan(rng: &mut Rng) -> Plan {
+    let mut plan = Plan::new();
+    let n_res = 1 + rng.below(4);
+    for r in 0..n_res {
+        plan.add_resource(format!("r{r}"));
+    }
+    let n = 2 + rng.below(60);
+    for i in 0..n {
+        let n_deps = rng.below(3.min(i + 1));
+        let mut deps = Vec::new();
+        for _ in 0..n_deps {
+            deps.push(rng.below(i.max(1)));
+        }
+        deps.sort_unstable();
+        deps.dedup();
+        plan.add_task(TaskSpec {
+            resource: if rng.f64() < 0.8 {
+                Some(rng.below(n_res))
+            } else {
+                None
+            },
+            duration: rng.f64() * 10.0,
+            deps,
+            priority: rng.below(100) as i64 - 50,
+            tag: Tag::Barrier,
+            bytes: 0.0,
+            flops: 0.0,
+        });
+    }
+    plan
+}
+
+#[test]
+fn prop_sim_engine_invariants() {
+    forall("sim-engine", 60, |rng| {
+        let plan = random_plan(rng);
+        plan.validate().map_err(|e| e.to_string())?;
+        let res = Simulator::run(&plan);
+        // causality: every task starts after its deps finish
+        for (i, t) in plan.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                prop_assert!(
+                    res.start[i] >= res.finish[d] - 1e-9,
+                    "task {i} started before dep {d} finished"
+                );
+            }
+            prop_assert!(
+                (res.finish[i] - res.start[i] - t.duration).abs() < 1e-9,
+                "task {i} duration distorted"
+            );
+        }
+        // no resource over-subscription: busy time <= makespan
+        for r in 0..plan.resource_names.len() {
+            prop_assert!(
+                res.resource_busy[r] <= res.makespan + 1e-9,
+                "resource {r} over-subscribed"
+            );
+        }
+        // makespan == max finish
+        let maxf = res.finish.iter().cloned().fold(0.0f64, f64::max);
+        prop_assert!((res.makespan - maxf).abs() < 1e-12, "makespan mismatch");
+        // critical path duration <= makespan, and > 0 for nonempty plans
+        let cp: f64 = res.critical_path.iter().map(|(_, v)| v).sum();
+        prop_assert!(cp <= res.makespan + 1e-9, "critical path {cp} > makespan");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_is_deterministic() {
+    forall("sim-deterministic", 20, |rng| {
+        let plan = random_plan(rng);
+        let a = Simulator::run(&plan);
+        let b = Simulator::run(&plan);
+        prop_assert!(a.makespan == b.makespan, "nondeterministic makespan");
+        prop_assert!(a.finish == b.finish, "nondeterministic schedule");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_serializing_resources_never_speeds_up() {
+    // merging all tasks onto ONE resource cannot reduce the makespan
+    forall("resource-monotone", 25, |rng| {
+        let plan = random_plan(rng);
+        let parallel = Simulator::run(&plan).makespan;
+        let mut serial = plan.clone();
+        for t in serial.tasks.iter_mut() {
+            if t.resource.is_some() {
+                t.resource = Some(0);
+            }
+        }
+        let serialized = Simulator::run(&serial).makespan;
+        prop_assert!(
+            serialized >= parallel - 1e-9,
+            "serializing sped things up: {serialized} < {parallel}"
+        );
+        Ok(())
+    });
+}
