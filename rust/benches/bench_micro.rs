@@ -1,11 +1,12 @@
 //! Micro-benches over the L3 hot paths: trace sampling, prior computation,
 //! clustering, allocation, plan building, and the discrete-event engine.
-//! These are the targets of the EXPERIMENTS.md §Perf iteration log.
+//! These are the perf-regression guards for the sweep hot path (see
+//! rust/DESIGN.md §"The sweep/simulation hot path").
 use mozart::allocation::ExpertLayout;
 use mozart::config::{ExperimentConfig, MethodConfig, ModelConfig, ModelId};
 use mozart::coordinator::layouts_for;
-use mozart::pipeline::{build_step_plan, StepInputs, StepWorkload};
-use mozart::sim::Simulator;
+use mozart::pipeline::{build_step_plan, PlanCache, StepInputs, StepWorkload};
+use mozart::sim::{SimScratch, Simulator};
 use mozart::testkit::bench;
 use mozart::trace::{Priors, TraceGen};
 use mozart::util::rng::Rng;
@@ -45,14 +46,32 @@ fn main() {
         StepWorkload::sample(&cfg, &gen, &layouts, true, &mut r)
     });
 
-    bench("plan: build step DAG (~60k tasks)", 10, || {
+    // topology-cache regression guard: a full one-shot build re-derives the
+    // topology every pass (the pre-cache behavior); the cached retime pass
+    // re-emits only durations/bytes over the reusable arena. The plans are
+    // identical (asserted in plan_builder's tests); the gap is the cache win.
+    let full = bench("plan: full rebuild (topology + emission each pass)", 10, || {
         build_step_plan(&StepInputs { cfg: &cfg, layouts: &layouts, workload: &workload })
+            .n_tasks()
     });
+    let mut plan_cache = PlanCache::new(&cfg, &layouts);
+    plan_cache.rebuild(&workload);
+    let retime = bench("plan: cached retime (reused arena)", 10, || {
+        plan_cache.rebuild(&workload).n_tasks()
+    });
+    println!(
+        "  (topology cache: {:.2}x faster than full rebuild)",
+        full.mean_s / retime.mean_s
+    );
 
     let plan = build_step_plan(&StepInputs { cfg: &cfg, layouts: &layouts, workload: &workload });
     println!("  (plan has {} tasks)", plan.n_tasks());
-    bench("sim: discrete-event engine over the step DAG", 10, || {
+    bench("sim: discrete-event engine (throwaway scratch)", 10, || {
         Simulator::run(&plan)
+    });
+    let mut scratch = SimScratch::new();
+    bench("sim: discrete-event engine (reused scratch)", 10, || {
+        Simulator::run_with(&plan, &mut scratch).makespan
     });
 
     bench("a2a: C_T evaluation, 8192 tokens", 20, || {

@@ -124,7 +124,7 @@ fn exact(w: &[f64], n_groups: usize) -> Allocation {
     // start from the greedy solution as the incumbent; when its residual
     // deviation is already below 0.2% of the total workload the exact
     // search cannot buy anything the per-step routing noise would not wash
-    // out, so return it (saves ~50 ms per layer; see EXPERIMENTS.md #Perf)
+    // out, so return it (saves ~50 ms per layer)
     let incumbent = greedy_refined(w, n_groups);
     let mut best_obj = incumbent.objective(w);
     if best_obj <= 2e-3 * w.iter().sum::<f64>() {

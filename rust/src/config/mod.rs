@@ -35,7 +35,7 @@ impl ExperimentConfig {
     /// The paper's default workload: 32 samples/step in 4 micro-batches of 8,
     /// sequence length 256, HBM2, averaged over a reduced iteration count
     /// (the paper averages 1k iterations; the trace is stationary so a
-    /// smaller average converges to the same mean — see EXPERIMENTS.md).
+    /// smaller average converges to the same mean).
     pub fn paper_default(model: ModelConfig, method: MethodConfig) -> Self {
         ExperimentConfig {
             model,

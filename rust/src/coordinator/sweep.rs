@@ -1,6 +1,20 @@
 //! Parameter sweeps over the experiment grid (models x methods x sequence
 //! lengths x DRAM kinds), the workhorse behind the Table 3 / Table 4 /
 //! Figure 6-9 reports and benches.
+//!
+//! # Parallel execution
+//!
+//! [`run_cells`] fans the grid out across a work-stealing pool of OS
+//! threads (the offline crate set has no `rayon`; the pool is a shared
+//! atomic cursor over the cell list, which is the same scheduling
+//! discipline as `par_iter` for coarse-grained items). Every cell's
+//! experiment derives all of its randomness from its own
+//! `ExperimentConfig` — the per-cell seed is fixed up front and no state is
+//! shared between cells — so results are **bit-identical** to the
+//! sequential path ([`run_cells_seq`]) regardless of thread count or
+//! completion order. An integration test asserts this on the Table 3 grid.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::config::{
     DramKind, ExperimentConfig, Method, ModelConfig, ModelId,
@@ -35,14 +49,93 @@ pub fn cell_config(cell: Cell, iters: usize, seed: u64) -> ExperimentConfig {
     cfg
 }
 
-/// Run a list of cells sequentially (deterministic order and seeds).
+/// Execution options for the sweep executor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SweepOptions {
+    /// Worker threads; 0 = one per available core (capped at the cell
+    /// count). 1 forces the sequential path.
+    pub threads: usize,
+}
+
+impl SweepOptions {
+    /// Resolve the effective worker count for `n_cells` cells.
+    pub fn effective_threads(&self, n_cells: usize) -> usize {
+        let auto = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        let t = if self.threads == 0 { auto } else { self.threads };
+        t.min(n_cells).max(1)
+    }
+}
+
+/// Run a list of cells in parallel (deterministic order and seeds; results
+/// are bit-identical to [`run_cells_seq`]).
 pub fn run_cells(cells: &[Cell], iters: usize, seed: u64) -> Vec<CellResult> {
+    run_cells_with(cells, iters, seed, SweepOptions::default())
+}
+
+/// Run a list of cells sequentially (the pre-parallel reference path, kept
+/// for determinism checks and speedup baselines).
+pub fn run_cells_seq(cells: &[Cell], iters: usize, seed: u64) -> Vec<CellResult> {
     cells
         .iter()
         .map(|&cell| CellResult {
             cell,
             result: run_experiment(&cell_config(cell, iters, seed)),
         })
+        .collect()
+}
+
+/// Run a list of cells across a work-stealing thread pool. Each worker
+/// repeatedly claims the next unclaimed cell index from a shared atomic
+/// cursor, so long cells (e.g. Qwen3's 48-layer plans) never convoy short
+/// ones. Output order matches the input cell order.
+pub fn run_cells_with(
+    cells: &[Cell],
+    iters: usize,
+    seed: u64,
+    opts: SweepOptions,
+) -> Vec<CellResult> {
+    let n = cells.len();
+    let threads = opts.effective_threads(n);
+    if threads <= 1 || n <= 1 {
+        return run_cells_seq(cells, iters, seed);
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<CellResult>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut done: Vec<(usize, CellResult)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let cell = cells[i];
+                        done.push((
+                            i,
+                            CellResult {
+                                cell,
+                                result: run_experiment(&cell_config(cell, iters, seed)),
+                            },
+                        ));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("sweep worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("every cell index claimed exactly once"))
         .collect()
 }
 
@@ -160,5 +253,50 @@ mod tests {
         let res = run_cells(&cells, 1, 7);
         assert_eq!(res.len(), 2);
         assert!(res[1].result.latency < res[0].result.latency);
+    }
+
+    #[test]
+    fn effective_threads_resolution() {
+        assert_eq!(SweepOptions { threads: 1 }.effective_threads(24), 1);
+        assert_eq!(SweepOptions { threads: 8 }.effective_threads(3), 3);
+        assert!(SweepOptions { threads: 0 }.effective_threads(24) >= 1);
+        assert_eq!(SweepOptions { threads: 0 }.effective_threads(0), 1);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_small_grid() {
+        // bit-identical results regardless of worker count / claim order
+        // (the full Table 3 grid is covered in tests/integration_sweep.rs)
+        let cells = vec![
+            Cell {
+                model: ModelId::OlmoE_1B_7B,
+                method: Method::Baseline,
+                seq_len: 64,
+                dram: DramKind::Hbm2,
+            },
+            Cell {
+                model: ModelId::OlmoE_1B_7B,
+                method: Method::MozartB,
+                seq_len: 64,
+                dram: DramKind::Ssd,
+            },
+            Cell {
+                model: ModelId::OlmoE_1B_7B,
+                method: Method::MozartC,
+                seq_len: 64,
+                dram: DramKind::Hbm2,
+            },
+        ];
+        let seq = run_cells_seq(&cells, 1, 11);
+        let par = run_cells_with(&cells, 1, 11, SweepOptions { threads: 3 });
+        assert_eq!(seq.len(), par.len());
+        for (s, p) in seq.iter().zip(par.iter()) {
+            assert_eq!(s.cell.model, p.cell.model);
+            assert_eq!(s.cell.method, p.cell.method);
+            assert_eq!(s.result.latency, p.result.latency);
+            assert_eq!(s.result.c_t, p.result.c_t);
+            assert_eq!(s.result.tag_busy, p.result.tag_busy);
+            assert_eq!(s.result.critical, p.result.critical);
+        }
     }
 }

@@ -15,8 +15,10 @@
 //! - **L1** (`python/compile/kernels/`): Pallas kernels for the expert-FFN
 //!   hot path, verified against a pure-jnp oracle.
 //!
-//! See DESIGN.md for the system inventory and per-experiment index, and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! See `rust/DESIGN.md` for the system inventory, the sweep/simulation
+//! hot-path design (parallel executor, plan-topology cache, indexed tag
+//! accounting), the offline dependency policy, and the per-experiment
+//! index.
 
 pub mod allocation;
 pub mod arch;

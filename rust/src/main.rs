@@ -8,15 +8,22 @@
 //!   (`--model qwen3|olmoe|deepseek --method baseline|a|b|c --seq N
 //!    --dram hbm2|ssd --iters N --seed N [--config file]`)
 //! - `layout` — show the clustering + allocation for a model
+//! - `bench` — time the sweep grids sequentially vs in parallel and emit
+//!   `BENCH_sweep.json` (`--grid table3|appendix|all --iters N --seed N
+//!    --threads N --reps N --out FILE`)
 //! - `train` — end-to-end real training of the tiny MoE through the PJRT
 //!   runtime (`--steps N --artifacts DIR`)
 //! - `platform` — print PJRT platform info (runtime smoke check)
 
 use anyhow::{bail, Context, Result};
 use mozart::config::{DramKind, ExperimentConfig, Method, ModelConfig, ModelId};
-use mozart::coordinator::sweep::{cell_config, Cell};
+use mozart::coordinator::sweep::{
+    self, cell_config, run_cells_seq, run_cells_with, Cell, SweepOptions,
+};
 use mozart::report::{self, ReportOpts};
+use mozart::testkit::bench;
 use mozart::util::cli::Args;
+use mozart::util::json::Json;
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -25,6 +32,7 @@ fn main() -> Result<()> {
         "report" => cmd_report(&args),
         "simulate" => cmd_simulate(&args),
         "layout" => cmd_layout(&args),
+        "bench" => cmd_bench(&args),
         "train" => cmd_train(&args),
         "platform" => cmd_platform(),
         "help" | "--help" => {
@@ -49,6 +57,10 @@ fn print_help() {
                            --method baseline|a|b|c [--seq N] [--dram hbm2|ssd]\n\
                            [--iters N] [--seed N] [--config file]\n\
            layout          expert clustering + allocation: --model ... [--seed N]\n\
+           bench           time the sweep grids (sequential vs parallel executor)\n\
+                           and write BENCH_sweep.json: [--grid table3|appendix|all]\n\
+                           [--iters N] [--seed N] [--threads N] [--reps N]\n\
+                           [--out BENCH_sweep.json]\n\
            train           real end-to-end training of the tiny MoE via PJRT:\n\
                            [--steps N] [--artifacts artifacts/] [--log-every N]\n\
            platform        print the PJRT platform (runtime smoke check)"
@@ -155,17 +167,108 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         r.group_imbalance, r.moe_utilization
     );
     println!("\nbusy time per component (s/step):");
-    let mut rows = r.tag_busy.clone();
-    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut rows = r.tag_busy.to_vec();
+    rows.sort_by(|a, b| b.1.total_cmp(&a.1));
     for (tag, v) in rows.iter().filter(|(_, v)| *v > 0.0) {
         println!("  {:<18} {:.4}", tag.name(), v);
     }
     println!("\ncritical path (s/step):");
-    let mut rows = r.critical.clone();
-    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut rows = r.critical.to_vec();
+    rows.sort_by(|a, b| b.1.total_cmp(&a.1));
     for (tag, v) in rows.iter().filter(|(_, v)| *v > 0.0) {
         println!("  {:<18} {:.4}", tag.name(), v);
     }
+    Ok(())
+}
+
+/// `mozart bench`: time the sweep grids through the sequential reference
+/// path and the parallel executor, verify the results are bit-identical,
+/// and write a machine-readable `BENCH_sweep.json` so the performance
+/// trajectory is tracked from PR to PR.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let grid = args.get_or("grid", "all").to_ascii_lowercase();
+    let iters: usize = args.get_parse("iters", 2)?;
+    let seed: u64 = args.get_parse("seed", 7)?;
+    let reps: usize = args.get_parse("reps", 1)?.max(1);
+    let threads: usize = args.get_parse("threads", 0)?;
+    let out_path = args.get_or("out", "BENCH_sweep.json").to_string();
+    let opts = SweepOptions { threads };
+
+    let mut grids: Vec<(&str, Vec<Cell>)> = Vec::new();
+    match grid.as_str() {
+        "table3" => grids.push(("table3", sweep::table3_cells())),
+        "appendix" => grids.push(("appendix_seq128", sweep::appendix_cells(128))),
+        "all" => {
+            grids.push(("table3", sweep::table3_cells()));
+            grids.push(("appendix_seq128", sweep::appendix_cells(128)));
+        }
+        other => bail!("unknown --grid {other} (table3|appendix|all)"),
+    }
+
+    let mut grid_reports: Vec<Json> = Vec::new();
+    println!("sweep bench: iters={iters} seed={seed} reps={reps}\n");
+
+    for (name, cells) in &grids {
+        let n = cells.len();
+        // worker count actually used for THIS grid (capped at its cell count)
+        let n_workers = opts.effective_threads(n);
+        // keep the last timed pass's results so the determinism check below
+        // does not have to re-run the (slow) sweeps a further time
+        let mut seq_results = None;
+        let seq = bench(&format!("sweep[{name}]: sequential, {n} cells"), reps, || {
+            seq_results = Some(run_cells_seq(cells, iters, seed));
+        });
+        let mut par_results = None;
+        let par = bench(&format!("sweep[{name}]: parallel,   {n} cells"), reps, || {
+            par_results = Some(run_cells_with(cells, iters, seed, opts));
+        });
+
+        // determinism check: the parallel executor must reproduce the
+        // sequential results bit for bit
+        let a = seq_results.expect("reps >= 1 guarantees one sequential pass");
+        let b = par_results.expect("reps >= 1 guarantees one parallel pass");
+        let identical = a.len() == b.len()
+            && a.iter().zip(b.iter()).all(|(x, y)| {
+                x.result.latency == y.result.latency
+                    && x.result.c_t == y.result.c_t
+                    && x.result.tag_busy == y.result.tag_busy
+            });
+        let speedup = seq.mean_s / par.mean_s;
+        println!(
+            "  -> {name}: {:.2}x speedup, {:.2} cells/s parallel, bit-identical: {identical}\n",
+            speedup,
+            n as f64 / par.mean_s
+        );
+
+        grid_reports.push(Json::obj([
+            ("name", Json::str(*name)),
+            ("cells", Json::int(n)),
+            ("workers", Json::int(n_workers)),
+            ("sequential", seq.to_json()),
+            ("parallel", par.to_json()),
+            ("cells_per_s_sequential", Json::num(n as f64 / seq.mean_s)),
+            ("cells_per_s_parallel", Json::num(n as f64 / par.mean_s)),
+            ("speedup_parallel_vs_sequential", Json::num(speedup)),
+            ("bit_identical", Json::Bool(identical)),
+        ]));
+        if !identical {
+            bail!("parallel sweep diverged from sequential on grid {name}");
+        }
+    }
+
+    let report = Json::obj([
+        ("bench", Json::str("sweep")),
+        ("iters", Json::int(iters)),
+        // string, not number: JSON numbers are f64 and would corrupt u64
+        // seeds above 2^53, breaking reproduction from the artifact
+        ("seed", Json::str(seed.to_string())),
+        ("reps", Json::int(reps)),
+        ("threads_requested", Json::int(threads)),
+        ("grids", Json::Arr(grid_reports)),
+    ]);
+    std::fs::write(&out_path, report.render_pretty())
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
     Ok(())
 }
 

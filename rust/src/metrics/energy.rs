@@ -69,17 +69,14 @@ pub fn step_energy(cfg: &ExperimentConfig, res: &SimResult) -> EnergyBreakdown {
     let hw = &cfg.hw;
     let mut dram_bytes = 0.0;
     let mut nop_bytes = 0.0;
-    let mut flops = 0.0;
-    for &(tag, b) in &res.tag_bytes {
+    for (tag, b) in res.tag_bytes.iter() {
         if is_dram_tag(tag) {
             dram_bytes += b;
         } else if is_nop_tag(tag) {
             nop_bytes += b;
         }
     }
-    for &(_, f) in &res.tag_flops {
-        flops += f;
-    }
+    let flops = res.tag_flops.sum();
 
     // MACs = flops / 2; MAC energy from the 28nm constants
     let compute_j = flops / 2.0 * constants::MAC_ENERGY_PJ * 1e-12;

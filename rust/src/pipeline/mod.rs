@@ -6,5 +6,5 @@ pub mod epsim;
 pub mod plan_builder;
 pub mod workload;
 
-pub use plan_builder::{build_step_plan, StepInputs};
+pub use plan_builder::{build_step_plan, PlanCache, StepInputs};
 pub use workload::{LayerMbStats, StepWorkload};

@@ -25,6 +25,20 @@
 //!   of the combine stage.
 //! - **expert_layout** (C): enters via the workload statistics (balanced
 //!   `chiplet_slots`/`expert_slots`) and the cluster-priority order.
+//!
+//! # Plan-topology caching
+//!
+//! `run_experiment` simulates `iters` steps of the *same* configuration;
+//! across iterations only the sampled routing workload changes. The
+//! expensive workload-independent derivations — resource setup, the
+//! byte/FLOP model, per-layer expert placement, calibration constants —
+//! are therefore hoisted into a [`PlanCache`] built once per experiment.
+//! Each iteration then calls [`PlanCache::rebuild`], a cheap re-emission
+//! pass over a reusable arena: the `Plan`'s task vector and every task's
+//! dependency vector are recycled from the previous iteration instead of
+//! reallocated. The emission order, priorities, dependencies and durations
+//! are identical to a fresh [`build_step_plan`] call, so cached rebuilds
+//! are bit-identical to the uncached path (covered by a test below).
 
 use crate::allocation::ExpertLayout;
 use crate::config::ExperimentConfig;
@@ -47,47 +61,6 @@ struct Resources {
     group_stream: Vec<ResourceId>,
     moe_compute: Vec<ResourceId>,
     nop_root: ResourceId,
-}
-
-/// Per-expert static placement info derived from the layout.
-struct Placement {
-    /// chiplet -> experts on it (cluster members).
-    experts_on: Vec<Vec<usize>>,
-    /// chiplet -> group.
-    group_of: Vec<usize>,
-    /// Load priority per chiplet (lower = earlier): hot clusters first
-    /// (streaming-experts ranking, paper §4.3).
-    load_priority: Vec<i64>,
-}
-
-impl Placement {
-    /// Build layer `l`'s placement, ranking chiplets by that layer's
-    /// aggregated workload.
-    fn new(layout: &ExpertLayout, workload: &StepWorkload, l: usize) -> Placement {
-        let nc = layout.n_chiplets;
-        let mut experts_on: Vec<Vec<usize>> = vec![Vec::new(); nc];
-        for (e, &c) in layout.expert_to_chiplet.iter().enumerate() {
-            experts_on[c].push(e);
-        }
-        // rank chiplets by this layer's workload (aggregated over mbs)
-        let mut chiplet_work = vec![0u64; nc];
-        for cell in &workload.cells[l] {
-            for (c, &s) in cell.chiplet_slots.iter().enumerate() {
-                chiplet_work[c] += s;
-            }
-        }
-        let mut order: Vec<usize> = (0..nc).collect();
-        order.sort_by_key(|&c| std::cmp::Reverse(chiplet_work[c]));
-        let mut load_priority = vec![0i64; nc];
-        for (rank, &c) in order.iter().enumerate() {
-            load_priority[c] = rank as i64;
-        }
-        Placement {
-            experts_on,
-            group_of: (0..nc).map(|c| layout.group_of_chiplet(c)).collect(),
-            load_priority,
-        }
-    }
 }
 
 /// Duration helpers with all calibration knobs applied.
@@ -129,6 +102,39 @@ impl Durations {
     }
 }
 
+/// Pop a recycled dependency vector (always empty) or allocate a new one.
+fn take_deps(spare: &mut Vec<Vec<TaskId>>) -> Vec<TaskId> {
+    spare.pop().unwrap_or_default()
+}
+
+/// Copy `deps` into a recycled vector.
+fn deps_from(spare: &mut Vec<Vec<TaskId>>, deps: &[TaskId]) -> Vec<TaskId> {
+    let mut d = take_deps(spare);
+    d.extend_from_slice(deps);
+    d
+}
+
+/// Barrier/convenience task mirroring `Plan::task`, over the arena.
+fn emit_simple(
+    plan: &mut Plan,
+    spare: &mut Vec<Vec<TaskId>>,
+    tag: Tag,
+    resource: Option<ResourceId>,
+    duration: f64,
+    deps: &[TaskId],
+) -> TaskId {
+    let deps = deps_from(spare, deps);
+    plan.add_task(TaskSpec {
+        resource,
+        duration,
+        deps,
+        priority: 0,
+        tag,
+        bytes: 0.0,
+        flops: 0.0,
+    })
+}
+
 /// Emit an all-to-all phase: one serialized task on the NoP root plus link-
 /// occupancy tasks on every group's stream path (the a2a shares the chiplet
 /// ingress edges with weight streaming). Returns the root task id (the
@@ -136,6 +142,7 @@ impl Durations {
 #[allow(clippy::too_many_arguments)]
 fn a2a_phase(
     plan: &mut Plan,
+    spare: &mut Vec<Vec<TaskId>>,
     res: &Resources,
     dur: &Durations,
     tag: Tag,
@@ -145,10 +152,11 @@ fn a2a_phase(
     priority: i64,
 ) -> TaskId {
     let window = bytes * dur.a2a_spb;
+    let root_deps = deps_from(spare, deps);
     let root = plan.add_task(TaskSpec {
         resource: Some(res.nop_root),
         duration: window,
-        deps: deps.to_vec(),
+        deps: root_deps,
         priority,
         tag,
         bytes,
@@ -156,10 +164,11 @@ fn a2a_phase(
     });
     if dur.a2a_occupancy > 0.0 {
         for &g in &res.group_stream {
+            let occ_deps = deps_from(spare, deps);
             let t = plan.add_task(TaskSpec {
                 resource: Some(g),
                 duration: window * dur.a2a_occupancy,
-                deps: deps.to_vec(),
+                deps: occ_deps,
                 priority,
                 tag,
                 bytes: 0.0, // energy is accounted on the root task
@@ -171,599 +180,777 @@ fn a2a_phase(
     root
 }
 
-/// Build the full step plan.
-pub fn build_step_plan(inp: &StepInputs) -> Plan {
-    let cfg = inp.cfg;
-    let model = &cfg.model;
-    let hw = &cfg.hw;
-    let overlap = cfg.method.overlap;
-    let n_mb = cfg.n_micro_batches();
-    let tokens_mb = cfg.tokens_per_micro_batch() as f64;
-    let token_bytes = model.token_activation_bytes() as f64;
-    let n_layers = model.n_moe_layers();
-    let lb = LayerBytes::of(cfg);
-    let dur = Durations::new(cfg);
-    assert_eq!(inp.layouts.len(), n_layers, "one layout per MoE layer");
-    let places: Vec<Placement> = (0..n_layers)
-        .map(|l| Placement::new(&inp.layouts[l], inp.workload, l))
-        .collect();
+/// One-time topology build + reusable arena for per-iteration re-emission.
+/// See the module docs for the caching contract.
+pub struct PlanCache {
+    cfg: ExperimentConfig,
+    plan: Plan,
+    /// Recycled dependency vectors harvested from the previous rebuild.
+    spare: Vec<Vec<TaskId>>,
+    res: Resources,
+    dur: Durations,
+    lb: LayerBytes,
+    n_mb: usize,
+    n_layers: usize,
+    tokens_mb: f64,
+    token_bytes: f64,
+    expert_flops: f64,
+    attn_flops_tok: f64,
+    shared_flops_tok: f64,
+    dense_flops_tok: f64,
+    /// `experts_on[l][c]`: experts placed on chiplet `c` in layer `l`
+    /// (cluster members) — derived from the layout, workload-independent.
+    experts_on: Vec<Vec<Vec<usize>>>,
+    /// `group_of[l][c]`: group of chiplet `c` in layer `l`.
+    group_of: Vec<Vec<usize>>,
+}
 
-    let mut plan = Plan::new();
-    let res = Resources {
-        attn_compute: plan.add_resource("attn-compute"),
-        attn_dram: plan.add_resource("attn-dram"),
-        group_stream: (0..hw.n_groups)
-            .map(|g| plan.add_resource(format!("group-stream-{g}")))
-            .collect(),
-        moe_compute: (0..hw.n_moe_chiplets)
-            .map(|c| plan.add_resource(format!("moe-compute-{c}")))
-            .collect(),
-        nop_root: plan.add_resource("nop-root"),
-    };
+impl PlanCache {
+    /// Derive every workload-independent quantity once: resources, the
+    /// byte/FLOP model, calibration constants, and per-layer placements.
+    pub fn new(cfg: &ExperimentConfig, layouts: &[ExpertLayout]) -> PlanCache {
+        let model = &cfg.model;
+        let hw = &cfg.hw;
+        let n_layers = model.n_moe_layers();
+        assert_eq!(layouts.len(), n_layers, "one layout per MoE layer");
 
-    // per-token FLOPs
-    let expert_flops = model.flops_per_token_per_expert() as f64;
-    let attn_flops_tok = model.attn_flops_per_token(cfg.seq_len) as f64;
-    let shared_flops_tok = model.n_shared_experts as f64 * expert_flops;
-    let dense_flops_tok = 2.0 * 3.0 * (model.hidden * model.dense_intermediate) as f64;
+        let mut plan = Plan::new();
+        let res = Resources {
+            attn_compute: plan.add_resource("attn-compute"),
+            attn_dram: plan.add_resource("attn-dram"),
+            group_stream: (0..hw.n_groups)
+                .map(|g| plan.add_resource(format!("group-stream-{g}")))
+                .collect(),
+            moe_compute: (0..hw.n_moe_chiplets)
+                .map(|c| plan.add_resource(format!("moe-compute-{c}")))
+                .collect(),
+            nop_root: plan.add_resource("nop-root"),
+        };
 
-    // ---------- forward ----------
-    // prev_out[m]: task producing micro-batch m's input to the current layer
-    let mut prev_out: Vec<Option<TaskId>> = vec![None; n_mb];
-    // free[c][e-slot]: last fwd compute using chiplet c's expert weights for
-    // the current layer (gates the cross-layer prefetch of the next layer)
-    let mut weight_free: Vec<Vec<TaskId>> = vec![Vec::new(); hw.n_moe_chiplets];
-    // combine ids per (layer, mb) — backward consumes them in reverse
-    let mut fwd_combine: Vec<Vec<TaskId>> = Vec::with_capacity(n_layers);
-    // fwd act-save tasks per layer (backward's act loads depend on them)
-    let mut fwd_actsaves: Vec<Vec<TaskId>> = Vec::with_capacity(n_layers);
+        let mut experts_on: Vec<Vec<Vec<usize>>> = Vec::with_capacity(n_layers);
+        let mut group_of: Vec<Vec<usize>> = Vec::with_capacity(n_layers);
+        for layout in layouts {
+            let nc = layout.n_chiplets;
+            let mut on: Vec<Vec<usize>> = vec![Vec::new(); nc];
+            for (e, &c) in layout.expert_to_chiplet.iter().enumerate() {
+                on[c].push(e);
+            }
+            experts_on.push(on);
+            group_of.push((0..nc).map(|c| layout.group_of_chiplet(c)).collect());
+        }
 
-    // DeepSeek-style dense layers run entirely on the attention chiplet
-    // before the MoE stack; fold them into a prologue task per micro-batch.
-    for m in 0..n_mb {
-        if model.n_dense_layers > 0 {
-            let flops = model.n_dense_layers as f64
-                * tokens_mb
-                * (attn_flops_tok + dense_flops_tok);
-            let t = plan.add_task(TaskSpec {
-                resource: Some(res.attn_compute),
-                duration: flops * dur.attn_spf,
-                deps: vec![],
-                priority: m as i64,
-                tag: Tag::AttnCompute,
-                bytes: 0.0,
-                flops,
-            });
-            prev_out[m] = Some(t);
+        let expert_flops = model.flops_per_token_per_expert() as f64;
+        let attn_flops_tok = model.attn_flops_per_token(cfg.seq_len) as f64;
+        let shared_flops_tok = model.n_shared_experts as f64 * expert_flops;
+        let dense_flops_tok = 2.0 * 3.0 * (model.hidden * model.dense_intermediate) as f64;
+
+        PlanCache {
+            plan,
+            spare: Vec::new(),
+            res,
+            dur: Durations::new(cfg),
+            lb: LayerBytes::of(cfg),
+            n_mb: cfg.n_micro_batches(),
+            n_layers,
+            tokens_mb: cfg.tokens_per_micro_batch() as f64,
+            token_bytes: model.token_activation_bytes() as f64,
+            expert_flops,
+            attn_flops_tok,
+            shared_flops_tok,
+            dense_flops_tok,
+            experts_on,
+            group_of,
+            cfg: cfg.clone(),
         }
     }
 
-    for l in 0..n_layers {
-        let cells = &inp.workload.cells[l];
-        let place = &places[l];
+    /// The most recently rebuilt plan.
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
 
-        // attention weight load (one per layer)
-        let attn_wload = plan.add_task(TaskSpec {
-            resource: Some(res.attn_dram),
-            duration: lb.attn_bytes * dur.attn_dram_spb,
-            deps: vec![],
-            priority: l as i64,
-            tag: Tag::AttnWeightLoad,
-            bytes: lb.attn_bytes,
-            flops: 0.0,
-        });
+    /// Consume the cache, returning the current plan.
+    pub fn into_plan(self) -> Plan {
+        self.plan
+    }
 
-        // expert weight streaming: per-expert chunks on the group channel,
-        // hot clusters first (streaming experts). Cross-layer prefetch is
-        // bounded by the SRAM double-buffer: an expert's layer-(l) weights
-        // can start loading once its layer-(l-1) compute finished.
-        let mut chiplet_loaded: Vec<Vec<TaskId>> = vec![Vec::new(); hw.n_moe_chiplets];
-        let mut load_barrier_deps: Vec<TaskId> = Vec::new();
-        for c in 0..hw.n_moe_chiplets {
-            let g = place.group_of[c];
-            for (slot, &_e) in place.experts_on[c].iter().enumerate() {
-                let mut deps: Vec<TaskId> = Vec::new();
-                if overlap {
-                    if let Some(&prev_use) = weight_free[c].get(slot) {
-                        deps.push(prev_use); // double-buffer constraint
+    /// Re-emit the step plan for a freshly sampled workload, recycling all
+    /// task/dependency storage from the previous rebuild. Emission order
+    /// and every task field match `build_step_plan` exactly.
+    pub fn rebuild(&mut self, workload: &StepWorkload) -> &Plan {
+        assert_eq!(
+            workload.cells.len(),
+            self.n_layers,
+            "workload layers must match the cached topology"
+        );
+
+        let n_mb = self.n_mb;
+        let n_layers = self.n_layers;
+        let tokens_mb = self.tokens_mb;
+        let token_bytes = self.token_bytes;
+        let expert_flops = self.expert_flops;
+        let attn_flops_tok = self.attn_flops_tok;
+        let shared_flops_tok = self.shared_flops_tok;
+        let dense_flops_tok = self.dense_flops_tok;
+
+        let PlanCache {
+            cfg,
+            plan,
+            spare,
+            res,
+            dur,
+            lb,
+            experts_on,
+            group_of,
+            ..
+        } = self;
+        let cfg: &ExperimentConfig = cfg;
+        let hw = &cfg.hw;
+        let model = &cfg.model;
+        let overlap = cfg.method.overlap;
+
+        // recycle the arena: harvest every task's dependency vector
+        for t in plan.tasks.drain(..) {
+            let mut d = t.deps;
+            d.clear();
+            spare.push(d);
+        }
+
+        // per-layer load priority: rank chiplets by this step's workload,
+        // hot clusters first (streaming-experts ranking, paper §4.3)
+        let load_prio: Vec<Vec<i64>> = (0..n_layers)
+            .map(|l| {
+                let nc = experts_on[l].len();
+                let mut chiplet_work = vec![0u64; nc];
+                for cell in &workload.cells[l] {
+                    for (c, &s) in cell.chiplet_slots.iter().enumerate() {
+                        chiplet_work[c] += s;
                     }
                 }
-                // baseline: no prefetch — loads wait for the layer's last
-                // dispatch (strict phase order), wired below via barrier.
+                let mut order: Vec<usize> = (0..nc).collect();
+                order.sort_by_key(|&c| std::cmp::Reverse(chiplet_work[c]));
+                let mut lp = vec![0i64; nc];
+                for (rank, &c) in order.iter().enumerate() {
+                    lp[c] = rank as i64;
+                }
+                lp
+            })
+            .collect();
+
+        // ---------- forward ----------
+        // prev_out[m]: task producing micro-batch m's input to the current layer
+        let mut prev_out: Vec<Option<TaskId>> = vec![None; n_mb];
+        // free[c][e-slot]: last fwd compute using chiplet c's expert weights for
+        // the current layer (gates the cross-layer prefetch of the next layer)
+        let mut weight_free: Vec<Vec<TaskId>> = vec![Vec::new(); hw.n_moe_chiplets];
+        // combine ids per (layer, mb) — backward consumes them in reverse
+        let mut fwd_combine: Vec<Vec<TaskId>> = Vec::with_capacity(n_layers);
+        // fwd act-save tasks per layer (backward's act loads depend on them)
+        let mut fwd_actsaves: Vec<Vec<TaskId>> = Vec::with_capacity(n_layers);
+
+        // DeepSeek-style dense layers run entirely on the attention chiplet
+        // before the MoE stack; fold them into a prologue task per micro-batch.
+        for (m, prev) in prev_out.iter_mut().enumerate() {
+            if model.n_dense_layers > 0 {
+                let flops = model.n_dense_layers as f64
+                    * tokens_mb
+                    * (attn_flops_tok + dense_flops_tok);
                 let t = plan.add_task(TaskSpec {
-                    resource: Some(res.group_stream[g]),
-                    duration: lb.expert_bytes * dur.group_stream_spb + dur.chunk_overhead,
-                    deps,
-                    priority: if overlap {
-                        place.load_priority[c] * 1000 + l as i64
-                    } else {
-                        0
-                    },
-                    tag: Tag::WeightStream,
-                    bytes: lb.expert_bytes,
-                    flops: 0.0,
+                    resource: Some(res.attn_compute),
+                    duration: flops * dur.attn_spf,
+                    deps: take_deps(spare),
+                    priority: m as i64,
+                    tag: Tag::AttnCompute,
+                    bytes: 0.0,
+                    flops,
                 });
-                chiplet_loaded[c].push(t);
-                load_barrier_deps.push(t);
+                *prev = Some(t);
             }
         }
 
-        let mut attn_tasks: Vec<TaskId> = Vec::with_capacity(n_mb);
-        let mut dispatch_tasks: Vec<TaskId> = Vec::with_capacity(n_mb);
-        let mut occupancy: Vec<TaskId> = Vec::new();
-        let mut layer_combines: Vec<TaskId> = Vec::with_capacity(n_mb);
-        let mut layer_actsaves: Vec<TaskId> = Vec::new();
-        let mut new_weight_free: Vec<Vec<TaskId>> =
-            vec![Vec::new(); hw.n_moe_chiplets];
+        for l in 0..n_layers {
+            let cells = &workload.cells[l];
 
-        // phase barrier chain for the baseline
-        let mut phase_gate: Option<TaskId> = None;
-
-        for m in 0..n_mb {
-            // attention + router (+ shared experts)
-            let mut deps = vec![attn_wload];
-            if let Some(p) = prev_out[m] {
-                deps.push(p);
-            }
-            if !overlap {
-                if let Some(g) = phase_gate {
-                    deps.push(g);
-                }
-            }
-            let flops = tokens_mb * (attn_flops_tok + shared_flops_tok)
-                + tokens_mb * (model.hidden * model.n_experts) as f64 * 2.0;
-            let attn = plan.add_task(TaskSpec {
-                resource: Some(res.attn_compute),
-                duration: flops * dur.attn_spf,
-                deps,
-                priority: (l * 16 + m) as i64,
-                tag: Tag::AttnCompute,
-                bytes: 0.0,
-                flops,
-            });
-            attn_tasks.push(attn);
-
-            // attention activation save (for backward)
-            let asave = plan.add_task(TaskSpec {
+            // attention weight load (one per layer)
+            let attn_wload = plan.add_task(TaskSpec {
                 resource: Some(res.attn_dram),
-                duration: tokens_mb * lb.attn_act_bytes_per_token * dur.attn_dram_spb,
-                deps: vec![attn],
-                priority: (l * 16 + m) as i64 + 1,
-                tag: Tag::ActSave,
-                bytes: tokens_mb * lb.attn_act_bytes_per_token,
+                duration: lb.attn_bytes * dur.attn_dram_spb,
+                deps: take_deps(spare),
+                priority: l as i64,
+                tag: Tag::AttnWeightLoad,
+                bytes: lb.attn_bytes,
                 flops: 0.0,
             });
-            layer_actsaves.push(asave);
-        }
 
-        if !overlap {
-            // phase: all attention done before any dispatch
-            let gate = plan.task(Tag::Barrier, None, 0.0, &attn_tasks);
-            phase_gate = Some(gate);
-        }
-
-        for m in 0..n_mb {
-            let cell = &cells[m];
-            let dispatch_bytes = cell.replicas as f64 * token_bytes;
-            let deps: Vec<TaskId> = if overlap {
-                vec![attn_tasks[m]]
-            } else {
-                vec![phase_gate.unwrap()]
-            };
-            let d = a2a_phase(
-                &mut plan,
-                &res,
-                &dur,
-                Tag::A2aDispatch,
-                dispatch_bytes,
-                &deps,
-                &mut occupancy,
-                (l * 16 + m) as i64,
-            );
-            dispatch_tasks.push(d);
-        }
-
-        if !overlap {
-            // phase: weight loads happen after all dispatches (no prefetch)
-            let mut gd = dispatch_tasks.clone();
-            gd.push(phase_gate.unwrap());
-            let gate = plan.task(Tag::Barrier, None, 0.0, &gd);
-            // rewire: loads must not start before the gate. Since load tasks
-            // were created dep-free, add the gate via follow-up barrier
-            // tasks is impossible retroactively — instead baseline loads got
-            // priority 0 and we add the gate as a dep of each compute AND
-            // give loads an explicit dep on the gate here by construction:
-            // (loads were created above only in overlap mode with deps;
-            // in baseline we created them dep-free, so patch now.)
-            for loaded in chiplet_loaded.iter().take(hw.n_moe_chiplets) {
-                for &t in loaded {
-                    plan.tasks[t].deps.push(gate);
-                }
-            }
-            let _ = gate; // the load barrier below carries the phase onward
-        }
-
-        // expert compute: per (chiplet, expert, micro-batch); an expert's
-        // compute needs its own weights only (fine-grained streaming).
-        let load_gate = if overlap {
-            None
-        } else {
-            // baseline: all weights of the layer loaded before any compute
-            Some(plan.task(Tag::Barrier, None, 0.0, &load_barrier_deps))
-        };
-        let mut mb_compute: Vec<Vec<TaskId>> = vec![Vec::new(); n_mb];
-        for c in 0..hw.n_moe_chiplets {
-            for (slot, &e) in place.experts_on[c].iter().enumerate() {
-                for m in 0..n_mb {
-                    let slots = cells[m].expert_slots[e] as f64;
-                    if slots == 0.0 && overlap {
-                        continue; // no tokens for this expert in this mb
+            // expert weight streaming: per-expert chunks on the group channel,
+            // hot clusters first (streaming experts). Cross-layer prefetch is
+            // bounded by the SRAM double-buffer: an expert's layer-(l) weights
+            // can start loading once its layer-(l-1) compute finished.
+            let mut chiplet_loaded: Vec<Vec<TaskId>> =
+                vec![Vec::new(); hw.n_moe_chiplets];
+            let mut load_barrier_deps: Vec<TaskId> = Vec::new();
+            for c in 0..hw.n_moe_chiplets {
+                let g = group_of[l][c];
+                for (slot, &_e) in experts_on[l][c].iter().enumerate() {
+                    let mut deps = take_deps(spare);
+                    if overlap {
+                        if let Some(&prev_use) = weight_free[c].get(slot) {
+                            deps.push(prev_use); // double-buffer constraint
+                        }
                     }
-                    let mut deps = vec![dispatch_tasks[m]];
-                    match load_gate {
-                        Some(g) => deps.push(g),
-                        None => deps.push(chiplet_loaded[c][slot]),
-                    }
-                    let flops = slots * expert_flops;
+                    // baseline: no prefetch — loads wait for the layer's last
+                    // dispatch (strict phase order), wired below via barrier.
                     let t = plan.add_task(TaskSpec {
-                        resource: Some(res.moe_compute[c]),
-                        duration: flops * dur.moe_spf,
+                        resource: Some(res.group_stream[g]),
+                        duration: lb.expert_bytes * dur.group_stream_spb
+                            + dur.chunk_overhead,
                         deps,
-                        priority: (m * 64 + slot) as i64,
-                        tag: Tag::MoeCompute,
-                        bytes: 0.0,
-                        flops,
+                        priority: if overlap {
+                            load_prio[l][c] * 1000 + l as i64
+                        } else {
+                            0
+                        },
+                        tag: Tag::WeightStream,
+                        bytes: lb.expert_bytes,
+                        flops: 0.0,
                     });
-                    mb_compute[m].push(t);
-                    if m == n_mb - 1 {
-                        new_weight_free[c].push(t);
+                    chiplet_loaded[c].push(t);
+                    load_barrier_deps.push(t);
+                }
+            }
+
+            let mut attn_tasks: Vec<TaskId> = Vec::with_capacity(n_mb);
+            let mut dispatch_tasks: Vec<TaskId> = Vec::with_capacity(n_mb);
+            let mut occupancy: Vec<TaskId> = Vec::new();
+            let mut layer_combines: Vec<TaskId> = Vec::with_capacity(n_mb);
+            let mut layer_actsaves: Vec<TaskId> = Vec::new();
+            let mut new_weight_free: Vec<Vec<TaskId>> =
+                vec![Vec::new(); hw.n_moe_chiplets];
+
+            // phase barrier chain for the baseline
+            let mut phase_gate: Option<TaskId> = None;
+
+            for m in 0..n_mb {
+                // attention + router (+ shared experts)
+                let mut deps = take_deps(spare);
+                deps.push(attn_wload);
+                if let Some(p) = prev_out[m] {
+                    deps.push(p);
+                }
+                if !overlap {
+                    if let Some(g) = phase_gate {
+                        deps.push(g);
+                    }
+                }
+                let flops = tokens_mb * (attn_flops_tok + shared_flops_tok)
+                    + tokens_mb * (model.hidden * model.n_experts) as f64 * 2.0;
+                let attn = plan.add_task(TaskSpec {
+                    resource: Some(res.attn_compute),
+                    duration: flops * dur.attn_spf,
+                    deps,
+                    priority: (l * 16 + m) as i64,
+                    tag: Tag::AttnCompute,
+                    bytes: 0.0,
+                    flops,
+                });
+                attn_tasks.push(attn);
+
+                // attention activation save (for backward)
+                let asave = plan.add_task(TaskSpec {
+                    resource: Some(res.attn_dram),
+                    duration: tokens_mb * lb.attn_act_bytes_per_token * dur.attn_dram_spb,
+                    deps: deps_from(spare, &[attn]),
+                    priority: (l * 16 + m) as i64 + 1,
+                    tag: Tag::ActSave,
+                    bytes: tokens_mb * lb.attn_act_bytes_per_token,
+                    flops: 0.0,
+                });
+                layer_actsaves.push(asave);
+            }
+
+            if !overlap {
+                // phase: all attention done before any dispatch
+                let gate = emit_simple(plan, spare, Tag::Barrier, None, 0.0, &attn_tasks);
+                phase_gate = Some(gate);
+            }
+
+            for m in 0..n_mb {
+                let cell = &cells[m];
+                let dispatch_bytes = cell.replicas as f64 * token_bytes;
+                let deps: &[TaskId] = if overlap {
+                    &attn_tasks[m..m + 1]
+                } else {
+                    std::slice::from_ref(phase_gate.as_ref().unwrap())
+                };
+                let d = a2a_phase(
+                    plan,
+                    spare,
+                    res,
+                    dur,
+                    Tag::A2aDispatch,
+                    dispatch_bytes,
+                    deps,
+                    &mut occupancy,
+                    (l * 16 + m) as i64,
+                );
+                dispatch_tasks.push(d);
+            }
+
+            if !overlap {
+                // phase: weight loads happen after all dispatches (no prefetch)
+                let mut gd = deps_from(spare, &dispatch_tasks);
+                gd.push(phase_gate.unwrap());
+                let gate = plan.add_task(TaskSpec {
+                    resource: None,
+                    duration: 0.0,
+                    deps: gd,
+                    priority: 0,
+                    tag: Tag::Barrier,
+                    bytes: 0.0,
+                    flops: 0.0,
+                });
+                // loads were created dep-free in baseline mode; patch the
+                // phase gate in as a dependency now.
+                for loaded in chiplet_loaded.iter().take(hw.n_moe_chiplets) {
+                    for &t in loaded {
+                        plan.tasks[t].deps.push(gate);
                     }
                 }
             }
-            // chiplets whose experts saw no tokens still free their buffers
-            for slot in 0..place.experts_on[c].len() {
-                if new_weight_free[c].len() <= slot {
-                    new_weight_free[c].push(chiplet_loaded[c][slot]);
+
+            // expert compute: per (chiplet, expert, micro-batch); an expert's
+            // compute needs its own weights only (fine-grained streaming).
+            let load_gate = if overlap {
+                None
+            } else {
+                // baseline: all weights of the layer loaded before any compute
+                Some(emit_simple(
+                    plan,
+                    spare,
+                    Tag::Barrier,
+                    None,
+                    0.0,
+                    &load_barrier_deps,
+                ))
+            };
+            let mut mb_compute: Vec<Vec<TaskId>> = vec![Vec::new(); n_mb];
+            for c in 0..hw.n_moe_chiplets {
+                for (slot, &e) in experts_on[l][c].iter().enumerate() {
+                    for m in 0..n_mb {
+                        let slots = cells[m].expert_slots[e] as f64;
+                        if slots == 0.0 && overlap {
+                            continue; // no tokens for this expert in this mb
+                        }
+                        let mut deps = take_deps(spare);
+                        deps.push(dispatch_tasks[m]);
+                        match load_gate {
+                            Some(g) => deps.push(g),
+                            None => deps.push(chiplet_loaded[c][slot]),
+                        }
+                        let flops = slots * expert_flops;
+                        let t = plan.add_task(TaskSpec {
+                            resource: Some(res.moe_compute[c]),
+                            duration: flops * dur.moe_spf,
+                            deps,
+                            priority: (m * 64 + slot) as i64,
+                            tag: Tag::MoeCompute,
+                            bytes: 0.0,
+                            flops,
+                        });
+                        mb_compute[m].push(t);
+                        if m == n_mb - 1 {
+                            new_weight_free[c].push(t);
+                        }
+                    }
+                }
+                // chiplets whose experts saw no tokens still free their buffers
+                for slot in 0..experts_on[l][c].len() {
+                    if new_weight_free[c].len() <= slot {
+                        new_weight_free[c].push(chiplet_loaded[c][slot]);
+                    }
                 }
             }
+
+            // MoE activation saves: per (group, mb) on the group channel
+            for m in 0..n_mb {
+                let per = hw.chiplets_per_group();
+                for g in 0..hw.n_groups {
+                    let slots: u64 = cells[m].chiplet_slots[g * per..(g + 1) * per]
+                        .iter()
+                        .sum();
+                    if slots == 0 {
+                        continue;
+                    }
+                    let bytes = slots as f64 * lb.moe_act_bytes_per_slot;
+                    let deps = deps_from(spare, &mb_compute[m]);
+                    let t = plan.add_task(TaskSpec {
+                        resource: Some(res.group_stream[g]),
+                        duration: bytes * dur.group_stream_spb,
+                        deps,
+                        priority: 500_000 + (l * 16 + m) as i64,
+                        tag: Tag::ActSave,
+                        bytes,
+                        flops: 0.0,
+                    });
+                    layer_actsaves.push(t);
+                }
+            }
+
+            // combine: switch-aggregated return of expert outputs
+            for m in 0..n_mb {
+                let cell = &cells[m];
+                let combine_bytes = cell.replicas as f64 * token_bytes / dur.switch_agg;
+                let mut deps = deps_from(spare, &mb_compute[m]);
+                if !overlap {
+                    // phase order: activation saves complete before combine
+                    deps.extend(layer_actsaves.iter());
+                }
+                let cmb = a2a_phase(
+                    plan,
+                    spare,
+                    res,
+                    dur,
+                    Tag::A2aCombine,
+                    combine_bytes,
+                    &deps,
+                    &mut occupancy,
+                    (l * 16 + m) as i64 + 8,
+                );
+                spare.push({
+                    let mut d = deps;
+                    d.clear();
+                    d
+                });
+                layer_combines.push(cmb);
+                prev_out[m] = Some(cmb);
+            }
+
+            weight_free = new_weight_free;
+            fwd_combine.push(layer_combines);
+            fwd_actsaves.push(layer_actsaves);
+            let _ = occupancy; // occupancy tasks gate resources only
         }
 
-        // MoE activation saves: per (group, mb) on the group channel
-        for m in 0..n_mb {
+        // loss boundary: all final-layer outputs
+        let last_deps: &[TaskId] = fwd_combine.last().map(|v| v.as_slice()).unwrap_or(&[]);
+        let loss = {
+            let deps = deps_from(spare, last_deps);
+            plan.add_task(TaskSpec {
+                resource: None,
+                duration: 0.0,
+                deps,
+                priority: 0,
+                tag: Tag::Barrier,
+                bytes: 0.0,
+                flops: 0.0,
+            })
+        };
+
+        // ---------- backward ----------
+        let mut grad_in: Vec<TaskId> = vec![loss; n_mb]; // upstream grad per mb
+        let mut bwd_weight_free: Vec<Vec<TaskId>> = vec![Vec::new(); hw.n_moe_chiplets];
+
+        for l in (0..n_layers).rev() {
+            let cells = &workload.cells[l];
+            let mut occupancy: Vec<TaskId> = Vec::new();
+
+            // activation re-load (attention side)
+            let attn_aload_deps = {
+                let mut d = deps_from(spare, &fwd_actsaves[l]);
+                if !overlap {
+                    d.push(grad_in[0]);
+                }
+                d
+            };
+            let attn_aload = plan.add_task(TaskSpec {
+                resource: Some(res.attn_dram),
+                duration: cfg.tokens_per_step() as f64
+                    * lb.attn_act_bytes_per_token
+                    * dur.attn_dram_spb,
+                deps: attn_aload_deps,
+                priority: ((n_layers - l) * 16) as i64,
+                tag: Tag::ActLoad,
+                bytes: cfg.tokens_per_step() as f64 * lb.attn_act_bytes_per_token,
+                flops: 0.0,
+            });
+
+            // grad dispatch happens first in a bwd layer; in baseline the weight
+            // reloads and activation loads are phase-ordered behind it (no
+            // prefetch), so build the dispatches first and wire the gate below.
+            let bwd_gate = if overlap {
+                None
+            } else {
+                // all upstream grads of this layer available = previous bwd
+                // layer fully done (grad_in is the same task for every mb)
+                Some(grad_in[0])
+            };
+
+            // weight reload for dgrad (streaming, same chunking as fwd)
+            let mut chiplet_loaded: Vec<Vec<TaskId>> =
+                vec![Vec::new(); hw.n_moe_chiplets];
+            let mut load_barrier_deps: Vec<TaskId> = Vec::new();
+            for c in 0..hw.n_moe_chiplets {
+                let g = group_of[l][c];
+                for slot in 0..experts_on[l][c].len() {
+                    let mut deps = take_deps(spare);
+                    if overlap {
+                        if let Some(&prev_use) = bwd_weight_free[c].get(slot) {
+                            deps.push(prev_use);
+                        }
+                    } else {
+                        deps.push(bwd_gate.unwrap());
+                    }
+                    let t = plan.add_task(TaskSpec {
+                        resource: Some(res.group_stream[g]),
+                        duration: lb.expert_bytes * dur.group_stream_spb
+                            + dur.chunk_overhead,
+                        deps,
+                        priority: if overlap {
+                            load_prio[l][c] * 1000 + (n_layers - l) as i64
+                        } else {
+                            0
+                        },
+                        tag: Tag::WeightStream,
+                        bytes: lb.expert_bytes,
+                        flops: 0.0,
+                    });
+                    chiplet_loaded[c].push(t);
+                    load_barrier_deps.push(t);
+                }
+            }
+
+            // MoE activation re-load per group
             let per = hw.chiplets_per_group();
+            let mut act_loads: Vec<TaskId> = Vec::new();
             for g in 0..hw.n_groups {
-                let slots: u64 = cells[m].chiplet_slots[g * per..(g + 1) * per]
+                let slots: u64 = cells
                     .iter()
+                    .map(|cell| {
+                        cell.chiplet_slots[g * per..(g + 1) * per]
+                            .iter()
+                            .sum::<u64>()
+                    })
                     .sum();
                 if slots == 0 {
                     continue;
                 }
                 let bytes = slots as f64 * lb.moe_act_bytes_per_slot;
-                let deps: Vec<TaskId> = mb_compute[m].clone();
+                let deps = {
+                    let mut d = deps_from(spare, &fwd_actsaves[l]);
+                    if !overlap {
+                        d.push(bwd_gate.unwrap());
+                    }
+                    d
+                };
                 let t = plan.add_task(TaskSpec {
                     resource: Some(res.group_stream[g]),
                     duration: bytes * dur.group_stream_spb,
                     deps,
-                    priority: 500_000 + (l * 16 + m) as i64,
-                    tag: Tag::ActSave,
+                    priority: 100 + (n_layers - l) as i64,
+                    tag: Tag::ActLoad,
                     bytes,
                     flops: 0.0,
                 });
-                layer_actsaves.push(t);
+                act_loads.push(t);
             }
-        }
 
-        // combine: switch-aggregated return of expert outputs
-        let mut combines = Vec::with_capacity(n_mb);
-        for m in 0..n_mb {
-            let cell = &cells[m];
-            let combine_bytes = cell.replicas as f64 * token_bytes / dur.switch_agg;
-            let mut deps = mb_compute[m].clone();
-            if !overlap {
-                // phase order: activation saves complete before combine
-                deps.extend(layer_actsaves.iter());
+            // grad dispatch: output-grads attention -> chiplets
+            let mut grad_dispatch = Vec::with_capacity(n_mb);
+            for m in 0..n_mb {
+                let cell = &cells[m];
+                let bytes = cell.replicas as f64 * token_bytes / dur.switch_agg;
+                let d = a2a_phase(
+                    plan,
+                    spare,
+                    res,
+                    dur,
+                    Tag::A2aDispatch,
+                    bytes,
+                    &grad_in[m..m + 1],
+                    &mut occupancy,
+                    ((n_layers - l) * 16 + m) as i64,
+                );
+                grad_dispatch.push(d);
             }
-            let cmb = a2a_phase(
-                &mut plan,
-                &res,
-                &dur,
-                Tag::A2aCombine,
-                combine_bytes,
-                &deps,
-                &mut occupancy,
-                (l * 16 + m) as i64 + 8,
-            );
-            combines.push(cmb);
-            layer_combines.push(cmb);
-            prev_out[m] = Some(cmb);
-        }
 
-        weight_free = new_weight_free;
-        fwd_combine.push(layer_combines);
-        fwd_actsaves.push(layer_actsaves);
-        let _ = occupancy; // occupancy tasks gate resources only
-    }
-
-    // loss boundary: all final-layer outputs
-    let last_deps: Vec<TaskId> = fwd_combine
-        .last()
-        .map(|v| v.clone())
-        .unwrap_or_default();
-    let loss = plan.task(Tag::Barrier, None, 0.0, &last_deps);
-
-    // ---------- backward ----------
-    let mut grad_in: Vec<TaskId> = vec![loss; n_mb]; // upstream grad per mb
-    let mut bwd_weight_free: Vec<Vec<TaskId>> = vec![Vec::new(); hw.n_moe_chiplets];
-
-    for l in (0..n_layers).rev() {
-        let cells = &inp.workload.cells[l];
-        let place = &places[l];
-        let mut occupancy: Vec<TaskId> = Vec::new();
-
-        // activation re-load (attention side)
-        let mut aload_deps: Vec<TaskId> = fwd_actsaves[l].clone();
-        aload_deps.push(grad_in[0]);
-        let attn_aload = plan.add_task(TaskSpec {
-            resource: Some(res.attn_dram),
-            duration: cfg.tokens_per_step() as f64
-                * lb.attn_act_bytes_per_token
-                * dur.attn_dram_spb,
-            deps: if overlap { fwd_actsaves[l].clone() } else { aload_deps },
-            priority: ((n_layers - l) * 16) as i64,
-            tag: Tag::ActLoad,
-            bytes: cfg.tokens_per_step() as f64 * lb.attn_act_bytes_per_token,
-            flops: 0.0,
-        });
-
-        // grad dispatch happens first in a bwd layer; in baseline the weight
-        // reloads and activation loads are phase-ordered behind it (no
-        // prefetch), so build the dispatches first and wire the gate below.
-        let bwd_gate = if overlap {
-            None
-        } else {
-            // all upstream grads of this layer available = previous bwd
-            // layer fully done (grad_in is the same task for every mb)
-            Some(grad_in[0])
-        };
-
-        // weight reload for dgrad (streaming, same chunking as fwd)
-        let mut chiplet_loaded: Vec<Vec<TaskId>> = vec![Vec::new(); hw.n_moe_chiplets];
-        let mut load_barrier_deps: Vec<TaskId> = Vec::new();
-        for c in 0..hw.n_moe_chiplets {
-            let g = place.group_of[c];
-            for slot in 0..place.experts_on[c].len() {
-                let mut deps: Vec<TaskId> = Vec::new();
-                if overlap {
-                    if let Some(&prev_use) = bwd_weight_free[c].get(slot) {
-                        deps.push(prev_use);
-                    }
-                } else {
-                    deps.push(bwd_gate.unwrap());
-                }
-                let t = plan.add_task(TaskSpec {
-                    resource: Some(res.group_stream[g]),
-                    duration: lb.expert_bytes * dur.group_stream_spb + dur.chunk_overhead,
-                    deps,
-                    priority: if overlap {
-                        place.load_priority[c] * 1000 + (n_layers - l) as i64
-                    } else {
-                        0
-                    },
-                    tag: Tag::WeightStream,
-                    bytes: lb.expert_bytes,
-                    flops: 0.0,
-                });
-                chiplet_loaded[c].push(t);
-                load_barrier_deps.push(t);
-            }
-        }
-
-        // MoE activation re-load per group
-        let per = hw.chiplets_per_group();
-        let mut act_loads: Vec<TaskId> = Vec::new();
-        for g in 0..hw.n_groups {
-            let slots: u64 = cells
-                .iter()
-                .map(|cell| {
-                    cell.chiplet_slots[g * per..(g + 1) * per]
-                        .iter()
-                        .sum::<u64>()
-                })
-                .sum();
-            if slots == 0 {
-                continue;
-            }
-            let bytes = slots as f64 * lb.moe_act_bytes_per_slot;
-            let deps = if overlap {
-                fwd_actsaves[l].clone()
+            let load_gate = if overlap {
+                None
             } else {
-                let mut d = fwd_actsaves[l].clone();
-                d.push(bwd_gate.unwrap());
-                d
+                Some(emit_simple(
+                    plan,
+                    spare,
+                    Tag::Barrier,
+                    None,
+                    0.0,
+                    &load_barrier_deps,
+                ))
             };
-            let t = plan.add_task(TaskSpec {
-                resource: Some(res.group_stream[g]),
-                duration: bytes * dur.group_stream_spb,
-                deps,
-                priority: 100 + (n_layers - l) as i64,
-                tag: Tag::ActLoad,
-                bytes,
-                flops: 0.0,
-            });
-            act_loads.push(t);
-        }
-
-        // grad dispatch: output-grads attention -> chiplets
-        let mut grad_dispatch = Vec::with_capacity(n_mb);
-        for m in 0..n_mb {
-            let cell = &cells[m];
-            let bytes = cell.replicas as f64 * token_bytes / dur.switch_agg;
-            let d = a2a_phase(
-                &mut plan,
-                &res,
-                &dur,
-                Tag::A2aDispatch,
-                bytes,
-                &[grad_in[m]],
-                &mut occupancy,
-                ((n_layers - l) * 16 + m) as i64,
-            );
-            grad_dispatch.push(d);
-        }
-
-        let load_gate = if overlap {
-            None
-        } else {
-            Some(plan.task(Tag::Barrier, None, 0.0, &load_barrier_deps))
-        };
-        if !overlap {
-            // strict phase order: nothing streams while the grad all-to-all
-            // is in flight
-            let dispatch_gate = plan.task(Tag::Barrier, None, 0.0, &grad_dispatch);
-            for c in 0..hw.n_moe_chiplets {
-                for &t in &chiplet_loaded[c] {
+            if !overlap {
+                // strict phase order: nothing streams while the grad all-to-all
+                // is in flight
+                let dispatch_gate =
+                    emit_simple(plan, spare, Tag::Barrier, None, 0.0, &grad_dispatch);
+                for c in 0..hw.n_moe_chiplets {
+                    for &t in &chiplet_loaded[c] {
+                        plan.tasks[t].deps.push(dispatch_gate);
+                    }
+                }
+                for &t in &act_loads {
                     plan.tasks[t].deps.push(dispatch_gate);
                 }
             }
-            for &t in &act_loads {
-                plan.tasks[t].deps.push(dispatch_gate);
-            }
-        }
 
-        // expert backward: dgrad + wgrad, 2x forward FLOPs
-        let mut mb_bwd: Vec<Vec<TaskId>> = vec![Vec::new(); n_mb];
-        let mut group_bwd: Vec<Vec<TaskId>> = vec![Vec::new(); hw.n_groups];
-        let mut new_bwd_free: Vec<Vec<TaskId>> = vec![Vec::new(); hw.n_moe_chiplets];
-        for c in 0..hw.n_moe_chiplets {
-            let g = place.group_of[c];
-            for (slot, &e) in place.experts_on[c].iter().enumerate() {
-                for m in 0..n_mb {
-                    let slots = cells[m].expert_slots[e] as f64;
-                    if slots == 0.0 && overlap {
-                        continue;
+            // expert backward: dgrad + wgrad, 2x forward FLOPs
+            let mut mb_bwd: Vec<Vec<TaskId>> = vec![Vec::new(); n_mb];
+            let mut group_bwd: Vec<Vec<TaskId>> = vec![Vec::new(); hw.n_groups];
+            let mut new_bwd_free: Vec<Vec<TaskId>> = vec![Vec::new(); hw.n_moe_chiplets];
+            for c in 0..hw.n_moe_chiplets {
+                let g = group_of[l][c];
+                for (slot, &e) in experts_on[l][c].iter().enumerate() {
+                    for m in 0..n_mb {
+                        let slots = cells[m].expert_slots[e] as f64;
+                        if slots == 0.0 && overlap {
+                            continue;
+                        }
+                        let mut deps = take_deps(spare);
+                        deps.push(grad_dispatch[m]);
+                        match load_gate {
+                            Some(gate) => deps.push(gate),
+                            None => deps.push(chiplet_loaded[c][slot]),
+                        }
+                        deps.extend(act_loads.iter());
+                        let flops = 2.0 * slots * expert_flops;
+                        let t = plan.add_task(TaskSpec {
+                            resource: Some(res.moe_compute[c]),
+                            duration: flops * dur.moe_spf,
+                            deps,
+                            priority: (m * 64 + slot) as i64,
+                            tag: Tag::MoeCompute,
+                            bytes: 0.0,
+                            flops,
+                        });
+                        mb_bwd[m].push(t);
+                        group_bwd[g].push(t);
+                        if m == n_mb - 1 {
+                            new_bwd_free[c].push(t);
+                        }
                     }
-                    let mut deps = vec![grad_dispatch[m]];
-                    match load_gate {
-                        Some(gate) => deps.push(gate),
-                        None => deps.push(chiplet_loaded[c][slot]),
-                    }
-                    deps.extend(act_loads.iter());
-                    let flops = 2.0 * slots * expert_flops;
-                    let t = plan.add_task(TaskSpec {
-                        resource: Some(res.moe_compute[c]),
-                        duration: flops * dur.moe_spf,
-                        deps,
-                        priority: (m * 64 + slot) as i64,
-                        tag: Tag::MoeCompute,
-                        bytes: 0.0,
-                        flops,
-                    });
-                    mb_bwd[m].push(t);
-                    group_bwd[g].push(t);
-                    if m == n_mb - 1 {
-                        new_bwd_free[c].push(t);
+                }
+                for slot in 0..experts_on[l][c].len() {
+                    if new_bwd_free[c].len() <= slot {
+                        new_bwd_free[c].push(chiplet_loaded[c][slot]);
                     }
                 }
             }
-            for slot in 0..place.experts_on[c].len() {
-                if new_bwd_free[c].len() <= slot {
-                    new_bwd_free[c].push(chiplet_loaded[c][slot]);
+            bwd_weight_free = new_bwd_free;
+
+            // grad return: input-grads chiplets -> attention
+            let mut grad_return = Vec::with_capacity(n_mb);
+            for m in 0..n_mb {
+                let cell = &cells[m];
+                let bytes = cell.replicas as f64 * token_bytes;
+                let r = a2a_phase(
+                    plan,
+                    spare,
+                    res,
+                    dur,
+                    Tag::A2aCombine,
+                    bytes,
+                    &mb_bwd[m],
+                    &mut occupancy,
+                    ((n_layers - l) * 16 + m) as i64 + 8,
+                );
+                grad_return.push(r);
+            }
+
+            // expert wgrad writeback + optimizer update per group
+            let mut optim_tasks: Vec<TaskId> = Vec::new();
+            for g in 0..hw.n_groups {
+                if group_bwd[g].is_empty() {
+                    continue;
                 }
+                let group_weight_bytes = lb.cluster_bytes * hw.chiplets_per_group() as f64;
+                let mut wb_deps = deps_from(spare, &group_bwd[g]);
+                if !overlap {
+                    wb_deps.extend(grad_return.iter());
+                }
+                let wb = plan.add_task(TaskSpec {
+                    resource: Some(res.group_stream[g]),
+                    duration: group_weight_bytes * dur.group_stream_spb,
+                    deps: wb_deps,
+                    priority: 200 + (n_layers - l) as i64,
+                    tag: Tag::GradWriteback,
+                    bytes: group_weight_bytes,
+                    flops: 0.0,
+                });
+                let opt = plan.add_task(TaskSpec {
+                    resource: Some(res.group_stream[g]),
+                    duration: group_weight_bytes * dur.opt_factor * dur.group_stream_spb,
+                    deps: deps_from(spare, &[wb]),
+                    priority: 300 + (n_layers - l) as i64,
+                    tag: Tag::OptimUpdate,
+                    bytes: group_weight_bytes * dur.opt_factor,
+                    flops: 0.0,
+                });
+                optim_tasks.push(opt);
             }
-        }
-        bwd_weight_free = new_bwd_free;
 
-        // grad return: input-grads chiplets -> attention
-        let mut grad_return = Vec::with_capacity(n_mb);
-        for m in 0..n_mb {
-            let cell = &cells[m];
-            let bytes = cell.replicas as f64 * token_bytes;
-            let r = a2a_phase(
-                &mut plan,
-                &res,
-                &dur,
-                Tag::A2aCombine,
-                bytes,
-                &mb_bwd[m],
-                &mut occupancy,
-                ((n_layers - l) * 16 + m) as i64 + 8,
-            );
-            grad_return.push(r);
-        }
-
-        // expert wgrad writeback + optimizer update per group
-        let mut optim_tasks: Vec<TaskId> = Vec::new();
-        for g in 0..hw.n_groups {
-            if group_bwd[g].is_empty() {
-                continue;
+            // attention backward per mb (2x fwd flops) + attn weight traffic
+            let attn_flops_bwd = 2.0 * tokens_mb * (attn_flops_tok + shared_flops_tok);
+            let mut next_grad = Vec::with_capacity(n_mb);
+            for m in 0..n_mb {
+                let t = plan.add_task(TaskSpec {
+                    resource: Some(res.attn_compute),
+                    duration: attn_flops_bwd * dur.attn_spf,
+                    deps: deps_from(spare, &[grad_return[m], attn_aload]),
+                    priority: ((n_layers - l) * 16 + m) as i64,
+                    tag: Tag::AttnCompute,
+                    bytes: 0.0,
+                    flops: attn_flops_bwd,
+                });
+                next_grad.push(t);
             }
-            let group_weight_bytes =
-                lb.cluster_bytes * hw.chiplets_per_group() as f64;
-            let mut wb_deps = group_bwd[g].clone();
-            if !overlap {
-                wb_deps.extend(grad_return.iter());
-            }
-            let wb = plan.add_task(TaskSpec {
-                resource: Some(res.group_stream[g]),
-                duration: group_weight_bytes * dur.group_stream_spb,
-                deps: wb_deps,
-                priority: 200 + (n_layers - l) as i64,
-                tag: Tag::GradWriteback,
-                bytes: group_weight_bytes,
-                flops: 0.0,
-            });
-            let opt = plan.add_task(TaskSpec {
-                resource: Some(res.group_stream[g]),
-                duration: group_weight_bytes * dur.opt_factor * dur.group_stream_spb,
-                deps: vec![wb],
-                priority: 300 + (n_layers - l) as i64,
+            // attention wgrad + update on the attention channel
+            let awb = plan.add_task(TaskSpec {
+                resource: Some(res.attn_dram),
+                duration: lb.attn_bytes * (1.0 + dur.opt_factor) * dur.attn_dram_spb,
+                deps: deps_from(spare, &next_grad),
+                priority: 400 + (n_layers - l) as i64,
                 tag: Tag::OptimUpdate,
-                bytes: group_weight_bytes * dur.opt_factor,
+                bytes: lb.attn_bytes * (1.0 + dur.opt_factor),
                 flops: 0.0,
             });
-            optim_tasks.push(opt);
+            if !overlap {
+                // serialize the next (lower) layer behind this layer's full
+                // update phase (attention + expert optimizer writebacks)
+                let mut gate_deps = deps_from(spare, &[awb]);
+                gate_deps.extend(optim_tasks.iter());
+                let gate = plan.add_task(TaskSpec {
+                    resource: None,
+                    duration: 0.0,
+                    deps: gate_deps,
+                    priority: 0,
+                    tag: Tag::Barrier,
+                    bytes: 0.0,
+                    flops: 0.0,
+                });
+                grad_in.clear();
+                grad_in.resize(n_mb, gate);
+            } else {
+                grad_in = next_grad;
+            }
+            let _ = occupancy;
         }
 
-        // attention backward per mb (2x fwd flops) + attn weight traffic
-        let attn_flops_bwd =
-            2.0 * tokens_mb * (attn_flops_tok + shared_flops_tok);
-        let mut next_grad = Vec::with_capacity(n_mb);
-        for m in 0..n_mb {
-            let t = plan.add_task(TaskSpec {
-                resource: Some(res.attn_compute),
-                duration: attn_flops_bwd * dur.attn_spf,
-                deps: vec![grad_return[m], attn_aload],
-                priority: ((n_layers - l) * 16 + m) as i64,
-                tag: Tag::AttnCompute,
-                bytes: 0.0,
-                flops: attn_flops_bwd,
-            });
-            next_grad.push(t);
-        }
-        // attention wgrad + update on the attention channel
-        let awb = plan.add_task(TaskSpec {
-            resource: Some(res.attn_dram),
-            duration: lb.attn_bytes * (1.0 + dur.opt_factor) * dur.attn_dram_spb,
-            deps: next_grad.clone(),
-            priority: 400 + (n_layers - l) as i64,
-            tag: Tag::OptimUpdate,
-            bytes: lb.attn_bytes * (1.0 + dur.opt_factor),
-            flops: 0.0,
-        });
-        if !overlap {
-            // serialize the next (lower) layer behind this layer's full
-            // update phase (attention + expert optimizer writebacks)
-            let mut gate_deps = vec![awb];
-            gate_deps.extend(optim_tasks.iter());
-            let gate = plan.task(Tag::Barrier, None, 0.0, &gate_deps);
-            grad_in = vec![gate; n_mb];
-        } else {
-            grad_in = next_grad;
-        }
-        let _ = occupancy;
+        &self.plan
     }
+}
 
-    plan
+/// Build the full step plan (one-shot convenience over [`PlanCache`]).
+pub fn build_step_plan(inp: &StepInputs) -> Plan {
+    let mut cache = PlanCache::new(inp.cfg, inp.layouts);
+    cache.rebuild(inp.workload);
+    cache.into_plan()
 }
 
 #[cfg(test)]
@@ -844,5 +1031,41 @@ mod tests {
         let res = Simulator::run(&plan);
         let total_busy: f64 = res.tag_busy.iter().map(|(_, v)| v).sum();
         assert!(total_busy > res.makespan, "nothing overlapped");
+    }
+
+    /// The cache's per-iteration re-emission over the recycled arena must
+    /// produce exactly the plan a fresh one-shot build produces, for every
+    /// method (baseline exercises the dep-patching barrier paths) and
+    /// across repeated rebuilds with different workloads.
+    #[test]
+    fn cached_rebuild_matches_fresh_build() {
+        for m in Method::ALL {
+            let cfg = small_cfg(m.config());
+            let gen = TraceGen::for_model(&cfg.model, 5);
+            let layouts = vec![
+                ExpertLayout::contiguous(cfg.model.n_experts, 16, 4);
+                cfg.model.n_moe_layers()
+            ];
+            let coalesce = cfg.method.efficient_a2a;
+            let mut cache = PlanCache::new(&cfg, &layouts);
+            let mut rng = Rng::new(11);
+            for it in 0..3 {
+                let mut step_rng = rng.fork(it);
+                let w = crate::pipeline::StepWorkload::sample(
+                    &cfg, &gen, &layouts, coalesce, &mut step_rng,
+                );
+                let fresh = build_step_plan(&StepInputs {
+                    cfg: &cfg,
+                    layouts: &layouts,
+                    workload: &w,
+                });
+                let cached = cache.rebuild(&w);
+                assert_eq!(
+                    cached, &fresh,
+                    "{}: rebuild {it} diverged from fresh build",
+                    m.name()
+                );
+            }
+        }
     }
 }

@@ -130,7 +130,7 @@ pub fn fig3(opts: ReportOpts) -> String {
     let p = Priors::from_trace(&tr);
 
     let mut sorted = p.workload.clone();
-    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sorted.sort_by(|a, b| b.total_cmp(a));
     let labels: Vec<String> = (0..8).map(|i| format!("rank-{i}")).collect();
     let top: Vec<f64> = sorted.iter().take(8).map(|&w| w * 100.0).collect();
     let mut out = bar_chart(
@@ -432,9 +432,9 @@ pub fn q1(opts: ReportOpts) -> String {
         "Q1 — critical-path decomposition (Qwen3, Mozart-C, seq 256, HBM2)",
         &["Component", "Critical-path share"],
     );
-    let total: f64 = r.critical.iter().map(|(_, v)| v).sum();
-    let mut rows: Vec<(Tag, f64)> = r.critical.clone();
-    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let total: f64 = r.critical.sum();
+    let mut rows: Vec<(Tag, f64)> = r.critical.to_vec();
+    rows.sort_by(|a, b| b.1.total_cmp(&a.1));
     for (tag, v) in rows.iter().filter(|(_, v)| *v > 0.0) {
         t.row(&[tag.name().to_string(), format!("{:.1}%", v / total * 100.0)]);
     }

@@ -7,15 +7,31 @@
 //! HLO *text* is the interchange format (not `.serialize()`): jax ≥ 0.5
 //! emits protos with 64-bit instruction ids which xla_extension 0.5.1
 //! rejects; the text parser reassigns ids and round-trips cleanly.
+//!
+//! The whole runtime is gated behind the `pjrt` cargo feature because the
+//! `xla` bindings crate is not part of the offline crate set; the default
+//! build ships a stub that reports unavailability (see DESIGN.md).
 
+#[cfg(feature = "pjrt")]
 pub mod exec;
 
+#[cfg(feature = "pjrt")]
 pub use exec::{Executable, Runtime};
 
 use anyhow::Result;
 
 /// Smoke helper: create a CPU PJRT client and report the platform name.
+#[cfg(feature = "pjrt")]
 pub fn platform() -> Result<String> {
     let client = xla::PjRtClient::cpu()?;
     Ok(client.platform_name())
+}
+
+/// Stub when built without the `pjrt` feature.
+#[cfg(not(feature = "pjrt"))]
+pub fn platform() -> Result<String> {
+    anyhow::bail!(
+        "PJRT runtime unavailable: this build has no `xla` bindings. \
+         Add the `xla` dependency and rebuild with `--features pjrt` (see rust/DESIGN.md)."
+    )
 }

@@ -5,11 +5,21 @@
 //! id) order. The engine records start/finish per task, per-tag and
 //! per-resource busy time, the makespan, and the critical path (the chain
 //! of dependency/resource waits that determined the final finish time).
+//!
+//! Hot-path design (sweeps run this tens of thousands of times):
+//! - per-tag accounting is a dense [`TagBreakdown`] indexed by
+//!   [`Tag::index`] — O(1) per task instead of an O(|Tag|) find-scan;
+//! - float orderings use `f64::total_cmp`, so a NaN duration can never
+//!   panic mid-run (NaNs are rejected loudly by [`Plan::validate`]);
+//! - all per-run working memory (in-degrees, the CSR dependent adjacency,
+//!   ready times, the ready heap, resource state) lives in a reusable
+//!   [`SimScratch`], so repeated [`Simulator::run_with`] calls allocate
+//!   only the `start`/`finish`/`resource_busy` vectors they return.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use super::plan::{Plan, Tag, TaskId};
+use super::plan::{Plan, Tag, TagBreakdown, TaskId};
 
 /// Heap entry: min-heap by (ready_time, priority, id).
 #[derive(PartialEq)]
@@ -29,11 +39,11 @@ impl PartialOrd for Entry {
 
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // reverse for min-heap
+        // reverse for min-heap; total_cmp matches partial_cmp on the
+        // non-NaN, non-negative times the engine produces
         other
             .ready
-            .partial_cmp(&self.ready)
-            .unwrap()
+            .total_cmp(&self.ready)
             .then(other.priority.cmp(&self.priority))
             .then(other.id.cmp(&self.id))
     }
@@ -57,47 +67,31 @@ pub struct SimResult {
     pub start: Vec<f64>,
     pub finish: Vec<f64>,
     /// Busy seconds per tag (sum of task durations).
-    pub tag_busy: Vec<(Tag, f64)>,
+    pub tag_busy: TagBreakdown,
     /// Busy seconds per resource.
     pub resource_busy: Vec<f64>,
     /// Seconds of the critical path attributed to each tag.
-    pub critical_path: Vec<(Tag, f64)>,
+    pub critical_path: TagBreakdown,
     /// Total bytes and flops (energy accounting inputs) per tag.
-    pub tag_bytes: Vec<(Tag, f64)>,
-    pub tag_flops: Vec<(Tag, f64)>,
+    pub tag_bytes: TagBreakdown,
+    pub tag_flops: TagBreakdown,
 }
 
 impl SimResult {
     pub fn tag_time(&self, tag: Tag) -> f64 {
-        self.tag_busy
-            .iter()
-            .find(|(t, _)| *t == tag)
-            .map(|(_, v)| *v)
-            .unwrap_or(0.0)
+        self.tag_busy.get(tag)
     }
 
     pub fn critical_time(&self, tag: Tag) -> f64 {
-        self.critical_path
-            .iter()
-            .find(|(t, _)| *t == tag)
-            .map(|(_, v)| *v)
-            .unwrap_or(0.0)
+        self.critical_path.get(tag)
     }
 
     pub fn bytes(&self, tag: Tag) -> f64 {
-        self.tag_bytes
-            .iter()
-            .find(|(t, _)| *t == tag)
-            .map(|(_, v)| *v)
-            .unwrap_or(0.0)
+        self.tag_bytes.get(tag)
     }
 
     pub fn flops(&self, tag: Tag) -> f64 {
-        self.tag_flops
-            .iter()
-            .find(|(t, _)| *t == tag)
-            .map(|(_, v)| *v)
-            .unwrap_or(0.0)
+        self.tag_flops.get(tag)
     }
 
     /// Utilization of a resource relative to the makespan.
@@ -110,61 +104,130 @@ impl SimResult {
     }
 }
 
+/// Reusable working memory for [`Simulator::run_with`]. One scratch serves
+/// any number of sequential runs over plans of any size; buffers grow to
+/// the high-water mark and stay allocated.
+#[derive(Default)]
+pub struct SimScratch {
+    indeg: Vec<usize>,
+    /// CSR adjacency of the reverse dependency graph: task i's dependents
+    /// are `dep_edges[dep_heads[i]..dep_heads[i + 1]]`.
+    dep_heads: Vec<usize>,
+    dep_edges: Vec<TaskId>,
+    cursor: Vec<usize>,
+    ready_time: Vec<f64>,
+    last_dep: Vec<Option<TaskId>>,
+    heap: BinaryHeap<Entry>,
+    res_free: Vec<f64>,
+    res_last: Vec<Option<TaskId>>,
+    cause: Vec<StartCause>,
+}
+
+impl SimScratch {
+    pub fn new() -> SimScratch {
+        SimScratch::default()
+    }
+
+    /// Resize-and-reset every buffer for a plan with `n` tasks and `nres`
+    /// resources, retaining capacity.
+    fn reset(&mut self, n: usize, nres: usize) {
+        self.indeg.clear();
+        self.indeg.resize(n, 0);
+        self.dep_heads.clear();
+        self.dep_heads.resize(n + 1, 0);
+        self.cursor.clear();
+        self.cursor.resize(n, 0);
+        self.ready_time.clear();
+        self.ready_time.resize(n, 0.0);
+        self.last_dep.clear();
+        self.last_dep.resize(n, None);
+        self.cause.clear();
+        self.cause.resize(n, StartCause::Source);
+        self.res_free.clear();
+        self.res_free.resize(nres, 0.0);
+        self.res_last.clear();
+        self.res_last.resize(nres, None);
+        self.heap.clear();
+        self.dep_edges.clear();
+    }
+}
+
 /// The engine. Stateless; `run` consumes a plan reference.
 pub struct Simulator;
 
 impl Simulator {
-    /// Execute the plan, returning timing and accounting.
+    /// Execute the plan, returning timing and accounting. Convenience
+    /// wrapper over [`Simulator::run_with`] with throwaway scratch.
     pub fn run(plan: &Plan) -> SimResult {
+        Simulator::run_with(plan, &mut SimScratch::new())
+    }
+
+    /// Execute the plan using caller-provided scratch buffers. Results are
+    /// identical to [`Simulator::run`]; repeated calls avoid re-allocating
+    /// the engine's working memory.
+    pub fn run_with(plan: &Plan, scratch: &mut SimScratch) -> SimResult {
         let n = plan.tasks.len();
-        let mut indeg = vec![0usize; n];
-        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
-        for (i, t) in plan.tasks.iter().enumerate() {
-            indeg[i] = t.deps.len();
+        let nres = plan.resource_names.len();
+        scratch.reset(n, nres);
+
+        // reverse dependency graph as CSR: count, prefix-sum, fill. The
+        // `indeg` buffer doubles as the dependent counter during the first
+        // pass and is rebuilt as the true in-degree in the fill pass.
+        let total_deps: usize = plan.tasks.iter().map(|t| t.deps.len()).sum();
+        scratch.dep_edges.resize(total_deps, 0);
+        for t in plan.tasks.iter() {
             for &d in &t.deps {
-                dependents[d].push(i);
+                scratch.indeg[d] += 1;
             }
         }
-
-        let mut ready_time = vec![0.0f64; n];
-        // which dep finished last (start cause candidate)
-        let mut last_dep: Vec<Option<TaskId>> = vec![None; n];
-        let mut heap: BinaryHeap<Entry> = BinaryHeap::new();
+        let mut acc = 0usize;
         for i in 0..n {
-            if indeg[i] == 0 {
-                heap.push(Entry {
+            scratch.dep_heads[i] = acc;
+            scratch.cursor[i] = acc;
+            acc += scratch.indeg[i];
+        }
+        scratch.dep_heads[n] = acc;
+        for (i, t) in plan.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                scratch.dep_edges[scratch.cursor[d]] = i;
+                scratch.cursor[d] += 1;
+            }
+            scratch.indeg[i] = t.deps.len();
+        }
+
+        for (i, t) in plan.tasks.iter().enumerate() {
+            if t.deps.is_empty() {
+                scratch.heap.push(Entry {
                     ready: 0.0,
-                    priority: plan.tasks[i].priority,
+                    priority: t.priority,
                     id: i,
                 });
             }
         }
 
-        let nres = plan.resource_names.len();
-        let mut res_free = vec![0.0f64; nres];
-        let mut res_last: Vec<Option<TaskId>> = vec![None; nres];
         let mut res_busy = vec![0.0f64; nres];
-
         let mut start = vec![0.0f64; n];
         let mut finish = vec![0.0f64; n];
-        let mut cause: Vec<StartCause> = vec![StartCause::Source; n];
         let mut done = 0usize;
 
-        while let Some(e) = heap.pop() {
+        while let Some(e) = scratch.heap.pop() {
             let i = e.id;
             let t = &plan.tasks[i];
             let (s, c) = match t.resource {
                 Some(r) => {
-                    if res_free[r] > e.ready {
-                        (res_free[r], StartCause::Resource(res_last[r].unwrap()))
+                    if scratch.res_free[r] > e.ready {
+                        (
+                            scratch.res_free[r],
+                            StartCause::Resource(scratch.res_last[r].unwrap()),
+                        )
                     } else {
-                        match last_dep[i] {
+                        match scratch.last_dep[i] {
                             Some(d) => (e.ready, StartCause::Dep(d)),
                             None => (e.ready, StartCause::Source),
                         }
                     }
                 }
-                None => match last_dep[i] {
+                None => match scratch.last_dep[i] {
                     Some(d) => (e.ready, StartCause::Dep(d)),
                     None => (e.ready, StartCause::Source),
                 },
@@ -172,22 +235,23 @@ impl Simulator {
             let f = s + t.duration;
             start[i] = s;
             finish[i] = f;
-            cause[i] = c;
+            scratch.cause[i] = c;
             if let Some(r) = t.resource {
-                res_free[r] = f;
-                res_last[r] = Some(i);
+                scratch.res_free[r] = f;
+                scratch.res_last[r] = Some(i);
                 res_busy[r] += t.duration;
             }
             done += 1;
-            for &j in &dependents[i] {
-                if f > ready_time[j] {
-                    ready_time[j] = f;
-                    last_dep[j] = Some(i);
+            for k in scratch.dep_heads[i]..scratch.dep_heads[i + 1] {
+                let j = scratch.dep_edges[k];
+                if f > scratch.ready_time[j] {
+                    scratch.ready_time[j] = f;
+                    scratch.last_dep[j] = Some(i);
                 }
-                indeg[j] -= 1;
-                if indeg[j] == 0 {
-                    heap.push(Entry {
-                        ready: ready_time[j],
+                scratch.indeg[j] -= 1;
+                if scratch.indeg[j] == 0 {
+                    scratch.heap.push(Entry {
+                        ready: scratch.ready_time[j],
                         priority: plan.tasks[j].priority,
                         id: j,
                     });
@@ -198,26 +262,25 @@ impl Simulator {
 
         let makespan = finish.iter().cloned().fold(0.0f64, f64::max);
 
-        // per-tag accounting
-        let mut tag_busy: Vec<(Tag, f64)> = Tag::ALL.iter().map(|&t| (t, 0.0)).collect();
-        let mut tag_bytes: Vec<(Tag, f64)> = Tag::ALL.iter().map(|&t| (t, 0.0)).collect();
-        let mut tag_flops: Vec<(Tag, f64)> = Tag::ALL.iter().map(|&t| (t, 0.0)).collect();
-        let idx = |tag: Tag| Tag::ALL.iter().position(|&t| t == tag).unwrap();
+        // per-tag accounting: O(1) dense-array adds
+        let mut tag_busy = TagBreakdown::zero();
+        let mut tag_bytes = TagBreakdown::zero();
+        let mut tag_flops = TagBreakdown::zero();
         for t in &plan.tasks {
-            tag_busy[idx(t.tag)].1 += t.duration;
-            tag_bytes[idx(t.tag)].1 += t.bytes;
-            tag_flops[idx(t.tag)].1 += t.flops;
+            tag_busy.add(t.tag, t.duration);
+            tag_bytes.add(t.tag, t.bytes);
+            tag_flops.add(t.tag, t.flops);
         }
 
         // critical path: walk back from the last-finishing task
-        let mut critical: Vec<(Tag, f64)> = Tag::ALL.iter().map(|&t| (t, 0.0)).collect();
+        let mut critical = TagBreakdown::zero();
         if n > 0 {
             let mut cur = (0..n)
-                .max_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap())
+                .max_by(|&a, &b| finish[a].total_cmp(&finish[b]))
                 .unwrap();
             loop {
-                critical[idx(plan.tasks[cur].tag)].1 += plan.tasks[cur].duration;
-                match cause[cur] {
+                critical.add(plan.tasks[cur].tag, plan.tasks[cur].duration);
+                match scratch.cause[cur] {
                     StartCause::Source => break,
                     StartCause::Dep(d) => cur = d,
                     StartCause::Resource(p) => cur = p,
@@ -365,5 +428,35 @@ mod tests {
         let res = Simulator::run(&p);
         assert_eq!(res.tag_time(Tag::A2aDispatch), 5.0);
         assert_eq!(res.bytes(Tag::A2aDispatch), 150.0);
+    }
+
+    /// Scratch reuse across plans of different shapes must not leak state.
+    #[test]
+    fn scratch_reuse_is_equivalent_to_fresh() {
+        let mut scratch = SimScratch::new();
+
+        let mut big = Plan::new();
+        let r1 = big.add_resource("r1");
+        let r2 = big.add_resource("r2");
+        let a = big.add_task(spec(Some(r1), 1.5, &[], 0));
+        let b = big.add_task(spec(Some(r2), 2.5, &[a], 1));
+        let c = big.add_task(spec(Some(r1), 0.5, &[a], -1));
+        big.add_task(spec(None, 0.0, &[b, c], 0));
+
+        let mut small = Plan::new();
+        let r = small.add_resource("only");
+        small.add_task(spec(Some(r), 3.0, &[], 0));
+        small.add_task(spec(Some(r), 2.0, &[0], 0));
+
+        for plan in [&big, &small, &big, &small, &big] {
+            let fresh = Simulator::run(plan);
+            let reused = Simulator::run_with(plan, &mut scratch);
+            assert_eq!(fresh.makespan, reused.makespan);
+            assert_eq!(fresh.start, reused.start);
+            assert_eq!(fresh.finish, reused.finish);
+            assert_eq!(fresh.tag_busy, reused.tag_busy);
+            assert_eq!(fresh.critical_path, reused.critical_path);
+            assert_eq!(fresh.resource_busy, reused.resource_busy);
+        }
     }
 }

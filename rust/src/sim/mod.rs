@@ -13,5 +13,5 @@
 pub mod engine;
 pub mod plan;
 
-pub use engine::{SimResult, Simulator};
-pub use plan::{Plan, ResourceId, Tag, TaskId, TaskSpec};
+pub use engine::{SimResult, SimScratch, Simulator};
+pub use plan::{Plan, ResourceId, Tag, TagBreakdown, TaskId, TaskSpec};

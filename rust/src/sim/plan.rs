@@ -34,6 +34,16 @@ pub enum Tag {
 }
 
 impl Tag {
+    /// Number of tag variants; sizes the dense per-tag accumulators.
+    pub const COUNT: usize = 12;
+
+    /// Stable dense index of this tag (declaration order, matching
+    /// [`Tag::ALL`]). The simulator's accounting arrays index by this.
+    #[inline]
+    pub const fn index(self) -> usize {
+        self as usize
+    }
+
     pub const ALL: [Tag; 12] = [
         Tag::WeightStream,
         Tag::AttnWeightLoad,
@@ -67,8 +77,54 @@ impl Tag {
     }
 }
 
+/// Dense per-[`Tag`] `f64` accumulator: a fixed-size array indexed by
+/// [`Tag::index`], replacing the `Vec<(Tag, f64)>` find-scans that used to
+/// cost O(|Tag|) per task/query on the simulator hot path.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TagBreakdown {
+    vals: [f64; Tag::COUNT],
+}
+
+impl TagBreakdown {
+    pub const fn zero() -> TagBreakdown {
+        TagBreakdown {
+            vals: [0.0; Tag::COUNT],
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, tag: Tag) -> f64 {
+        self.vals[tag.index()]
+    }
+
+    #[inline]
+    pub fn add(&mut self, tag: Tag, v: f64) {
+        self.vals[tag.index()] += v;
+    }
+
+    /// `self[t] += other[t] / divisor` for every tag (iteration averaging).
+    pub fn accumulate_div(&mut self, other: &TagBreakdown, divisor: f64) {
+        for i in 0..Tag::COUNT {
+            self.vals[i] += other.vals[i] / divisor;
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.vals.iter().sum()
+    }
+
+    /// Iterate `(tag, value)` pairs in [`Tag::ALL`] order.
+    pub fn iter(&self) -> impl Iterator<Item = (Tag, f64)> + '_ {
+        Tag::ALL.iter().map(move |&t| (t, self.vals[t.index()]))
+    }
+
+    pub fn to_vec(&self) -> Vec<(Tag, f64)> {
+        self.iter().collect()
+    }
+}
+
 /// One schedulable unit of work.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TaskSpec {
     /// Sequential resource this task occupies (None = pure dependency node).
     pub resource: Option<ResourceId>,
@@ -87,7 +143,7 @@ pub struct TaskSpec {
 }
 
 /// A full plan: resources + task DAG.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Plan {
     pub resource_names: Vec<String>,
     pub tasks: Vec<TaskSpec>,
@@ -105,7 +161,10 @@ impl Plan {
 
     /// Add a task; returns its id.
     pub fn add_task(&mut self, spec: TaskSpec) -> TaskId {
-        debug_assert!(spec.duration >= 0.0);
+        // reject definitely-negative durations eagerly; NaN/inf flow on to
+        // `validate`, which reports them with task context instead of
+        // panicking mid-build
+        debug_assert!(!(spec.duration < 0.0), "negative task duration");
         self.tasks.push(spec);
         self.tasks.len() - 1
     }
@@ -143,7 +202,21 @@ impl Plan {
                     "task {i}: resource {r} undefined"
                 );
             }
-            anyhow::ensure!(t.duration.is_finite() && t.duration >= 0.0);
+            anyhow::ensure!(
+                t.duration.is_finite() && t.duration >= 0.0,
+                "task {i}: non-finite or negative duration {}",
+                t.duration
+            );
+            anyhow::ensure!(
+                t.bytes.is_finite() && t.bytes >= 0.0,
+                "task {i}: non-finite or negative bytes {}",
+                t.bytes
+            );
+            anyhow::ensure!(
+                t.flops.is_finite() && t.flops >= 0.0,
+                "task {i}: non-finite or negative flops {}",
+                t.flops
+            );
             for &d in &t.deps {
                 anyhow::ensure!(d < self.tasks.len(), "task {i}: dep {d} out of range");
                 anyhow::ensure!(d != i, "task {i}: self-dependency");
@@ -230,6 +303,52 @@ mod tests {
             flops: 0.0,
         });
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_nan_duration() {
+        let mut p = Plan::new();
+        let r = p.add_resource("x");
+        p.add_task(TaskSpec {
+            resource: Some(r),
+            duration: f64::NAN,
+            deps: vec![],
+            priority: 0,
+            tag: Tag::Barrier,
+            bytes: 0.0,
+            flops: 0.0,
+        });
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("duration"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn tag_index_matches_all_order() {
+        assert_eq!(Tag::ALL.len(), Tag::COUNT);
+        for (i, t) in Tag::ALL.iter().enumerate() {
+            assert_eq!(t.index(), i, "Tag::ALL order diverged from index()");
+        }
+    }
+
+    #[test]
+    fn tag_breakdown_accumulates() {
+        let mut b = TagBreakdown::zero();
+        b.add(Tag::MoeCompute, 2.0);
+        b.add(Tag::MoeCompute, 1.0);
+        b.add(Tag::Router, 0.5);
+        assert_eq!(b.get(Tag::MoeCompute), 3.0);
+        assert_eq!(b.get(Tag::WeightStream), 0.0);
+        assert_eq!(b.sum(), 3.5);
+        let mut acc = TagBreakdown::zero();
+        acc.accumulate_div(&b, 2.0);
+        acc.accumulate_div(&b, 2.0);
+        assert_eq!(acc.get(Tag::MoeCompute), 3.0);
+        assert_eq!(acc.to_vec().len(), Tag::COUNT);
+        assert_eq!(
+            b.iter().filter(|(_, v)| *v > 0.0).count(),
+            2,
+            "iter yields only the two touched tags as nonzero"
+        );
     }
 
     #[test]

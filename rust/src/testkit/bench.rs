@@ -15,6 +15,20 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Serialize for machine-readable bench artifacts (`BENCH_*.json`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj([
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::int(self.iters)),
+            ("mean_s", Json::num(self.mean_s)),
+            ("std_s", Json::num(self.std_s)),
+            ("min_s", Json::num(self.min_s)),
+            ("p50_s", Json::num(self.p50_s)),
+            ("p95_s", Json::num(self.p95_s)),
+        ])
+    }
+
     pub fn render(&self) -> String {
         format!(
             "{:<44} iters={:<3} mean={:<12} p50={:<12} p95={:<12} min={}",
@@ -69,5 +83,22 @@ mod tests {
         assert_eq!(r.iters, 3);
         assert!(r.mean_s >= 0.0 && r.min_s <= r.mean_s);
         assert!(r.p50_s <= r.p95_s + 1e-12);
+    }
+
+    #[test]
+    fn json_serialization_carries_fields() {
+        let r = BenchResult {
+            name: "x".to_string(),
+            iters: 2,
+            mean_s: 1.0,
+            std_s: 0.0,
+            min_s: 1.0,
+            p50_s: 1.0,
+            p95_s: 1.0,
+        };
+        let s = r.to_json().render();
+        assert!(s.contains("\"name\":\"x\""));
+        assert!(s.contains("\"iters\":2"));
+        assert!(s.contains("\"mean_s\":1"));
     }
 }

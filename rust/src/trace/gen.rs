@@ -24,7 +24,7 @@ use crate::util::rng::{zipf_weights, AliasTable, Rng};
 use super::RoutingTrace;
 
 /// Generator parameters; tuned per model so the derived C_T statistics land
-/// on the paper's Table 4 anchors (see `report::table4` and EXPERIMENTS.md).
+/// on the paper's Table 4 anchors (see `report::table4`).
 #[derive(Clone, Debug)]
 pub struct TraceParams {
     /// Zipf exponent for expert popularity.
@@ -40,7 +40,7 @@ pub struct TraceParams {
 }
 
 impl TraceParams {
-    /// Defaults tuned against Table 4 (see EXPERIMENTS.md for the fit):
+    /// Defaults tuned against Table 4:
     /// topics partition the expert space into `n_experts / topic_size`
     /// disjoint affinity sets of one expert per stratum; a topical token
     /// takes `in_topic` picks from its set.
@@ -142,7 +142,7 @@ impl TraceGen {
         let mut choices = Vec::with_capacity(n_tokens * k);
         let mut mask = vec![false; self.n_experts];
         // scratch buffers hoisted out of the token loop (this is the hot
-        // path of every simulated experiment — see EXPERIMENTS.md #Perf)
+        // path of every simulated experiment)
         let mut picked: Vec<u32> = Vec::with_capacity(k);
         let max_topic = self.params.topic_size;
         let mut topic_w: Vec<f64> = vec![0.0; max_topic];

@@ -15,8 +15,11 @@
 
 pub mod data;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::ensure;
 
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use crate::util::table::Table;
 
@@ -125,7 +128,19 @@ impl TrainSummary {
     }
 }
 
+/// Stub when built without the `pjrt` feature: real training needs the
+/// PJRT runtime, which needs the `xla` crate (absent from the offline
+/// crate set).
+#[cfg(not(feature = "pjrt"))]
+pub fn run(_cfg: &TrainConfig) -> Result<TrainSummary> {
+    anyhow::bail!(
+        "end-to-end training unavailable: this build has no PJRT runtime. \
+         Add the `xla` dependency and rebuild with `--features pjrt` (see rust/DESIGN.md)."
+    )
+}
+
 /// Run the training loop.
+#[cfg(feature = "pjrt")]
 pub fn run(cfg: &TrainConfig) -> Result<TrainSummary> {
     let meta = ArtifactMeta::load(&cfg.artifacts_dir)?;
     let rt = Runtime::cpu()?;

@@ -1,0 +1,186 @@
+//! Minimal JSON emission (`serde_json` is not in the offline crate set).
+//! Write-only: enough to serialize bench reports like `BENCH_sweep.json`.
+
+use std::fmt::Write as _;
+
+/// A JSON value. Objects preserve insertion order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn num(v: f64) -> Json {
+        Json::Num(v)
+    }
+
+    pub fn int(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+
+    /// Build an object from `(key, value)` pairs.
+    pub fn obj(pairs: impl IntoIterator<Item = (&'static str, Json)>) -> Json {
+        Json::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    /// Append a field to an object; panics on non-objects.
+    pub fn push(&mut self, key: impl Into<String>, value: Json) -> &mut Json {
+        match self {
+            Json::Obj(fields) => fields.push((key.into(), value)),
+            other => panic!("Json::push on non-object {other:?}"),
+        }
+        self
+    }
+
+    /// Render as compact JSON text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
+    /// Render with 2-space indentation (human-readable artifacts).
+    pub fn render_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, true);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize, pretty: bool) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    // f64 Display round-trips; integral values print bare
+                    let _ = write!(out, "{v}");
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                write_seq(out, indent, pretty, '[', ']', items.len(), |out, i, ind| {
+                    items[i].write(out, ind, pretty);
+                });
+            }
+            Json::Obj(fields) => {
+                write_seq(out, indent, pretty, '{', '}', fields.len(), |out, i, ind| {
+                    let (k, v) = &fields[i];
+                    write_escaped(out, k);
+                    out.push(':');
+                    if pretty {
+                        out.push(' ');
+                    }
+                    v.write(out, ind, pretty);
+                });
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn write_seq(
+    out: &mut String,
+    indent: usize,
+    pretty: bool,
+    open: char,
+    close: char,
+    len: usize,
+    mut item: impl FnMut(&mut String, usize, usize),
+) {
+    out.push(open);
+    if len == 0 {
+        out.push(close);
+        return;
+    }
+    for i in 0..len {
+        if i > 0 {
+            out.push(',');
+        }
+        if pretty {
+            out.push('\n');
+            for _ in 0..(indent + 1) * 2 {
+                out.push(' ');
+            }
+        }
+        item(out, i, indent + 1);
+    }
+    if pretty {
+        out.push('\n');
+        for _ in 0..indent * 2 {
+            out.push(' ');
+        }
+    }
+    out.push(close);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_render() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::Bool(true).render(), "true");
+        assert_eq!(Json::int(12).render(), "12");
+        assert_eq!(Json::num(1.5).render(), "1.5");
+        assert_eq!(Json::num(f64::NAN).render(), "null");
+        assert_eq!(Json::str("a\"b\n").render(), "\"a\\\"b\\n\"");
+    }
+
+    #[test]
+    fn nested_object_renders() {
+        let mut o = Json::obj([("name", Json::str("sweep")), ("cells", Json::int(24))]);
+        o.push("grids", Json::Arr(vec![Json::num(0.25), Json::Bool(false)]));
+        assert_eq!(
+            o.render(),
+            r#"{"name":"sweep","cells":24,"grids":[0.25,false]}"#
+        );
+    }
+
+    #[test]
+    fn pretty_rendering_is_indented_and_reparses_shape() {
+        let o = Json::obj([
+            ("a", Json::Arr(vec![Json::int(1), Json::int(2)])),
+            ("b", Json::obj([("c", Json::Null)])),
+        ]);
+        let s = o.render_pretty();
+        assert!(s.contains("\n  \"a\": [\n    1,\n    2\n  ]"));
+        assert!(s.ends_with("}\n"));
+        assert_eq!(Json::Arr(vec![]).render(), "[]");
+        assert_eq!(Json::Obj(vec![]).render(), "{}");
+    }
+}

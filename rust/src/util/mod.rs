@@ -7,6 +7,7 @@
 //! table printer ([`table`]), and a tiny CLI argument parser ([`cli`]).
 
 pub mod cli;
+pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod table;

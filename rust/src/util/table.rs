@@ -1,6 +1,6 @@
 //! ASCII table printer used by all report generators. Produces GitHub-style
 //! markdown tables so the benchmark harness output can be pasted straight
-//! into EXPERIMENTS.md.
+//! into the reports.
 
 /// A simple column-aligned markdown table builder.
 #[derive(Clone, Debug)]

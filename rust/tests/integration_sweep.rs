@@ -1,0 +1,55 @@
+//! Determinism contract of the parallel sweep executor: fanning the grid
+//! out across threads must be invisible in the results. Every cell derives
+//! its randomness from its own config seed, so parallel and sequential
+//! sweeps are bit-identical per cell.
+
+use mozart::coordinator::sweep::{
+    run_cells_seq, run_cells_with, table3_cells, SweepOptions,
+};
+
+#[test]
+fn table3_parallel_matches_sequential_bitwise() {
+    let cells = table3_cells();
+    let seq = run_cells_seq(&cells, 1, 7);
+    let par = run_cells_with(&cells, 1, 7, SweepOptions::default());
+
+    assert_eq!(seq.len(), par.len());
+    for (s, p) in seq.iter().zip(par.iter()) {
+        // same cell in the same output slot
+        assert_eq!(s.cell.model, p.cell.model);
+        assert_eq!(s.cell.method, p.cell.method);
+        assert_eq!(s.cell.seq_len, p.cell.seq_len);
+        assert_eq!(s.cell.dram, p.cell.dram);
+        let label = format!("{:?}/{:?}", s.cell.model, s.cell.method);
+        // bit-identical aggregates (no tolerance)
+        assert_eq!(s.result.latency, p.result.latency, "{label}: latency");
+        assert_eq!(
+            s.result.latency_std, p.result.latency_std,
+            "{label}: latency_std"
+        );
+        assert_eq!(s.result.c_t, p.result.c_t, "{label}: c_t");
+        assert_eq!(s.result.tag_busy, p.result.tag_busy, "{label}: tag_busy");
+        assert_eq!(s.result.critical, p.result.critical, "{label}: critical");
+        assert_eq!(
+            s.result.energy.total_j(),
+            p.result.energy.total_j(),
+            "{label}: energy"
+        );
+        assert_eq!(
+            s.result.moe_utilization, p.result.moe_utilization,
+            "{label}: utilization"
+        );
+    }
+}
+
+#[test]
+fn oversubscribed_pool_is_still_deterministic() {
+    // more workers than cells + a rerun: claim order varies, results don't
+    let cells: Vec<_> = table3_cells().into_iter().take(4).collect();
+    let a = run_cells_with(&cells, 1, 13, SweepOptions { threads: 16 });
+    let b = run_cells_with(&cells, 1, 13, SweepOptions { threads: 2 });
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.result.latency, y.result.latency);
+        assert_eq!(x.result.c_t, y.result.c_t);
+    }
+}

@@ -1,0 +1,237 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build image for this repository has no crates.io registry, so the
+//! workspace vendors the subset of anyhow's API it actually uses: the
+//! [`Error`] type, the [`Result`] alias, the [`Context`] extension trait
+//! (on both `Result` and `Option`), and the `anyhow!` / `bail!` / `ensure!`
+//! macros. The design mirrors the real crate where it matters:
+//!
+//! - `Error` deliberately does **not** implement `std::error::Error`, which
+//!   is what makes the blanket `impl<E: std::error::Error> From<E> for
+//!   Error` coherent (the same trick the real anyhow uses), so `?` converts
+//!   any standard error into an `Error`.
+//! - `Context` is implemented through a local `ext::StdError` trait with
+//!   one blanket impl for standard errors and one concrete impl for
+//!   `Error`, so `.context()` / `.with_context()` chain on both.
+//!
+//! Error messages are flattened eagerly into a single string, with source
+//! chains joined by `: ` — sufficient for a CLI/reporting crate; swap the
+//! real `anyhow` back in `rust/Cargo.toml` when a registry is available.
+
+use std::fmt::{self, Debug, Display};
+
+/// A flattened error message with its context chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: Display>(self, ctx: C) -> Error {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+
+    fn from_std<E: std::error::Error + ?Sized>(e: &E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints errors with `{:?}`;
+        // keep that output human-readable.
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow: because `Error` does not implement `std::error::Error`,
+// this blanket impl cannot overlap the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+/// `anyhow::Result<T>`: `Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::Error;
+    use std::fmt::Display;
+
+    /// Local abstraction over "things an `Error` can absorb with context".
+    pub trait StdError {
+        fn ext_context<C: Display>(self, ctx: C) -> Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> StdError for E {
+        fn ext_context<C: Display>(self, ctx: C) -> Error {
+            Error::from_std(&self).context(ctx)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: Display>(self, ctx: C) -> Error {
+            self.context(ctx)
+        }
+    }
+}
+
+/// Extension trait adding `.context()` / `.with_context()` to `Result` and
+/// `Option`, mirroring `anyhow::Context`.
+pub trait Context<T, E>: Sized {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.ext_context(f())),
+        }
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($($arg)+)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config: missing thing");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing key {}", "k")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key k");
+
+        let some: Option<u32> = Some(3);
+        assert_eq!(some.context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn context_chains_on_anyhow_results() {
+        fn inner() -> Result<()> {
+            bail!("inner failure {}", 7);
+        }
+        let e = inner().context("outer step").unwrap_err();
+        assert_eq!(e.to_string(), "outer step: inner failure 7");
+    }
+
+    #[test]
+    fn ensure_both_arities() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x >= 0);
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1)
+            .unwrap_err()
+            .to_string()
+            .contains("condition failed"));
+        assert_eq!(check(12).unwrap_err().to_string(), "x too big: 12");
+    }
+
+    #[test]
+    fn anyhow_macro_and_debug() {
+        let e = anyhow!("v={}", 2);
+        assert_eq!(format!("{e}"), "v=2");
+        assert_eq!(format!("{e:?}"), "v=2");
+    }
+}
