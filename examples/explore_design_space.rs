@@ -1,0 +1,61 @@
+//! Design-space exploration: sweep hardware variants of the wafer-scale
+//! platform around the paper's Table 2 point, compute the Pareto frontier
+//! over (iteration latency, energy per step, die area), and report where
+//! the paper's configuration lands — the algorithm-hardware co-design loop
+//! the paper motivates, driven programmatically.
+//!
+//! Like every walkthrough in this directory, this is reference code outside
+//! the cargo package (the equivalent CLI run is
+//! `cargo run --release -p mozart -- explore --axes tiles=36:64:100,nop_bw,dram
+//! --budget 12`); copy it into `rust/examples/` to build it as a cargo
+//! example target.
+
+use mozart::config::{DramKind, Method, ModelId};
+use mozart::coordinator::explore::{explore, parse_axes, ExploreConfig};
+
+fn main() {
+    // 1. declare the axes: tile count (compute), NoP link bandwidth
+    //    (interconnect), and DRAM technology (memory) — with explicit
+    //    values for the tiles axis to show the `axis=v1:v2` form.
+    let axes = parse_axes("tiles=36:64:100,nop_bw,dram").expect("axes parse");
+    let cfg = ExploreConfig {
+        axes,
+        budget: 12, // even-stride 12-of-24 subsample of the 3*4*2 grid
+        models: vec![ModelId::OlmoE_1B_7B],
+        methods: vec![Method::MozartC],
+        seq_len: 128,
+        dram: DramKind::Hbm2,
+        iters: 2,
+        seed: 7,
+        threads: 0, // one worker per core
+    };
+
+    // 2. run every (variant x model x method) cell through the same
+    //    work-stealing pool as the paper sweeps
+    let outcome = explore(&cfg);
+
+    // 3. the rendered report: axis summary, frontier table, ASCII scatter,
+    //    and the Q3-style verdict on the paper's Table 2 point
+    println!("{}", outcome.render_markdown());
+
+    // 4. the machine-readable artifact is one call away
+    let json = outcome.to_json().render_pretty();
+    println!("artifact: {} bytes of EXPLORE_*.json, e.g.:", json.len());
+    for line in json.lines().take(12) {
+        println!("  {line}");
+    }
+    println!("  ...");
+
+    // 5. programmatic access: the frontier members and the anchor verdict
+    let f = &outcome.frontiers[0];
+    println!(
+        "\nfrontier: {} of {} points non-dominated; paper anchor {}",
+        f.members.len(),
+        f.points.len(),
+        if f.paper_dominators.is_empty() {
+            "is on the frontier".to_string()
+        } else {
+            format!("is dominated by {} variant(s)", f.paper_dominators.len())
+        }
+    );
+}

@@ -19,11 +19,14 @@ use crate::trace::Priors;
 /// (clusters within a group are mapped to the group's chiplets in order).
 #[derive(Clone, Debug)]
 pub struct Allocation {
+    /// `groups[g]` lists the cluster ids assigned to group `g`.
     pub groups: Vec<Vec<usize>>,
+    /// Total number of clusters assigned.
     pub n_clusters: usize,
 }
 
 impl Allocation {
+    /// Clusters per group (uniform by the Eq. 5 cardinality constraint).
     pub fn clusters_per_group(&self) -> usize {
         self.n_clusters / self.groups.len()
     }
@@ -284,15 +287,20 @@ fn greedy_refined(w: &[f64], n_groups: usize) -> Allocation {
 /// alongside the intermediate structures.
 #[derive(Clone, Debug)]
 pub struct ExpertLayout {
+    /// Stage-1 result: expert clusters (Algorithm 1).
     pub clustering: Clustering,
+    /// Stage-2 result: cluster → group assignment (Eq. 5).
     pub allocation: Allocation,
     /// expert -> chiplet (flat index, group-major).
     pub expert_to_chiplet: Vec<usize>,
+    /// Number of MoE chiplets (one cluster each).
     pub n_chiplets: usize,
+    /// Number of switch groups.
     pub n_groups: usize,
 }
 
 impl ExpertLayout {
+    /// Compose a clustering and an allocation into the expert → chiplet map.
     pub fn new(clustering: Clustering, allocation: Allocation, n_groups: usize) -> ExpertLayout {
         let n_chiplets = clustering.clusters.len();
         let chiplet_of_cluster = allocation.chiplet_of_cluster();
@@ -337,6 +345,8 @@ impl ExpertLayout {
         self.clustering.n_experts / self.n_chiplets
     }
 
+    /// Structural invariants of the composed layout: valid clustering and
+    /// allocation, every expert mapped, uniform experts per chiplet.
     pub fn validate(&self) -> anyhow::Result<()> {
         self.clustering.validate()?;
         self.allocation.validate()?;

@@ -57,35 +57,57 @@ pub fn measured_activity(id: ModelId) -> f64 {
 /// Table 2 row: area + typical power + memory/link parameters.
 #[derive(Clone, Debug)]
 pub struct HwMetrics {
+    /// Model whose platform sizing these metrics describe.
     pub model: ModelId,
+    /// Total wafer area (chiplets + DRAM + switches + packaging), mm².
     pub total_area_mm2: f64,
+    /// Typical power under training, kW.
     pub total_power_kw: f64,
+    /// DRAM capacity per stack, MiB.
     pub dram_cap_mib: f64,
+    /// SRAM capacity per tile, MiB.
     pub sram_per_tile_mib: f64,
+    /// DRAM bandwidth per stack, GB/s.
     pub dram_bw_gbps: f64,
+    /// SRAM bandwidth per tile, GB/s.
     pub sram_bw_gbps: f64,
+    /// 2.5D NoP bandwidth per link, GB/s.
     pub nop_link_bw_gbps: f64,
+    /// 2.5D NoP bump pitch, µm.
     pub nop_pitch_um: f64,
+    /// 3D hybrid-bonding bandwidth per link, GB/s.
     pub hb_link_bw_gbps: f64,
+    /// 3D hybrid-bonding bump pitch, µm.
     pub hb_pitch_um: f64,
+    /// Typical-power decomposition.
     pub power: PowerBreakdown,
+    /// Silicon area of all compute chiplets (pre-packaging), mm².
     pub area_chiplets_mm2: f64,
+    /// Footprint of the DRAM stacks, mm².
     pub area_dram_mm2: f64,
+    /// Area of the NoP switches, mm².
     pub area_switch_mm2: f64,
 }
 
 /// Power decomposition (W).
 #[derive(Clone, Debug)]
 pub struct PowerBreakdown {
+    /// Dynamic power of the PE arrays.
     pub pe_dynamic: f64,
+    /// Dynamic power of the SRAM dies.
     pub sram_dynamic: f64,
+    /// Leakage of all PEs.
     pub leakage: f64,
+    /// DRAM stack power.
     pub dram: f64,
+    /// NoP switch power.
     pub switches: f64,
+    /// NoP signaling power.
     pub nop: f64,
 }
 
 impl PowerBreakdown {
+    /// Sum of all components (W).
     pub fn total(&self) -> f64 {
         self.pe_dynamic + self.sram_dynamic + self.leakage + self.dram + self.switches + self.nop
     }

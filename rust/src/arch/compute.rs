@@ -13,12 +13,16 @@ use crate::util::div_ceil;
 /// Dense matmul shape: `[m x k] . [k x n]`.
 #[derive(Clone, Copy, Debug)]
 pub struct MatmulShape {
+    /// Output rows.
     pub m: u64,
+    /// Reduction depth.
     pub k: u64,
+    /// Output columns.
     pub n: u64,
 }
 
 impl MatmulShape {
+    /// Total FLOPs (one multiply + one add per MAC).
     pub fn flops(&self) -> u64 {
         2 * self.m * self.k * self.n
     }

@@ -13,7 +13,9 @@ use crate::trace::Priors;
 /// `c`; every expert appears in exactly one cluster.
 #[derive(Clone, Debug)]
 pub struct Clustering {
+    /// `clusters[c]` lists the expert ids of cluster `c`.
     pub clusters: Vec<Vec<usize>>,
+    /// Total number of experts partitioned.
     pub n_experts: usize,
 }
 

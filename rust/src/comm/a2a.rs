@@ -23,7 +23,9 @@ pub struct A2aStats {
     pub chiplet_token_slots: Vec<u64>,
     /// Dispatch replicas received by each chiplet (activation transfers in).
     pub chiplet_replicas_in: Vec<u64>,
+    /// Tokens in the evaluated trace.
     pub n_tokens: u64,
+    /// Routing fanout of the evaluated trace.
     pub top_k: usize,
 }
 
@@ -126,6 +128,7 @@ impl A2aVolume {
         }
     }
 
+    /// Dispatch + combine bytes of the phase pair.
     pub fn total_bytes(&self) -> f64 {
         self.dispatch_bytes + self.combine_bytes
     }

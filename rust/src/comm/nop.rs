@@ -26,7 +26,9 @@ pub enum Node {
 /// The NoP-tree topology with per-hop bandwidths.
 #[derive(Clone, Debug)]
 pub struct NopTree {
+    /// Switch nodes (one per MoE group).
     pub n_groups: usize,
+    /// MoE chiplets under each switch.
     pub chiplets_per_group: usize,
     /// Root <-> switch bandwidth (GB/s), one trunk per group.
     pub trunk_bw: f64,
@@ -37,6 +39,7 @@ pub struct NopTree {
 }
 
 impl NopTree {
+    /// Derive the tree topology and effective bandwidths from a platform.
     pub fn from_hw(hw: &HwConfig) -> NopTree {
         NopTree {
             n_groups: hw.n_groups,
@@ -48,10 +51,12 @@ impl NopTree {
         }
     }
 
+    /// Total MoE chiplets (leaves) in the tree.
     pub fn n_chiplets(&self) -> usize {
         self.n_groups * self.chiplets_per_group
     }
 
+    /// Group (switch) index of a flat chiplet index.
     pub fn group_of(&self, chiplet: usize) -> usize {
         chiplet / self.chiplets_per_group
     }

@@ -17,6 +17,7 @@ pub enum DramKind {
 }
 
 impl DramKind {
+    /// Peak bandwidth of one stack/channel in GB/s.
     pub fn bandwidth_gbps(&self) -> f64 {
         match self {
             DramKind::Hbm2 => 256.0,
@@ -24,10 +25,22 @@ impl DramKind {
         }
     }
 
+    /// Display name as used in the paper's figures ("HBM2" / "SSD").
     pub fn name(&self) -> &'static str {
         match self {
             DramKind::Hbm2 => "HBM2",
             DramKind::Ssd => "SSD",
+        }
+    }
+
+    /// Parse a CLI/config spelling (`hbm2`, `hbm`, `ssd`, case-insensitive).
+    /// The single source for every `--dram`-style option and the explorer's
+    /// `dram` axis values.
+    pub fn from_name(s: &str) -> Option<DramKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "hbm2" | "hbm" => Some(DramKind::Hbm2),
+            "ssd" => Some(DramKind::Ssd),
+            _ => None,
         }
     }
 
@@ -101,6 +114,7 @@ impl NopSpec {
 /// Memory hierarchy parameters (Table 2).
 #[derive(Clone, Debug)]
 pub struct MemSpec {
+    /// Off-chip memory technology (HBM2 or the SSD tier of Figure 6(c)).
     pub dram: DramKind,
     /// DRAM capacity per stack, MiB (Table 2: 8192).
     pub dram_cap_mib: f64,
@@ -111,6 +125,7 @@ pub struct MemSpec {
     /// 3D hybrid-bonding bandwidth per link GB/s (Table 2: 0.125) and the
     /// number of vertical links (horizontal x vertical bump array).
     pub hb_link_bw_gbps: f64,
+    /// Vertical hybrid-bonding link count per chiplet stack.
     pub hb_links: usize,
     /// SRAM access energy pJ/B (~0.15 pJ/bit at 28nm).
     pub sram_energy_pj_per_byte: f64,
@@ -189,11 +204,77 @@ pub struct HwConfig {
     pub moe_chiplet: ChipletSpec,
     /// Attention chiplet spec (memory-bound: fewer tiles, more DRAM BW).
     pub attn_chiplet: ChipletSpec,
+    /// 2.5D NoP signaling parameters.
     pub nop: NopSpec,
+    /// Memory-hierarchy parameters (DRAM stacks, 3D hybrid bonding, SRAM).
     pub mem: MemSpec,
     /// Core clock in GHz (paper: 1 GHz).
     pub freq_ghz: f64,
+    /// Calibration knobs of the discrete-event model (fit once, held fixed).
     pub knobs: CalibrationKnobs,
+}
+
+/// One hardware design-space override: a single `HwConfig` field the
+/// explorer (`coordinator::explore`) can vary. Each variant carries the
+/// value to install; [`HwOverride::apply`] mutates a config in place and
+/// [`HwConfig::with_overrides`] builds a derived config from a base point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum HwOverride {
+    /// Tiles on each MoE chiplet's logic die (paper range 36-100).
+    MoeTiles(usize),
+    /// NoP bandwidth per link in GB/s (Table 2 point: 0.125).
+    NopLinkBw(f64),
+    /// Off-chip memory technology.
+    Dram(DramKind),
+    /// DRAM stacks shared by the MoE groups (paper: 4).
+    GroupDramStacks(usize),
+    /// Vertical hybrid-bonding link count (Table 2 point: 102400).
+    HbLinks(usize),
+    /// Core clock in GHz (paper: 1.0).
+    FreqGhz(f64),
+}
+
+impl HwOverride {
+    /// The axis this override belongs to (stable CLI / JSON name).
+    pub fn axis_name(&self) -> &'static str {
+        match self {
+            HwOverride::MoeTiles(_) => "tiles",
+            HwOverride::NopLinkBw(_) => "nop_bw",
+            HwOverride::Dram(_) => "dram",
+            HwOverride::GroupDramStacks(_) => "group_stacks",
+            HwOverride::HbLinks(_) => "hb_links",
+            HwOverride::FreqGhz(_) => "freq",
+        }
+    }
+
+    /// Human/JSON rendering of the override's value.
+    pub fn value_label(&self) -> String {
+        match self {
+            HwOverride::MoeTiles(v) => v.to_string(),
+            HwOverride::NopLinkBw(v) => format!("{v}"),
+            HwOverride::Dram(d) => d.name().to_string(),
+            HwOverride::GroupDramStacks(v) => v.to_string(),
+            HwOverride::HbLinks(v) => v.to_string(),
+            HwOverride::FreqGhz(v) => format!("{v}"),
+        }
+    }
+
+    /// `axis=value` label used in explorer reports.
+    pub fn label(&self) -> String {
+        format!("{}={}", self.axis_name(), self.value_label())
+    }
+
+    /// Install the override into `hw`.
+    pub fn apply(&self, hw: &mut HwConfig) {
+        match *self {
+            HwOverride::MoeTiles(v) => hw.moe_chiplet.tiles = v,
+            HwOverride::NopLinkBw(v) => hw.nop.link_bw_gbps = v,
+            HwOverride::Dram(d) => hw.mem.dram = d,
+            HwOverride::GroupDramStacks(v) => hw.mem.group_dram_stacks = v,
+            HwOverride::HbLinks(v) => hw.mem.hb_links = v,
+            HwOverride::FreqGhz(v) => hw.freq_ghz = v,
+        }
+    }
 }
 
 impl HwConfig {
@@ -254,6 +335,99 @@ impl HwConfig {
             ModelId::TinyMoE => 36,
         };
         hw
+    }
+
+    /// Derive a variant of this platform with a set of design-space
+    /// overrides applied (the explorer's grid-expansion primitive). The
+    /// result is [`HwConfig::validate`]d; invalid combinations are a bug in
+    /// the axis definitions, not a runtime condition, so this panics on
+    /// violation just like the layout invariants in `run_experiment`.
+    pub fn with_overrides(&self, overrides: &[HwOverride]) -> HwConfig {
+        let mut hw = self.clone();
+        for ov in overrides {
+            ov.apply(&mut hw);
+        }
+        hw.validate().expect("hardware variant invariants");
+        hw
+    }
+
+    /// Structural / physical sanity of the platform description: positive
+    /// counts and rates, a group-divisible chiplet count, calibration knobs
+    /// inside their meaningful ranges. Every explorer variant passes through
+    /// this before any simulation spends time on it.
+    pub fn validate(&self) -> Result<(), String> {
+        fn pos(v: f64, what: &str) -> Result<(), String> {
+            if v.is_finite() && v > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("{what} must be finite and > 0, got {v}"))
+            }
+        }
+        if self.n_moe_chiplets == 0 || self.n_groups == 0 {
+            return Err("chiplet/group counts must be > 0".to_string());
+        }
+        if self.n_moe_chiplets % self.n_groups != 0 {
+            return Err(format!(
+                "n_moe_chiplets {} not divisible by n_groups {}",
+                self.n_moe_chiplets, self.n_groups
+            ));
+        }
+        for (c, what) in [(&self.moe_chiplet, "moe"), (&self.attn_chiplet, "attn")] {
+            if c.tiles == 0 || c.sas_per_tile == 0 || c.pes_per_sa == 0 {
+                return Err(format!("{what} chiplet tile/SA/PE counts must be > 0"));
+            }
+            pos(c.sram_per_tile_mib, "sram_per_tile_mib")?;
+            pos(c.sram_bw_gbps, "sram_bw_gbps")?;
+            pos(c.edge_mm, "edge_mm")?;
+        }
+        pos(self.nop.link_bw_gbps, "nop.link_bw_gbps")?;
+        pos(self.nop.pitch_um, "nop.pitch_um")?;
+        if !(self.nop.signal_fraction > 0.0 && self.nop.signal_fraction <= 1.0) {
+            return Err(format!(
+                "nop.signal_fraction must be in (0, 1], got {}",
+                self.nop.signal_fraction
+            ));
+        }
+        if self.nop.links_per_edge(self.moe_chiplet.edge_mm) == 0 {
+            return Err("NoP pitch leaves zero links on a MoE chiplet edge".to_string());
+        }
+        if self.mem.group_dram_stacks == 0 || self.mem.attn_dram_stacks == 0 {
+            return Err("DRAM stack counts must be > 0".to_string());
+        }
+        if self.mem.hb_links == 0 {
+            return Err("hb_links must be > 0".to_string());
+        }
+        pos(self.mem.dram_cap_mib, "dram_cap_mib")?;
+        pos(self.mem.hb_link_bw_gbps, "hb_link_bw_gbps")?;
+        pos(self.freq_ghz, "freq_ghz")?;
+        let k = &self.knobs;
+        for (v, what) in [
+            (k.dram_eff, "dram_eff"),
+            (k.nop_eff, "nop_eff"),
+            (k.mxu_util, "mxu_util"),
+        ] {
+            if !(v.is_finite() && v > 0.0 && v <= 1.0) {
+                return Err(format!("knob {what} must be in (0, 1], got {v}"));
+            }
+        }
+        if !(k.a2a_link_occupancy.is_finite()
+            && (0.0..=1.0).contains(&k.a2a_link_occupancy))
+        {
+            return Err(format!(
+                "knob a2a_link_occupancy must be in [0, 1], got {}",
+                k.a2a_link_occupancy
+            ));
+        }
+        if k.group_concurrency == 0 {
+            return Err("group_concurrency must be > 0".to_string());
+        }
+        if !(k.switch_agg_factor.is_finite() && k.switch_agg_factor >= 1.0) {
+            return Err(format!(
+                "switch_agg_factor must be >= 1, got {}",
+                k.switch_agg_factor
+            ));
+        }
+        Ok(())
     }
 
     /// Chiplets per switch group.
@@ -321,6 +495,15 @@ mod tests {
     }
 
     #[test]
+    fn dram_name_roundtrip() {
+        for d in [DramKind::Hbm2, DramKind::Ssd] {
+            assert_eq!(DramKind::from_name(d.name()), Some(d));
+        }
+        assert_eq!(DramKind::from_name("hbm"), Some(DramKind::Hbm2));
+        assert_eq!(DramKind::from_name("nvram"), None);
+    }
+
+    #[test]
     fn wafer_shape() {
         let hw = HwConfig::mozart_wafer(DramKind::Hbm2);
         assert_eq!(hw.n_moe_chiplets, 16);
@@ -361,5 +544,77 @@ mod tests {
         let hw = HwConfig::mozart_wafer(DramKind::Hbm2);
         let mib = hw.moe_chiplet.sram_bytes() / (1024.0 * 1024.0);
         assert!((mib - 64.0 * 2.265).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_points_validate() {
+        for dram in [DramKind::Hbm2, DramKind::Ssd] {
+            HwConfig::mozart_wafer(dram).validate().unwrap();
+        }
+        for id in crate::config::ModelId::PAPER_MODELS {
+            HwConfig::paper_for_model(id, DramKind::Hbm2).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn overrides_apply_each_field() {
+        let base = HwConfig::mozart_wafer(DramKind::Hbm2);
+        let hw = base.with_overrides(&[
+            HwOverride::MoeTiles(36),
+            HwOverride::NopLinkBw(0.25),
+            HwOverride::Dram(DramKind::Ssd),
+            HwOverride::GroupDramStacks(8),
+            HwOverride::HbLinks(51_200),
+            HwOverride::FreqGhz(1.2),
+        ]);
+        assert_eq!(hw.moe_chiplet.tiles, 36);
+        assert_eq!(hw.nop.link_bw_gbps, 0.25);
+        assert_eq!(hw.mem.dram, DramKind::Ssd);
+        assert_eq!(hw.mem.group_dram_stacks, 8);
+        assert_eq!(hw.mem.hb_links, 51_200);
+        assert_eq!(hw.freq_ghz, 1.2);
+        // base untouched
+        assert_eq!(base.moe_chiplet.tiles, 64);
+        assert_eq!(base.mem.dram, DramKind::Hbm2);
+    }
+
+    #[test]
+    fn override_labels_are_stable() {
+        assert_eq!(HwOverride::MoeTiles(81).label(), "tiles=81");
+        assert_eq!(HwOverride::NopLinkBw(0.125).label(), "nop_bw=0.125");
+        assert_eq!(HwOverride::Dram(DramKind::Ssd).label(), "dram=SSD");
+        assert_eq!(HwOverride::GroupDramStacks(4).label(), "group_stacks=4");
+        assert_eq!(HwOverride::HbLinks(102_400).label(), "hb_links=102400");
+        assert_eq!(HwOverride::FreqGhz(1.0).label(), "freq=1");
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let mut hw = HwConfig::mozart_wafer(DramKind::Hbm2);
+        hw.n_moe_chiplets = 15; // not divisible by 4 groups
+        assert!(hw.validate().is_err());
+
+        let mut hw = HwConfig::mozart_wafer(DramKind::Hbm2);
+        hw.moe_chiplet.tiles = 0;
+        assert!(hw.validate().is_err());
+
+        let mut hw = HwConfig::mozart_wafer(DramKind::Hbm2);
+        hw.nop.link_bw_gbps = f64::NAN;
+        assert!(hw.validate().is_err());
+
+        let mut hw = HwConfig::mozart_wafer(DramKind::Hbm2);
+        hw.freq_ghz = -1.0;
+        assert!(hw.validate().is_err());
+
+        let mut hw = HwConfig::mozart_wafer(DramKind::Hbm2);
+        hw.knobs.mxu_util = 1.5;
+        assert!(hw.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "hardware variant invariants")]
+    fn with_overrides_panics_on_invalid_variant() {
+        let _ = HwConfig::mozart_wafer(DramKind::Hbm2)
+            .with_overrides(&[HwOverride::FreqGhz(0.0)]);
     }
 }

@@ -11,13 +11,18 @@
 /// Named method presets.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Method {
+    /// Standard expert parallelism: no Mozart technique enabled.
     Baseline,
+    /// Baseline + communication-computation overlap (§4.3).
     MozartA,
+    /// Mozart-A + efficient all-to-all (§3.3/§4.2).
     MozartB,
+    /// Mozart-B + specialized expert layout (§4.2) — the full system.
     MozartC,
 }
 
 impl Method {
+    /// All four ablation columns of Table 3, in increasing feature order.
     pub const ALL: [Method; 4] = [
         Method::Baseline,
         Method::MozartA,
@@ -25,6 +30,7 @@ impl Method {
         Method::MozartC,
     ];
 
+    /// Display name as used in the paper's tables.
     pub fn name(&self) -> &'static str {
         match self {
             Method::Baseline => "Baseline",
@@ -34,6 +40,8 @@ impl Method {
         }
     }
 
+    /// Parse a method from its paper name or the CLI shorthand
+    /// (`baseline|a|b|c`, case-insensitive).
     pub fn from_name(s: &str) -> Option<Method> {
         match s.to_ascii_lowercase().as_str() {
             "baseline" => Some(Method::Baseline),
@@ -44,6 +52,7 @@ impl Method {
         }
     }
 
+    /// The feature-toggle configuration of this preset.
     pub fn config(&self) -> MethodConfig {
         match self {
             Method::Baseline => MethodConfig::baseline(),
@@ -57,6 +66,7 @@ impl Method {
 /// Feature toggles for one configuration (paper Table 3 columns).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MethodConfig {
+    /// The preset these toggles came from.
     pub method: Method,
     /// §4.2 stage 1+2: collaboration-aware clustering + balanced allocation.
     pub expert_layout: bool,
@@ -67,6 +77,7 @@ pub struct MethodConfig {
 }
 
 impl MethodConfig {
+    /// Standard expert parallelism (all features off).
     pub fn baseline() -> Self {
         MethodConfig {
             method: Method::Baseline,
@@ -76,6 +87,7 @@ impl MethodConfig {
         }
     }
 
+    /// Overlap only (paper Table 3 column A).
     pub fn mozart_a() -> Self {
         MethodConfig {
             method: Method::MozartA,
@@ -85,6 +97,7 @@ impl MethodConfig {
         }
     }
 
+    /// Overlap + efficient all-to-all (paper Table 3 column B).
     pub fn mozart_b() -> Self {
         MethodConfig {
             method: Method::MozartB,
@@ -94,6 +107,7 @@ impl MethodConfig {
         }
     }
 
+    /// The full system (paper Table 3 column C).
     pub fn mozart_c() -> Self {
         MethodConfig {
             method: Method::MozartC,

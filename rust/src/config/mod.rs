@@ -8,7 +8,9 @@ pub mod method;
 pub mod model;
 pub mod parse;
 
-pub use hw::{CalibrationKnobs, ChipletSpec, DramKind, HwConfig, MemSpec, NopSpec};
+pub use hw::{
+    CalibrationKnobs, ChipletSpec, DramKind, HwConfig, HwOverride, MemSpec, NopSpec,
+};
 pub use method::{Method, MethodConfig};
 pub use model::{ModelConfig, ModelId};
 
@@ -16,8 +18,11 @@ pub use model::{ModelConfig, ModelId};
 /// and the workload parameters the paper sweeps.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
+    /// Model shape under evaluation (paper Table 1 presets).
     pub model: ModelConfig,
+    /// Hardware platform description (paper Table 2 / §5.2).
     pub hw: HwConfig,
+    /// Optimization-method feature toggles (paper Table 3 columns).
     pub method: MethodConfig,
     /// Sequence length per sample (paper sweeps 128/256/512).
     pub seq_len: usize,

@@ -10,20 +10,25 @@
 /// real end-to-end training example.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ModelId {
+    /// Qwen3-30B-A3B: 128 experts, top-8, 48 layers.
     Qwen3_30B_A3B,
+    /// OLMoE-1B-7B-0924: 64 experts, top-8, 16 layers.
     OlmoE_1B_7B,
+    /// deepseek-moe-16b-base: 64 routed + 2 shared experts, top-6.
     DeepSeekMoE_16B,
     /// Tiny model actually trained end-to-end through the PJRT runtime.
     TinyMoE,
 }
 
 impl ModelId {
+    /// The three evaluation models of the paper (Table 1 order).
     pub const PAPER_MODELS: [ModelId; 3] = [
         ModelId::Qwen3_30B_A3B,
         ModelId::OlmoE_1B_7B,
         ModelId::DeepSeekMoE_16B,
     ];
 
+    /// Published model name as used in the paper's tables.
     pub fn name(&self) -> &'static str {
         match self {
             ModelId::Qwen3_30B_A3B => "Qwen3-30B-A3B",
@@ -33,6 +38,8 @@ impl ModelId {
         }
     }
 
+    /// Fuzzy name lookup (`qwen3`, `olmoe`, `deepseek`, `tiny`,
+    /// case-insensitive substring match).
     pub fn from_name(s: &str) -> Option<ModelId> {
         let t = s.to_ascii_lowercase();
         if t.contains("qwen") {
@@ -52,16 +59,23 @@ impl ModelId {
 /// Decoder-only MoE transformer shape.
 #[derive(Clone, Debug)]
 pub struct ModelConfig {
+    /// Preset identity.
     pub id: ModelId,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Hidden (model) dimension.
     pub hidden: usize,
+    /// Total decoder layers.
     pub n_layers: usize,
     /// Layers that use a dense FFN instead of MoE (DeepSeek-MoE layer 0).
     pub n_dense_layers: usize,
     /// Dense-FFN intermediate size (only for the dense layers).
     pub dense_intermediate: usize,
+    /// Attention query heads.
     pub n_heads: usize,
+    /// Attention key/value heads (GQA when < `n_heads`).
     pub n_kv_heads: usize,
+    /// Dimension per attention head.
     pub head_dim: usize,
     /// Routed experts per MoE layer.
     pub n_experts: usize,
@@ -76,6 +90,7 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
+    /// The published architecture of `id` (reproduces Table 1).
     pub fn preset(id: ModelId) -> ModelConfig {
         match id {
             ModelId::Qwen3_30B_A3B => ModelConfig {

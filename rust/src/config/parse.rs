@@ -10,10 +10,12 @@ use std::collections::BTreeMap;
 /// Flat parsed config: `section.key -> raw string value`.
 #[derive(Clone, Debug, Default)]
 pub struct KvConfig {
+    /// Parsed entries, keyed `section.key` (or bare `key` outside sections).
     pub entries: BTreeMap<String, String>,
 }
 
 impl KvConfig {
+    /// Parse config text (`[section]` headers, `key = value`, `#` comments).
     pub fn parse(text: &str) -> Result<KvConfig> {
         let mut out = KvConfig::default();
         let mut section = String::new();
@@ -52,16 +54,19 @@ impl KvConfig {
         Ok(out)
     }
 
+    /// Read and parse a config file.
     pub fn load(path: &str) -> Result<KvConfig> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config file {path}"))?;
         KvConfig::parse(&text)
     }
 
+    /// Raw string value of `key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.entries.get(key).map(|s| s.as_str())
     }
 
+    /// Float value of `key`, or `default` when absent.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -71,6 +76,7 @@ impl KvConfig {
         }
     }
 
+    /// Integer value of `key`, or `default` when absent.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -80,6 +86,7 @@ impl KvConfig {
         }
     }
 
+    /// Boolean value of `key` (`true`/`false`), or `default` when absent.
     pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
         match self.get(key) {
             None => Ok(default),

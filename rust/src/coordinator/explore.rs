@@ -1,0 +1,744 @@
+//! Hardware design-space exploration (`mozart explore`) — the co-design
+//! loop the paper motivates but fixes at one platform point.
+//!
+//! `HwConfig` is fully parameterized (tiles per chiplet, NoP link bandwidth,
+//! DRAM technology and stack counts, hybrid-bonding links, clock), yet the
+//! report generators only evaluate the paper's Table 2 configurations. The
+//! explorer turns the simulator into a search tool: a declarative [`Axis`]
+//! grid is expanded into hardware variants (each validated by
+//! `HwConfig::validate`), every (variant × model × method) cell runs through
+//! the same work-stealing pool as the paper sweeps ([`parallel_map`]), and
+//! the results are reduced to the Pareto frontier over three minimized
+//! objectives:
+//!
+//! - **iteration time** (s/step, from the discrete-event simulator),
+//! - **energy per iteration** (J/step, from `metrics::energy`),
+//! - **die area** (mm², from the `arch::area` 28nm analytic model).
+//!
+//! The paper's own configuration is always evaluated as variant 0 ("paper
+//! (Table 2)"), so every report states where Table 2 lands relative to the
+//! discovered frontier. Determinism mirrors the sweep executor: each cell
+//! derives all randomness from its own config, so results are bit-identical
+//! between sequential and parallel execution (asserted in
+//! `tests/integration_explore.rs`).
+
+use crate::arch::area::hw_metrics;
+use crate::config::{
+    DramKind, ExperimentConfig, HwConfig, HwOverride, Method, ModelConfig, ModelId,
+};
+use crate::coordinator::sweep::{parallel_map, SweepOptions};
+use crate::coordinator::run_experiment;
+use crate::metrics::pareto;
+use crate::util::json::Json;
+use crate::util::table::{scatter_plot, Table};
+
+/// One exploration axis: a named design dimension and its candidate values.
+#[derive(Clone, Debug)]
+pub struct Axis {
+    /// Stable axis name (one of [`Axis::KNOWN`]).
+    pub name: String,
+    /// Candidate overrides along this axis, in evaluation order.
+    pub values: Vec<HwOverride>,
+}
+
+impl Axis {
+    /// Axis names `parse_axes` accepts.
+    pub const KNOWN: [&str; 6] =
+        ["tiles", "nop_bw", "dram", "group_stacks", "hb_links", "freq"];
+
+    /// A known axis with its default candidate values, spanning the design
+    /// ranges the paper discusses (tiles 36-100, Table 2's NoP/HB points
+    /// bracketed by a half and a 2-4x step, HBM2 vs SSD, 0.8-1.2 GHz).
+    pub fn by_name(name: &str) -> Option<Axis> {
+        let values: Vec<HwOverride> = match name {
+            "tiles" => [36usize, 49, 64, 81, 100]
+                .iter()
+                .map(|&t| HwOverride::MoeTiles(t))
+                .collect(),
+            "nop_bw" => [0.0625f64, 0.125, 0.25, 0.5]
+                .iter()
+                .map(|&b| HwOverride::NopLinkBw(b))
+                .collect(),
+            "dram" => vec![
+                HwOverride::Dram(DramKind::Hbm2),
+                HwOverride::Dram(DramKind::Ssd),
+            ],
+            "group_stacks" => [2usize, 4, 8]
+                .iter()
+                .map(|&s| HwOverride::GroupDramStacks(s))
+                .collect(),
+            "hb_links" => [51_200usize, 102_400, 204_800]
+                .iter()
+                .map(|&h| HwOverride::HbLinks(h))
+                .collect(),
+            "freq" => [0.8f64, 1.0, 1.2]
+                .iter()
+                .map(|&f| HwOverride::FreqGhz(f))
+                .collect(),
+            _ => return None,
+        };
+        Some(Axis {
+            name: name.to_string(),
+            values,
+        })
+    }
+}
+
+/// Parse one axis value (`tiles` -> integer, `dram` -> `hbm2|ssd`, ...).
+/// Values are range-checked here so a bad `--axes` spec is a parse error,
+/// not a `HwConfig::validate` panic inside a worker thread.
+fn parse_value(axis: &str, s: &str) -> Result<HwOverride, String> {
+    let bad = |what: &str| format!("axis `{axis}`: invalid {what} value `{s}`");
+    let uint = |what: &'static str| -> Result<usize, String> {
+        match s.parse::<usize>() {
+            Ok(v) if v > 0 => Ok(v),
+            _ => Err(bad(what)),
+        }
+    };
+    let rate = |what: &'static str| -> Result<f64, String> {
+        match s.parse::<f64>() {
+            Ok(v) if v.is_finite() && v > 0.0 => Ok(v),
+            _ => Err(bad(what)),
+        }
+    };
+    match axis {
+        "tiles" => uint("positive integer").map(HwOverride::MoeTiles),
+        "nop_bw" => rate("positive number").map(HwOverride::NopLinkBw),
+        "dram" => DramKind::from_name(s)
+            .map(HwOverride::Dram)
+            .ok_or_else(|| bad("dram kind (hbm2|ssd)")),
+        "group_stacks" => uint("positive integer").map(HwOverride::GroupDramStacks),
+        "hb_links" => uint("positive integer").map(HwOverride::HbLinks),
+        "freq" => rate("positive number").map(HwOverride::FreqGhz),
+        _ => Err(format!("unknown axis `{axis}`")),
+    }
+}
+
+/// Parse a `--axes` specification: a comma-separated list of axis names,
+/// each optionally carrying explicit values after `=`, colon-separated
+/// (e.g. `tiles,nop_bw,dram` or `tiles=36:64:100,dram=ssd`). Unlisted
+/// axes stay at the base platform's value.
+pub fn parse_axes(spec: &str) -> Result<Vec<Axis>, String> {
+    let mut out: Vec<Axis> = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, values) = match part.split_once('=') {
+            None => (part, None),
+            Some((n, v)) => (n.trim(), Some(v)),
+        };
+        let mut axis = Axis::by_name(name).ok_or_else(|| {
+            format!("unknown axis `{name}` (known: {})", Axis::KNOWN.join(", "))
+        })?;
+        if let Some(vals) = values {
+            axis.values = vals
+                .split(':')
+                .map(|s| parse_value(name, s.trim()))
+                .collect::<Result<Vec<_>, String>>()?;
+            if axis.values.is_empty() {
+                return Err(format!("axis `{name}` has no values"));
+            }
+        }
+        if out.iter().any(|a| a.name == axis.name) {
+            return Err(format!("duplicate axis `{}`", axis.name));
+        }
+        out.push(axis);
+    }
+    if out.is_empty() {
+        return Err("no axes given".to_string());
+    }
+    Ok(out)
+}
+
+/// Expand the axis grid into the cartesian product of override combinations
+/// (first axis fastest-varying). When `budget > 0` caps the grid below its
+/// full size, an even-stride deterministic subsample keeps coverage spread
+/// across the whole product instead of truncating to a corner.
+pub fn expand_grid(axes: &[Axis], budget: usize) -> Vec<Vec<HwOverride>> {
+    let total: usize = axes.iter().map(|a| a.values.len()).product();
+    // mixed-radix decode of one combination index (first axis = least
+    // significant digit), so the budgeted case never materializes the
+    // full product
+    let combo_at = |mut idx: usize| -> Vec<HwOverride> {
+        let mut combo = Vec::with_capacity(axes.len());
+        for a in axes {
+            combo.push(a.values[idx % a.values.len()]);
+            idx /= a.values.len();
+        }
+        combo
+    };
+    if budget > 0 && total > budget {
+        (0..budget).map(|i| combo_at(i * total / budget)).collect()
+    } else {
+        (0..total).map(combo_at).collect()
+    }
+}
+
+/// Full specification of one exploration run.
+#[derive(Clone, Debug)]
+pub struct ExploreConfig {
+    /// The design axes to sweep.
+    pub axes: Vec<Axis>,
+    /// Maximum number of grid variants to evaluate (0 = the full product);
+    /// the paper anchor is always evaluated on top of the budget.
+    pub budget: usize,
+    /// Models to evaluate each variant on.
+    pub models: Vec<ModelId>,
+    /// Optimization methods to evaluate each variant with.
+    pub methods: Vec<Method>,
+    /// Sequence length per sample.
+    pub seq_len: usize,
+    /// Base DRAM technology (overridden by a `dram` axis value, if present).
+    pub dram: DramKind,
+    /// Simulated training iterations to average per cell.
+    pub iters: usize,
+    /// RNG seed shared by all cells (each cell forks from its own config).
+    pub seed: u64,
+    /// Worker threads; 0 = one per available core, 1 = sequential.
+    pub threads: usize,
+}
+
+impl ExploreConfig {
+    /// The default exploration: tiles × NoP bandwidth × DRAM kind around the
+    /// paper's Qwen3 / Mozart-C operating point, full grid within a
+    /// 64-variant budget.
+    pub fn paper_default() -> ExploreConfig {
+        let axes = parse_axes("tiles,nop_bw,dram").expect("default axes parse");
+        ExploreConfig {
+            axes,
+            budget: 64,
+            models: vec![ModelId::Qwen3_30B_A3B],
+            methods: vec![Method::MozartC],
+            seq_len: 256,
+            dram: DramKind::Hbm2,
+            iters: 2,
+            seed: 7,
+            threads: 0,
+        }
+    }
+}
+
+/// One hardware variant of the exploration grid.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    /// Overrides applied on top of the per-model paper platform; empty for
+    /// the paper anchor (variant 0).
+    pub overrides: Vec<HwOverride>,
+    /// Display label (`"paper (Table 2)"` or `"tiles=36 dram=SSD"` style).
+    pub label: String,
+}
+
+/// One evaluated (variant × model × method) cell with its objectives.
+#[derive(Clone, Debug)]
+pub struct ExplorePoint {
+    /// Index into [`ExploreOutcome::variants`].
+    pub variant: usize,
+    /// Model this cell simulated.
+    pub model: ModelId,
+    /// Method this cell simulated.
+    pub method: Method,
+    /// Mean end-to-end latency per training step (seconds) — minimized.
+    pub latency_s: f64,
+    /// Mean energy per training step (Joules) — minimized.
+    pub energy_j: f64,
+    /// Total platform die area (mm², `arch::area` model) — minimized.
+    pub area_mm2: f64,
+    /// Typical platform power (kW, `arch::area` model) — reported only.
+    pub power_kw: f64,
+    /// Mean all-to-all replication factor — reported only.
+    pub c_t: f64,
+}
+
+impl ExplorePoint {
+    /// The minimized objective vector (latency, energy, area) fed to the
+    /// Pareto analysis.
+    pub fn objectives(&self) -> Vec<f64> {
+        vec![self.latency_s, self.energy_j, self.area_mm2]
+    }
+}
+
+/// Pareto analysis of one (model, method) slice of the evaluated points.
+#[derive(Clone, Debug)]
+pub struct Frontier {
+    /// Model of this slice.
+    pub model: ModelId,
+    /// Method of this slice.
+    pub method: Method,
+    /// All point indices (into [`ExploreOutcome::points`]) of the slice.
+    pub points: Vec<usize>,
+    /// Non-dominated point indices (subset of `points`).
+    pub members: Vec<usize>,
+    /// Index of the paper-anchor point (variant 0) in this slice.
+    pub paper_point: usize,
+    /// Point indices dominating the paper anchor; empty iff the paper's
+    /// Table 2 configuration is itself on the frontier.
+    pub paper_dominators: Vec<usize>,
+}
+
+/// Everything one exploration run produced.
+#[derive(Clone, Debug)]
+pub struct ExploreOutcome {
+    /// The configuration the run used.
+    pub cfg: ExploreConfig,
+    /// Evaluated hardware variants (variant 0 is the paper anchor).
+    pub variants: Vec<Variant>,
+    /// Every evaluated (variant × model × method) cell.
+    pub points: Vec<ExplorePoint>,
+    /// One Pareto analysis per (model, method) pair.
+    pub frontiers: Vec<Frontier>,
+}
+
+/// True iff every override in `combo` is a no-op against `base` — i.e. the
+/// combo re-describes the paper anchor. Such grid points are skipped so the
+/// anchor is never simulated (and reported) twice.
+fn is_anchor_combo(combo: &[HwOverride], base: &HwConfig) -> bool {
+    combo.iter().all(|ov| match *ov {
+        HwOverride::MoeTiles(v) => v == base.moe_chiplet.tiles,
+        HwOverride::NopLinkBw(v) => v == base.nop.link_bw_gbps,
+        HwOverride::Dram(d) => d == base.mem.dram,
+        HwOverride::GroupDramStacks(v) => v == base.mem.group_dram_stacks,
+        HwOverride::HbLinks(v) => v == base.mem.hb_links,
+        HwOverride::FreqGhz(v) => v == base.freq_ghz,
+    })
+}
+
+/// Evaluate one cell: simulate the variant's platform and attach the area
+/// model's objectives.
+fn eval_point(
+    cfg: &ExploreConfig,
+    variant: &Variant,
+    vi: usize,
+    model: ModelId,
+    method: Method,
+) -> ExplorePoint {
+    let model_cfg = ModelConfig::preset(model);
+    let mut ec = ExperimentConfig::paper_default(model_cfg, method.config());
+    ec.hw = HwConfig::paper_for_model(model, cfg.dram).with_overrides(&variant.overrides);
+    ec.seq_len = cfg.seq_len;
+    ec.iters = cfg.iters;
+    ec.seed = cfg.seed;
+    let r = run_experiment(&ec);
+    let m = hw_metrics(&ec.model, &ec.hw);
+    ExplorePoint {
+        variant: vi,
+        model,
+        method,
+        latency_s: r.latency,
+        energy_j: r.energy.total_j(),
+        area_mm2: m.total_area_mm2,
+        power_kw: m.total_power_kw,
+        c_t: r.c_t,
+    }
+}
+
+/// Run the exploration: expand the grid, evaluate every cell across the
+/// work-stealing pool, and compute the Pareto frontiers. Deterministic for a
+/// fixed config regardless of `threads`.
+pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
+    let mut variants = vec![Variant {
+        overrides: Vec::new(),
+        label: "paper (Table 2)".to_string(),
+    }];
+    // per-model base platforms, for anchor-duplicate elimination (a combo
+    // that is a no-op for EVERY evaluated model re-describes variant 0)
+    let bases: Vec<HwConfig> = cfg
+        .models
+        .iter()
+        .map(|&m| HwConfig::paper_for_model(m, cfg.dram))
+        .collect();
+    for combo in expand_grid(&cfg.axes, cfg.budget) {
+        if bases.iter().all(|b| is_anchor_combo(&combo, b)) {
+            continue;
+        }
+        let label = combo
+            .iter()
+            .map(|o| o.label())
+            .collect::<Vec<_>>()
+            .join(" ");
+        variants.push(Variant {
+            overrides: combo,
+            label,
+        });
+    }
+
+    let mut specs: Vec<(usize, ModelId, Method)> = Vec::new();
+    for vi in 0..variants.len() {
+        for (mi, &model) in cfg.models.iter().enumerate() {
+            // in a multi-model explore a combo may survive the global skip
+            // above yet still equal THIS model's anchor — drop that cell
+            // rather than simulate variant 0 twice in one slice
+            if vi != 0 && is_anchor_combo(&variants[vi].overrides, &bases[mi]) {
+                continue;
+            }
+            for &method in &cfg.methods {
+                specs.push((vi, model, method));
+            }
+        }
+    }
+    let threads = SweepOptions {
+        threads: cfg.threads,
+    }
+    .effective_threads(specs.len());
+    let points = parallel_map(&specs, threads, |&(vi, model, method)| {
+        eval_point(cfg, &variants[vi], vi, model, method)
+    });
+
+    let mut frontiers = Vec::new();
+    for &model in &cfg.models {
+        for &method in &cfg.methods {
+            let idxs: Vec<usize> = points
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.model == model && p.method == method)
+                .map(|(i, _)| i)
+                .collect();
+            let objs: Vec<Vec<f64>> = idxs.iter().map(|&i| points[i].objectives()).collect();
+            let members: Vec<usize> = pareto::pareto_frontier(&objs)
+                .into_iter()
+                .map(|k| idxs[k])
+                .collect();
+            let paper_point = idxs
+                .iter()
+                .copied()
+                .find(|&i| points[i].variant == 0)
+                .expect("paper anchor is always evaluated");
+            let paper_obj = points[paper_point].objectives();
+            let paper_dominators: Vec<usize> = pareto::dominators(&paper_obj, &objs)
+                .into_iter()
+                .map(|k| idxs[k])
+                .collect();
+            frontiers.push(Frontier {
+                model,
+                method,
+                points: idxs,
+                members,
+                paper_point,
+                paper_dominators,
+            });
+        }
+    }
+
+    ExploreOutcome {
+        cfg: cfg.clone(),
+        variants,
+        points,
+        frontiers,
+    }
+}
+
+impl ExploreOutcome {
+    /// Rendered markdown report: axis summary, one frontier table + ASCII
+    /// latency/energy scatter per (model, method), and the Q3-style verdict
+    /// on where the paper's Table 2 configuration lands.
+    pub fn render_markdown(&self) -> String {
+        let mut t = Table::new("Design-space axes", &["Axis", "Values"]);
+        for a in &self.cfg.axes {
+            t.row(&[
+                a.name.clone(),
+                a.values
+                    .iter()
+                    .map(|v| v.value_label())
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "({} variants incl. the paper anchor; {} cells; budget {})\n\n",
+            self.variants.len(),
+            self.points.len(),
+            self.cfg.budget
+        ));
+        for f in &self.frontiers {
+            out.push_str(&self.render_frontier(f));
+            out.push('\n');
+        }
+        out
+    }
+
+    fn render_frontier(&self, f: &Frontier) -> String {
+        let title = format!(
+            "Pareto frontier — {} / {} ({} of {} points non-dominated)",
+            f.model.name(),
+            f.method.name(),
+            f.members.len(),
+            f.points.len()
+        );
+        let mut t = Table::new(
+            &title,
+            &["Variant", "Latency (s)", "Energy (J/step)", "Area (mm^2)", "C_T"],
+        );
+        let mut members = f.members.clone();
+        members.sort_by(|&a, &b| self.points[a].latency_s.total_cmp(&self.points[b].latency_s));
+        for &i in &members {
+            let p = &self.points[i];
+            t.row(&[
+                self.variants[p.variant].label.clone(),
+                format!("{:.4}", p.latency_s),
+                format!("{:.1}", p.energy_j),
+                format!("{:.0}", p.area_mm2),
+                format!("{:.2}", p.c_t),
+            ]);
+        }
+        let mut s = t.render();
+
+        // scatter: all points '.', frontier '*', paper anchor 'P' (drawn
+        // last so it wins overlaps)
+        let mut pts: Vec<(f64, f64, char)> = Vec::new();
+        for &i in &f.points {
+            if !f.members.contains(&i) {
+                pts.push((self.points[i].latency_s, self.points[i].energy_j, '.'));
+            }
+        }
+        for &i in &f.members {
+            pts.push((self.points[i].latency_s, self.points[i].energy_j, '*'));
+        }
+        let anchor = &self.points[f.paper_point];
+        pts.push((anchor.latency_s, anchor.energy_j, 'P'));
+        s.push('\n');
+        s.push_str(&scatter_plot(
+            "latency vs energy ('*' frontier, '.' dominated, 'P' paper)",
+            "latency (s)",
+            "energy (J/step)",
+            &pts,
+        ));
+
+        if f.paper_dominators.is_empty() {
+            s.push_str(
+                "=> the paper's Table 2 configuration is ON the discovered frontier \
+                 (no explored variant dominates it).\n",
+            );
+        } else {
+            let best = f
+                .paper_dominators
+                .iter()
+                .copied()
+                .min_by(|&a, &b| self.points[a].latency_s.total_cmp(&self.points[b].latency_s))
+                .expect("non-empty dominator set");
+            let p = &self.points[best];
+            s.push_str(&format!(
+                "=> the paper's Table 2 configuration is dominated by {} explored \
+                 variant(s); e.g. `{}`: {:+.1}% latency, {:+.1}% energy, {:+.1}% area \
+                 relative to paper.\n",
+                f.paper_dominators.len(),
+                self.variants[p.variant].label,
+                (p.latency_s / anchor.latency_s - 1.0) * 100.0,
+                (p.energy_j / anchor.energy_j - 1.0) * 100.0,
+                (p.area_mm2 / anchor.area_mm2 - 1.0) * 100.0,
+            ));
+        }
+        s
+    }
+
+    /// Machine-readable artifact (`EXPLORE_*.json`).
+    pub fn to_json(&self) -> Json {
+        let axes = Json::Arr(
+            self.cfg
+                .axes
+                .iter()
+                .map(|a| {
+                    Json::obj([
+                        ("name", Json::str(a.name.clone())),
+                        (
+                            "values",
+                            Json::Arr(
+                                a.values.iter().map(|v| Json::str(v.value_label())).collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let variants = Json::Arr(
+            self.variants
+                .iter()
+                .map(|v| {
+                    Json::obj([
+                        ("label", Json::str(v.label.clone())),
+                        (
+                            "overrides",
+                            Json::Obj(
+                                v.overrides
+                                    .iter()
+                                    .map(|o| {
+                                        (o.axis_name().to_string(), Json::str(o.value_label()))
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let mut on_frontier = vec![false; self.points.len()];
+        for f in &self.frontiers {
+            for &m in &f.members {
+                on_frontier[m] = true;
+            }
+        }
+        let points = Json::Arr(
+            self.points
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    Json::obj([
+                        ("variant", Json::int(p.variant)),
+                        ("model", Json::str(p.model.name())),
+                        ("method", Json::str(p.method.name())),
+                        ("latency_s", Json::num(p.latency_s)),
+                        ("energy_j_per_step", Json::num(p.energy_j)),
+                        ("area_mm2", Json::num(p.area_mm2)),
+                        ("power_kw", Json::num(p.power_kw)),
+                        ("c_t", Json::num(p.c_t)),
+                        ("on_frontier", Json::Bool(on_frontier[i])),
+                    ])
+                })
+                .collect(),
+        );
+        let frontiers = Json::Arr(
+            self.frontiers
+                .iter()
+                .map(|f| {
+                    Json::obj([
+                        ("model", Json::str(f.model.name())),
+                        ("method", Json::str(f.method.name())),
+                        (
+                            "members",
+                            Json::Arr(f.members.iter().map(|&m| Json::int(m)).collect()),
+                        ),
+                        ("paper_point", Json::int(f.paper_point)),
+                        ("paper_on_frontier", Json::Bool(f.paper_dominators.is_empty())),
+                        (
+                            "paper_dominators",
+                            Json::Arr(
+                                f.paper_dominators.iter().map(|&m| Json::int(m)).collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj([
+            ("explore", Json::str("design_space")),
+            ("axes", axes),
+            ("budget", Json::int(self.cfg.budget)),
+            ("seq_len", Json::int(self.cfg.seq_len)),
+            ("iters", Json::int(self.cfg.iters)),
+            // string, not number: JSON numbers are f64 and would corrupt
+            // u64 seeds above 2^53 (same policy as BENCH_sweep.json)
+            ("seed", Json::str(self.cfg.seed.to_string())),
+            ("base_dram", Json::str(self.cfg.dram.name())),
+            ("objectives", Json::Arr(vec![
+                Json::str("latency_s"),
+                Json::str("energy_j_per_step"),
+                Json::str("area_mm2"),
+            ])),
+            ("variants", variants),
+            ("points", points),
+            ("frontiers", frontiers),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_axes_resolve_with_defaults() {
+        for name in Axis::KNOWN {
+            let a = Axis::by_name(name).unwrap();
+            assert_eq!(a.name, name);
+            assert!(!a.values.is_empty());
+            for v in &a.values {
+                assert_eq!(v.axis_name(), name);
+            }
+        }
+        assert!(Axis::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn parse_axes_defaults_and_explicit_values() {
+        let axes = parse_axes("tiles,nop_bw,dram").unwrap();
+        assert_eq!(axes.len(), 3);
+        assert_eq!(axes[0].values.len(), 5);
+
+        let axes = parse_axes("tiles=36:100, dram=ssd").unwrap();
+        assert_eq!(
+            axes[0].values,
+            vec![HwOverride::MoeTiles(36), HwOverride::MoeTiles(100)]
+        );
+        assert_eq!(axes[1].values, vec![HwOverride::Dram(DramKind::Ssd)]);
+
+        assert!(parse_axes("bogus").is_err());
+        assert!(parse_axes("tiles,tiles").is_err());
+        assert!(parse_axes("tiles=abc").is_err());
+        assert!(parse_axes("").is_err());
+        // range checks happen at parse time, not as worker-thread panics
+        assert!(parse_axes("tiles=0").is_err());
+        assert!(parse_axes("freq=0").is_err());
+        assert!(parse_axes("nop_bw=-1").is_err());
+        assert!(parse_axes("nop_bw=nan").is_err());
+        assert!(parse_axes("group_stacks=0").is_err());
+    }
+
+    #[test]
+    fn grid_expansion_is_the_cartesian_product() {
+        let axes = parse_axes("tiles=36:64,dram").unwrap();
+        let grid = expand_grid(&axes, 0);
+        assert_eq!(grid.len(), 4);
+        // first axis fastest-varying
+        assert_eq!(grid[0], vec![
+            HwOverride::MoeTiles(36),
+            HwOverride::Dram(DramKind::Hbm2)
+        ]);
+        assert_eq!(grid[1][0], HwOverride::MoeTiles(64));
+        assert_eq!(grid[3], vec![
+            HwOverride::MoeTiles(64),
+            HwOverride::Dram(DramKind::Ssd)
+        ]);
+    }
+
+    #[test]
+    fn anchor_duplicate_combos_are_detected() {
+        let base = HwConfig::paper_for_model(ModelId::Qwen3_30B_A3B, DramKind::Hbm2);
+        // the default qwen3 grid contains the exact Table 2 point
+        assert!(is_anchor_combo(
+            &[
+                HwOverride::MoeTiles(81),
+                HwOverride::NopLinkBw(0.125),
+                HwOverride::Dram(DramKind::Hbm2),
+            ],
+            &base
+        ));
+        assert!(!is_anchor_combo(&[HwOverride::MoeTiles(36)], &base));
+        assert!(!is_anchor_combo(
+            &[HwOverride::MoeTiles(81), HwOverride::Dram(DramKind::Ssd)],
+            &base
+        ));
+        // the empty combo is definitionally the anchor
+        assert!(is_anchor_combo(&[], &base));
+    }
+
+    #[test]
+    fn budget_subsamples_evenly_and_deterministically() {
+        let axes = parse_axes("tiles,nop_bw,dram").unwrap(); // 5*4*2 = 40
+        let full = expand_grid(&axes, 0);
+        assert_eq!(full.len(), 40);
+        let capped = expand_grid(&axes, 12);
+        assert_eq!(capped.len(), 12);
+        // strictly increasing stride picks -> no duplicates, stable order
+        let again = expand_grid(&axes, 12);
+        for (a, b) in capped.iter().zip(again.iter()) {
+            assert_eq!(a, b);
+        }
+        // every pick is a member of the full grid
+        for combo in &capped {
+            assert!(full.contains(combo));
+        }
+        // budget >= grid size leaves the grid untouched
+        assert_eq!(expand_grid(&axes, 100).len(), 40);
+    }
+}

@@ -8,6 +8,7 @@
 //! all-to-all, §4.3 fine-grained scheduling) over the architecture model
 //! (§4.4) into end-to-end numbers.
 
+pub mod explore;
 pub mod sweep;
 
 use crate::allocation::ExpertLayout;
@@ -24,6 +25,7 @@ use crate::util::stats;
 pub struct ExperimentResult {
     /// Mean end-to-end latency per training step (seconds).
     pub latency: f64,
+    /// Standard deviation of the per-step latency across iterations.
     pub latency_std: f64,
     /// Mean all-to-all replication factor C_T (Table 4 metric).
     pub c_t: f64,
@@ -37,14 +39,17 @@ pub struct ExperimentResult {
     pub group_imbalance: f64,
     /// Mean MoE-compute utilization (busy / makespan, averaged chiplets).
     pub moe_utilization: f64,
+    /// Iterations averaged over.
     pub iters: usize,
 }
 
 impl ExperimentResult {
+    /// Mean busy seconds per step of `tag`.
     pub fn tag_time(&self, tag: Tag) -> f64 {
         self.tag_busy.get(tag)
     }
 
+    /// Mean critical-path seconds per step attributed to `tag`.
     pub fn critical_time(&self, tag: Tag) -> f64 {
         self.critical.get(tag)
     }

@@ -24,16 +24,22 @@ use crate::coordinator::{run_experiment, ExperimentResult};
 /// One grid cell specification.
 #[derive(Clone, Copy, Debug)]
 pub struct Cell {
+    /// Model preset to simulate.
     pub model: ModelId,
+    /// Optimization method (paper Table 3 column).
     pub method: Method,
+    /// Sequence length per sample.
     pub seq_len: usize,
+    /// Off-chip memory technology.
     pub dram: DramKind,
 }
 
 /// A cell's outcome along with its spec.
 #[derive(Clone, Debug)]
 pub struct CellResult {
+    /// The grid cell that was run.
     pub cell: Cell,
+    /// Aggregated experiment outcome for the cell.
     pub result: ExperimentResult,
 }
 
@@ -96,46 +102,61 @@ pub fn run_cells_with(
     seed: u64,
     opts: SweepOptions,
 ) -> Vec<CellResult> {
-    let n = cells.len();
-    let threads = opts.effective_threads(n);
+    let threads = opts.effective_threads(cells.len());
+    parallel_map(cells, threads, |&cell| CellResult {
+        cell,
+        result: run_experiment(&cell_config(cell, iters, seed)),
+    })
+}
+
+/// Apply `f` to every item across a work-stealing pool of `threads` scoped
+/// OS threads, preserving input order in the output. This is the pool behind
+/// [`run_cells_with`] and the design-space explorer
+/// (`coordinator::explore`): workers claim the next unclaimed index from a
+/// shared atomic cursor, so long items never convoy short ones, and because
+/// `f` sees only its own item the output is bit-identical to a sequential
+/// `items.iter().map(f)` regardless of thread count or completion order.
+///
+/// With `threads <= 1` (or fewer than two items) the map runs inline on the
+/// calling thread — the sequential reference path used by determinism checks.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
     if threads <= 1 || n <= 1 {
-        return run_cells_seq(cells, iters, seed);
+        return items.iter().map(f).collect();
     }
 
     let next = AtomicUsize::new(0);
-    let mut slots: Vec<Option<CellResult>> = (0..n).map(|_| None).collect();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
     std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..threads)
+        let handles: Vec<_> = (0..threads.min(n))
             .map(|_| {
                 scope.spawn(|| {
-                    let mut done: Vec<(usize, CellResult)> = Vec::new();
+                    let mut done: Vec<(usize, R)> = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
                             break;
                         }
-                        let cell = cells[i];
-                        done.push((
-                            i,
-                            CellResult {
-                                cell,
-                                result: run_experiment(&cell_config(cell, iters, seed)),
-                            },
-                        ));
+                        done.push((i, f(&items[i])));
                     }
                     done
                 })
             })
             .collect();
         for h in handles {
-            for (i, r) in h.join().expect("sweep worker panicked") {
+            for (i, r) in h.join().expect("parallel_map worker panicked") {
                 slots[i] = Some(r);
             }
         }
     });
     slots
         .into_iter()
-        .map(|r| r.expect("every cell index claimed exactly once"))
+        .map(|r| r.expect("every index claimed exactly once"))
         .collect()
 }
 
@@ -253,6 +274,18 @@ mod tests {
         let res = run_cells(&cells, 1, 7);
         assert_eq!(res.len(), 2);
         assert!(res[1].result.latency < res[0].result.latency);
+    }
+
+    #[test]
+    fn parallel_map_matches_sequential_and_preserves_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let seq = parallel_map(&items, 1, |&x| x * x);
+        let par = parallel_map(&items, 7, |&x| x * x);
+        assert_eq!(seq, par);
+        assert_eq!(par[10], 100);
+        // degenerate shapes
+        assert_eq!(parallel_map::<u64, u64, _>(&[], 4, |&x| x), Vec::<u64>::new());
+        assert_eq!(parallel_map(&[3u64], 4, |&x| x + 1), vec![4]);
     }
 
     #[test]

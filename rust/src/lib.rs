@@ -15,10 +15,14 @@
 //! - **L1** (`python/compile/kernels/`): Pallas kernels for the expert-FFN
 //!   hot path, verified against a pure-jnp oracle.
 //!
-//! See `rust/DESIGN.md` for the system inventory, the sweep/simulation
-//! hot-path design (parallel executor, plan-topology cache, indexed tag
-//! accounting), the offline dependency policy, and the per-experiment
-//! index.
+//! See `README.md` at the repo root for the project overview and
+//! quickstart, and `rust/DESIGN.md` for the system inventory, the
+//! sweep/simulation hot-path design (parallel executor, plan-topology
+//! cache, indexed tag accounting), the design-space **Exploration** section
+//! (axis-grid format, Pareto definition, executor reuse), the offline
+//! dependency policy, and the per-experiment index.
+
+#![warn(missing_docs)]
 
 pub mod allocation;
 pub mod arch;

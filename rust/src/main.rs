@@ -1,22 +1,12 @@
 //! `mozart` CLI — the L3 coordinator entrypoint.
 //!
-//! Subcommands:
-//! - `report <what>` — regenerate a paper table/figure
-//!   (`table1|table2|table3|table4|fig1|fig3|fig6b|fig6c|fig7|fig8|fig9|
-//!    fig10_13|fig14_16|q1|q2|all`)
-//! - `simulate` — run one experiment cell
-//!   (`--model qwen3|olmoe|deepseek --method baseline|a|b|c --seq N
-//!    --dram hbm2|ssd --iters N --seed N [--config file]`)
-//! - `layout` — show the clustering + allocation for a model
-//! - `bench` — time the sweep grids sequentially vs in parallel and emit
-//!   `BENCH_sweep.json` (`--grid table3|appendix|all --iters N --seed N
-//!    --threads N --reps N --out FILE`)
-//! - `train` — end-to-end real training of the tiny MoE through the PJRT
-//!   runtime (`--steps N --artifacts DIR`)
-//! - `platform` — print PJRT platform info (runtime smoke check)
+//! [`HELP`] below is the single source of truth for the subcommand list and
+//! every flag; a unit test asserts each subcommand in [`SUBCOMMANDS`]
+//! appears there, so the dispatch table and the documentation cannot drift.
 
 use anyhow::{bail, Context, Result};
 use mozart::config::{DramKind, ExperimentConfig, Method, ModelConfig, ModelId};
+use mozart::coordinator::explore::{self, ExploreConfig};
 use mozart::coordinator::sweep::{
     self, cell_config, run_cells_seq, run_cells_with, Cell, SweepOptions,
 };
@@ -24,6 +14,46 @@ use mozart::report::{self, ReportOpts};
 use mozart::testkit::bench;
 use mozart::util::cli::Args;
 use mozart::util::json::Json;
+
+/// Every dispatchable subcommand, in help order.
+const SUBCOMMANDS: [&str; 8] = [
+    "report", "simulate", "layout", "bench", "explore", "train", "platform", "help",
+];
+
+/// The full usage text (`mozart help`). Documents every subcommand and every
+/// flag in one place; keep in sync with the `match` in [`main`] (enforced by
+/// the `help_lists_every_subcommand` test).
+const HELP: &str = "\
+mozart — MoE training on 3.5D wafer-scale chiplets (NeurIPS 2025 reproduction)
+
+USAGE: mozart <command> [options]
+
+COMMANDS:
+  report <what>   regenerate a paper table/figure: table1 table2 table3
+                  table4 fig1 fig3 fig6b fig6c fig7 fig8 fig9 fig10_13
+                  fig14_16 q1 q2 q3 all   [--iters N] [--seed N]
+  simulate        one experiment cell: --model qwen3|olmoe|deepseek|tiny
+                  --method baseline|a|b|c [--seq N] [--dram hbm2|ssd]
+                  [--iters N] [--seed N] [--config file]
+  layout          expert clustering + allocation: --model ... [--seed N]
+  bench           time the sweep + explore grids (sequential vs parallel
+                  executor) and write BENCH_sweep.json:
+                  [--grid table3|appendix|explore|all] [--iters N] [--seed N]
+                  [--threads N] [--reps N] [--out BENCH_sweep.json]
+  explore         design-space exploration: expand a hardware axis grid, run
+                  every (variant x model x method) cell, report the Pareto
+                  frontier over (latency, energy, area) vs the paper's
+                  Table 2 point, and write an EXPLORE_*.json artifact:
+                  [--axes tiles,nop_bw,dram | tiles=36:64:100,...]
+                  [--budget N] [--model qwen3|olmoe|deepseek|tiny|all]
+                  [--method baseline|a|b|c|all] [--seq N] [--dram hbm2|ssd]
+                  [--iters N] [--seed N] [--threads N]
+                  [--out EXPLORE_design_space.json]
+  train           real end-to-end training of the tiny MoE via PJRT:
+                  [--steps N] [--artifacts artifacts/] [--log-every N]
+                  [--seed N]
+  platform        print the PJRT platform (runtime smoke check)
+  help            print this message";
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -33,38 +63,15 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "layout" => cmd_layout(&args),
         "bench" => cmd_bench(&args),
+        "explore" => cmd_explore(&args),
         "train" => cmd_train(&args),
         "platform" => cmd_platform(),
         "help" | "--help" => {
-            print_help();
+            println!("{HELP}");
             Ok(())
         }
         other => bail!("unknown command `{other}` (try `mozart help`)"),
     }
-}
-
-fn print_help() {
-    println!(
-        "mozart — MoE training on 3.5D wafer-scale chiplets (NeurIPS 2025 reproduction)\n\
-         \n\
-         USAGE: mozart <command> [options]\n\
-         \n\
-         COMMANDS:\n\
-           report <what>   regenerate a paper table/figure: table1 table2 table3\n\
-                           table4 fig1 fig3 fig6b fig6c fig7 fig8 fig9 fig10_13\n\
-                           fig14_16 q1 q2 all   [--iters N] [--seed N]\n\
-           simulate        one experiment cell: --model qwen3|olmoe|deepseek\n\
-                           --method baseline|a|b|c [--seq N] [--dram hbm2|ssd]\n\
-                           [--iters N] [--seed N] [--config file]\n\
-           layout          expert clustering + allocation: --model ... [--seed N]\n\
-           bench           time the sweep grids (sequential vs parallel executor)\n\
-                           and write BENCH_sweep.json: [--grid table3|appendix|all]\n\
-                           [--iters N] [--seed N] [--threads N] [--reps N]\n\
-                           [--out BENCH_sweep.json]\n\
-           train           real end-to-end training of the tiny MoE via PJRT:\n\
-                           [--steps N] [--artifacts artifacts/] [--log-every N]\n\
-           platform        print the PJRT platform (runtime smoke check)"
-    );
 }
 
 fn report_opts(args: &Args) -> Result<ReportOpts> {
@@ -98,6 +105,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             "fig14_16" => report::fig14_16(opts),
             "q1" => report::q1(opts),
             "q2" => report::q2(opts),
+            "q3" => report::q3(opts),
             other => bail!("unknown report `{other}`"),
         };
         println!("{out}");
@@ -106,7 +114,7 @@ fn cmd_report(args: &Args) -> Result<()> {
     if what == "all" {
         for name in [
             "table1", "table2", "table3", "table4", "fig1", "fig3", "fig6b", "fig6c",
-            "fig7", "fig8", "fig9", "fig10_13", "fig14_16", "q1", "q2",
+            "fig7", "fig8", "fig9", "fig10_13", "fig14_16", "q1", "q2", "q3",
         ] {
             emit(name)?;
         }
@@ -116,16 +124,18 @@ fn cmd_report(args: &Args) -> Result<()> {
     }
 }
 
+/// Shared `--dram` option parsing (one spelling table for every subcommand).
+fn parse_dram(args: &Args) -> Result<DramKind> {
+    DramKind::from_name(args.get_or("dram", "hbm2"))
+        .context("unknown --dram (hbm2|ssd)")
+}
+
 fn parse_cell(args: &Args) -> Result<Cell> {
     let model = ModelId::from_name(args.get_or("model", "qwen3"))
         .context("unknown --model (qwen3|olmoe|deepseek|tiny)")?;
     let method = Method::from_name(args.get_or("method", "c"))
         .context("unknown --method (baseline|a|b|c)")?;
-    let dram = match args.get_or("dram", "hbm2").to_ascii_lowercase().as_str() {
-        "hbm2" | "hbm" => DramKind::Hbm2,
-        "ssd" => DramKind::Ssd,
-        other => bail!("unknown --dram {other}"),
-    };
+    let dram = parse_dram(args)?;
     Ok(Cell {
         model,
         method,
@@ -181,10 +191,49 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `mozart bench`: time the sweep grids through the sequential reference
-/// path and the parallel executor, verify the results are bit-identical,
-/// and write a machine-readable `BENCH_sweep.json` so the performance
-/// trajectory is tracked from PR to PR.
+/// `mozart explore`: expand the hardware axis grid, evaluate every
+/// (variant x model x method) cell over the work-stealing pool, print the
+/// Pareto report, and write the `EXPLORE_*.json` artifact.
+fn cmd_explore(args: &Args) -> Result<()> {
+    let axes = match explore::parse_axes(args.get_or("axes", "tiles,nop_bw,dram")) {
+        Ok(a) => a,
+        Err(e) => bail!("bad --axes: {e}"),
+    };
+    let models: Vec<ModelId> = match args.get_or("model", "qwen3").to_ascii_lowercase().as_str()
+    {
+        "all" => ModelId::PAPER_MODELS.to_vec(),
+        s => vec![ModelId::from_name(s)
+            .context("unknown --model (qwen3|olmoe|deepseek|tiny|all)")?],
+    };
+    let methods: Vec<Method> = match args.get_or("method", "c").to_ascii_lowercase().as_str() {
+        "all" => Method::ALL.to_vec(),
+        s => vec![Method::from_name(s).context("unknown --method (baseline|a|b|c|all)")?],
+    };
+    let dram = parse_dram(args)?;
+    let cfg = ExploreConfig {
+        axes,
+        budget: args.get_parse("budget", 64)?,
+        models,
+        methods,
+        seq_len: args.get_parse("seq", 256)?,
+        dram,
+        iters: args.get_parse("iters", 2)?,
+        seed: args.get_parse("seed", 7)?,
+        threads: args.get_parse("threads", 0)?,
+    };
+    let outcome = explore::explore(&cfg);
+    println!("{}", outcome.render_markdown());
+    let out_path = args.get_or("out", "EXPLORE_design_space.json");
+    std::fs::write(out_path, outcome.to_json().render_pretty())
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+/// `mozart bench`: time the sweep and explore grids through the sequential
+/// reference path and the parallel executor, verify the results are
+/// bit-identical, and write a machine-readable `BENCH_sweep.json` so the
+/// performance trajectory is tracked from PR to PR.
 fn cmd_bench(args: &Args) -> Result<()> {
     let grid = args.get_or("grid", "all").to_ascii_lowercase();
     let iters: usize = args.get_parse("iters", 2)?;
@@ -195,14 +244,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let opts = SweepOptions { threads };
 
     let mut grids: Vec<(&str, Vec<Cell>)> = Vec::new();
+    let mut bench_explore = false;
     match grid.as_str() {
         "table3" => grids.push(("table3", sweep::table3_cells())),
         "appendix" => grids.push(("appendix_seq128", sweep::appendix_cells(128))),
+        "explore" => bench_explore = true,
         "all" => {
             grids.push(("table3", sweep::table3_cells()));
             grids.push(("appendix_seq128", sweep::appendix_cells(128)));
+            bench_explore = true;
         }
-        other => bail!("unknown --grid {other} (table3|appendix|all)"),
+        other => bail!("unknown --grid {other} (table3|appendix|explore|all)"),
     }
 
     let mut grid_reports: Vec<Json> = Vec::new();
@@ -253,6 +305,67 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ]));
         if !identical {
             bail!("parallel sweep diverged from sequential on grid {name}");
+        }
+    }
+
+    if bench_explore {
+        // explore hot path: a small tiles x dram grid on the fastest model
+        // (6 variants + the paper anchor = 7 cells)
+        let mut ecfg = ExploreConfig::paper_default();
+        ecfg.models = vec![ModelId::OlmoE_1B_7B];
+        ecfg.axes = explore::parse_axes("tiles=36:64:100,dram")
+            .map_err(|e| anyhow::anyhow!("explore bench axes: {e}"))?;
+        ecfg.budget = 0;
+        ecfg.seq_len = 128;
+        ecfg.iters = iters;
+        ecfg.seed = seed;
+
+        let mut seq_cfg = ecfg.clone();
+        seq_cfg.threads = 1;
+        let mut par_cfg = ecfg;
+        par_cfg.threads = threads;
+
+        let mut seq_out = None;
+        let seq = bench("explore[tiles x dram]: sequential", reps, || {
+            seq_out = Some(explore::explore(&seq_cfg));
+        });
+        let mut par_out = None;
+        let par = bench("explore[tiles x dram]: parallel", reps, || {
+            par_out = Some(explore::explore(&par_cfg));
+        });
+
+        let a = seq_out.expect("reps >= 1 guarantees one sequential pass");
+        let b = par_out.expect("reps >= 1 guarantees one parallel pass");
+        // actual cell count (anchor-duplicate combos are skipped inside
+        // explore(), so don't re-derive it from the grid shape)
+        let n = a.points.len();
+        let n_workers = SweepOptions { threads }.effective_threads(n);
+        let identical = a.points.len() == b.points.len()
+            && a.points.iter().zip(b.points.iter()).all(|(x, y)| {
+                x.variant == y.variant
+                    && x.latency_s == y.latency_s
+                    && x.energy_j == y.energy_j
+                    && x.area_mm2 == y.area_mm2
+            });
+        let speedup = seq.mean_s / par.mean_s;
+        println!(
+            "  -> explore: {:.2}x speedup, {:.2} cells/s parallel, bit-identical: {identical}\n",
+            speedup,
+            n as f64 / par.mean_s
+        );
+        grid_reports.push(Json::obj([
+            ("name", Json::str("explore_tiles_dram")),
+            ("cells", Json::int(n)),
+            ("workers", Json::int(n_workers)),
+            ("sequential", seq.to_json()),
+            ("parallel", par.to_json()),
+            ("cells_per_s_sequential", Json::num(n as f64 / seq.mean_s)),
+            ("cells_per_s_parallel", Json::num(n as f64 / par.mean_s)),
+            ("speedup_parallel_vs_sequential", Json::num(speedup)),
+            ("bit_identical", Json::Bool(identical)),
+        ]));
+        if !identical {
+            bail!("parallel explore diverged from sequential");
         }
     }
 
@@ -328,4 +441,38 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_platform() -> Result<()> {
     println!("PJRT platform: {}", mozart::runtime::platform()?);
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn help_lists_every_subcommand() {
+        for cmd in SUBCOMMANDS {
+            assert!(
+                HELP.lines().any(|l| l.trim_start().starts_with(cmd)),
+                "subcommand `{cmd}` missing from help text"
+            );
+        }
+    }
+
+    #[test]
+    fn help_documents_the_explore_flags() {
+        for flag in ["--axes", "--budget", "--out", "--model", "--method", "--threads"] {
+            assert!(HELP.contains(flag), "flag `{flag}` missing from help text");
+        }
+    }
+
+    #[test]
+    fn help_covers_every_report_name() {
+        // the `report <what>` list in HELP must name every report the
+        // dispatcher accepts (same list as `report all`)
+        for name in [
+            "table1", "table2", "table3", "table4", "fig1", "fig3", "fig6b", "fig6c",
+            "fig7", "fig8", "fig9", "fig10_13", "fig14_16", "q1", "q2", "q3",
+        ] {
+            assert!(HELP.contains(name), "report `{name}` missing from help text");
+        }
+    }
 }

@@ -22,10 +22,12 @@ pub struct EnergyBreakdown {
 }
 
 impl EnergyBreakdown {
+    /// Total energy of the step (J).
     pub fn total_j(&self) -> f64 {
         self.compute_j + self.dram_j + self.nop_j + self.sram_j + self.static_j
     }
 
+    /// Multiply every component by `s` (iteration averaging).
     pub fn scale(&self, s: f64) -> EnergyBreakdown {
         EnergyBreakdown {
             compute_j: self.compute_j * s,
@@ -36,6 +38,7 @@ impl EnergyBreakdown {
         }
     }
 
+    /// Component-wise sum.
     pub fn add(&self, other: &EnergyBreakdown) -> EnergyBreakdown {
         EnergyBreakdown {
             compute_j: self.compute_j + other.compute_j,

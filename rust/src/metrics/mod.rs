@@ -1,8 +1,11 @@
-//! Metrics: per-step energy accounting and the attention-vs-FFN roofline
-//! profiler (paper Appendix C.1, Figures 10-13).
+//! Metrics: per-step energy accounting, the attention-vs-FFN roofline
+//! profiler (paper Appendix C.1, Figures 10-13), and the Pareto-dominance
+//! analysis behind the design-space explorer.
 
 pub mod energy;
+pub mod pareto;
 pub mod roofline;
 
 pub use energy::{step_energy, EnergyBreakdown};
+pub use pareto::{dominates, dominators, pareto_frontier};
 pub use roofline::{profile_decoder_layer, Olmo2Scale, RooflineRow};

@@ -1,0 +1,120 @@
+//! Pareto-dominance analysis for the hardware design-space explorer.
+//!
+//! The explorer scores every hardware variant on several objectives that are
+//! all *minimized* (iteration latency, energy per iteration, die area); a
+//! variant is worth reporting only if no other variant is at least as good on
+//! every objective and strictly better on one. This module provides the
+//! dominance predicate and an `O(n^2)` frontier extraction over objective
+//! vectors — exact and deterministic, which is what the paper-scale grids
+//! (tens to hundreds of points) need. The invariants (no frontier member is
+//! dominated; every excluded point is dominated by a frontier member) are
+//! property-tested in `tests/prop_invariants.rs`.
+
+/// Returns true iff `a` dominates `b`: `a` is no worse than `b` on every
+/// objective and strictly better on at least one. All objectives are
+/// minimized and must be finite (NaN never dominates and is never dominated,
+/// which would silently corrupt a frontier — feed only finite scores).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len(), "objective arity mismatch");
+    let mut strictly_better = false;
+    for (x, y) in a.iter().zip(b.iter()) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// Indices of the non-dominated points among `points` (each a vector of
+/// minimized objectives of equal arity), in input order.
+///
+/// Duplicate points do not dominate each other, so all copies of a
+/// frontier-worthy point are kept — callers that want one representative can
+/// dedup by objective vector afterwards.
+pub fn pareto_frontier(points: &[Vec<f64>]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            points
+                .iter()
+                .enumerate()
+                .all(|(j, other)| j == i || !dominates(other, &points[i]))
+        })
+        .collect()
+}
+
+/// For one point, the indices of every point in `points` that dominates it
+/// (empty iff the point is on the frontier of `points ∪ {point}`). Used by
+/// the explorer to report *how* the paper's Table 2 configuration loses to
+/// discovered variants.
+pub fn dominators(point: &[f64], points: &[Vec<f64>]) -> Vec<usize> {
+    points
+        .iter()
+        .enumerate()
+        .filter(|(_, other)| dominates(other, point))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0])); // trade-off
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0])); // equal: no strict win
+        assert!(!dominates(&[2.0, 2.0], &[1.0, 1.0]));
+    }
+
+    #[test]
+    fn frontier_of_a_chain_is_the_minimum() {
+        // strictly ordered points: only the best survives
+        let pts = vec![vec![3.0, 3.0], vec![1.0, 1.0], vec![2.0, 2.0]];
+        assert_eq!(pareto_frontier(&pts), vec![1]);
+    }
+
+    #[test]
+    fn frontier_keeps_all_tradeoffs() {
+        let pts = vec![
+            vec![1.0, 4.0],
+            vec![2.0, 2.0],
+            vec![4.0, 1.0],
+            vec![3.0, 3.0], // dominated by (2,2)
+        ];
+        assert_eq!(pareto_frontier(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn duplicates_survive_together() {
+        let pts = vec![vec![1.0, 1.0], vec![1.0, 1.0], vec![2.0, 0.5]];
+        assert_eq!(pareto_frontier(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(pareto_frontier(&[]).is_empty());
+        assert_eq!(pareto_frontier(&[vec![5.0]]), vec![0]);
+    }
+
+    #[test]
+    fn dominators_of_an_interior_point() {
+        let pts = vec![vec![1.0, 1.0], vec![4.0, 4.0], vec![2.0, 5.0]];
+        assert_eq!(dominators(&[3.0, 3.0], &pts), vec![0]);
+        assert!(dominators(&[0.5, 0.5], &pts).is_empty());
+    }
+
+    #[test]
+    fn three_objectives() {
+        let pts = vec![
+            vec![1.0, 2.0, 3.0],
+            vec![2.0, 1.0, 3.0],
+            vec![1.0, 2.0, 4.0], // dominated by the first
+        ];
+        assert_eq!(pareto_frontier(&pts), vec![0, 1]);
+    }
+}

@@ -11,16 +11,22 @@
 /// OLMo-2 dense decoder shapes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Olmo2Scale {
+    /// OLMo-2 1B.
     B1,
+    /// OLMo-2 7B.
     B7,
+    /// OLMo-2 13B.
     B13,
+    /// OLMo-2 32B.
     B32,
 }
 
 impl Olmo2Scale {
+    /// The four scales profiled in Appendix C.1.
     pub const ALL: [Olmo2Scale; 4] =
         [Olmo2Scale::B1, Olmo2Scale::B7, Olmo2Scale::B13, Olmo2Scale::B32];
 
+    /// Published model name.
     pub fn name(&self) -> &'static str {
         match self {
             Olmo2Scale::B1 => "OLMo-2-0425-1B",
@@ -55,6 +61,7 @@ pub mod a100 {
     /// the memory-bound behaviour the FlashAttention line documents and
     /// the reason the paper calls attention memory-bound (Appendix C.1).
     pub const ATTN_EFF: f64 = 0.18;
+    /// Achievable fraction of peak HBM bandwidth under streaming.
     pub const MEM_EFF: f64 = 0.85;
     /// Eager attention round-trips the T x T score tensor several times
     /// (scores write, mask, softmax read+write, dropout, PV read).
@@ -64,11 +71,17 @@ pub mod a100 {
 /// Profile of one module (attention or FFN) of one decoder layer.
 #[derive(Clone, Debug)]
 pub struct RooflineRow {
+    /// OLMo-2 scale profiled.
     pub scale: Olmo2Scale,
+    /// Sequence length of the prefill pass.
     pub seq_len: usize,
+    /// Attention FLOPs of the layer's forward pass.
     pub attn_flops: f64,
+    /// FFN FLOPs of the layer's forward pass.
     pub ffn_flops: f64,
+    /// Modeled attention wall-clock (seconds).
     pub attn_latency: f64,
+    /// Modeled FFN wall-clock (seconds).
     pub ffn_latency: f64,
 }
 
@@ -78,6 +91,7 @@ impl RooflineRow {
         self.ffn_flops / (self.ffn_flops + self.attn_flops)
     }
 
+    /// FFN share of the layer's wall-clock latency.
     pub fn latency_share_ffn(&self) -> f64 {
         self.ffn_latency / (self.ffn_latency + self.attn_latency)
     }

@@ -16,8 +16,11 @@ use crate::util::stats;
 /// One monitored sample per GPU.
 #[derive(Clone, Debug)]
 pub struct GpuSample {
+    /// Sample timestamp (seconds since run start).
     pub t: f64,
+    /// Instantaneous power draw per GPU (W).
     pub power_w: Vec<f64>,
+    /// Allocated memory per GPU (GiB).
     pub mem_gib: Vec<f64>,
 }
 
@@ -25,13 +28,19 @@ pub struct GpuSample {
 /// GPU, seq 512, dropless MoE, 2-3 iter/s, 0.1 s monitor interval).
 #[derive(Clone, Debug)]
 pub struct EpSimConfig {
+    /// GPUs in the expert-parallel group.
     pub n_gpus: usize,
+    /// Samples per GPU per training step.
     pub batch_per_gpu: usize,
+    /// Sequence length per sample.
     pub seq_len: usize,
+    /// Monitor sampling interval (seconds).
     pub monitor_interval: f64,
+    /// Training throughput (iterations per second).
     pub iters_per_sec: f64,
     /// GPU TDP (A100 80G: 400 W) and idle floor.
     pub tdp_w: f64,
+    /// Idle power floor (W).
     pub idle_w: f64,
     /// Baseline memory per GPU: weights shard + optimizer + framework (GiB).
     pub static_mem_gib: f64,
@@ -148,12 +157,18 @@ pub fn simulate(
 /// for power and memory, plus ranges.
 #[derive(Clone, Debug)]
 pub struct DynamismSummary {
+    /// Coefficient of variation of each GPU's power trace.
     pub power_cv: Vec<f64>,
+    /// Coefficient of variation of each GPU's memory trace.
     pub mem_cv: Vec<f64>,
+    /// (min, max) power per GPU (W).
     pub power_range: Vec<(f64, f64)>,
+    /// (min, max) memory per GPU (GiB).
     pub mem_range: Vec<(f64, f64)>,
 }
 
+/// Reduce a monitor trace to the per-GPU dynamism statistics the Figures
+/// 14-16 report prints.
 pub fn summarize(samples: &[GpuSample]) -> DynamismSummary {
     assert!(!samples.is_empty());
     let n_gpus = samples[0].power_w.len();

@@ -50,8 +50,11 @@ use super::workload::{LayerBytes, StepWorkload};
 /// placement of MoE layer `l` (the paper maps each decoder layer's experts
 /// to chiplets independently, Figure 2).
 pub struct StepInputs<'a> {
+    /// The experiment configuration being simulated.
     pub cfg: &'a ExperimentConfig,
+    /// Per-MoE-layer expert placements.
     pub layouts: &'a [ExpertLayout],
+    /// The step's sampled routing workload.
     pub workload: &'a StepWorkload,
 }
 

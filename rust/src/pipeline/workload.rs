@@ -19,6 +19,7 @@ pub struct LayerMbStats {
     pub chiplet_slots: Vec<u64>,
     /// C_T of this cell.
     pub c_t: f64,
+    /// Tokens routed in this cell.
     pub n_tokens: u64,
 }
 
@@ -93,6 +94,7 @@ pub struct LayerBytes {
 }
 
 impl LayerBytes {
+    /// Derive the byte model from a model + hardware configuration.
     pub fn of(cfg: &ExperimentConfig) -> LayerBytes {
         let m = &cfg.model;
         let bpp = m.bytes_per_param as f64;

@@ -13,7 +13,9 @@ use crate::util::table::{bar_chart, Table};
 /// Run options shared by the reports (iteration budget, seed).
 #[derive(Clone, Copy, Debug)]
 pub struct ReportOpts {
+    /// Simulated training iterations to average per cell.
     pub iters: usize,
+    /// RNG seed for the routing-trace generators.
     pub seed: u64,
 }
 
@@ -502,6 +504,23 @@ pub fn q2(opts: ReportOpts) -> String {
     }
     let mut s = t.render();
     s.push_str("(paper ordering: overlap > efficient all-to-all > expert layout)\n");
+    s
+}
+
+/// §5.4 Q3 (extension): is the paper's Table 2 hardware point on the
+/// design-space Pareto frontier? Runs a budgeted tiles × NoP-bandwidth ×
+/// DRAM exploration around the Qwen3 / Mozart-C operating point and reports
+/// the frontier alongside where the paper configuration lands.
+pub fn q3(opts: ReportOpts) -> String {
+    use crate::coordinator::explore::{explore, ExploreConfig};
+    let mut cfg = ExploreConfig::paper_default();
+    cfg.iters = opts.iters;
+    cfg.seed = opts.seed;
+    // keep `mozart report all` affordable: a 12-variant even-stride
+    // subsample of the 40-point default grid
+    cfg.budget = 12;
+    let mut s = String::from("### Q3 — design-space position of the Table 2 platform\n");
+    s.push_str(&explore(&cfg).render_markdown());
     s
 }
 

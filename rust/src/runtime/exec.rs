@@ -16,6 +16,7 @@ impl Runtime {
         Ok(Runtime { client })
     }
 
+    /// PJRT platform name (e.g. `"cpu"`).
     pub fn platform_name(&self) -> String {
         self.client.platform_name()
     }
@@ -53,6 +54,7 @@ pub struct Executable {
 }
 
 impl Executable {
+    /// Source path the executable was loaded from.
     pub fn name(&self) -> &str {
         &self.name
     }

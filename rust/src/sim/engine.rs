@@ -63,8 +63,11 @@ enum StartCause {
 /// Simulation output.
 #[derive(Clone, Debug)]
 pub struct SimResult {
+    /// End-to-end schedule length (seconds).
     pub makespan: f64,
+    /// Start time of each task.
     pub start: Vec<f64>,
+    /// Finish time of each task.
     pub finish: Vec<f64>,
     /// Busy seconds per tag (sum of task durations).
     pub tag_busy: TagBreakdown,
@@ -74,22 +77,27 @@ pub struct SimResult {
     pub critical_path: TagBreakdown,
     /// Total bytes and flops (energy accounting inputs) per tag.
     pub tag_bytes: TagBreakdown,
+    /// Total FLOPs executed per tag.
     pub tag_flops: TagBreakdown,
 }
 
 impl SimResult {
+    /// Busy seconds of `tag`.
     pub fn tag_time(&self, tag: Tag) -> f64 {
         self.tag_busy.get(tag)
     }
 
+    /// Critical-path seconds attributed to `tag`.
     pub fn critical_time(&self, tag: Tag) -> f64 {
         self.critical_path.get(tag)
     }
 
+    /// Bytes moved by tasks of `tag`.
     pub fn bytes(&self, tag: Tag) -> f64 {
         self.tag_bytes.get(tag)
     }
 
+    /// FLOPs executed by tasks of `tag`.
     pub fn flops(&self, tag: Tag) -> f64 {
         self.tag_flops.get(tag)
     }
@@ -124,6 +132,7 @@ pub struct SimScratch {
 }
 
 impl SimScratch {
+    /// Fresh (empty) scratch; buffers grow on first use.
     pub fn new() -> SimScratch {
         SimScratch::default()
     }

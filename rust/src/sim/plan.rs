@@ -1,6 +1,8 @@
 //! Task-DAG plan representation consumed by the simulator engine.
 
+/// Index of a task within its [`Plan`].
 pub type TaskId = usize;
+/// Index of a sequential resource within its [`Plan`].
 pub type ResourceId = usize;
 
 /// Semantic label of a task, used for latency breakdowns (paper §5.4 Q1/Q2)
@@ -44,6 +46,7 @@ impl Tag {
         self as usize
     }
 
+    /// Every tag in declaration (dense-index) order.
     pub const ALL: [Tag; 12] = [
         Tag::WeightStream,
         Tag::AttnWeightLoad,
@@ -59,6 +62,7 @@ impl Tag {
         Tag::Barrier,
     ];
 
+    /// Kebab-case display name used by the breakdown printers.
     pub fn name(&self) -> &'static str {
         match self {
             Tag::WeightStream => "weight-stream",
@@ -86,17 +90,20 @@ pub struct TagBreakdown {
 }
 
 impl TagBreakdown {
+    /// The all-zero accumulator.
     pub const fn zero() -> TagBreakdown {
         TagBreakdown {
             vals: [0.0; Tag::COUNT],
         }
     }
 
+    /// Value accumulated for `tag`.
     #[inline]
     pub fn get(&self, tag: Tag) -> f64 {
         self.vals[tag.index()]
     }
 
+    /// Accumulate `v` into `tag`'s slot.
     #[inline]
     pub fn add(&mut self, tag: Tag, v: f64) {
         self.vals[tag.index()] += v;
@@ -109,6 +116,7 @@ impl TagBreakdown {
         }
     }
 
+    /// Sum over all tags.
     pub fn sum(&self) -> f64 {
         self.vals.iter().sum()
     }
@@ -118,6 +126,7 @@ impl TagBreakdown {
         Tag::ALL.iter().map(move |&t| (t, self.vals[t.index()]))
     }
 
+    /// Collect the `(tag, value)` pairs (report sorting convenience).
     pub fn to_vec(&self) -> Vec<(Tag, f64)> {
         self.iter().collect()
     }
@@ -135,6 +144,7 @@ pub struct TaskSpec {
     /// Scheduling priority among same-resource contenders (lower = sooner);
     /// the streaming-experts scheduler uses this to load hot clusters first.
     pub priority: i64,
+    /// Semantic label for breakdowns and energy accounting.
     pub tag: Tag,
     /// Bytes moved (memory/NoP tasks) — for energy accounting.
     pub bytes: f64,
@@ -145,15 +155,19 @@ pub struct TaskSpec {
 /// A full plan: resources + task DAG.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Plan {
+    /// Display names of the sequential resources, indexed by `ResourceId`.
     pub resource_names: Vec<String>,
+    /// The task DAG, indexed by `TaskId`; deps always point backwards.
     pub tasks: Vec<TaskSpec>,
 }
 
 impl Plan {
+    /// An empty plan.
     pub fn new() -> Plan {
         Plan::default()
     }
 
+    /// Register a sequential resource; returns its id.
     pub fn add_resource(&mut self, name: impl Into<String>) -> ResourceId {
         self.resource_names.push(name.into());
         self.resource_names.len() - 1
@@ -188,6 +202,7 @@ impl Plan {
         })
     }
 
+    /// Number of tasks in the plan.
     pub fn n_tasks(&self) -> usize {
         self.tasks.len()
     }

@@ -5,12 +5,19 @@ use crate::util::stats;
 /// Timing summary of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Timed passes (after one warmup).
     pub iters: usize,
+    /// Mean wall time per pass (s).
     pub mean_s: f64,
+    /// Standard deviation of the pass times (s).
     pub std_s: f64,
+    /// Fastest pass (s).
     pub min_s: f64,
+    /// Median pass (s).
     pub p50_s: f64,
+    /// 95th-percentile pass (s).
     pub p95_s: f64,
 }
 
@@ -29,6 +36,7 @@ impl BenchResult {
         ])
     }
 
+    /// One-line human-readable summary.
     pub fn render(&self) -> String {
         format!(
             "{:<44} iters={:<3} mean={:<12} p50={:<12} p95={:<12} min={}",

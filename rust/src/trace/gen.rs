@@ -72,8 +72,11 @@ struct LayerModel {
 /// Deterministic trace generator for all MoE layers of one model.
 #[derive(Clone, Debug)]
 pub struct TraceGen {
+    /// Routed experts per MoE layer.
     pub n_experts: usize,
+    /// Routing fanout per token.
     pub top_k: usize,
+    /// Generator parameters (skew, topic structure).
     pub params: TraceParams,
     layers: Vec<LayerModel>,
 }
@@ -129,6 +132,7 @@ impl TraceGen {
         TraceGen::new(model, TraceParams::for_model(model), seed)
     }
 
+    /// Number of MoE layers modeled.
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }

@@ -21,12 +21,16 @@ pub use prior::{coactivation, workload_vector, Priors};
 /// token the k experts are distinct.
 #[derive(Clone, Debug)]
 pub struct RoutingTrace {
+    /// Routed experts per MoE layer.
     pub n_experts: usize,
+    /// Routing fanout per token.
     pub top_k: usize,
+    /// `n_tokens * top_k` expert indices, row-major per token.
     pub choices: Vec<u32>,
 }
 
 impl RoutingTrace {
+    /// Tokens in the trace.
     pub fn n_tokens(&self) -> usize {
         debug_assert_eq!(self.choices.len() % self.top_k, 0);
         self.choices.len() / self.top_k

@@ -12,6 +12,7 @@ pub struct Priors {
     pub coact_counts: Vec<u64>,
     /// Max-normalized co-activation matrix P in [0,1] (Eq. 4, right).
     pub coact: Vec<f64>,
+    /// Experts per layer (matrix dimension).
     pub n_experts: usize,
 }
 
@@ -61,6 +62,7 @@ impl Priors {
         }
     }
 
+    /// Priors of a single layer's trace.
     pub fn from_trace(tr: &RoutingTrace) -> Priors {
         Priors::from_traces(&[tr])
     }

@@ -21,6 +21,7 @@ pub struct Corpus {
 }
 
 impl Corpus {
+    /// Build the language (unigram law + bigram table) from `seed`.
     pub fn new(vocab: usize, seed: u64) -> Corpus {
         let mut rng = Rng::new(seed ^ 0xC0_FFEE);
         let perm = rng.permutation(vocab);
@@ -73,6 +74,7 @@ impl Corpus {
         (tokens, targets)
     }
 
+    /// Vocabulary size of the language.
     pub fn vocab(&self) -> usize {
         self.vocab
     }

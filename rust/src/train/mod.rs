@@ -26,25 +26,37 @@ use crate::util::table::Table;
 /// Trainer configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Directory holding the AOT artifacts (`make artifacts` output).
     pub artifacts_dir: String,
+    /// Training steps to run.
     pub steps: usize,
+    /// Record the loss every this many steps.
     pub log_every: usize,
+    /// Data-sampling seed.
     pub seed: u64,
 }
 
 /// Metadata written by aot.py.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// Parameter (+ optimizer state) tensors in the training state.
     pub n_params: usize,
+    /// Batch size the step function was compiled for.
     pub batch: usize,
+    /// Sequence length the step function was compiled for.
     pub seq: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// MoE layers in the tiny model.
     pub n_layers: usize,
+    /// Routed experts per layer.
     pub n_experts: usize,
+    /// Routing fanout.
     pub top_k: usize,
 }
 
 impl ArtifactMeta {
+    /// Load `tiny_moe_meta.kv` from the artifact directory.
     pub fn load(dir: &str) -> Result<ArtifactMeta> {
         let kv = crate::config::parse::KvConfig::load(&format!("{dir}/tiny_moe_meta.kv"))
             .context("loading artifact metadata (run `make artifacts` first)")?;
@@ -69,20 +81,27 @@ impl ArtifactMeta {
 /// Result of a training run.
 #[derive(Clone, Debug)]
 pub struct TrainSummary {
+    /// `(step, loss)` samples at the logging cadence.
     pub losses: Vec<(usize, f64)>,
+    /// Steps executed.
     pub steps: usize,
+    /// Wall-clock time of the run (seconds).
     pub wall_s: f64,
+    /// Training throughput.
     pub steps_per_sec: f64,
     /// Aggregated router counts per (layer, expert) over the whole run.
     pub router_counts: Vec<Vec<f64>>,
+    /// Routed experts per layer (shape of `router_counts` rows).
     pub meta_n_experts: usize,
 }
 
 impl TrainSummary {
+    /// Last recorded loss (NaN if nothing was recorded).
     pub fn final_loss(&self) -> f64 {
         self.losses.last().map(|&(_, l)| l).unwrap_or(f64::NAN)
     }
 
+    /// First recorded loss (NaN if nothing was recorded).
     pub fn initial_loss(&self) -> f64 {
         self.losses.first().map(|&(_, l)| l).unwrap_or(f64::NAN)
     }
@@ -101,6 +120,7 @@ impl TrainSummary {
             .collect()
     }
 
+    /// Human-readable run summary (loss table + throughput).
     pub fn render(&self) -> String {
         let mut t = Table::new(
             "End-to-end training (tiny MoE through PJRT, real compute)",

@@ -8,8 +8,11 @@ use std::collections::BTreeMap;
 /// Parsed command line: positionals plus key/value options.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// Positional arguments in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -51,14 +54,17 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether the bare switch `--name` was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of option `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Value of option `--name`, or `default` when absent.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }

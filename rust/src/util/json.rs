@@ -6,23 +6,32 @@ use std::fmt::Write as _;
 /// A JSON value. Objects preserve insertion order.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (non-finite values render as `null`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (ordered key/value pairs).
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
+    /// String value constructor.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Number value constructor.
     pub fn num(v: f64) -> Json {
         Json::Num(v)
     }
 
+    /// Integer value constructor (exact below 2^53).
     pub fn int(v: usize) -> Json {
         Json::Num(v as f64)
     }

@@ -133,6 +133,7 @@ pub struct AliasTable {
 }
 
 impl AliasTable {
+    /// Build the table from unnormalized positive weights.
     pub fn new(weights: &[f64]) -> AliasTable {
         let n = weights.len();
         assert!(n > 0);
@@ -175,10 +176,12 @@ impl AliasTable {
         }
     }
 
+    /// Number of outcomes.
     pub fn len(&self) -> usize {
         self.prob.len()
     }
 
+    /// Whether the table has no outcomes (never true post-construction).
     pub fn is_empty(&self) -> bool {
         self.prob.is_empty()
     }

@@ -75,6 +75,7 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Welford {
             n: 0,
@@ -85,6 +86,7 @@ impl Welford {
         }
     }
 
+    /// Fold one observation in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -94,14 +96,17 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Observations folded so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Population variance (0 below two observations).
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -110,14 +115,17 @@ impl Welford {
         }
     }
 
+    /// Population standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest observation.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest observation.
     pub fn max(&self) -> f64 {
         self.max
     }

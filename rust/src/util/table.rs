@@ -11,6 +11,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// New table with a title line and column headers.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -19,6 +20,7 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header width).
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(
             cells.len(),
@@ -36,6 +38,7 @@ impl Table {
         self.row(&owned)
     }
 
+    /// Rows appended so far.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
@@ -78,6 +81,7 @@ impl Table {
         out
     }
 
+    /// Render to stdout.
     pub fn print(&self) {
         println!("{}", self.render());
     }
@@ -101,6 +105,58 @@ pub fn bar_chart(title: &str, labels: &[String], values: &[f64], unit: &str) -> 
     out
 }
 
+/// Render an ASCII scatter plot of `(x, y, mark)` points on a fixed-size
+/// character grid, used by the design-space explorer to sketch the Pareto
+/// frontier. Later points overwrite earlier ones on collisions, so callers
+/// should order the most important marks last. Both axes are linear;
+/// degenerate (single-valued) ranges are widened so the points still render.
+pub fn scatter_plot(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    points: &[(f64, f64, char)],
+) -> String {
+    const W: usize = 60;
+    const H: usize = 16;
+    if points.is_empty() {
+        return format!("### {title}\n(no points)\n");
+    }
+    let mut xmin = f64::INFINITY;
+    let mut xmax = f64::NEG_INFINITY;
+    let mut ymin = f64::INFINITY;
+    let mut ymax = f64::NEG_INFINITY;
+    for &(x, y, _) in points {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if !(xmax - xmin).is_finite() || xmax - xmin < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if !(ymax - ymin).is_finite() || ymax - ymin < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![[' '; W]; H];
+    for &(x, y, c) in points {
+        let xi = (((x - xmin) / (xmax - xmin)) * (W - 1) as f64).round() as usize;
+        let yi = (((y - ymin) / (ymax - ymin)) * (H - 1) as f64).round() as usize;
+        grid[H - 1 - yi.min(H - 1)][xi.min(W - 1)] = c;
+    }
+    let mut out = format!("### {title}\n");
+    out.push_str(&format!("{ylabel}: {ymin:.4} (bottom) .. {ymax:.4} (top)\n"));
+    for row in &grid {
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(W));
+    out.push('\n');
+    out.push_str(&format!("{xlabel}: {xmin:.4} (left) .. {xmax:.4} (right)\n"));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,6 +177,31 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn scatter_places_extremes_in_corners() {
+        let s = scatter_plot(
+            "S",
+            "x",
+            "y",
+            &[(0.0, 0.0, 'a'), (1.0, 1.0, 'b'), (0.5, 0.5, 'c')],
+        );
+        assert!(s.contains("### S"));
+        let rows: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        assert_eq!(rows.len(), 16);
+        // max-y point lands on the top row, min-y on the bottom
+        assert!(rows[0].ends_with('b'));
+        assert!(rows[15].starts_with("|a"));
+        assert!(s.contains('c'));
+        assert!(s.contains("x: 0.0000 (left) .. 1.0000 (right)"));
+    }
+
+    #[test]
+    fn scatter_handles_degenerate_and_empty_input() {
+        let s = scatter_plot("D", "x", "y", &[(2.0, 3.0, '*')]);
+        assert!(s.contains('*')); // single point still renders
+        assert!(scatter_plot("E", "x", "y", &[]).contains("no points"));
     }
 
     #[test]

@@ -1,0 +1,135 @@
+//! Design-space explorer contracts: parallel execution is invisible in the
+//! results (same determinism discipline as the sweep executor), the reported
+//! Pareto frontier contains no dominated point and excludes every dominated
+//! one, and the report/artifact renderers carry the expected structure.
+
+use mozart::config::{DramKind, HwOverride, Method, ModelId};
+use mozart::coordinator::explore::{explore, Axis, ExploreConfig};
+use mozart::metrics::pareto;
+
+/// A tiny 2-axis grid (2 tile counts x 2 DRAM kinds) on the smallest paper
+/// model at a reduced workload: 5 variants including the paper anchor.
+fn tiny_cfg(threads: usize) -> ExploreConfig {
+    ExploreConfig {
+        axes: vec![
+            Axis {
+                name: "tiles".to_string(),
+                values: vec![HwOverride::MoeTiles(36), HwOverride::MoeTiles(64)],
+            },
+            Axis {
+                name: "dram".to_string(),
+                values: vec![
+                    HwOverride::Dram(DramKind::Hbm2),
+                    HwOverride::Dram(DramKind::Ssd),
+                ],
+            },
+        ],
+        budget: 0,
+        models: vec![ModelId::OlmoE_1B_7B],
+        methods: vec![Method::MozartC],
+        seq_len: 64,
+        dram: DramKind::Hbm2,
+        iters: 1,
+        seed: 11,
+        threads,
+    }
+}
+
+#[test]
+fn tiny_grid_parallel_matches_sequential_bitwise() {
+    let seq = explore(&tiny_cfg(1));
+    let par = explore(&tiny_cfg(4));
+    assert_eq!(seq.points.len(), 5, "paper anchor + 2x2 grid");
+    assert_eq!(seq.points.len(), par.points.len());
+    for (a, b) in seq.points.iter().zip(par.points.iter()) {
+        assert_eq!(a.variant, b.variant);
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.method, b.method);
+        assert_eq!(a.latency_s, b.latency_s, "variant {}", a.variant);
+        assert_eq!(a.energy_j, b.energy_j, "variant {}", a.variant);
+        assert_eq!(a.area_mm2, b.area_mm2, "variant {}", a.variant);
+        assert_eq!(a.c_t, b.c_t, "variant {}", a.variant);
+    }
+    assert_eq!(seq.frontiers.len(), 1);
+    assert_eq!(seq.frontiers[0].members, par.frontiers[0].members);
+    assert_eq!(
+        seq.frontiers[0].paper_dominators,
+        par.frontiers[0].paper_dominators
+    );
+}
+
+#[test]
+fn frontier_is_sound_and_complete() {
+    let out = explore(&tiny_cfg(0));
+    let objs: Vec<Vec<f64>> = out.points.iter().map(|p| p.objectives()).collect();
+    let f = &out.frontiers[0];
+    assert!(!f.members.is_empty(), "frontier cannot be empty");
+    // soundness: no frontier member is dominated by any evaluated point
+    for &m in &f.members {
+        assert!(
+            pareto::dominators(&objs[m], &objs).is_empty(),
+            "frontier point {m} is dominated"
+        );
+    }
+    // completeness: every excluded point is dominated by some member
+    for i in 0..out.points.len() {
+        if !f.members.contains(&i) {
+            assert!(
+                f.members
+                    .iter()
+                    .any(|&m| pareto::dominates(&objs[m], &objs[i])),
+                "excluded point {i} is not dominated"
+            );
+        }
+    }
+    // the paper-anchor verdict is consistent with the frontier membership
+    assert_eq!(
+        f.paper_dominators.is_empty(),
+        f.members.contains(&f.paper_point)
+    );
+}
+
+#[test]
+fn report_and_artifact_render() {
+    let out = explore(&tiny_cfg(0));
+    let md = out.render_markdown();
+    assert!(md.contains("Design-space axes"));
+    assert!(md.contains("Pareto frontier"));
+    assert!(md.contains("paper (Table 2)") || md.contains("relative to paper"));
+    assert!(md.contains("latency vs energy"));
+
+    let js = out.to_json().render();
+    for key in [
+        "\"explore\"", "\"axes\"", "\"variants\"", "\"points\"", "\"frontiers\"",
+        "\"latency_s\"", "\"energy_j_per_step\"", "\"area_mm2\"", "\"on_frontier\"",
+        "\"paper_on_frontier\"",
+    ] {
+        assert!(js.contains(key), "artifact missing {key}");
+    }
+}
+
+#[test]
+fn ssd_variants_are_slower_than_their_hbm2_twins() {
+    // sanity of the objective wiring: same tile count, worse memory ->
+    // strictly worse latency (weight streaming is the bottleneck)
+    let out = explore(&tiny_cfg(0));
+    let find = |tiles: usize, dram: DramKind| {
+        out.points
+            .iter()
+            .find(|p| {
+                let ov = &out.variants[p.variant].overrides;
+                ov.contains(&HwOverride::MoeTiles(tiles)) && ov.contains(&HwOverride::Dram(dram))
+            })
+            .expect("grid cell present")
+    };
+    for tiles in [36, 64] {
+        let hbm = find(tiles, DramKind::Hbm2);
+        let ssd = find(tiles, DramKind::Ssd);
+        assert!(
+            ssd.latency_s > hbm.latency_s,
+            "tiles={tiles}: SSD {} !> HBM2 {}",
+            ssd.latency_s,
+            hbm.latency_s
+        );
+    }
+}

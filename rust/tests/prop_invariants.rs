@@ -4,6 +4,7 @@
 use mozart::allocation::{allocate, Allocation, ExpertLayout};
 use mozart::clustering::{cluster_experts, Clustering};
 use mozart::comm::A2aStats;
+use mozart::metrics::pareto;
 use mozart::prop_assert;
 use mozart::sim::{Plan, Simulator, Tag, TaskSpec};
 use mozart::testkit::forall;
@@ -173,6 +174,50 @@ fn prop_better_colocation_never_hurts_ct() {
             a.chiplet_token_slots.iter().sum::<u64>()
                 == b.chiplet_token_slots.iter().sum::<u64>(),
             "layouts changed total compute"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pareto_frontier_sound_complete_idempotent() {
+    // the explorer's Pareto selection: no frontier point is dominated,
+    // every dominated point is excluded (and witnessed by a frontier
+    // member), and re-extracting the frontier of the frontier is a no-op.
+    forall("pareto-frontier", 60, |rng| {
+        let dims = 2 + rng.below(3);
+        let n = 1 + rng.below(40);
+        // discretized coordinates with a small jitter: plenty of dominance
+        // chains AND exact ties in the same point set
+        let points: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                (0..dims)
+                    .map(|_| rng.below(8) as f64 + rng.f64() * 0.01)
+                    .collect()
+            })
+            .collect();
+        let frontier = pareto::pareto_frontier(&points);
+        prop_assert!(!frontier.is_empty(), "frontier empty on {n} points");
+        for &m in &frontier {
+            for (j, p) in points.iter().enumerate() {
+                prop_assert!(
+                    j == m || !pareto::dominates(p, &points[m]),
+                    "frontier member {m} dominated by {j}"
+                );
+            }
+        }
+        for i in 0..points.len() {
+            if !frontier.contains(&i) {
+                prop_assert!(
+                    frontier.iter().any(|&m| pareto::dominates(&points[m], &points[i])),
+                    "excluded point {i} not dominated by any frontier member"
+                );
+            }
+        }
+        let members: Vec<Vec<f64>> = frontier.iter().map(|&m| points[m].clone()).collect();
+        prop_assert!(
+            pareto::pareto_frontier(&members).len() == members.len(),
+            "frontier not idempotent"
         );
         Ok(())
     });
