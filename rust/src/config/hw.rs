@@ -193,6 +193,104 @@ impl Default for CalibrationKnobs {
     }
 }
 
+/// Identifier of one *continuous* calibration knob ([`CalibrationKnobs`]
+/// field) that the design-space explorer can sweep as a sensitivity axis
+/// (`--axes knob=name:lo:hi`). `group_concurrency` is excluded: it is an
+/// integer schedule property, not a continuous calibration fit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KnobId {
+    /// `CalibrationKnobs::dram_eff` — achievable fraction of peak DRAM BW.
+    DramEff,
+    /// `CalibrationKnobs::nop_eff` — achievable fraction of peak NoP BW.
+    NopEff,
+    /// `CalibrationKnobs::mxu_util` — sustained systolic-array utilization.
+    MxuUtil,
+    /// `CalibrationKnobs::switch_agg_factor` — in-network aggregation factor.
+    SwitchAggFactor,
+    /// `CalibrationKnobs::chunk_overhead_us` — per-transfer fixed overhead.
+    ChunkOverheadUs,
+    /// `CalibrationKnobs::a2a_link_occupancy` — a2a share of ingress links.
+    A2aLinkOccupancy,
+    /// `CalibrationKnobs::opt_traffic_factor` — optimizer DRAM traffic ratio.
+    OptTrafficFactor,
+}
+
+impl KnobId {
+    /// Every sweepable knob, in [`CalibrationKnobs`] field order.
+    pub const ALL: [KnobId; 7] = [
+        KnobId::DramEff,
+        KnobId::NopEff,
+        KnobId::MxuUtil,
+        KnobId::SwitchAggFactor,
+        KnobId::ChunkOverheadUs,
+        KnobId::A2aLinkOccupancy,
+        KnobId::OptTrafficFactor,
+    ];
+
+    /// Stable CLI / JSON name — identical to the `knobs.*` key accepted by
+    /// the `--config` file loader (`config::parse::KvConfig::apply_knobs`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KnobId::DramEff => "dram_eff",
+            KnobId::NopEff => "nop_eff",
+            KnobId::MxuUtil => "mxu_util",
+            KnobId::SwitchAggFactor => "switch_agg_factor",
+            KnobId::ChunkOverheadUs => "chunk_overhead_us",
+            KnobId::A2aLinkOccupancy => "a2a_link_occupancy",
+            KnobId::OptTrafficFactor => "opt_traffic_factor",
+        }
+    }
+
+    /// Parse a CLI spelling (case-insensitive [`KnobId::name`]).
+    pub fn from_name(s: &str) -> Option<KnobId> {
+        let lower = s.to_ascii_lowercase();
+        KnobId::ALL.into_iter().find(|k| k.name() == lower)
+    }
+
+    /// Read the knob's current value from a knob set.
+    pub fn get(&self, k: &CalibrationKnobs) -> f64 {
+        match self {
+            KnobId::DramEff => k.dram_eff,
+            KnobId::NopEff => k.nop_eff,
+            KnobId::MxuUtil => k.mxu_util,
+            KnobId::SwitchAggFactor => k.switch_agg_factor,
+            KnobId::ChunkOverheadUs => k.chunk_overhead_us,
+            KnobId::A2aLinkOccupancy => k.a2a_link_occupancy,
+            KnobId::OptTrafficFactor => k.opt_traffic_factor,
+        }
+    }
+
+    /// Install a value for this knob into a knob set.
+    pub fn set(&self, k: &mut CalibrationKnobs, v: f64) {
+        match self {
+            KnobId::DramEff => k.dram_eff = v,
+            KnobId::NopEff => k.nop_eff = v,
+            KnobId::MxuUtil => k.mxu_util = v,
+            KnobId::SwitchAggFactor => k.switch_agg_factor = v,
+            KnobId::ChunkOverheadUs => k.chunk_overhead_us = v,
+            KnobId::A2aLinkOccupancy => k.a2a_link_occupancy = v,
+            KnobId::OptTrafficFactor => k.opt_traffic_factor = v,
+        }
+    }
+
+    /// Whether `v` is inside the knob's physically meaningful range — the
+    /// single source of the continuous-knob bounds, which
+    /// [`HwConfig::validate`] delegates to. Lets the axis parser reject a
+    /// bad `knob=...` spec up front instead of panicking inside a worker
+    /// thread.
+    pub fn in_range(&self, v: f64) -> bool {
+        if !v.is_finite() {
+            return false;
+        }
+        match self {
+            KnobId::DramEff | KnobId::NopEff | KnobId::MxuUtil => v > 0.0 && v <= 1.0,
+            KnobId::A2aLinkOccupancy => (0.0..=1.0).contains(&v),
+            KnobId::SwitchAggFactor => v >= 1.0,
+            KnobId::ChunkOverheadUs | KnobId::OptTrafficFactor => v >= 0.0,
+        }
+    }
+}
+
 /// Complete hardware platform description.
 #[derive(Clone, Debug)]
 pub struct HwConfig {
@@ -232,6 +330,10 @@ pub enum HwOverride {
     HbLinks(usize),
     /// Core clock in GHz (paper: 1.0).
     FreqGhz(f64),
+    /// One calibration knob pinned to an explicit value — the explorer's
+    /// `knob=name:lo:hi` sensitivity axes (how robust is a verdict to the
+    /// calibration fit?).
+    Knob(KnobId, f64),
 }
 
 impl HwOverride {
@@ -244,6 +346,7 @@ impl HwOverride {
             HwOverride::GroupDramStacks(_) => "group_stacks",
             HwOverride::HbLinks(_) => "hb_links",
             HwOverride::FreqGhz(_) => "freq",
+            HwOverride::Knob(id, _) => id.name(),
         }
     }
 
@@ -256,6 +359,7 @@ impl HwOverride {
             HwOverride::GroupDramStacks(v) => v.to_string(),
             HwOverride::HbLinks(v) => v.to_string(),
             HwOverride::FreqGhz(v) => format!("{v}"),
+            HwOverride::Knob(_, v) => format!("{v}"),
         }
     }
 
@@ -273,6 +377,7 @@ impl HwOverride {
             HwOverride::GroupDramStacks(v) => hw.mem.group_dram_stacks = v,
             HwOverride::HbLinks(v) => hw.mem.hb_links = v,
             HwOverride::FreqGhz(v) => hw.freq_ghz = v,
+            HwOverride::Knob(id, v) => id.set(&mut hw.knobs, v),
         }
     }
 }
@@ -342,6 +447,25 @@ impl HwConfig {
     /// result is [`HwConfig::validate`]d; invalid combinations are a bug in
     /// the axis definitions, not a runtime condition, so this panics on
     /// violation just like the layout invariants in `run_experiment`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use mozart::config::{DramKind, HwConfig, HwOverride, KnobId};
+    ///
+    /// let base = HwConfig::mozart_wafer(DramKind::Hbm2);
+    /// let variant = base.with_overrides(&[
+    ///     HwOverride::MoeTiles(36),
+    ///     HwOverride::Dram(DramKind::Ssd),
+    ///     HwOverride::Knob(KnobId::DramEff, 0.9),
+    /// ]);
+    /// assert_eq!(variant.moe_chiplet.tiles, 36);
+    /// assert_eq!(variant.mem.dram, DramKind::Ssd);
+    /// assert_eq!(variant.knobs.dram_eff, 0.9);
+    /// // the base platform is untouched
+    /// assert_eq!(base.moe_chiplet.tiles, 64);
+    /// assert_eq!(base.mem.dram, DramKind::Hbm2);
+    /// ```
     pub fn with_overrides(&self, overrides: &[HwOverride]) -> HwConfig {
         let mut hw = self.clone();
         for ov in overrides {
@@ -401,31 +525,19 @@ impl HwConfig {
         pos(self.mem.hb_link_bw_gbps, "hb_link_bw_gbps")?;
         pos(self.freq_ghz, "freq_ghz")?;
         let k = &self.knobs;
-        for (v, what) in [
-            (k.dram_eff, "dram_eff"),
-            (k.nop_eff, "nop_eff"),
-            (k.mxu_util, "mxu_util"),
-        ] {
-            if !(v.is_finite() && v > 0.0 && v <= 1.0) {
-                return Err(format!("knob {what} must be in (0, 1], got {v}"));
+        // one source of truth for the continuous-knob bounds: the same
+        // per-knob ranges the explorer's `knob=` axis parser checks
+        for id in KnobId::ALL {
+            let v = id.get(k);
+            if !id.in_range(v) {
+                return Err(format!(
+                    "knob {} is outside its physical range, got {v}",
+                    id.name()
+                ));
             }
-        }
-        if !(k.a2a_link_occupancy.is_finite()
-            && (0.0..=1.0).contains(&k.a2a_link_occupancy))
-        {
-            return Err(format!(
-                "knob a2a_link_occupancy must be in [0, 1], got {}",
-                k.a2a_link_occupancy
-            ));
         }
         if k.group_concurrency == 0 {
             return Err("group_concurrency must be > 0".to_string());
-        }
-        if !(k.switch_agg_factor.is_finite() && k.switch_agg_factor >= 1.0) {
-            return Err(format!(
-                "switch_agg_factor must be >= 1, got {}",
-                k.switch_agg_factor
-            ));
         }
         Ok(())
     }
@@ -586,6 +698,58 @@ mod tests {
         assert_eq!(HwOverride::GroupDramStacks(4).label(), "group_stacks=4");
         assert_eq!(HwOverride::HbLinks(102_400).label(), "hb_links=102400");
         assert_eq!(HwOverride::FreqGhz(1.0).label(), "freq=1");
+        assert_eq!(
+            HwOverride::Knob(KnobId::MxuUtil, 0.5).label(),
+            "mxu_util=0.5"
+        );
+    }
+
+    #[test]
+    fn knob_ids_roundtrip_and_access_every_field() {
+        let mut knobs = CalibrationKnobs::default();
+        for id in KnobId::ALL {
+            assert_eq!(KnobId::from_name(id.name()), Some(id));
+            // set then get round-trips through the right field
+            let v = id.get(&knobs) * 0.5 + 0.1;
+            id.set(&mut knobs, v);
+            assert_eq!(id.get(&knobs), v, "knob {}", id.name());
+        }
+        assert_eq!(KnobId::from_name("DRAM_EFF"), Some(KnobId::DramEff));
+        assert_eq!(KnobId::from_name("group_concurrency"), None);
+        assert_eq!(KnobId::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn knob_ranges_match_validate() {
+        assert!(KnobId::DramEff.in_range(0.8));
+        assert!(!KnobId::DramEff.in_range(0.0));
+        assert!(!KnobId::DramEff.in_range(1.5));
+        assert!(!KnobId::DramEff.in_range(f64::NAN));
+        assert!(KnobId::A2aLinkOccupancy.in_range(0.0));
+        assert!(!KnobId::A2aLinkOccupancy.in_range(1.2));
+        assert!(KnobId::SwitchAggFactor.in_range(1.0));
+        assert!(!KnobId::SwitchAggFactor.in_range(0.9));
+        assert!(KnobId::ChunkOverheadUs.in_range(0.0));
+        assert!(!KnobId::OptTrafficFactor.in_range(-0.1));
+        // every in-range knob override survives with_overrides' validate
+        let base = HwConfig::mozart_wafer(DramKind::Hbm2);
+        let hw = base.with_overrides(&[
+            HwOverride::Knob(KnobId::NopEff, 0.6),
+            HwOverride::Knob(KnobId::ChunkOverheadUs, 0.0),
+        ]);
+        assert_eq!(hw.knobs.nop_eff, 0.6);
+        assert_eq!(hw.knobs.chunk_overhead_us, 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_untracked_knobs() {
+        let mut hw = HwConfig::mozart_wafer(DramKind::Hbm2);
+        hw.knobs.chunk_overhead_us = -1.0;
+        assert!(hw.validate().is_err());
+
+        let mut hw = HwConfig::mozart_wafer(DramKind::Hbm2);
+        hw.knobs.opt_traffic_factor = f64::INFINITY;
+        assert!(hw.validate().is_err());
     }
 
     #[test]

@@ -24,7 +24,7 @@
 
 use crate::arch::area::hw_metrics;
 use crate::config::{
-    DramKind, ExperimentConfig, HwConfig, HwOverride, Method, ModelConfig, ModelId,
+    DramKind, ExperimentConfig, HwConfig, HwOverride, KnobId, Method, ModelConfig, ModelId,
 };
 use crate::coordinator::sweep::{parallel_map, SweepOptions};
 use crate::coordinator::run_experiment;
@@ -42,7 +42,9 @@ pub struct Axis {
 }
 
 impl Axis {
-    /// Axis names `parse_axes` accepts.
+    /// Hardware axis names `parse_axes` accepts. Calibration-knob
+    /// sensitivity axes are declared separately as `knob=name:lo:hi`
+    /// (see [`parse_axes`]) and are named after the knob itself.
     pub const KNOWN: [&str; 6] =
         ["tiles", "nop_bw", "dram", "group_stacks", "hb_links", "freq"];
 
@@ -114,10 +116,71 @@ fn parse_value(axis: &str, s: &str) -> Result<HwOverride, String> {
     }
 }
 
+/// Number of evenly spaced values a `knob=name:lo:hi` range expands into.
+const KNOB_LINSPACE_STEPS: usize = 5;
+
+/// Parse a calibration-knob sensitivity axis: `name:lo:hi` (a
+/// [`KNOB_LINSPACE_STEPS`]-point linear sweep from `lo` to `hi` inclusive)
+/// or `name:v1:v2:...:vk` with `k != 2` explicit values. Values are checked
+/// against the knob's physical range ([`KnobId::in_range`]) so a bad spec
+/// fails at parse time, not as a `HwConfig::validate` panic in a worker.
+fn parse_knob_axis(spec: &str) -> Result<Axis, String> {
+    let mut parts = spec.split(':');
+    let name = parts.next().unwrap_or("").trim();
+    let id = KnobId::from_name(name).ok_or_else(|| {
+        format!(
+            "unknown knob `{name}` (known: {})",
+            KnobId::ALL.map(|k| k.name()).join(", ")
+        )
+    })?;
+    let nums: Vec<f64> = parts
+        .map(|s| {
+            let s = s.trim();
+            match s.parse::<f64>() {
+                Ok(v) if v.is_finite() => Ok(v),
+                _ => Err(format!("knob `{name}`: invalid value `{s}`")),
+            }
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    if nums.is_empty() {
+        return Err(format!(
+            "knob `{name}` needs a range (`knob={name}:lo:hi`) or explicit values"
+        ));
+    }
+    let values: Vec<f64> = if nums.len() == 2 {
+        let (lo, hi) = (nums[0], nums[1]);
+        if hi < lo {
+            return Err(format!("knob `{name}`: range {lo}:{hi} has hi < lo"));
+        }
+        if hi == lo {
+            vec![lo]
+        } else {
+            (0..KNOB_LINSPACE_STEPS)
+                .map(|i| lo + (hi - lo) * i as f64 / (KNOB_LINSPACE_STEPS - 1) as f64)
+                .collect()
+        }
+    } else {
+        nums
+    };
+    for &v in &values {
+        if !id.in_range(v) {
+            return Err(format!(
+                "knob `{name}`: value {v} is outside the knob's valid range"
+            ));
+        }
+    }
+    Ok(Axis {
+        name: id.name().to_string(),
+        values: values.into_iter().map(|v| HwOverride::Knob(id, v)).collect(),
+    })
+}
+
 /// Parse a `--axes` specification: a comma-separated list of axis names,
 /// each optionally carrying explicit values after `=`, colon-separated
-/// (e.g. `tiles,nop_bw,dram` or `tiles=36:64:100,dram=ssd`). Unlisted
-/// axes stay at the base platform's value.
+/// (e.g. `tiles,nop_bw,dram` or `tiles=36:64:100,dram=ssd`). A part of the
+/// form `knob=name:lo:hi` declares a calibration-knob sensitivity axis (a
+/// 5-point linear sweep of that knob; pass more than two numbers for
+/// explicit values). Unlisted axes stay at the base platform's value.
 pub fn parse_axes(spec: &str) -> Result<Vec<Axis>, String> {
     let mut out: Vec<Axis> = Vec::new();
     for part in spec.split(',') {
@@ -129,6 +192,17 @@ pub fn parse_axes(spec: &str) -> Result<Vec<Axis>, String> {
             None => (part, None),
             Some((n, v)) => (n.trim(), Some(v)),
         };
+        if name == "knob" {
+            let vals = values.ok_or_else(|| {
+                "axis `knob` needs a spec: `knob=name:lo:hi`".to_string()
+            })?;
+            let axis = parse_knob_axis(vals)?;
+            if out.iter().any(|a| a.name == axis.name) {
+                return Err(format!("duplicate axis `{}`", axis.name));
+            }
+            out.push(axis);
+            continue;
+        }
         let mut axis = Axis::by_name(name).ok_or_else(|| {
             format!("unknown axis `{name}` (known: {})", Axis::KNOWN.join(", "))
         })?;
@@ -152,28 +226,40 @@ pub fn parse_axes(spec: &str) -> Result<Vec<Axis>, String> {
     Ok(out)
 }
 
+/// All grid genomes — one value index per axis, first axis fastest-varying
+/// (least-significant mixed-radix digit) — with the deterministic
+/// even-stride `budget` subsample. The single source of the grid order and
+/// stride, shared by [`expand_grid`] and the guided search's exhaustive
+/// strategy (`coordinator::search`) so the two can never diverge.
+pub(crate) fn grid_genomes(axes: &[Axis], budget: usize) -> Vec<Vec<usize>> {
+    let total: usize = axes.iter().map(|a| a.values.len()).product();
+    // mixed-radix decode of one combination index, so the budgeted case
+    // never materializes the full product
+    let genome_at = |mut idx: usize| -> Vec<usize> {
+        axes.iter()
+            .map(|a| {
+                let v = idx % a.values.len();
+                idx /= a.values.len();
+                v
+            })
+            .collect()
+    };
+    if budget > 0 && total > budget {
+        (0..budget).map(|i| genome_at(i * total / budget)).collect()
+    } else {
+        (0..total).map(genome_at).collect()
+    }
+}
+
 /// Expand the axis grid into the cartesian product of override combinations
 /// (first axis fastest-varying). When `budget > 0` caps the grid below its
 /// full size, an even-stride deterministic subsample keeps coverage spread
 /// across the whole product instead of truncating to a corner.
 pub fn expand_grid(axes: &[Axis], budget: usize) -> Vec<Vec<HwOverride>> {
-    let total: usize = axes.iter().map(|a| a.values.len()).product();
-    // mixed-radix decode of one combination index (first axis = least
-    // significant digit), so the budgeted case never materializes the
-    // full product
-    let combo_at = |mut idx: usize| -> Vec<HwOverride> {
-        let mut combo = Vec::with_capacity(axes.len());
-        for a in axes {
-            combo.push(a.values[idx % a.values.len()]);
-            idx /= a.values.len();
-        }
-        combo
-    };
-    if budget > 0 && total > budget {
-        (0..budget).map(|i| combo_at(i * total / budget)).collect()
-    } else {
-        (0..total).map(combo_at).collect()
-    }
+    grid_genomes(axes, budget)
+        .into_iter()
+        .map(|g| axes.iter().zip(g).map(|(a, i)| a.values[i]).collect())
+        .collect()
 }
 
 /// Full specification of one exploration run.
@@ -292,8 +378,9 @@ pub struct ExploreOutcome {
 
 /// True iff every override in `combo` is a no-op against `base` — i.e. the
 /// combo re-describes the paper anchor. Such grid points are skipped so the
-/// anchor is never simulated (and reported) twice.
-fn is_anchor_combo(combo: &[HwOverride], base: &HwConfig) -> bool {
+/// anchor is never simulated (and reported) twice. Shared with the guided
+/// search strategies (`coordinator::search`), which apply the same skip.
+pub(crate) fn is_anchor_combo(combo: &[HwOverride], base: &HwConfig) -> bool {
     combo.iter().all(|ov| match *ov {
         HwOverride::MoeTiles(v) => v == base.moe_chiplet.tiles,
         HwOverride::NopLinkBw(v) => v == base.nop.link_bw_gbps,
@@ -301,21 +388,24 @@ fn is_anchor_combo(combo: &[HwOverride], base: &HwConfig) -> bool {
         HwOverride::GroupDramStacks(v) => v == base.mem.group_dram_stacks,
         HwOverride::HbLinks(v) => v == base.mem.hb_links,
         HwOverride::FreqGhz(v) => v == base.freq_ghz,
+        HwOverride::Knob(id, v) => v == id.get(&base.knobs),
     })
 }
 
-/// Evaluate one cell: simulate the variant's platform and attach the area
-/// model's objectives.
-fn eval_point(
+/// Evaluate one cell: simulate the overridden platform and attach the area
+/// model's objectives. This is the single cell-evaluation path shared by
+/// [`explore`] and the guided search strategies (`coordinator::search`);
+/// `vi` is recorded as the point's variant/candidate index.
+pub(crate) fn eval_point(
     cfg: &ExploreConfig,
-    variant: &Variant,
+    overrides: &[HwOverride],
     vi: usize,
     model: ModelId,
     method: Method,
 ) -> ExplorePoint {
     let model_cfg = ModelConfig::preset(model);
     let mut ec = ExperimentConfig::paper_default(model_cfg, method.config());
-    ec.hw = HwConfig::paper_for_model(model, cfg.dram).with_overrides(&variant.overrides);
+    ec.hw = HwConfig::paper_for_model(model, cfg.dram).with_overrides(overrides);
     ec.seq_len = cfg.seq_len;
     ec.iters = cfg.iters;
     ec.seed = cfg.seed;
@@ -336,6 +426,32 @@ fn eval_point(
 /// Run the exploration: expand the grid, evaluate every cell across the
 /// work-stealing pool, and compute the Pareto frontiers. Deterministic for a
 /// fixed config regardless of `threads`.
+///
+/// # Examples
+///
+/// ```
+/// use mozart::config::{DramKind, HwOverride, Method, ModelId};
+/// use mozart::coordinator::explore::{explore, Axis, ExploreConfig};
+///
+/// // one tiny axis at a reduced workload, sequentially
+/// let cfg = ExploreConfig {
+///     axes: vec![Axis {
+///         name: "tiles".to_string(),
+///         values: vec![HwOverride::MoeTiles(36)],
+///     }],
+///     budget: 0,
+///     models: vec![ModelId::OlmoE_1B_7B],
+///     methods: vec![Method::MozartC],
+///     seq_len: 64,
+///     dram: DramKind::Hbm2,
+///     iters: 1,
+///     seed: 7,
+///     threads: 1,
+/// };
+/// let out = explore(&cfg);
+/// assert_eq!(out.points.len(), 2); // the paper anchor + the tiles=36 variant
+/// assert!(!out.frontiers[0].members.is_empty());
+/// ```
 pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
     let mut variants = vec![Variant {
         overrides: Vec::new(),
@@ -382,7 +498,7 @@ pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
     }
     .effective_threads(specs.len());
     let points = parallel_map(&specs, threads, |&(vi, model, method)| {
-        eval_point(cfg, &variants[vi], vi, model, method)
+        eval_point(cfg, &variants[vi].overrides, vi, model, method)
     });
 
     let mut frontiers = Vec::new();
@@ -685,6 +801,66 @@ mod tests {
     }
 
     #[test]
+    fn knob_axes_parse_ranges_and_explicit_values() {
+        // `name:lo:hi` expands to a 5-point linspace
+        let axes = parse_axes("tiles=36:64,knob=dram_eff:0.6:1.0").unwrap();
+        assert_eq!(axes.len(), 2);
+        assert_eq!(axes[1].name, "dram_eff");
+        assert_eq!(
+            axes[1].values,
+            vec![
+                HwOverride::Knob(KnobId::DramEff, 0.6),
+                HwOverride::Knob(KnobId::DramEff, 0.7),
+                HwOverride::Knob(KnobId::DramEff, 0.8),
+                HwOverride::Knob(KnobId::DramEff, 0.9),
+                HwOverride::Knob(KnobId::DramEff, 1.0),
+            ]
+        );
+        // more than two numbers are explicit values; one number pins it
+        let axes = parse_axes("knob=mxu_util:0.4:0.6:0.8").unwrap();
+        assert_eq!(axes[0].values.len(), 3);
+        let axes = parse_axes("knob=switch_agg_factor:2.5").unwrap();
+        assert_eq!(
+            axes[0].values,
+            vec![HwOverride::Knob(KnobId::SwitchAggFactor, 2.5)]
+        );
+        // a degenerate lo == hi range collapses to one value
+        let axes = parse_axes("knob=nop_eff:0.5:0.5").unwrap();
+        assert_eq!(axes[0].values.len(), 1);
+        // two different knobs coexist; the same knob twice is a duplicate
+        assert_eq!(
+            parse_axes("knob=dram_eff:0.6:0.9,knob=nop_eff:0.3:0.5")
+                .unwrap()
+                .len(),
+            2
+        );
+        assert!(parse_axes("knob=dram_eff:0.6:0.9,knob=dram_eff:0.7:0.8").is_err());
+        // parse-time rejection: unknown knob, missing spec, bad numbers,
+        // inverted ranges, out-of-range values
+        assert!(parse_axes("knob").is_err());
+        assert!(parse_axes("knob=bogus:0.1:0.2").is_err());
+        assert!(parse_axes("knob=dram_eff").is_err());
+        assert!(parse_axes("knob=dram_eff:abc:0.9").is_err());
+        assert!(parse_axes("knob=dram_eff:0.9:0.6").is_err());
+        assert!(parse_axes("knob=dram_eff:0.5:1.5").is_err());
+        assert!(parse_axes("knob=a2a_link_occupancy:-0.2:0.5").is_err());
+    }
+
+    #[test]
+    fn knob_overrides_participate_in_anchor_detection() {
+        let base = HwConfig::paper_for_model(ModelId::Qwen3_30B_A3B, DramKind::Hbm2);
+        let fitted = base.knobs.dram_eff;
+        assert!(is_anchor_combo(
+            &[HwOverride::Knob(KnobId::DramEff, fitted)],
+            &base
+        ));
+        assert!(!is_anchor_combo(
+            &[HwOverride::Knob(KnobId::DramEff, fitted * 0.5)],
+            &base
+        ));
+    }
+
+    #[test]
     fn grid_expansion_is_the_cartesian_product() {
         let axes = parse_axes("tiles=36:64,dram").unwrap();
         let grid = expand_grid(&axes, 0);
@@ -720,6 +896,32 @@ mod tests {
         ));
         // the empty combo is definitionally the anchor
         assert!(is_anchor_combo(&[], &base));
+    }
+
+    #[test]
+    fn grid_genomes_are_the_index_form_of_expand_grid() {
+        let axes = parse_axes("tiles=36:64,dram").unwrap();
+        let genomes = grid_genomes(&axes, 0);
+        let combos = expand_grid(&axes, 0);
+        assert_eq!(genomes.len(), combos.len());
+        // first axis = least-significant digit, in lockstep with the combos
+        assert_eq!(genomes[0], vec![0, 0]);
+        assert_eq!(genomes[1], vec![1, 0]);
+        assert_eq!(genomes[3], vec![1, 1]);
+        for (g, combo) in genomes.iter().zip(combos.iter()) {
+            let derived: Vec<HwOverride> = axes
+                .iter()
+                .zip(g.iter())
+                .map(|(a, &i)| a.values[i])
+                .collect();
+            assert_eq!(&derived, combo);
+        }
+        // the budget stride is shared, so subsamples stay in lockstep too
+        assert_eq!(grid_genomes(&axes, 3).len(), 3);
+        for (g, combo) in grid_genomes(&axes, 3).iter().zip(expand_grid(&axes, 3).iter()) {
+            assert_eq!(axes[0].values[g[0]], combo[0]);
+            assert_eq!(axes[1].values[g[1]], combo[1]);
+        }
     }
 
     #[test]

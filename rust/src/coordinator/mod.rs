@@ -9,6 +9,7 @@
 //! (§4.4) into end-to-end numbers.
 
 pub mod explore;
+pub mod search;
 pub mod sweep;
 
 use crate::allocation::ExpertLayout;

@@ -1,0 +1,899 @@
+//! Guided design-space search (`mozart explore --strategy ...`).
+//!
+//! PR 3's explorer enumerates a declarative axis grid exhaustively. This
+//! module turns the same cell-evaluation path into a *search*: a
+//! [`SearchStrategy`] proposes hardware candidates over the axis value sets,
+//! each candidate is evaluated through the explorer's shared cell path on
+//! the work-stealing pool ([`parallel_map`]), and an incremental Pareto archive
+//! ([`pareto::Frontier`]) tracks the non-dominated set in `O(n)` per point
+//! instead of re-reducing the whole cloud per generation.
+//!
+//! **Joint frontiers.** The paper tunes the platform per model; the search
+//! answers the harder co-design question "which hardware is good for *every*
+//! model". A candidate's objectives are the **worst case** (maximum, since
+//! all objectives are minimized) of latency / energy / area across every
+//! configured (model × method) cell, with all per-cell values recorded. With
+//! one model the joint frontier degenerates to that model's frontier.
+//!
+//! **Determinism.** All strategy randomness comes from one seeded
+//! [`Rng`] driven on the coordinating thread; candidate evaluation derives
+//! its randomness from each cell's own config (same discipline as the sweep
+//! executor). Two runs with the same [`SearchConfig`] are therefore
+//! bit-identical regardless of thread count — asserted in
+//! `tests/integration_search.rs` and checked by `mozart bench --grid search`.
+//!
+//! **Convergence.** After every generation the archive's hypervolume proxy
+//! (vs a fixed reference of 2× the paper anchor's objectives) is recorded;
+//! the curve lands in the `EXPLORE_*.json` artifact's `search` section.
+
+use std::collections::BTreeSet;
+
+use crate::config::{HwConfig, HwOverride};
+use crate::coordinator::explore::{self, Axis, ExploreConfig, ExplorePoint};
+use crate::coordinator::sweep::{parallel_map, SweepOptions};
+use crate::metrics::pareto;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::{scatter_plot, Table};
+
+/// How the search proposes hardware candidates over the axis grid.
+///
+/// # Examples
+///
+/// A tiny seeded random search over one axis; the same seed reproduces the
+/// same archive bit for bit:
+///
+/// ```
+/// use mozart::config::{DramKind, HwOverride, Method, ModelId};
+/// use mozart::coordinator::explore::{Axis, ExploreConfig};
+/// use mozart::coordinator::search::{search, SearchConfig, SearchStrategy};
+///
+/// let explore = ExploreConfig {
+///     axes: vec![Axis {
+///         name: "tiles".to_string(),
+///         values: vec![HwOverride::MoeTiles(36), HwOverride::MoeTiles(64)],
+///     }],
+///     budget: 0,
+///     models: vec![ModelId::OlmoE_1B_7B],
+///     methods: vec![Method::MozartC],
+///     seq_len: 64,
+///     dram: DramKind::Hbm2,
+///     iters: 1,
+///     seed: 7,
+///     threads: 1,
+/// };
+/// let cfg = SearchConfig {
+///     explore,
+///     strategy: SearchStrategy::Random { samples: 2, seed: 7 },
+/// };
+/// let a = search(&cfg);
+/// let b = search(&cfg);
+/// assert_eq!(a.archive, b.archive); // deterministic for a fixed seed
+/// assert!(!a.convergence.is_empty());
+/// assert!(a.archive.iter().all(|&c| c < a.candidates.len()));
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SearchStrategy {
+    /// Enumerate the full axis product (subject to the explore config's
+    /// `budget` even-stride subsample) — the PR-3 grid semantics, now fed
+    /// through the streaming archive.
+    Exhaustive,
+    /// Uniform seeded sampling of the axis product: `samples` proposals,
+    /// de-duplicated, evaluated in one generation.
+    Random {
+        /// Number of candidate proposals (duplicates are evaluated once).
+        samples: usize,
+        /// Strategy RNG seed (independent of the simulation seed).
+        seed: u64,
+    },
+    /// (μ+λ)-style evolutionary search: a seeded random initial population,
+    /// then per generation every offspring is a mutated copy of a uniformly
+    /// chosen *archive* member (elitist parent pool; mutation resamples each
+    /// gene with probability `mutation_rate`, forcing at least one gene to
+    /// move). Already-evaluated genomes are never re-simulated.
+    Evolutionary {
+        /// Proposals per generation.
+        population: usize,
+        /// Number of generations (the initial population is generation 1).
+        generations: usize,
+        /// Per-gene mutation probability in `[0, 1]`.
+        mutation_rate: f64,
+        /// Strategy RNG seed (independent of the simulation seed).
+        seed: u64,
+    },
+}
+
+impl SearchStrategy {
+    /// Stable CLI / JSON name of the strategy kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchStrategy::Exhaustive => "exhaustive",
+            SearchStrategy::Random { .. } => "random",
+            SearchStrategy::Evolutionary { .. } => "evolutionary",
+        }
+    }
+
+    /// Human-readable one-line description including the parameters.
+    pub fn describe(&self) -> String {
+        match *self {
+            SearchStrategy::Exhaustive => "exhaustive".to_string(),
+            SearchStrategy::Random { samples, seed } => {
+                format!("random (samples={samples}, seed={seed})")
+            }
+            SearchStrategy::Evolutionary {
+                population,
+                generations,
+                mutation_rate,
+                seed,
+            } => format!(
+                "evolutionary (population={population}, generations={generations}, \
+                 mutation_rate={mutation_rate}, seed={seed})"
+            ),
+        }
+    }
+}
+
+/// Full specification of one guided search run: the design space and
+/// workload (reusing [`ExploreConfig`]) plus the proposal strategy.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// Axes, models, methods, workload, simulation seed, and thread count.
+    /// `budget` caps the grid only under [`SearchStrategy::Exhaustive`].
+    pub explore: ExploreConfig,
+    /// Candidate-proposal strategy.
+    pub strategy: SearchStrategy,
+}
+
+/// One proposed hardware candidate (candidate 0 is always the paper anchor).
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// Overrides applied on top of the per-model paper platform; empty for
+    /// the anchor.
+    pub overrides: Vec<HwOverride>,
+    /// Display label (`"paper (Table 2)"` or `"tiles=36 dram=SSD"` style).
+    pub label: String,
+    /// Per-axis value indices the strategy proposed; `None` for the anchor,
+    /// which is not a grid point.
+    pub genome: Option<Vec<usize>>,
+}
+
+/// A candidate's joint (worst-case across models) objectives.
+#[derive(Clone, Debug)]
+pub struct JointPoint {
+    /// Index into [`SearchOutcome::candidates`].
+    pub candidate: usize,
+    /// Worst mean step latency across all evaluated cells (s) — minimized.
+    pub latency_s: f64,
+    /// Worst energy per step across all evaluated cells (J) — minimized.
+    pub energy_j: f64,
+    /// Worst die area across all evaluated cells (mm²) — minimized.
+    pub area_mm2: f64,
+    /// Indices of this candidate's per-(model × method) cells in
+    /// [`SearchOutcome::cells`].
+    pub cells: Vec<usize>,
+}
+
+impl JointPoint {
+    /// The minimized joint objective vector (latency, energy, area).
+    pub fn objectives(&self) -> Vec<f64> {
+        vec![self.latency_s, self.energy_j, self.area_mm2]
+    }
+}
+
+/// Archive/convergence snapshot after one generation.
+#[derive(Clone, Debug)]
+pub struct GenStat {
+    /// 1-based generation number.
+    pub generation: usize,
+    /// Cumulative unique candidates evaluated so far (incl. the anchor).
+    pub evaluations: usize,
+    /// Archive size after this generation.
+    pub archive_size: usize,
+    /// Hypervolume proxy of the archive vs the fixed reference point.
+    pub hypervolume: f64,
+}
+
+impl GenStat {
+    /// One-line rendering, shared by the CLI's live per-generation progress
+    /// and the report's convergence section so the two never drift.
+    pub fn render(&self) -> String {
+        format!(
+            "gen {:>2}: {:>4} candidates evaluated, archive {:>3}, hypervolume {:.4}",
+            self.generation, self.evaluations, self.archive_size, self.hypervolume
+        )
+    }
+}
+
+/// Everything one guided search run produced.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    /// The configuration the run used.
+    pub cfg: SearchConfig,
+    /// Every evaluated candidate (candidate 0 is the paper anchor).
+    pub candidates: Vec<Candidate>,
+    /// Every evaluated (candidate × model × method) cell; the point's
+    /// `variant` field holds the candidate index.
+    pub cells: Vec<ExplorePoint>,
+    /// Joint worst-case objectives, aligned with `candidates`.
+    pub joint: Vec<JointPoint>,
+    /// Candidate indices on the joint Pareto frontier, sorted ascending.
+    pub archive: Vec<usize>,
+    /// Candidate indices that jointly dominate the paper anchor; empty iff
+    /// the anchor is itself on the joint frontier.
+    pub paper_dominators: Vec<usize>,
+    /// Per-generation convergence curve.
+    pub convergence: Vec<GenStat>,
+    /// Reference point of the hypervolume proxy (2× the anchor objectives).
+    pub hypervolume_ref: Vec<f64>,
+}
+
+/// Evaluate a batch of fresh candidates over the work-stealing pool and fold
+/// them into the outcome state. Cells are appended candidate-major (models
+/// outer, methods inner), so a candidate's cells are contiguous.
+///
+/// A candidate whose overrides are a no-op for one model would simulate a
+/// cell bit-identical to the anchor's (identical `ExperimentConfig`), so
+/// that cell reuses candidate 0's result instead of re-running the
+/// discrete-event simulation — the search-side mirror of the per-model
+/// anchor-duplicate skip in [`explore::explore`].
+fn eval_batch(
+    ex: &ExploreConfig,
+    bases: &[HwConfig],
+    batch: Vec<Candidate>,
+    candidates: &mut Vec<Candidate>,
+    cells: &mut Vec<ExplorePoint>,
+    joint: &mut Vec<JointPoint>,
+    archive: &mut pareto::Frontier,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let first = candidates.len();
+    let n_models = ex.models.len();
+    let n_methods = ex.methods.len();
+    // which (candidate, model) pairs can reuse the anchor's cells (none
+    // while evaluating the anchor batch itself)
+    let mut reuse = vec![false; batch.len() * n_models];
+    if first > 0 {
+        for (off, cand) in batch.iter().enumerate() {
+            for mi in 0..n_models {
+                reuse[off * n_models + mi] =
+                    explore::is_anchor_combo(&cand.overrides, &bases[mi]);
+            }
+        }
+    }
+    let mut specs: Vec<(usize, usize, usize)> = Vec::new();
+    for off in 0..batch.len() {
+        for mi in 0..n_models {
+            if reuse[off * n_models + mi] {
+                continue;
+            }
+            for ki in 0..n_methods {
+                specs.push((off, mi, ki));
+            }
+        }
+    }
+    let threads = SweepOptions { threads: ex.threads }.effective_threads(specs.len());
+    let pts = parallel_map(&specs, threads, |&(off, mi, ki)| {
+        explore::eval_point(
+            ex,
+            &batch[off].overrides,
+            first + off,
+            ex.models[mi],
+            ex.methods[ki],
+        )
+    });
+
+    let mut fresh = pts.into_iter();
+    for (off, cand) in batch.into_iter().enumerate() {
+        let ci = first + off;
+        let mut latency_s = 0.0f64;
+        let mut energy_j = 0.0f64;
+        let mut area_mm2 = 0.0f64;
+        let mut cell_idx = Vec::with_capacity(n_models * n_methods);
+        for mi in 0..n_models {
+            for ki in 0..n_methods {
+                let p = if reuse[off * n_models + mi] {
+                    // the anchor's cells sit at the head of `cells` in the
+                    // same (model-major, method-minor) order
+                    let mut anchor_cell = cells[mi * n_methods + ki].clone();
+                    anchor_cell.variant = ci;
+                    anchor_cell
+                } else {
+                    fresh.next().expect("one simulated point per spec")
+                };
+                latency_s = latency_s.max(p.latency_s);
+                energy_j = energy_j.max(p.energy_j);
+                area_mm2 = area_mm2.max(p.area_mm2);
+                cell_idx.push(cells.len());
+                cells.push(p);
+            }
+        }
+        let jp = JointPoint {
+            candidate: ci,
+            latency_s,
+            energy_j,
+            area_mm2,
+            cells: cell_idx,
+        };
+        archive.insert(ci, &jp.objectives());
+        joint.push(jp);
+        candidates.push(cand);
+    }
+}
+
+/// Turn proposed genomes into fresh [`Candidate`]s: drops genomes already
+/// seen and combos that re-describe the paper anchor for every configured
+/// model (the anchor is candidate 0 already). Every inspected genome —
+/// including dropped ones — is registered in `seen`, so a re-proposal skips
+/// the override rebuild and anchor check next time.
+fn fresh_candidates(
+    axes: &[Axis],
+    genomes: Vec<Vec<usize>>,
+    bases: &[HwConfig],
+    seen: &mut BTreeSet<Vec<usize>>,
+) -> Vec<Candidate> {
+    let mut out: Vec<Candidate> = Vec::new();
+    for g in genomes {
+        if seen.contains(&g) {
+            continue;
+        }
+        seen.insert(g.clone());
+        let overrides: Vec<HwOverride> = axes
+            .iter()
+            .zip(g.iter())
+            .map(|(a, &i)| a.values[i])
+            .collect();
+        if bases.iter().all(|b| explore::is_anchor_combo(&overrides, b)) {
+            continue;
+        }
+        let label = overrides
+            .iter()
+            .map(|o| o.label())
+            .collect::<Vec<_>>()
+            .join(" ");
+        out.push(Candidate {
+            overrides,
+            label,
+            genome: Some(g),
+        });
+    }
+    out
+}
+
+/// One uniformly random genome.
+fn random_genome(axes: &[Axis], rng: &mut Rng) -> Vec<usize> {
+    axes.iter().map(|a| rng.below(a.values.len())).collect()
+}
+
+/// Resample an index in `[0, n)` different from `cur` (requires `n > 1`).
+fn resample_different(n: usize, cur: usize, rng: &mut Rng) -> usize {
+    let j = rng.below(n - 1);
+    if j >= cur {
+        j + 1
+    } else {
+        j
+    }
+}
+
+/// Mutate a genome: each gene moves to a different value of its axis with
+/// probability `rate`; if nothing moved, one mutable gene is forced to move
+/// so offspring always explore (when any axis has more than one value).
+fn mutate(axes: &[Axis], genome: &[usize], rate: f64, rng: &mut Rng) -> Vec<usize> {
+    let mut g = genome.to_vec();
+    let mut changed = false;
+    for (i, a) in axes.iter().enumerate() {
+        if a.values.len() > 1 && rng.f64() < rate {
+            g[i] = resample_different(a.values.len(), g[i], rng);
+            changed = true;
+        }
+    }
+    if !changed {
+        let mutable: Vec<usize> = axes
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.values.len() > 1)
+            .map(|(i, _)| i)
+            .collect();
+        if !mutable.is_empty() {
+            let i = mutable[rng.below(mutable.len())];
+            g[i] = resample_different(axes[i].values.len(), g[i], rng);
+        }
+    }
+    g
+}
+
+/// Run a guided search (see [`search_with`] for the progress-callback form).
+pub fn search(cfg: &SearchConfig) -> SearchOutcome {
+    search_with(cfg, |_| {})
+}
+
+/// Run a guided search, invoking `on_generation` with each [`GenStat`] as it
+/// is recorded (the CLI prints these as per-generation progress).
+/// Deterministic for a fixed config regardless of `threads`.
+pub fn search_with(
+    cfg: &SearchConfig,
+    mut on_generation: impl FnMut(&GenStat),
+) -> SearchOutcome {
+    let ex = &cfg.explore;
+    let axes = &ex.axes;
+    let bases: Vec<HwConfig> = ex
+        .models
+        .iter()
+        .map(|&m| HwConfig::paper_for_model(m, ex.dram))
+        .collect();
+
+    let mut candidates: Vec<Candidate> = Vec::new();
+    let mut cells: Vec<ExplorePoint> = Vec::new();
+    let mut joint: Vec<JointPoint> = Vec::new();
+    let mut archive = pareto::Frontier::new();
+    let mut seen: BTreeSet<Vec<usize>> = BTreeSet::new();
+    let mut convergence: Vec<GenStat> = Vec::new();
+
+    // the paper anchor is always candidate 0 and seeds both the archive and
+    // the hypervolume reference point
+    eval_batch(
+        ex,
+        &bases,
+        vec![Candidate {
+            overrides: Vec::new(),
+            label: "paper (Table 2)".to_string(),
+            genome: None,
+        }],
+        &mut candidates,
+        &mut cells,
+        &mut joint,
+        &mut archive,
+    );
+    let hypervolume_ref: Vec<f64> =
+        joint[0].objectives().iter().map(|v| v * 2.0).collect();
+
+    // one macro per generation: evaluate a batch of genomes, then record
+    let mut run_generation = |generation: usize,
+                              genomes: Vec<Vec<usize>>,
+                              candidates: &mut Vec<Candidate>,
+                              cells: &mut Vec<ExplorePoint>,
+                              joint: &mut Vec<JointPoint>,
+                              archive: &mut pareto::Frontier,
+                              seen: &mut BTreeSet<Vec<usize>>,
+                              convergence: &mut Vec<GenStat>| {
+        let batch = fresh_candidates(axes, genomes, &bases, seen);
+        eval_batch(ex, &bases, batch, candidates, cells, joint, archive);
+        let stat = GenStat {
+            generation,
+            evaluations: candidates.len(),
+            archive_size: archive.len(),
+            hypervolume: archive.hypervolume_proxy(&hypervolume_ref),
+        };
+        on_generation(&stat);
+        convergence.push(stat);
+    };
+
+    match cfg.strategy {
+        SearchStrategy::Exhaustive => {
+            run_generation(
+                1,
+                explore::grid_genomes(axes, ex.budget),
+                &mut candidates,
+                &mut cells,
+                &mut joint,
+                &mut archive,
+                &mut seen,
+                &mut convergence,
+            );
+        }
+        SearchStrategy::Random { samples, seed } => {
+            let mut rng = Rng::new(seed ^ 0x5EA2_C417);
+            let genomes: Vec<Vec<usize>> =
+                (0..samples).map(|_| random_genome(axes, &mut rng)).collect();
+            run_generation(
+                1,
+                genomes,
+                &mut candidates,
+                &mut cells,
+                &mut joint,
+                &mut archive,
+                &mut seen,
+                &mut convergence,
+            );
+        }
+        SearchStrategy::Evolutionary {
+            population,
+            generations,
+            mutation_rate,
+            seed,
+        } => {
+            let population = population.max(1);
+            let mut rng = Rng::new(seed ^ 0xE501_7104);
+            for g in 0..generations.max(1) {
+                let genomes: Vec<Vec<usize>> = if g == 0 {
+                    (0..population).map(|_| random_genome(axes, &mut rng)).collect()
+                } else {
+                    // elitist parent pool: every archive member that is a
+                    // grid point (the anchor has no genome)
+                    let parents: Vec<usize> = archive
+                        .keys()
+                        .into_iter()
+                        .filter(|&k| candidates[k].genome.is_some())
+                        .collect();
+                    (0..population)
+                        .map(|_| {
+                            if parents.is_empty() {
+                                random_genome(axes, &mut rng)
+                            } else {
+                                let p = parents[rng.below(parents.len())];
+                                let genome = candidates[p]
+                                    .genome
+                                    .as_ref()
+                                    .expect("parents are genome-bearing");
+                                mutate(axes, genome, mutation_rate, &mut rng)
+                            }
+                        })
+                        .collect()
+                };
+                run_generation(
+                    g + 1,
+                    genomes,
+                    &mut candidates,
+                    &mut cells,
+                    &mut joint,
+                    &mut archive,
+                    &mut seen,
+                    &mut convergence,
+                );
+            }
+        }
+    }
+
+    let joint_objs: Vec<Vec<f64>> = joint.iter().map(|j| j.objectives()).collect();
+    let paper_dominators = pareto::dominators(&joint_objs[0], &joint_objs);
+    SearchOutcome {
+        cfg: cfg.clone(),
+        candidates,
+        cells,
+        joint,
+        archive: archive.keys(),
+        paper_dominators,
+        convergence,
+        hypervolume_ref,
+    }
+}
+
+impl SearchOutcome {
+    /// Rendered markdown report: axis summary, the joint frontier table,
+    /// an ASCII latency/energy scatter, the per-generation convergence
+    /// curve, and the verdict on the paper's Table 2 configuration.
+    pub fn render_markdown(&self) -> String {
+        let ex = &self.cfg.explore;
+        let mut t = Table::new("Design-space axes", &["Axis", "Values"]);
+        for a in &ex.axes {
+            t.row(&[
+                a.name.clone(),
+                a.values
+                    .iter()
+                    .map(|v| v.value_label())
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "({} candidates incl. the paper anchor; {} cells; strategy {})\n\n",
+            self.candidates.len(),
+            self.cells.len(),
+            self.cfg.strategy.describe()
+        ));
+
+        let models = ex
+            .models
+            .iter()
+            .map(|m| m.name())
+            .collect::<Vec<_>>()
+            .join(", ");
+        let title = format!(
+            "Joint Pareto frontier — worst case across [{models}] \
+             ({} of {} candidates non-dominated)",
+            self.archive.len(),
+            self.candidates.len()
+        );
+        let mut t = Table::new(
+            &title,
+            &["Candidate", "Latency (s)", "Energy (J/step)", "Area (mm^2)"],
+        );
+        let mut members = self.archive.clone();
+        members.sort_by(|&a, &b| self.joint[a].latency_s.total_cmp(&self.joint[b].latency_s));
+        for &ci in &members {
+            let j = &self.joint[ci];
+            t.row(&[
+                self.candidates[ci].label.clone(),
+                format!("{:.4}", j.latency_s),
+                format!("{:.1}", j.energy_j),
+                format!("{:.0}", j.area_mm2),
+            ]);
+        }
+        out.push_str(&t.render());
+
+        // scatter: all points '.', frontier '*', paper anchor 'P' (drawn
+        // last so it wins overlaps)
+        let mut pts: Vec<(f64, f64, char)> = Vec::new();
+        for j in &self.joint {
+            if !self.archive.contains(&j.candidate) {
+                pts.push((j.latency_s, j.energy_j, '.'));
+            }
+        }
+        for &ci in &self.archive {
+            pts.push((self.joint[ci].latency_s, self.joint[ci].energy_j, '*'));
+        }
+        let anchor = &self.joint[0];
+        pts.push((anchor.latency_s, anchor.energy_j, 'P'));
+        out.push('\n');
+        out.push_str(&scatter_plot(
+            "joint latency vs energy ('*' frontier, '.' dominated, 'P' paper)",
+            "latency (s)",
+            "energy (J/step)",
+            &pts,
+        ));
+
+        out.push_str(
+            "convergence (hypervolume proxy vs ref = 2x the paper anchor's objectives):\n",
+        );
+        for s in &self.convergence {
+            out.push_str(&format!("  {}\n", s.render()));
+        }
+
+        if self.paper_dominators.is_empty() {
+            out.push_str(
+                "=> the paper's Table 2 configuration is ON the discovered joint \
+                 frontier (no candidate beats it for every model at once).\n",
+            );
+        } else {
+            let best = self
+                .paper_dominators
+                .iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    self.joint[a].latency_s.total_cmp(&self.joint[b].latency_s)
+                })
+                .expect("non-empty dominator set");
+            let j = &self.joint[best];
+            out.push_str(&format!(
+                "=> the paper's Table 2 configuration is jointly dominated by {} \
+                 candidate(s); e.g. `{}`: {:+.1}% latency, {:+.1}% energy, {:+.1}% \
+                 area (worst case across models) relative to paper.\n",
+                self.paper_dominators.len(),
+                self.candidates[best].label,
+                (j.latency_s / anchor.latency_s - 1.0) * 100.0,
+                (j.energy_j / anchor.energy_j - 1.0) * 100.0,
+                (j.area_mm2 / anchor.area_mm2 - 1.0) * 100.0,
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable artifact (`EXPLORE_*.json` with a `search` section).
+    pub fn to_json(&self) -> Json {
+        let ex = &self.cfg.explore;
+        let axes = Json::Arr(
+            ex.axes
+                .iter()
+                .map(|a| {
+                    Json::obj([
+                        ("name", Json::str(a.name.clone())),
+                        (
+                            "values",
+                            Json::Arr(
+                                a.values.iter().map(|v| Json::str(v.value_label())).collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let candidates = Json::Arr(
+            self.candidates
+                .iter()
+                .map(|c| {
+                    Json::obj([
+                        ("label", Json::str(c.label.clone())),
+                        (
+                            "overrides",
+                            Json::Obj(
+                                c.overrides
+                                    .iter()
+                                    .map(|o| {
+                                        (o.axis_name().to_string(), Json::str(o.value_label()))
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let points = Json::Arr(
+            self.cells
+                .iter()
+                .map(|p| {
+                    Json::obj([
+                        ("candidate", Json::int(p.variant)),
+                        ("model", Json::str(p.model.name())),
+                        ("method", Json::str(p.method.name())),
+                        ("latency_s", Json::num(p.latency_s)),
+                        ("energy_j_per_step", Json::num(p.energy_j)),
+                        ("area_mm2", Json::num(p.area_mm2)),
+                        ("power_kw", Json::num(p.power_kw)),
+                        ("c_t", Json::num(p.c_t)),
+                    ])
+                })
+                .collect(),
+        );
+        let joint = Json::Arr(
+            self.joint
+                .iter()
+                .map(|j| {
+                    Json::obj([
+                        ("candidate", Json::int(j.candidate)),
+                        ("latency_s", Json::num(j.latency_s)),
+                        ("energy_j_per_step", Json::num(j.energy_j)),
+                        ("area_mm2", Json::num(j.area_mm2)),
+                        ("on_frontier", Json::Bool(self.archive.contains(&j.candidate))),
+                        (
+                            "cells",
+                            Json::Arr(j.cells.iter().map(|&c| Json::int(c)).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let frontier = Json::obj([
+            (
+                "members",
+                Json::Arr(self.archive.iter().map(|&m| Json::int(m)).collect()),
+            ),
+            ("paper_point", Json::int(0)),
+            ("paper_on_frontier", Json::Bool(self.paper_dominators.is_empty())),
+            (
+                "paper_dominators",
+                Json::Arr(
+                    self.paper_dominators.iter().map(|&m| Json::int(m)).collect(),
+                ),
+            ),
+        ]);
+        let mut search = Json::obj([
+            ("strategy", Json::str(self.cfg.strategy.name())),
+            ("evaluations", Json::int(self.candidates.len())),
+            (
+                "convergence",
+                Json::Arr(
+                    self.convergence
+                        .iter()
+                        .map(|s| {
+                            Json::obj([
+                                ("generation", Json::int(s.generation)),
+                                ("evaluations", Json::int(s.evaluations)),
+                                ("archive_size", Json::int(s.archive_size)),
+                                ("hypervolume", Json::num(s.hypervolume)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "hypervolume_ref",
+                Json::Arr(self.hypervolume_ref.iter().map(|&v| Json::num(v)).collect()),
+            ),
+        ]);
+        match self.cfg.strategy {
+            SearchStrategy::Exhaustive => {}
+            SearchStrategy::Random { samples, seed } => {
+                search.push("samples", Json::int(samples));
+                // string, not number: JSON numbers are f64 and would corrupt
+                // u64 seeds above 2^53 (same policy as the top-level seed)
+                search.push("strategy_seed", Json::str(seed.to_string()));
+            }
+            SearchStrategy::Evolutionary {
+                population,
+                generations,
+                mutation_rate,
+                seed,
+            } => {
+                search.push("population", Json::int(population));
+                search.push("generations", Json::int(generations));
+                search.push("mutation_rate", Json::num(mutation_rate));
+                search.push("strategy_seed", Json::str(seed.to_string()));
+            }
+        }
+        Json::obj([
+            ("explore", Json::str("design_space_search")),
+            ("axes", axes),
+            ("budget", Json::int(ex.budget)),
+            ("seq_len", Json::int(ex.seq_len)),
+            ("iters", Json::int(ex.iters)),
+            // string, not number: JSON numbers are f64 and would corrupt
+            // u64 seeds above 2^53 (same policy as BENCH_sweep.json)
+            ("seed", Json::str(ex.seed.to_string())),
+            ("base_dram", Json::str(ex.dram.name())),
+            (
+                "models",
+                Json::Arr(ex.models.iter().map(|m| Json::str(m.name())).collect()),
+            ),
+            (
+                "methods",
+                Json::Arr(ex.methods.iter().map(|m| Json::str(m.name())).collect()),
+            ),
+            (
+                "objectives",
+                Json::Arr(vec![
+                    Json::str("latency_s"),
+                    Json::str("energy_j_per_step"),
+                    Json::str("area_mm2"),
+                ]),
+            ),
+            ("objective_mode", Json::str("worst_case_across_models")),
+            ("candidates", candidates),
+            ("points", points),
+            ("joint", joint),
+            ("frontier", frontier),
+            ("search", search),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DramKind, ModelId};
+    use crate::coordinator::explore::parse_axes;
+
+    fn axes_2x2() -> Vec<Axis> {
+        parse_axes("tiles=36:64,dram").expect("axes parse")
+    }
+
+    #[test]
+    fn mutation_always_moves_when_possible() {
+        let axes = axes_2x2();
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let g = random_genome(&axes, &mut rng);
+            let m = mutate(&axes, &g, 0.0, &mut rng); // rate 0 -> forced move
+            assert_ne!(g, m, "offspring must differ from parent");
+            for (i, &v) in m.iter().enumerate() {
+                assert!(v < axes[i].values.len());
+            }
+        }
+    }
+
+    #[test]
+    fn resample_never_returns_current() {
+        let mut rng = Rng::new(9);
+        for n in 2..6 {
+            for cur in 0..n {
+                for _ in 0..50 {
+                    let v = resample_different(n, cur, &mut rng);
+                    assert!(v < n && v != cur, "n={n} cur={cur} v={v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fresh_candidates_dedup_and_skip_anchor() {
+        let axes = parse_axes("tiles=56:64").expect("axes parse");
+        // OlmoE's paper platform has 56 tiles -> genome [0] is the anchor
+        let bases = vec![HwConfig::paper_for_model(ModelId::OlmoE_1B_7B, DramKind::Hbm2)];
+        let mut seen = BTreeSet::new();
+        let got = fresh_candidates(
+            &axes,
+            vec![vec![0], vec![1], vec![1], vec![0]],
+            &bases,
+            &mut seen,
+        );
+        assert_eq!(got.len(), 1, "anchor-equal and duplicate genomes dropped");
+        assert_eq!(got[0].label, "tiles=64");
+        // dropped genomes are registered too, so re-proposals skip early
+        assert!(seen.contains(&vec![0]));
+        assert!(seen.contains(&vec![1]));
+        let again = fresh_candidates(&axes, vec![vec![1], vec![0]], &bases, &mut seen);
+        assert!(again.is_empty());
+    }
+}

@@ -16,11 +16,14 @@
 //!   hot path, verified against a pure-jnp oracle.
 //!
 //! See `README.md` at the repo root for the project overview and
-//! quickstart, and `rust/DESIGN.md` for the system inventory, the
+//! quickstart, `docs/GUIDE.md` for the end-to-end user guide (build →
+//! sweep → explore → search → bench → report, with annotated artifact
+//! schemas), and `rust/DESIGN.md` for the system inventory, the
 //! sweep/simulation hot-path design (parallel executor, plan-topology
-//! cache, indexed tag accounting), the design-space **Exploration** section
-//! (axis-grid format, Pareto definition, executor reuse), the offline
-//! dependency policy, and the per-experiment index.
+//! cache, indexed tag accounting), the design-space **Exploration** and
+//! **Search strategies** sections (axis-grid format, Pareto definition,
+//! archive invariants, joint-frontier semantics), the offline dependency
+//! policy, and the per-experiment index.
 
 #![warn(missing_docs)]
 

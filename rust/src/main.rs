@@ -7,6 +7,7 @@
 use anyhow::{bail, Context, Result};
 use mozart::config::{DramKind, ExperimentConfig, Method, ModelConfig, ModelId};
 use mozart::coordinator::explore::{self, ExploreConfig};
+use mozart::coordinator::search::{self, SearchConfig, SearchStrategy};
 use mozart::coordinator::sweep::{
     self, cell_config, run_cells_seq, run_cells_with, Cell, SweepOptions,
 };
@@ -36,16 +37,23 @@ COMMANDS:
                   --method baseline|a|b|c [--seq N] [--dram hbm2|ssd]
                   [--iters N] [--seed N] [--config file]
   layout          expert clustering + allocation: --model ... [--seed N]
-  bench           time the sweep + explore grids (sequential vs parallel
-                  executor) and write BENCH_sweep.json:
-                  [--grid table3|appendix|explore|all] [--iters N] [--seed N]
-                  [--threads N] [--reps N] [--out BENCH_sweep.json]
-  explore         design-space exploration: expand a hardware axis grid, run
-                  every (variant x model x method) cell, report the Pareto
-                  frontier over (latency, energy, area) vs the paper's
-                  Table 2 point, and write an EXPLORE_*.json artifact:
-                  [--axes tiles,nop_bw,dram | tiles=36:64:100,...]
-                  [--budget N] [--model qwen3|olmoe|deepseek|tiny|all]
+  bench           time the sweep + explore + search grids (sequential vs
+                  parallel executor) and write BENCH_sweep.json:
+                  [--grid table3|appendix|explore|search|all] [--iters N]
+                  [--seed N] [--threads N] [--reps N] [--out BENCH_sweep.json]
+  explore         design-space exploration: enumerate or search a hardware
+                  axis grid, run every (variant x model x method) cell,
+                  report the Pareto frontier over (latency, energy, area) vs
+                  the paper's Table 2 point, and write an EXPLORE_*.json
+                  artifact. With --strategy, a guided search maintains a
+                  streaming archive over the JOINT (worst-case across models)
+                  objectives and records a per-generation convergence curve:
+                  [--axes tiles,nop_bw,dram | tiles=36:64:100,
+                   knob=dram_eff:0.6:0.95,...]
+                  [--strategy exhaustive|random|evolutionary]
+                  [--budget N] [--samples N] [--population N]
+                  [--generations N] [--mutation R]
+                  [--models qwen3|olmoe|deepseek|tiny|all] [--model ...]
                   [--method baseline|a|b|c|all] [--seq N] [--dram hbm2|ssd]
                   [--iters N] [--seed N] [--threads N]
                   [--out EXPLORE_design_space.json]
@@ -191,49 +199,112 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `mozart explore`: expand the hardware axis grid, evaluate every
-/// (variant x model x method) cell over the work-stealing pool, print the
-/// Pareto report, and write the `EXPLORE_*.json` artifact.
+/// Resolve the `--strategy` option plus its parameter flags into a
+/// [`SearchStrategy`]. `--samples` defaults to the grid budget so
+/// `--strategy random --budget 8` means "8 random proposals" — and when
+/// `--budget 0` (the "no cap" sentinel) it defaults to the full grid size
+/// instead, mirroring the exhaustive semantics. The strategy RNG is seeded
+/// from `--seed` so one flag controls the whole run.
+fn parse_strategy(
+    spec: &str,
+    args: &Args,
+    budget: usize,
+    grid_total: usize,
+    seed: u64,
+) -> Result<SearchStrategy> {
+    Ok(match spec.to_ascii_lowercase().as_str() {
+        "exhaustive" => SearchStrategy::Exhaustive,
+        "random" => SearchStrategy::Random {
+            samples: args.get_parse(
+                "samples",
+                if budget > 0 { budget } else { grid_total.max(1) },
+            )?,
+            seed,
+        },
+        "evolutionary" => {
+            let mutation_rate: f64 = args.get_parse("mutation", 0.3)?;
+            if !(mutation_rate.is_finite() && (0.0..=1.0).contains(&mutation_rate)) {
+                bail!("--mutation must be a probability in [0, 1], got {mutation_rate}");
+            }
+            SearchStrategy::Evolutionary {
+                population: args.get_parse("population", 8)?,
+                generations: args.get_parse("generations", 6)?,
+                mutation_rate,
+                seed,
+            }
+        }
+        other => bail!("unknown --strategy `{other}` (exhaustive|random|evolutionary)"),
+    })
+}
+
+/// `mozart explore`: expand or search the hardware axis grid, evaluate the
+/// (variant x model x method) cells over the work-stealing pool, print the
+/// Pareto report, and write the `EXPLORE_*.json` artifact. Without
+/// `--strategy` this is the PR-3 exhaustive grid with per-(model, method)
+/// frontiers; with it, the guided search engine with joint frontiers and a
+/// convergence curve.
 fn cmd_explore(args: &Args) -> Result<()> {
     let axes = match explore::parse_axes(args.get_or("axes", "tiles,nop_bw,dram")) {
         Ok(a) => a,
         Err(e) => bail!("bad --axes: {e}"),
     };
-    let models: Vec<ModelId> = match args.get_or("model", "qwen3").to_ascii_lowercase().as_str()
-    {
+    // `--models` (plural, matching the joint-frontier semantics) and the
+    // PR-3 `--model` spelling are interchangeable
+    let model_spec = args.get("models").or_else(|| args.get("model")).unwrap_or("qwen3");
+    let models: Vec<ModelId> = match model_spec.to_ascii_lowercase().as_str() {
         "all" => ModelId::PAPER_MODELS.to_vec(),
         s => vec![ModelId::from_name(s)
-            .context("unknown --model (qwen3|olmoe|deepseek|tiny|all)")?],
+            .context("unknown --models (qwen3|olmoe|deepseek|tiny|all)")?],
     };
     let methods: Vec<Method> = match args.get_or("method", "c").to_ascii_lowercase().as_str() {
         "all" => Method::ALL.to_vec(),
         s => vec![Method::from_name(s).context("unknown --method (baseline|a|b|c|all)")?],
     };
     let dram = parse_dram(args)?;
+    let budget = args.get_parse("budget", 64)?;
+    let seed: u64 = args.get_parse("seed", 7)?;
     let cfg = ExploreConfig {
         axes,
-        budget: args.get_parse("budget", 64)?,
+        budget,
         models,
         methods,
         seq_len: args.get_parse("seq", 256)?,
         dram,
         iters: args.get_parse("iters", 2)?,
-        seed: args.get_parse("seed", 7)?,
+        seed,
         threads: args.get_parse("threads", 0)?,
     };
-    let outcome = explore::explore(&cfg);
-    println!("{}", outcome.render_markdown());
     let out_path = args.get_or("out", "EXPLORE_design_space.json");
-    std::fs::write(out_path, outcome.to_json().render_pretty())
+    let json = match args.get("strategy") {
+        None => {
+            let outcome = explore::explore(&cfg);
+            println!("{}", outcome.render_markdown());
+            outcome.to_json()
+        }
+        Some(spec) => {
+            let grid_total: usize = cfg.axes.iter().map(|a| a.values.len()).product();
+            let strategy = parse_strategy(spec, args, budget, grid_total, seed)?;
+            let scfg = SearchConfig {
+                explore: cfg,
+                strategy,
+            };
+            let outcome = search::search_with(&scfg, |s| println!("{}", s.render()));
+            println!();
+            println!("{}", outcome.render_markdown());
+            outcome.to_json()
+        }
+    };
+    std::fs::write(out_path, json.render_pretty())
         .with_context(|| format!("writing {out_path}"))?;
     println!("wrote {out_path}");
     Ok(())
 }
 
-/// `mozart bench`: time the sweep and explore grids through the sequential
-/// reference path and the parallel executor, verify the results are
-/// bit-identical, and write a machine-readable `BENCH_sweep.json` so the
-/// performance trajectory is tracked from PR to PR.
+/// `mozart bench`: time the sweep, explore, and guided-search grids through
+/// the sequential reference path and the parallel executor, verify the
+/// results are bit-identical, and write a machine-readable
+/// `BENCH_sweep.json` so the performance trajectory is tracked from PR to
+/// PR.
 fn cmd_bench(args: &Args) -> Result<()> {
     let grid = args.get_or("grid", "all").to_ascii_lowercase();
     let iters: usize = args.get_parse("iters", 2)?;
@@ -245,16 +316,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
     let mut grids: Vec<(&str, Vec<Cell>)> = Vec::new();
     let mut bench_explore = false;
+    let mut bench_search = false;
     match grid.as_str() {
         "table3" => grids.push(("table3", sweep::table3_cells())),
         "appendix" => grids.push(("appendix_seq128", sweep::appendix_cells(128))),
         "explore" => bench_explore = true,
+        "search" => bench_search = true,
         "all" => {
             grids.push(("table3", sweep::table3_cells()));
             grids.push(("appendix_seq128", sweep::appendix_cells(128)));
             bench_explore = true;
+            bench_search = true;
         }
-        other => bail!("unknown --grid {other} (table3|appendix|explore|all)"),
+        other => bail!("unknown --grid {other} (table3|appendix|explore|search|all)"),
     }
 
     let mut grid_reports: Vec<Json> = Vec::new();
@@ -369,6 +443,88 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
     }
 
+    if bench_search {
+        // guided-search hot path: a small evolutionary run on the fastest
+        // model (tiles x dram genome space), sequential vs parallel cell
+        // evaluation — the strategy itself runs on the driver thread, so
+        // results must be bit-identical either way
+        let mut ecfg = ExploreConfig::paper_default();
+        ecfg.models = vec![ModelId::OlmoE_1B_7B];
+        ecfg.axes = explore::parse_axes("tiles,dram")
+            .map_err(|e| anyhow::anyhow!("search bench axes: {e}"))?;
+        ecfg.budget = 0;
+        ecfg.seq_len = 128;
+        ecfg.iters = iters;
+        ecfg.seed = seed;
+        let population = 4;
+        let strategy = SearchStrategy::Evolutionary {
+            population,
+            generations: 3,
+            mutation_rate: 0.4,
+            seed,
+        };
+
+        let seq_cfg = SearchConfig {
+            explore: ExploreConfig {
+                threads: 1,
+                ..ecfg.clone()
+            },
+            strategy,
+        };
+        let par_cfg = SearchConfig {
+            explore: ExploreConfig { threads, ..ecfg },
+            strategy,
+        };
+
+        let mut seq_out = None;
+        let seq = bench("search[evolutionary]: sequential", reps, || {
+            seq_out = Some(search::search(&seq_cfg));
+        });
+        let mut par_out = None;
+        let par = bench("search[evolutionary]: parallel", reps, || {
+            par_out = Some(search::search(&par_cfg));
+        });
+
+        let a = seq_out.expect("reps >= 1 guarantees one sequential pass");
+        let b = par_out.expect("reps >= 1 guarantees one parallel pass");
+        let n = a.cells.len();
+        // unlike explore (one big batch), search evaluates per-generation
+        // batches, so workers are capped by the largest batch (population
+        // proposals x models x methods), not the run's total cell count
+        let max_batch = population
+            * par_cfg.explore.models.len()
+            * par_cfg.explore.methods.len();
+        let n_workers = SweepOptions { threads }.effective_threads(max_batch);
+        let identical = a.cells.len() == b.cells.len()
+            && a.archive == b.archive
+            && a.cells.iter().zip(b.cells.iter()).all(|(x, y)| {
+                x.variant == y.variant
+                    && x.latency_s == y.latency_s
+                    && x.energy_j == y.energy_j
+                    && x.area_mm2 == y.area_mm2
+            });
+        let speedup = seq.mean_s / par.mean_s;
+        println!(
+            "  -> search: {:.2}x speedup, {:.2} cells/s parallel, bit-identical: {identical}\n",
+            speedup,
+            n as f64 / par.mean_s
+        );
+        grid_reports.push(Json::obj([
+            ("name", Json::str("search_evolutionary")),
+            ("cells", Json::int(n)),
+            ("workers", Json::int(n_workers)),
+            ("sequential", seq.to_json()),
+            ("parallel", par.to_json()),
+            ("cells_per_s_sequential", Json::num(n as f64 / seq.mean_s)),
+            ("cells_per_s_parallel", Json::num(n as f64 / par.mean_s)),
+            ("speedup_parallel_vs_sequential", Json::num(speedup)),
+            ("bit_identical", Json::Bool(identical)),
+        ]));
+        if !identical {
+            bail!("parallel search diverged from sequential");
+        }
+    }
+
     let report = Json::obj([
         ("bench", Json::str("sweep")),
         ("iters", Json::int(iters)),
@@ -459,8 +615,50 @@ mod tests {
 
     #[test]
     fn help_documents_the_explore_flags() {
-        for flag in ["--axes", "--budget", "--out", "--model", "--method", "--threads"] {
+        for flag in [
+            "--axes",
+            "--budget",
+            "--out",
+            "--model",
+            "--models",
+            "--method",
+            "--threads",
+            "--strategy",
+            "--samples",
+            "--population",
+            "--generations",
+            "--mutation",
+        ] {
             assert!(HELP.contains(flag), "flag `{flag}` missing from help text");
+        }
+    }
+
+    #[test]
+    fn help_documents_every_parsed_flag() {
+        // single-source enforcement: every option this file reads off `args`
+        // must appear as `--name` in HELP, so an undocumented flag fails CI.
+        // The scan only matches direct `args.` accessors, not the KvConfig
+        // (`kv.`) lookups whose keys are config-file paths, not flags.
+        let src = include_str!("main.rs");
+        let mut flags: Vec<String> = Vec::new();
+        for pat in ["args.get_or(\"", "args.get_parse(\"", "args.get(\""] {
+            let mut rest = src;
+            while let Some(pos) = rest.find(pat) {
+                rest = &rest[pos + pat.len()..];
+                let name: String = rest.chars().take_while(|&c| c != '"').collect();
+                flags.push(name);
+            }
+        }
+        assert!(
+            flags.len() >= 20,
+            "flag scan looks broken: only {} matches",
+            flags.len()
+        );
+        for flag in flags {
+            assert!(
+                HELP.contains(&format!("--{flag}")),
+                "flag `--{flag}` is parsed but missing from help text"
+            );
         }
     }
 

@@ -1,11 +1,15 @@
 //! Metrics: per-step energy accounting, the attention-vs-FFN roofline
 //! profiler (paper Appendix C.1, Figures 10-13), and the Pareto-dominance
-//! analysis behind the design-space explorer.
+//! analysis (batch + streaming archive) behind the design-space explorer
+//! and the guided search strategies.
 
 pub mod energy;
 pub mod pareto;
 pub mod roofline;
 
 pub use energy::{step_energy, EnergyBreakdown};
+// `pareto::Frontier` (the streaming archive) is deliberately NOT re-exported
+// here: `coordinator::explore::Frontier` is an unrelated public type of the
+// same name, and two bare `Frontier`s in one domain invite wrong imports.
 pub use pareto::{dominates, dominators, pareto_frontier};
 pub use roofline::{profile_decoder_layer, Olmo2Scale, RooflineRow};

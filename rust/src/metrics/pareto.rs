@@ -1,13 +1,17 @@
-//! Pareto-dominance analysis for the hardware design-space explorer.
+//! Pareto-dominance analysis for the hardware design-space explorer and the
+//! guided search strategies.
 //!
 //! The explorer scores every hardware variant on several objectives that are
 //! all *minimized* (iteration latency, energy per iteration, die area); a
 //! variant is worth reporting only if no other variant is at least as good on
 //! every objective and strictly better on one. This module provides the
-//! dominance predicate and an `O(n^2)` frontier extraction over objective
-//! vectors — exact and deterministic, which is what the paper-scale grids
-//! (tens to hundreds of points) need. The invariants (no frontier member is
-//! dominated; every excluded point is dominated by a frontier member) are
+//! dominance predicate, an `O(n^2)` batch frontier extraction over objective
+//! vectors, and a streaming [`Frontier`] archive ([`Frontier::insert`] is
+//! `O(n)` per point) for search loops that discover candidates
+//! incrementally — exact and deterministic, which is what the paper-scale
+//! grids (tens to hundreds of points) need. The invariants (no frontier
+//! member is dominated; every excluded point is dominated by a frontier
+//! member; the streaming archive equals the batch reduction) are
 //! property-tested in `tests/prop_invariants.rs`.
 
 /// Returns true iff `a` dominates `b`: `a` is no worse than `b` on every
@@ -58,6 +62,108 @@ pub fn dominators(point: &[f64], points: &[Vec<f64>]) -> Vec<usize> {
         .collect()
 }
 
+/// Incremental Pareto archive over minimized objective vectors.
+///
+/// The guided search strategies (`coordinator::search`) discover candidates
+/// one generation at a time; re-reducing the full point set after every
+/// evaluation would be `O(n^2)` per generation. [`Frontier::insert`] keeps a
+/// streaming archive instead: a new point is rejected in one `O(n)` scan if
+/// any member dominates it, and otherwise evicts every member it dominates.
+/// The final archive equals the batch [`pareto_frontier`] of all inserted
+/// points (duplicates of a frontier-worthy point survive together, matching
+/// the batch semantics) — property-tested in `tests/prop_invariants.rs`.
+///
+/// Each entry carries a caller-chosen `usize` key (e.g. a candidate index)
+/// so archive membership can be mapped back to the evaluated design points.
+///
+/// # Examples
+///
+/// ```
+/// use mozart::metrics::pareto::Frontier;
+///
+/// let mut f = Frontier::new();
+/// assert!(f.insert(0, &[1.0, 4.0]));  // first point: always kept
+/// assert!(f.insert(1, &[4.0, 1.0]));  // incomparable trade-off: both stay
+/// assert!(!f.insert(2, &[5.0, 5.0])); // dominated: rejected
+/// assert!(f.insert(3, &[0.5, 0.5]));  // dominates both members
+/// assert_eq!(f.keys(), vec![3]);      // the archive collapsed onto it
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct Frontier {
+    entries: Vec<(usize, Vec<f64>)>,
+}
+
+impl Frontier {
+    /// An empty archive.
+    pub fn new() -> Frontier {
+        Frontier {
+            entries: Vec::new(),
+        }
+    }
+
+    /// Offer a point to the archive. Returns `true` iff the point was
+    /// admitted (no current member dominates it); admission evicts every
+    /// member the new point dominates. All objectives are minimized and must
+    /// be finite (same contract as [`dominates`]).
+    pub fn insert(&mut self, key: usize, objectives: &[f64]) -> bool {
+        if let Some((_, first)) = self.entries.first() {
+            debug_assert_eq!(first.len(), objectives.len(), "objective arity mismatch");
+        }
+        if self
+            .entries
+            .iter()
+            .any(|(_, member)| dominates(member, objectives))
+        {
+            return false;
+        }
+        self.entries.retain(|(_, member)| !dominates(objectives, member));
+        self.entries.push((key, objectives.to_vec()));
+        true
+    }
+
+    /// Number of archive members.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the archive has no members.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Keys of the current members, sorted ascending (insertion order is an
+    /// implementation detail; sorted keys make archive comparisons stable).
+    pub fn keys(&self) -> Vec<usize> {
+        let mut k: Vec<usize> = self.entries.iter().map(|(key, _)| *key).collect();
+        k.sort_unstable();
+        k
+    }
+
+    /// Iterate over `(key, objectives)` of the current members.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &[f64])> {
+        self.entries.iter().map(|(k, o)| (*k, o.as_slice()))
+    }
+
+    /// Cheap hypervolume *proxy* against a fixed reference point (worse than
+    /// every interesting point, all coordinates > 0): the sum over members
+    /// of the normalized box volume `prod_d max(0, (ref_d - obj_d) / ref_d)`.
+    /// Overlapping boxes are counted once per member, so this is not the
+    /// exact dominated hypervolume — but it is deterministic, `O(n·d)`, and
+    /// grows as the archive approaches the reference-relative ideal point,
+    /// which is all the per-generation convergence curve needs.
+    pub fn hypervolume_proxy(&self, reference: &[f64]) -> f64 {
+        self.entries
+            .iter()
+            .map(|(_, obj)| {
+                obj.iter()
+                    .zip(reference.iter())
+                    .map(|(&v, &r)| ((r - v) / r).max(0.0))
+                    .product::<f64>()
+            })
+            .sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,6 +212,55 @@ mod tests {
         let pts = vec![vec![1.0, 1.0], vec![4.0, 4.0], vec![2.0, 5.0]];
         assert_eq!(dominators(&[3.0, 3.0], &pts), vec![0]);
         assert!(dominators(&[0.5, 0.5], &pts).is_empty());
+    }
+
+    #[test]
+    fn streaming_frontier_matches_batch_on_a_fixed_set() {
+        let pts = vec![
+            vec![1.0, 4.0],
+            vec![2.0, 2.0],
+            vec![4.0, 1.0],
+            vec![3.0, 3.0], // dominated by (2,2)
+            vec![2.0, 2.0], // duplicate of a member: survives alongside it
+        ];
+        let mut f = Frontier::new();
+        for (i, p) in pts.iter().enumerate() {
+            f.insert(i, p);
+        }
+        assert_eq!(f.keys(), pareto_frontier(&pts));
+        assert_eq!(f.len(), 4);
+        assert!(!f.is_empty());
+    }
+
+    #[test]
+    fn streaming_insert_evicts_dominated_members() {
+        let mut f = Frontier::new();
+        assert!(f.insert(7, &[3.0, 3.0]));
+        assert!(f.insert(8, &[2.0, 4.0]));
+        // dominates key 7 but not key 8
+        assert!(f.insert(9, &[2.5, 2.5]));
+        assert_eq!(f.keys(), vec![8, 9]);
+        // rejected points leave the archive untouched
+        assert!(!f.insert(10, &[9.0, 9.0]));
+        assert_eq!(f.keys(), vec![8, 9]);
+        let got: Vec<(usize, Vec<f64>)> =
+            f.iter().map(|(k, o)| (k, o.to_vec())).collect();
+        assert!(got.contains(&(9, vec![2.5, 2.5])));
+    }
+
+    #[test]
+    fn hypervolume_proxy_orders_archives() {
+        let reference = [10.0, 10.0];
+        let mut near = Frontier::new();
+        near.insert(0, &[1.0, 1.0]);
+        let mut far = Frontier::new();
+        far.insert(0, &[8.0, 8.0]);
+        assert!(near.hypervolume_proxy(&reference) > far.hypervolume_proxy(&reference));
+        // points at/behind the reference contribute nothing
+        let mut behind = Frontier::new();
+        behind.insert(0, &[12.0, 3.0]);
+        assert_eq!(behind.hypervolume_proxy(&reference), 0.0);
+        assert_eq!(Frontier::new().hypervolume_proxy(&reference), 0.0);
     }
 
     #[test]

@@ -508,19 +508,26 @@ pub fn q2(opts: ReportOpts) -> String {
 }
 
 /// §5.4 Q3 (extension): is the paper's Table 2 hardware point on the
-/// design-space Pareto frontier? Runs a budgeted tiles × NoP-bandwidth ×
-/// DRAM exploration around the Qwen3 / Mozart-C operating point and reports
-/// the frontier alongside where the paper configuration lands.
+/// design-space Pareto frontier? Runs a guided random search (12 seeded
+/// samples of the default tiles × NoP-bandwidth × DRAM grid — the same
+/// evaluation budget as PR 3's even-stride subsample) around the Qwen3 /
+/// Mozart-C operating point and reports the discovered frontier, the
+/// search convergence curve, and where the paper configuration lands.
 pub fn q3(opts: ReportOpts) -> String {
-    use crate::coordinator::explore::{explore, ExploreConfig};
-    let mut cfg = ExploreConfig::paper_default();
-    cfg.iters = opts.iters;
-    cfg.seed = opts.seed;
-    // keep `mozart report all` affordable: a 12-variant even-stride
-    // subsample of the 40-point default grid
-    cfg.budget = 12;
+    use crate::coordinator::explore::ExploreConfig;
+    use crate::coordinator::search::{search, SearchConfig, SearchStrategy};
+    let mut explore = ExploreConfig::paper_default();
+    explore.iters = opts.iters;
+    explore.seed = opts.seed;
+    let cfg = SearchConfig {
+        explore,
+        strategy: SearchStrategy::Random {
+            samples: 12,
+            seed: opts.seed,
+        },
+    };
     let mut s = String::from("### Q3 — design-space position of the Table 2 platform\n");
-    s.push_str(&explore(&cfg).render_markdown());
+    s.push_str(&search(&cfg).render_markdown());
     s
 }
 

@@ -17,6 +17,22 @@ pub fn forall(name: &str, cases: usize, property: impl Fn(&mut Rng) -> Result<()
     }
 }
 
+/// Random cloud of `n` objective vectors of arity `dims` for Pareto
+/// property tests: coordinates are small integers plus a tiny jitter, so
+/// one cloud carries long dominance chains, incomparable trade-offs, and
+/// near-ties — the regimes a Pareto selection has to get right. Callers
+/// that need *exact* duplicates copy a point afterwards. Shared by the
+/// frontier properties in `tests/prop_invariants.rs`.
+pub fn objective_cloud(rng: &mut Rng, n: usize, dims: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|_| {
+            (0..dims)
+                .map(|_| rng.below(8) as f64 + rng.f64() * 0.01)
+                .collect()
+        })
+        .collect()
+}
+
 /// Re-run a single failing case by seed.
 pub fn forall_seeded(
     name: &str,
@@ -55,6 +71,19 @@ mod tests {
     #[should_panic(expected = "property `always-fails` failed")]
     fn failing_property_reports_seed() {
         super::forall("always-fails", 5, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn objective_cloud_shape_and_range() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let pts = super::objective_cloud(&mut rng, 17, 3);
+        assert_eq!(pts.len(), 17);
+        for p in &pts {
+            assert_eq!(p.len(), 3);
+            for &v in p {
+                assert!((0.0..8.01).contains(&v), "coordinate out of range: {v}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,249 @@
+//! Guided-search contracts: seeded runs are bit-reproducible, the streaming
+//! archive equals the batch Pareto reduction of everything that was
+//! evaluated, joint (multi-model) objectives are the worst case across the
+//! per-model cells, the exhaustive strategy agrees with the PR-3 explorer,
+//! and the report/artifact renderers carry the search section.
+
+use mozart::config::{DramKind, HwOverride, KnobId, Method, ModelId};
+use mozart::coordinator::explore::{explore, parse_axes, ExploreConfig};
+use mozart::coordinator::search::{search, search_with, SearchConfig, SearchStrategy};
+use mozart::metrics::pareto;
+
+/// A small 2-axis design space on the smallest paper model at a reduced
+/// workload (2 tile counts x 2 DRAM kinds; OlmoE's anchor has 56 tiles, so
+/// no grid point re-describes the anchor).
+fn tiny_explore(threads: usize) -> ExploreConfig {
+    ExploreConfig {
+        axes: parse_axes("tiles=36:64,dram").expect("axes parse"),
+        budget: 0,
+        models: vec![ModelId::OlmoE_1B_7B],
+        methods: vec![Method::MozartC],
+        seq_len: 64,
+        dram: DramKind::Hbm2,
+        iters: 1,
+        seed: 11,
+        threads,
+    }
+}
+
+fn evolutionary(seed: u64) -> SearchStrategy {
+    SearchStrategy::Evolutionary {
+        population: 3,
+        generations: 3,
+        mutation_rate: 0.5,
+        seed,
+    }
+}
+
+#[test]
+fn evolutionary_search_is_bit_reproducible() {
+    let cfg = SearchConfig {
+        explore: tiny_explore(0),
+        strategy: evolutionary(13),
+    };
+    let a = search(&cfg);
+    let b = search(&cfg);
+    assert_eq!(a.candidates.len(), b.candidates.len());
+    for (x, y) in a.candidates.iter().zip(b.candidates.iter()) {
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.genome, y.genome);
+    }
+    assert_eq!(a.cells.len(), b.cells.len());
+    for (x, y) in a.cells.iter().zip(b.cells.iter()) {
+        assert_eq!(x.variant, y.variant);
+        assert_eq!(x.latency_s, y.latency_s, "candidate {}", x.variant);
+        assert_eq!(x.energy_j, y.energy_j, "candidate {}", x.variant);
+        assert_eq!(x.area_mm2, y.area_mm2, "candidate {}", x.variant);
+        assert_eq!(x.c_t, y.c_t, "candidate {}", x.variant);
+    }
+    assert_eq!(a.archive, b.archive);
+    assert_eq!(a.paper_dominators, b.paper_dominators);
+    assert_eq!(a.convergence.len(), b.convergence.len());
+    for (x, y) in a.convergence.iter().zip(b.convergence.iter()) {
+        assert_eq!(x.evaluations, y.evaluations);
+        assert_eq!(x.archive_size, y.archive_size);
+        assert_eq!(x.hypervolume, y.hypervolume, "gen {}", x.generation);
+    }
+    // a different strategy seed explores a (generally) different trajectory
+    // but still re-evaluates nothing twice
+    let c = search(&SearchConfig {
+        explore: tiny_explore(0),
+        strategy: evolutionary(14),
+    });
+    let mut genomes: Vec<_> = c.candidates.iter().filter_map(|x| x.genome.clone()).collect();
+    genomes.sort();
+    let unique = genomes.len();
+    genomes.dedup();
+    assert_eq!(genomes.len(), unique, "a genome was evaluated twice");
+}
+
+#[test]
+fn search_parallel_matches_sequential_bitwise() {
+    let seq = search(&SearchConfig {
+        explore: tiny_explore(1),
+        strategy: evolutionary(13),
+    });
+    let par = search(&SearchConfig {
+        explore: tiny_explore(4),
+        strategy: evolutionary(13),
+    });
+    assert_eq!(seq.cells.len(), par.cells.len());
+    for (x, y) in seq.cells.iter().zip(par.cells.iter()) {
+        assert_eq!(x.variant, y.variant);
+        assert_eq!(x.latency_s, y.latency_s);
+        assert_eq!(x.energy_j, y.energy_j);
+        assert_eq!(x.area_mm2, y.area_mm2);
+    }
+    assert_eq!(seq.archive, par.archive);
+}
+
+#[test]
+fn archive_matches_batch_pareto_reduction() {
+    let out = search(&SearchConfig {
+        explore: tiny_explore(0),
+        strategy: evolutionary(13),
+    });
+    let objs: Vec<Vec<f64>> = out.joint.iter().map(|j| j.objectives()).collect();
+    assert_eq!(out.archive, pareto::pareto_frontier(&objs));
+    // archive soundness on the evaluated set
+    for &m in &out.archive {
+        assert!(
+            pareto::dominators(&objs[m], &objs).is_empty(),
+            "archive member {m} is dominated"
+        );
+    }
+    // the paper-anchor verdict is consistent with archive membership
+    assert_eq!(out.paper_dominators.is_empty(), out.archive.contains(&0));
+}
+
+#[test]
+fn exhaustive_strategy_agrees_with_the_explorer() {
+    let ex = tiny_explore(0);
+    let grid = explore(&ex);
+    let out = search(&SearchConfig {
+        explore: ex,
+        strategy: SearchStrategy::Exhaustive,
+    });
+    // same candidate set in the same order (anchor first, then grid order),
+    // evaluated through the same cell path -> bit-identical objectives
+    assert_eq!(out.candidates.len(), grid.variants.len());
+    assert_eq!(out.cells.len(), grid.points.len());
+    for (c, v) in out.candidates.iter().zip(grid.variants.iter()) {
+        assert_eq!(c.label, v.label);
+    }
+    for (a, b) in out.cells.iter().zip(grid.points.iter()) {
+        assert_eq!(a.variant, b.variant);
+        assert_eq!(a.latency_s, b.latency_s);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.area_mm2, b.area_mm2);
+    }
+    // with a single model the joint frontier degenerates to the explorer's
+    // per-(model, method) frontier (point indices -> variant indices)
+    let mut explorer_members: Vec<usize> = grid.frontiers[0]
+        .members
+        .iter()
+        .map(|&i| grid.points[i].variant)
+        .collect();
+    explorer_members.sort_unstable();
+    assert_eq!(out.archive, explorer_members);
+}
+
+#[test]
+fn joint_objectives_are_worst_case_across_models() {
+    // TinyMoE is cheap and its paper platform (36 tiles) differs from
+    // OlmoE's (56), so the same override set produces different per-model
+    // hardware — exactly the case joint frontiers exist for.
+    let mut ex = tiny_explore(0);
+    ex.models = vec![ModelId::OlmoE_1B_7B, ModelId::TinyMoE];
+    let out = search(&SearchConfig {
+        explore: ex,
+        strategy: SearchStrategy::Random { samples: 4, seed: 5 },
+    });
+    let per = 2; // models x methods
+    for j in &out.joint {
+        assert_eq!(j.cells.len(), per, "candidate {}", j.candidate);
+        let max = |f: fn(&mozart::coordinator::explore::ExplorePoint) -> f64| {
+            j.cells
+                .iter()
+                .map(|&c| f(&out.cells[c]))
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
+        assert_eq!(j.latency_s, max(|p| p.latency_s), "candidate {}", j.candidate);
+        assert_eq!(j.energy_j, max(|p| p.energy_j), "candidate {}", j.candidate);
+        assert_eq!(j.area_mm2, max(|p| p.area_mm2), "candidate {}", j.candidate);
+        for &c in &j.cells {
+            assert_eq!(out.cells[c].variant, j.candidate);
+        }
+    }
+    // every cell of every candidate was evaluated for both models
+    for j in &out.joint {
+        let models: Vec<ModelId> = j.cells.iter().map(|&c| out.cells[c].model).collect();
+        assert!(models.contains(&ModelId::OlmoE_1B_7B));
+        assert!(models.contains(&ModelId::TinyMoE));
+    }
+}
+
+#[test]
+fn knob_axes_search_end_to_end() {
+    let mut ex = tiny_explore(0);
+    ex.axes = parse_axes("tiles=36:64,knob=mxu_util:0.4:0.8").expect("axes parse");
+    assert_eq!(ex.axes[1].values.len(), 5);
+    assert_eq!(
+        ex.axes[1].values[0],
+        HwOverride::Knob(KnobId::MxuUtil, 0.4)
+    );
+    let out = search(&SearchConfig {
+        explore: ex,
+        strategy: SearchStrategy::Random { samples: 4, seed: 3 },
+    });
+    assert!(out.candidates.len() >= 2, "random proposals all collapsed");
+    for c in out.candidates.iter().skip(1) {
+        assert!(c.label.contains("mxu_util="), "label `{}`", c.label);
+    }
+    for j in &out.joint {
+        assert!(j.latency_s.is_finite() && j.latency_s > 0.0);
+        assert!(j.energy_j.is_finite() && j.energy_j > 0.0);
+        assert!(j.area_mm2.is_finite() && j.area_mm2 > 0.0);
+    }
+}
+
+#[test]
+fn report_artifact_and_progress_render() {
+    let mut gens = 0usize;
+    let out = search_with(
+        &SearchConfig {
+            explore: tiny_explore(0),
+            strategy: evolutionary(13),
+        },
+        |s| {
+            gens += 1;
+            assert_eq!(s.generation, gens);
+            assert!(s.evaluations >= 1);
+            assert!(s.hypervolume.is_finite() && s.hypervolume >= 0.0);
+        },
+    );
+    assert_eq!(gens, 3, "one progress callback per generation");
+    assert_eq!(out.convergence.len(), 3);
+    // evaluations are cumulative and never shrink
+    for w in out.convergence.windows(2) {
+        assert!(w[1].evaluations >= w[0].evaluations);
+    }
+
+    let md = out.render_markdown();
+    assert!(md.contains("Design-space axes"));
+    assert!(md.contains("Joint Pareto frontier"));
+    assert!(md.contains("strategy evolutionary"));
+    assert!(md.contains("convergence"));
+    assert!(md.contains("paper (Table 2)") || md.contains("relative to paper"));
+
+    let js = out.to_json().render();
+    for key in [
+        "\"explore\"", "\"design_space_search\"", "\"candidates\"", "\"points\"",
+        "\"joint\"", "\"frontier\"", "\"search\"", "\"strategy\"", "\"evolutionary\"",
+        "\"convergence\"", "\"hypervolume\"", "\"objective_mode\"",
+        "\"worst_case_across_models\"", "\"on_frontier\"", "\"paper_on_frontier\"",
+        "\"population\"", "\"mutation_rate\"",
+    ] {
+        assert!(js.contains(key), "artifact missing {key}");
+    }
+}

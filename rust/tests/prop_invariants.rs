@@ -7,7 +7,7 @@ use mozart::comm::A2aStats;
 use mozart::metrics::pareto;
 use mozart::prop_assert;
 use mozart::sim::{Plan, Simulator, Tag, TaskSpec};
-use mozart::testkit::forall;
+use mozart::testkit::{forall, objective_cloud};
 use mozart::trace::{Priors, RoutingTrace};
 use mozart::util::rng::Rng;
 
@@ -188,14 +188,8 @@ fn prop_pareto_frontier_sound_complete_idempotent() {
         let dims = 2 + rng.below(3);
         let n = 1 + rng.below(40);
         // discretized coordinates with a small jitter: plenty of dominance
-        // chains AND exact ties in the same point set
-        let points: Vec<Vec<f64>> = (0..n)
-            .map(|_| {
-                (0..dims)
-                    .map(|_| rng.below(8) as f64 + rng.f64() * 0.01)
-                    .collect()
-            })
-            .collect();
+        // chains and near-ties in the same point set
+        let points = objective_cloud(rng, n, dims);
         let frontier = pareto::pareto_frontier(&points);
         prop_assert!(!frontier.is_empty(), "frontier empty on {n} points");
         for &m in &frontier {
@@ -219,6 +213,102 @@ fn prop_pareto_frontier_sound_complete_idempotent() {
             pareto::pareto_frontier(&members).len() == members.len(),
             "frontier not idempotent"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_streaming_frontier_matches_batch_reduction() {
+    // the guided search's incremental archive (pareto::Frontier::insert)
+    // must end up exactly equal to the batch O(n^2) reduction over the same
+    // point set, whatever the insertion order or duplicate structure
+    forall("frontier-streaming", 60, |rng| {
+        let n = 1 + rng.below(50);
+        let dims = 2 + rng.below(3);
+        let mut points = objective_cloud(rng, n, dims);
+        if n >= 2 && rng.f64() < 0.3 {
+            points[1] = points[0].clone(); // exact duplicates survive in both
+        }
+        let mut f = pareto::Frontier::new();
+        for (i, p) in points.iter().enumerate() {
+            f.insert(i, p);
+        }
+        let batch = pareto::pareto_frontier(&points);
+        prop_assert!(
+            f.keys() == batch,
+            "streaming archive {:?} != batch frontier {:?}",
+            f.keys(),
+            batch
+        );
+        prop_assert!(f.len() == batch.len(), "archive size mismatch");
+        // every archive member is genuinely non-dominated
+        for (_, obj) in f.iter() {
+            prop_assert!(
+                points.iter().all(|p| !pareto::dominates(p, obj)),
+                "archive kept a dominated point"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_joint_frontier_respects_per_model_dominance() {
+    // the multi-model joint objective is the elementwise worst case (max)
+    // across per-model objective vectors. If candidate X dominates Y in
+    // EVERY per-model slice, then X is at least as good as Y jointly: Y may
+    // only survive on the joint frontier by tying X, never by beating it —
+    // i.e. the joint frontier never keeps a point it shouldn't.
+    forall("joint-frontier", 40, |rng| {
+        let n_models = 2 + rng.below(3);
+        let n = 2 + rng.below(25);
+        let dims = 3;
+        let per_model: Vec<Vec<Vec<f64>>> = (0..n_models)
+            .map(|_| objective_cloud(rng, n, dims))
+            .collect();
+        let joint: Vec<Vec<f64>> = (0..n)
+            .map(|i| {
+                (0..dims)
+                    .map(|d| {
+                        per_model
+                            .iter()
+                            .map(|m| m[i][d])
+                            .fold(f64::NEG_INFINITY, f64::max)
+                    })
+                    .collect()
+            })
+            .collect();
+        let joint_frontier = pareto::pareto_frontier(&joint);
+        prop_assert!(!joint_frontier.is_empty(), "joint frontier empty");
+        for x in 0..n {
+            for y in 0..n {
+                if x == y {
+                    continue;
+                }
+                let everywhere = per_model
+                    .iter()
+                    .all(|m| pareto::dominates(&m[x], &m[y]));
+                if !everywhere {
+                    continue;
+                }
+                // weak joint dominance: x no worse than y on every objective
+                prop_assert!(
+                    joint[x].iter().zip(joint[y].iter()).all(|(a, b)| a <= b),
+                    "per-model dominance did not carry to the joint objectives"
+                );
+                prop_assert!(
+                    !pareto::dominates(&joint[y], &joint[x]),
+                    "jointly, {y} dominates its per-model dominator {x}"
+                );
+                // and if the advantage survives the max, y is off the frontier
+                if pareto::dominates(&joint[x], &joint[y]) {
+                    prop_assert!(
+                        !joint_frontier.contains(&y),
+                        "joint frontier kept {y}, strictly dominated by {x}"
+                    );
+                }
+            }
+        }
         Ok(())
     });
 }
