@@ -1,17 +1,20 @@
-//! Guided design-space search: drive the evolutionary strategy over a
-//! hardware axis grid, jointly across several MoE models, and read the
-//! archive + convergence curve programmatically — the co-design loop of
-//! `mozart explore --strategy evolutionary --models all`, as library code.
+//! Guided design-space search: drive the constrained NSGA-II strategy over
+//! a hardware axis grid — with the Mozart ablation as a searchable gene —
+//! and read the archive + convergence curve programmatically: the co-design
+//! loop of `mozart explore --strategy evolutionary --methods all
+//! --max-area ...`, as library code.
 //!
 //! Like every walkthrough in this directory, this is reference code outside
 //! the cargo package (the equivalent CLI run is
 //! `cargo run --release -p mozart -- explore --strategy evolutionary
-//! --models all --population 8 --generations 6`); copy it into
-//! `rust/examples/` to build it as a cargo example target.
+//! --methods all --max-area 16000 --population 8 --generations 6`); copy it
+//! into `rust/examples/` to build it as a cargo example target.
 
 use mozart::config::{DramKind, Method, ModelId};
 use mozart::coordinator::explore::{parse_axes, ExploreConfig};
-use mozart::coordinator::search::{search_with, SearchConfig, SearchStrategy};
+use mozart::coordinator::search::{
+    search_with, Constraints, SearchConfig, SearchStrategy,
+};
 
 fn main() {
     // 1. the design space: tile count, NoP link bandwidth, and a
@@ -19,59 +22,69 @@ fn main() {
     //    DRAM-efficiency fit?)
     let axes = parse_axes("tiles,nop_bw,knob=dram_eff:0.6:0.95").expect("axes parse");
 
-    // 2. joint search across two models: a candidate's objectives are the
-    //    WORST CASE of latency / energy / area over all configured models,
-    //    so the frontier answers "which hardware is good for every model"
+    // 2. constrained NSGA-II with the method gene: each candidate is one
+    //    (hardware point, Mozart ablation) pair, the objectives are the
+    //    worst case across the configured models, and candidates whose
+    //    worst-case die area exceeds the budget never reach the frontier —
+    //    they are ranked behind every feasible candidate instead
     let cfg = SearchConfig {
-        explore: ExploreConfig {
-            axes,
-            budget: 0,
-            models: vec![ModelId::OlmoE_1B_7B, ModelId::DeepSeekMoE_16B],
-            methods: vec![Method::MozartC],
-            seq_len: 128,
-            dram: DramKind::Hbm2,
-            iters: 2,
-            seed: 7, // one seed: simulation AND strategy are reproducible
-            threads: 0,
+        constraints: Constraints {
+            max_area_mm2: Some(16_000.0),
+            max_power_w: None,
         },
-        strategy: SearchStrategy::Evolutionary {
-            population: 8,
-            generations: 6,
-            mutation_rate: 0.3,
-            seed: 7,
-        },
+        method_gene: true, // --methods all: "which ablation on which platform"
+        ..SearchConfig::new(
+            ExploreConfig {
+                axes,
+                budget: 0,
+                models: vec![ModelId::OlmoE_1B_7B, ModelId::DeepSeekMoE_16B],
+                methods: Method::ALL.to_vec(),
+                seq_len: 128,
+                dram: DramKind::Hbm2,
+                iters: 2,
+                seed: 7, // one seed: simulation AND strategy are reproducible
+                threads: 0,
+            },
+            SearchStrategy::Evolutionary {
+                population: 8,
+                generations: 6,
+                crossover_rate: 0.9, // 0.0 = mutation-only offspring
+                mutation_rate: 0.3,
+                seed: 7,
+            },
+        )
     };
 
-    // 3. run with live per-generation progress (archive size + hypervolume
-    //    proxy — a flattening curve means the search has converged)
-    let outcome = search_with(&cfg, |s| {
-        println!(
-            "gen {:>2}: {:>4} candidates evaluated, archive {:>3}, hypervolume {:.4}",
-            s.generation, s.evaluations, s.archive_size, s.hypervolume
-        );
-    });
+    // 3. run with live per-generation progress (feasible count, archive
+    //    size, hypervolume proxy — a flattening curve means convergence)
+    let outcome = search_with(&cfg, |s| println!("{}", s.render()));
 
-    // 4. the rendered report: axes, joint frontier table, scatter, verdict
+    // 4. the rendered report: axes, constraints + feasibility, the joint
+    //    frontier table, scatter ('x' marks infeasible points), verdict
     println!("\n{}", outcome.render_markdown());
 
-    // 5. programmatic access: archive members and the anchor verdict
+    // 5. programmatic access: every frontier member is feasible by
+    //    construction and names its method gene
     for &ci in &outcome.archive {
         let j = &outcome.joint[ci];
+        assert!(outcome.is_feasible(ci));
         println!(
-            "frontier candidate `{}`: worst-case {:.3} s, {:.0} J/step, {:.0} mm^2",
-            outcome.candidates[ci].label, j.latency_s, j.energy_j, j.area_mm2
+            "frontier candidate `{}`: worst-case {:.3} s, {:.0} J/step, {:.0} mm^2, {:.0} W",
+            outcome.candidates[ci].label, j.latency_s, j.energy_j, j.area_mm2, j.power_w
         );
     }
     println!(
-        "paper anchor {} the joint frontier",
-        if outcome.paper_dominators.is_empty() {
+        "{} of {} candidates feasible; paper anchor {} the joint frontier",
+        outcome.n_feasible(),
+        outcome.candidates.len(),
+        if outcome.archive.contains(&0) {
             "is ON"
         } else {
-            "is dominated off"
+            "is off"
         }
     );
 
-    // 6. the EXPLORE_*.json artifact (with the `search` section) is one
+    // 6. the EXPLORE_*.json artifact (with `search.feasibility`) is one
     //    call away
     let json = outcome.to_json().render_pretty();
     println!("\nartifact: {} bytes of EXPLORE_*.json", json.len());

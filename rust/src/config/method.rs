@@ -52,6 +52,32 @@ impl Method {
         }
     }
 
+    /// Parse a comma-separated method list or `all` (case-insensitive,
+    /// duplicates collapsed, order preserved) — the single source for the
+    /// CLI `--methods` spelling that makes the method a searchable gene
+    /// (`mozart explore --methods baseline,a,b,c|all`).
+    pub fn parse_list(s: &str) -> Result<Vec<Method>, String> {
+        if s.trim().eq_ignore_ascii_case("all") {
+            return Ok(Method::ALL.to_vec());
+        }
+        let mut out: Vec<Method> = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let m = Method::from_name(part)
+                .ok_or_else(|| format!("unknown method `{part}` (baseline|a|b|c|all)"))?;
+            if !out.contains(&m) {
+                out.push(m);
+            }
+        }
+        if out.is_empty() {
+            return Err("no methods given".to_string());
+        }
+        Ok(out)
+    }
+
     /// The feature-toggle configuration of this preset.
     pub fn config(&self) -> MethodConfig {
         match self {
@@ -153,5 +179,28 @@ mod tests {
         }
         assert_eq!(Method::from_name("b"), Some(Method::MozartB));
         assert_eq!(Method::from_name("nope"), None);
+    }
+
+    #[test]
+    fn parse_list_spellings() {
+        assert_eq!(Method::parse_list("all").unwrap(), Method::ALL.to_vec());
+        assert_eq!(Method::parse_list("ALL").unwrap(), Method::ALL.to_vec());
+        assert_eq!(
+            Method::parse_list("baseline, c").unwrap(),
+            vec![Method::Baseline, Method::MozartC]
+        );
+        assert_eq!(
+            Method::parse_list("c,Mozart-C,c").unwrap(),
+            vec![Method::MozartC],
+            "duplicates collapse"
+        );
+        assert_eq!(
+            Method::parse_list("b,a").unwrap(),
+            vec![Method::MozartB, Method::MozartA],
+            "order preserved"
+        );
+        assert!(Method::parse_list("").is_err());
+        assert!(Method::parse_list(",,").is_err());
+        assert!(Method::parse_list("a,bogus").is_err());
     }
 }

@@ -333,6 +333,10 @@ pub struct ExplorePoint {
     pub area_mm2: f64,
     /// Typical platform power (kW, `arch::area` model) — reported only.
     pub power_kw: f64,
+    /// Simulated mean power over the step (W, total step energy over the
+    /// makespan; `metrics::energy::EnergyBreakdown::mean_power_w`) — the
+    /// per-configuration draw the search's `--max-power` budget caps.
+    pub mean_power_w: f64,
     /// Mean all-to-all replication factor — reported only.
     pub c_t: f64,
 }
@@ -419,6 +423,7 @@ pub(crate) fn eval_point(
         energy_j: r.energy.total_j(),
         area_mm2: m.total_area_mm2,
         power_kw: m.total_power_kw,
+        mean_power_w: r.energy.mean_power_w(r.latency),
         c_t: r.c_t,
     }
 }
@@ -707,6 +712,7 @@ impl ExploreOutcome {
                         ("energy_j_per_step", Json::num(p.energy_j)),
                         ("area_mm2", Json::num(p.area_mm2)),
                         ("power_kw", Json::num(p.power_kw)),
+                        ("mean_power_w", Json::num(p.mean_power_w)),
                         ("c_t", Json::num(p.c_t)),
                         ("on_frontier", Json::Bool(on_frontier[i])),
                     ])

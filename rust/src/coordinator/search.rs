@@ -2,18 +2,45 @@
 //!
 //! PR 3's explorer enumerates a declarative axis grid exhaustively. This
 //! module turns the same cell-evaluation path into a *search*: a
-//! [`SearchStrategy`] proposes hardware candidates over the axis value sets,
-//! each candidate is evaluated through the explorer's shared cell path on
-//! the work-stealing pool ([`parallel_map`]), and an incremental Pareto archive
+//! [`SearchStrategy`] proposes candidates over the gene space (the axis
+//! value sets, plus — in co-design mode — the Mozart method itself), each
+//! candidate is evaluated through the explorer's shared cell path on the
+//! work-stealing pool ([`parallel_map`]), and an incremental Pareto archive
 //! ([`pareto::Frontier`]) tracks the non-dominated set in `O(n)` per point
 //! instead of re-reducing the whole cloud per generation.
+//!
+//! **NSGA-II evolutionary strategy.** [`SearchStrategy::Evolutionary`] is a
+//! full NSGA-II-style loop: binary-tournament parent selection under the
+//! constrained-crowded-comparison operator, uniform crossover over the
+//! discrete genomes, per-gene mutation, and environmental selection by
+//! non-dominated-sort rank + crowding distance
+//! ([`pareto::constrained_selection_order`]). All of it is seeded and
+//! bit-reproducible.
+//!
+//! **Hard constraints.** [`Constraints`] caps the worst-case die area
+//! (`--max-area`, mm²) and the worst-case simulated mean power
+//! (`--max-power`, W). Infeasible candidates are evaluated and recorded but
+//! never enter the frontier archive, and the selection ranks every feasible
+//! candidate ahead of every infeasible one (infeasible by ascending
+//! violation), so area/power budgets are hard caps rather than soft
+//! penalties. Feasibility counts land in the artifact's
+//! `search.feasibility` section.
+//!
+//! **The method gene.** With `method_gene` set (`--methods
+//! baseline,a,b,c|all`), each candidate carries one Mozart ablation as a
+//! trailing gene, so the frontier answers the paper's co-design question
+//! directly: *which ablation on which platform*. The anchor (candidate 0)
+//! is then the paper platform running its deployed method (Mozart-C when
+//! configured, otherwise the last listed method). Without the gene, every
+//! candidate is evaluated on all configured methods and the objectives take
+//! the worst case across them, as in PR 4.
 //!
 //! **Joint frontiers.** The paper tunes the platform per model; the search
 //! answers the harder co-design question "which hardware is good for *every*
 //! model". A candidate's objectives are the **worst case** (maximum, since
 //! all objectives are minimized) of latency / energy / area across every
-//! configured (model × method) cell, with all per-cell values recorded. With
-//! one model the joint frontier degenerates to that model's frontier.
+//! configured cell, with all per-cell values recorded. With one model the
+//! joint frontier degenerates to that model's frontier.
 //!
 //! **Determinism.** All strategy randomness comes from one seeded
 //! [`Rng`] driven on the coordinating thread; candidate evaluation derives
@@ -28,7 +55,7 @@
 
 use std::collections::BTreeSet;
 
-use crate::config::{HwConfig, HwOverride};
+use crate::config::{HwConfig, HwOverride, Method};
 use crate::coordinator::explore::{self, Axis, ExploreConfig, ExplorePoint};
 use crate::coordinator::sweep::{parallel_map, SweepOptions};
 use crate::metrics::pareto;
@@ -36,7 +63,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::table::{scatter_plot, Table};
 
-/// How the search proposes hardware candidates over the axis grid.
+/// How the search proposes candidates over the gene space.
 ///
 /// # Examples
 ///
@@ -62,10 +89,7 @@ use crate::util::table::{scatter_plot, Table};
 ///     seed: 7,
 ///     threads: 1,
 /// };
-/// let cfg = SearchConfig {
-///     explore,
-///     strategy: SearchStrategy::Random { samples: 2, seed: 7 },
-/// };
+/// let cfg = SearchConfig::new(explore, SearchStrategy::Random { samples: 2, seed: 7 });
 /// let a = search(&cfg);
 /// let b = search(&cfg);
 /// assert_eq!(a.archive, b.archive); // deterministic for a fixed seed
@@ -74,11 +98,12 @@ use crate::util::table::{scatter_plot, Table};
 /// ```
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SearchStrategy {
-    /// Enumerate the full axis product (subject to the explore config's
-    /// `budget` even-stride subsample) — the PR-3 grid semantics, now fed
-    /// through the streaming archive.
+    /// Enumerate the full gene product — the hardware grid (subject to the
+    /// explore config's `budget` even-stride subsample), crossed with every
+    /// configured method when the method gene is active — fed through the
+    /// streaming archive in PR-3 grid order.
     Exhaustive,
-    /// Uniform seeded sampling of the axis product: `samples` proposals,
+    /// Uniform seeded sampling of the gene product: `samples` proposals,
     /// de-duplicated, evaluated in one generation.
     Random {
         /// Number of candidate proposals (duplicates are evaluated once).
@@ -86,16 +111,28 @@ pub enum SearchStrategy {
         /// Strategy RNG seed (independent of the simulation seed).
         seed: u64,
     },
-    /// (μ+λ)-style evolutionary search: a seeded random initial population,
-    /// then per generation every offspring is a mutated copy of a uniformly
-    /// chosen *archive* member (elitist parent pool; mutation resamples each
-    /// gene with probability `mutation_rate`, forcing at least one gene to
-    /// move). Already-evaluated genomes are never re-simulated.
+    /// NSGA-II-style evolutionary search: a seeded random initial
+    /// population, then per generation binary-tournament parent selection
+    /// under the constrained-crowded-comparison operator
+    /// ([`pareto::constrained_selection_order`]), uniform crossover with
+    /// probability `crossover_rate` (otherwise the first parent is cloned),
+    /// per-gene mutation (each gene resamples with probability
+    /// `mutation_rate`, forcing at least one gene to move), and
+    /// environmental selection of the next population by non-dominated-sort
+    /// rank + crowding distance, feasible candidates always ahead of
+    /// infeasible ones. Already-evaluated genomes are never re-simulated.
     Evolutionary {
-        /// Proposals per generation.
+        /// Offspring proposals per generation (and the population size kept
+        /// by environmental selection).
         population: usize,
         /// Number of generations (the initial population is generation 1).
         generations: usize,
+        /// Probability in `[0, 1]` that an offspring is produced by uniform
+        /// crossover of two tournament-selected parents (0 disables
+        /// crossover: offspring are mutated copies of one parent; selection
+        /// is still NSGA-II, so this does not reproduce the old (μ+λ)
+        /// archive-parent trajectories).
+        crossover_rate: f64,
         /// Per-gene mutation probability in `[0, 1]`.
         mutation_rate: f64,
         /// Strategy RNG seed (independent of the simulation seed).
@@ -123,41 +160,126 @@ impl SearchStrategy {
             SearchStrategy::Evolutionary {
                 population,
                 generations,
+                crossover_rate,
                 mutation_rate,
                 seed,
             } => format!(
-                "evolutionary (population={population}, generations={generations}, \
+                "evolutionary/NSGA-II (population={population}, \
+                 generations={generations}, crossover_rate={crossover_rate}, \
                  mutation_rate={mutation_rate}, seed={seed})"
             ),
         }
     }
 }
 
+/// Hard design-envelope constraints on the joint (worst-case) objectives.
+/// A candidate is *feasible* iff it violates none of the set caps;
+/// infeasible candidates never enter the frontier archive and are ranked
+/// behind every feasible candidate by the NSGA-II selection.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Constraints {
+    /// Cap on the worst-case total die area (mm², `--max-area`).
+    pub max_area_mm2: Option<f64>,
+    /// Cap on the worst-case simulated mean power draw (W, `--max-power`;
+    /// `metrics::energy::EnergyBreakdown::mean_power_w`).
+    pub max_power_w: Option<f64>,
+}
+
+impl Constraints {
+    /// No caps: every candidate is feasible.
+    pub fn none() -> Constraints {
+        Constraints::default()
+    }
+
+    /// Whether any cap is set.
+    pub fn any(&self) -> bool {
+        self.max_area_mm2.is_some() || self.max_power_w.is_some()
+    }
+
+    /// Total normalized violation of the caps: the sum over set caps of the
+    /// relative excess `max(0, value/cap - 1)`. Exactly `0.0` iff feasible;
+    /// larger is worse (the NSGA-II selection orders infeasible candidates
+    /// by this value).
+    pub fn violation(&self, area_mm2: f64, power_w: f64) -> f64 {
+        let mut v = 0.0;
+        if let Some(cap) = self.max_area_mm2 {
+            v += (area_mm2 / cap - 1.0).max(0.0);
+        }
+        if let Some(cap) = self.max_power_w {
+            v += (power_w / cap - 1.0).max(0.0);
+        }
+        v
+    }
+
+    /// Whether a (area, power) point satisfies every set cap.
+    pub fn feasible(&self, area_mm2: f64, power_w: f64) -> bool {
+        self.violation(area_mm2, power_w) == 0.0
+    }
+
+    /// Human-readable cap list, e.g. `area <= 900 mm^2, power <= 12000 W`;
+    /// empty when no cap is set.
+    pub fn describe(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some(cap) = self.max_area_mm2 {
+            parts.push(format!("area <= {cap} mm^2"));
+        }
+        if let Some(cap) = self.max_power_w {
+            parts.push(format!("power <= {cap} W"));
+        }
+        parts.join(", ")
+    }
+}
+
 /// Full specification of one guided search run: the design space and
-/// workload (reusing [`ExploreConfig`]) plus the proposal strategy.
+/// workload (reusing [`ExploreConfig`]), the proposal strategy, the hard
+/// [`Constraints`], and whether the Mozart method is a searchable gene.
 #[derive(Clone, Debug)]
 pub struct SearchConfig {
     /// Axes, models, methods, workload, simulation seed, and thread count.
-    /// `budget` caps the grid only under [`SearchStrategy::Exhaustive`].
+    /// `budget` caps the hardware grid only under
+    /// [`SearchStrategy::Exhaustive`].
     pub explore: ExploreConfig,
     /// Candidate-proposal strategy.
     pub strategy: SearchStrategy,
+    /// Hard area/power caps on the joint objectives (default: none).
+    pub constraints: Constraints,
+    /// When set, each candidate carries one of `explore.methods` as a
+    /// trailing gene (`--methods ...`) instead of being evaluated on all of
+    /// them, so the frontier answers "which ablation on which platform".
+    pub method_gene: bool,
 }
 
-/// One proposed hardware candidate (candidate 0 is always the paper anchor).
+impl SearchConfig {
+    /// An unconstrained search without the method gene — the PR-4 semantics.
+    pub fn new(explore: ExploreConfig, strategy: SearchStrategy) -> SearchConfig {
+        SearchConfig {
+            explore,
+            strategy,
+            constraints: Constraints::none(),
+            method_gene: false,
+        }
+    }
+}
+
+/// One proposed candidate (candidate 0 is always the paper anchor).
 #[derive(Clone, Debug)]
 pub struct Candidate {
     /// Overrides applied on top of the per-model paper platform; empty for
     /// the anchor.
     pub overrides: Vec<HwOverride>,
-    /// Display label (`"paper (Table 2)"` or `"tiles=36 dram=SSD"` style).
+    /// The method gene: `Some(m)` when this candidate is evaluated on one
+    /// specific method (co-design mode); `None` when it is evaluated on
+    /// every configured method (worst-case mode).
+    pub method: Option<Method>,
+    /// Display label (`"paper (Table 2)"` or `"tiles=36 dram=SSD
+    /// method=Mozart-B"` style).
     pub label: String,
-    /// Per-axis value indices the strategy proposed; `None` for the anchor,
+    /// Per-gene value indices the strategy proposed; `None` for the anchor,
     /// which is not a grid point.
     pub genome: Option<Vec<usize>>,
 }
 
-/// A candidate's joint (worst-case across models) objectives.
+/// A candidate's joint (worst-case across its cells) objectives.
 #[derive(Clone, Debug)]
 pub struct JointPoint {
     /// Index into [`SearchOutcome::candidates`].
@@ -168,6 +290,9 @@ pub struct JointPoint {
     pub energy_j: f64,
     /// Worst die area across all evaluated cells (mm²) — minimized.
     pub area_mm2: f64,
+    /// Worst simulated mean power across all evaluated cells (W) —
+    /// constrained by `--max-power`, not an objective.
+    pub power_w: f64,
     /// Indices of this candidate's per-(model × method) cells in
     /// [`SearchOutcome::cells`].
     pub cells: Vec<usize>,
@@ -187,7 +312,10 @@ pub struct GenStat {
     pub generation: usize,
     /// Cumulative unique candidates evaluated so far (incl. the anchor).
     pub evaluations: usize,
-    /// Archive size after this generation.
+    /// Cumulative candidates satisfying the constraints (== `evaluations`
+    /// for an unconstrained search).
+    pub feasible: usize,
+    /// Archive size after this generation (feasible non-dominated set).
     pub archive_size: usize,
     /// Hypervolume proxy of the archive vs the fixed reference point.
     pub hypervolume: f64,
@@ -198,8 +326,10 @@ impl GenStat {
     /// and the report's convergence section so the two never drift.
     pub fn render(&self) -> String {
         format!(
-            "gen {:>2}: {:>4} candidates evaluated, archive {:>3}, hypervolume {:.4}",
-            self.generation, self.evaluations, self.archive_size, self.hypervolume
+            "gen {:>2}: {:>4} candidates evaluated ({} feasible), archive {:>3}, \
+             hypervolume {:.4}",
+            self.generation, self.evaluations, self.feasible, self.archive_size,
+            self.hypervolume
         )
     }
 }
@@ -216,10 +346,12 @@ pub struct SearchOutcome {
     pub cells: Vec<ExplorePoint>,
     /// Joint worst-case objectives, aligned with `candidates`.
     pub joint: Vec<JointPoint>,
-    /// Candidate indices on the joint Pareto frontier, sorted ascending.
+    /// Candidate indices on the joint Pareto frontier of the *feasible*
+    /// candidates, sorted ascending (with no constraints set, of all
+    /// candidates).
     pub archive: Vec<usize>,
-    /// Candidate indices that jointly dominate the paper anchor; empty iff
-    /// the anchor is itself on the joint frontier.
+    /// Candidate indices that jointly dominate the paper anchor (feasible
+    /// or not); empty iff the anchor is non-dominated.
     pub paper_dominators: Vec<usize>,
     /// Per-generation convergence curve.
     pub convergence: Vec<GenStat>,
@@ -227,17 +359,65 @@ pub struct SearchOutcome {
     pub hypervolume_ref: Vec<f64>,
 }
 
+/// The discrete gene space of one search: one gene per hardware axis, plus
+/// a trailing method gene in co-design mode.
+struct GenomeSpace<'a> {
+    axes: &'a [Axis],
+    /// `Some(methods)` when the method is a searchable gene.
+    methods: Option<&'a [Method]>,
+    /// Cardinality of each gene position.
+    card: Vec<usize>,
+}
+
+impl<'a> GenomeSpace<'a> {
+    fn new(axes: &'a [Axis], methods: Option<&'a [Method]>) -> GenomeSpace<'a> {
+        let mut card: Vec<usize> = axes.iter().map(|a| a.values.len()).collect();
+        if let Some(ms) = methods {
+            card.push(ms.len());
+        }
+        GenomeSpace { axes, methods, card }
+    }
+
+    /// Decode a genome into hardware overrides and (in co-design mode) the
+    /// candidate's method.
+    fn decode(&self, g: &[usize]) -> (Vec<HwOverride>, Option<Method>) {
+        let overrides: Vec<HwOverride> = self
+            .axes
+            .iter()
+            .zip(g.iter())
+            .map(|(a, &i)| a.values[i])
+            .collect();
+        let method = self.methods.map(|ms| ms[g[self.axes.len()]]);
+        (overrides, method)
+    }
+}
+
+/// The anchor's method in co-design mode: the paper deploys the full system
+/// (Mozart-C) on its Table 2 platform, so that is the reference whenever it
+/// is configured; otherwise the last (most-featured) listed method.
+fn preferred_method(methods: &[Method]) -> Method {
+    if methods.contains(&Method::MozartC) {
+        Method::MozartC
+    } else {
+        *methods.last().expect("at least one method configured")
+    }
+}
+
 /// Evaluate a batch of fresh candidates over the work-stealing pool and fold
 /// them into the outcome state. Cells are appended candidate-major (models
-/// outer, methods inner), so a candidate's cells are contiguous.
+/// outer, methods inner), so a candidate's cells are contiguous. Only
+/// feasible candidates enter the frontier archive.
 ///
-/// A candidate whose overrides are a no-op for one model would simulate a
-/// cell bit-identical to the anchor's (identical `ExperimentConfig`), so
-/// that cell reuses candidate 0's result instead of re-running the
-/// discrete-event simulation — the search-side mirror of the per-model
-/// anchor-duplicate skip in [`explore::explore`].
+/// A candidate whose overrides are a no-op for one model — and whose method
+/// gene matches the anchor's — would simulate a cell bit-identical to the
+/// anchor's (identical `ExperimentConfig`), so that cell reuses candidate
+/// 0's result instead of re-running the discrete-event simulation — the
+/// search-side mirror of the per-model anchor-duplicate skip in
+/// [`explore::explore`].
+#[allow(clippy::too_many_arguments)]
 fn eval_batch(
     ex: &ExploreConfig,
+    constraints: Constraints,
     bases: &[HwConfig],
     batch: Vec<Candidate>,
     candidates: &mut Vec<Candidate>,
@@ -250,87 +430,107 @@ fn eval_batch(
     }
     let first = candidates.len();
     let n_models = ex.models.len();
-    let n_methods = ex.methods.len();
-    // which (candidate, model) pairs can reuse the anchor's cells (none
-    // while evaluating the anchor batch itself)
+    let methods_of = |c: &Candidate| -> Vec<Method> {
+        match c.method {
+            Some(m) => vec![m],
+            None => ex.methods.clone(),
+        }
+    };
+    // which (candidate, model) pairs can reuse the anchor's cells: same
+    // method set as the anchor and hardware that is a no-op for that model
+    // (none while evaluating the anchor batch itself)
+    let anchor_cand_method = candidates.first().map(|c| c.method);
     let mut reuse = vec![false; batch.len() * n_models];
-    if first > 0 {
+    if let Some(am) = anchor_cand_method {
         for (off, cand) in batch.iter().enumerate() {
+            if cand.method != am {
+                continue;
+            }
             for mi in 0..n_models {
                 reuse[off * n_models + mi] =
                     explore::is_anchor_combo(&cand.overrides, &bases[mi]);
             }
         }
     }
-    let mut specs: Vec<(usize, usize, usize)> = Vec::new();
-    for off in 0..batch.len() {
+    let mut specs: Vec<(usize, usize, Method)> = Vec::new();
+    for (off, cand) in batch.iter().enumerate() {
         for mi in 0..n_models {
             if reuse[off * n_models + mi] {
                 continue;
             }
-            for ki in 0..n_methods {
-                specs.push((off, mi, ki));
+            for m in methods_of(cand) {
+                specs.push((off, mi, m));
             }
         }
     }
     let threads = SweepOptions { threads: ex.threads }.effective_threads(specs.len());
-    let pts = parallel_map(&specs, threads, |&(off, mi, ki)| {
-        explore::eval_point(
-            ex,
-            &batch[off].overrides,
-            first + off,
-            ex.models[mi],
-            ex.methods[ki],
-        )
+    let pts = parallel_map(&specs, threads, |&(off, mi, m)| {
+        explore::eval_point(ex, &batch[off].overrides, first + off, ex.models[mi], m)
     });
 
     let mut fresh = pts.into_iter();
     for (off, cand) in batch.into_iter().enumerate() {
         let ci = first + off;
+        let methods = methods_of(&cand);
+        let mut cand_pts: Vec<ExplorePoint> = Vec::with_capacity(n_models * methods.len());
+        for mi in 0..n_models {
+            if reuse[off * n_models + mi] {
+                for ki in 0..methods.len() {
+                    // the anchor's cells sit at the head of `cells` in the
+                    // same (model-major, method-minor) order and — because
+                    // the method sets match — the same width
+                    let mut anchor_cell = cells[mi * methods.len() + ki].clone();
+                    anchor_cell.variant = ci;
+                    cand_pts.push(anchor_cell);
+                }
+            } else {
+                for _ in 0..methods.len() {
+                    cand_pts.push(fresh.next().expect("one simulated point per spec"));
+                }
+            }
+        }
         let mut latency_s = 0.0f64;
         let mut energy_j = 0.0f64;
         let mut area_mm2 = 0.0f64;
-        let mut cell_idx = Vec::with_capacity(n_models * n_methods);
-        for mi in 0..n_models {
-            for ki in 0..n_methods {
-                let p = if reuse[off * n_models + mi] {
-                    // the anchor's cells sit at the head of `cells` in the
-                    // same (model-major, method-minor) order
-                    let mut anchor_cell = cells[mi * n_methods + ki].clone();
-                    anchor_cell.variant = ci;
-                    anchor_cell
-                } else {
-                    fresh.next().expect("one simulated point per spec")
-                };
-                latency_s = latency_s.max(p.latency_s);
-                energy_j = energy_j.max(p.energy_j);
-                area_mm2 = area_mm2.max(p.area_mm2);
-                cell_idx.push(cells.len());
-                cells.push(p);
-            }
+        let mut power_w = 0.0f64;
+        let mut cell_idx = Vec::with_capacity(cand_pts.len());
+        for p in cand_pts {
+            latency_s = latency_s.max(p.latency_s);
+            energy_j = energy_j.max(p.energy_j);
+            area_mm2 = area_mm2.max(p.area_mm2);
+            power_w = power_w.max(p.mean_power_w);
+            cell_idx.push(cells.len());
+            cells.push(p);
         }
         let jp = JointPoint {
             candidate: ci,
             latency_s,
             energy_j,
             area_mm2,
+            power_w,
             cells: cell_idx,
         };
-        archive.insert(ci, &jp.objectives());
+        // hard caps: infeasible candidates are recorded but never pollute
+        // the frontier archive
+        if constraints.feasible(jp.area_mm2, jp.power_w) {
+            archive.insert(ci, &jp.objectives());
+        }
         joint.push(jp);
         candidates.push(cand);
     }
 }
 
 /// Turn proposed genomes into fresh [`Candidate`]s: drops genomes already
-/// seen and combos that re-describe the paper anchor for every configured
-/// model (the anchor is candidate 0 already). Every inspected genome —
-/// including dropped ones — is registered in `seen`, so a re-proposal skips
-/// the override rebuild and anchor check next time.
+/// seen and combos that re-describe the paper anchor (same method gene, and
+/// hardware that is a no-op for every configured model — the anchor is
+/// candidate 0 already). Every inspected genome — including dropped ones —
+/// is registered in `seen`, so a re-proposal skips the rebuild and anchor
+/// check next time.
 fn fresh_candidates(
-    axes: &[Axis],
+    space: &GenomeSpace,
     genomes: Vec<Vec<usize>>,
     bases: &[HwConfig],
+    anchor_method: Option<Method>,
     seen: &mut BTreeSet<Vec<usize>>,
 ) -> Vec<Candidate> {
     let mut out: Vec<Candidate> = Vec::new();
@@ -339,21 +539,26 @@ fn fresh_candidates(
             continue;
         }
         seen.insert(g.clone());
-        let overrides: Vec<HwOverride> = axes
-            .iter()
-            .zip(g.iter())
-            .map(|(a, &i)| a.values[i])
-            .collect();
-        if bases.iter().all(|b| explore::is_anchor_combo(&overrides, b)) {
+        let (overrides, method) = space.decode(&g);
+        if method == anchor_method
+            && bases.iter().all(|b| explore::is_anchor_combo(&overrides, b))
+        {
             continue;
         }
-        let label = overrides
+        let mut label = overrides
             .iter()
             .map(|o| o.label())
             .collect::<Vec<_>>()
             .join(" ");
+        if let Some(m) = method {
+            if !label.is_empty() {
+                label.push(' ');
+            }
+            label.push_str(&format!("method={}", m.name()));
+        }
         out.push(Candidate {
             overrides,
+            method,
             label,
             genome: Some(g),
         });
@@ -361,9 +566,9 @@ fn fresh_candidates(
     out
 }
 
-/// One uniformly random genome.
-fn random_genome(axes: &[Axis], rng: &mut Rng) -> Vec<usize> {
-    axes.iter().map(|a| rng.below(a.values.len())).collect()
+/// One uniformly random genome over the gene cardinalities.
+fn random_genome(card: &[usize], rng: &mut Rng) -> Vec<usize> {
+    card.iter().map(|&n| rng.below(n)).collect()
 }
 
 /// Resample an index in `[0, n)` different from `cur` (requires `n > 1`).
@@ -376,31 +581,74 @@ fn resample_different(n: usize, cur: usize, rng: &mut Rng) -> usize {
     }
 }
 
-/// Mutate a genome: each gene moves to a different value of its axis with
-/// probability `rate`; if nothing moved, one mutable gene is forced to move
-/// so offspring always explore (when any axis has more than one value).
-fn mutate(axes: &[Axis], genome: &[usize], rate: f64, rng: &mut Rng) -> Vec<usize> {
+/// Mutate a genome: each gene moves to a different value of its position
+/// with probability `rate`; if nothing moved, one mutable gene is forced to
+/// move so offspring always explore (when any position has more than one
+/// value).
+fn mutate(card: &[usize], genome: &[usize], rate: f64, rng: &mut Rng) -> Vec<usize> {
     let mut g = genome.to_vec();
     let mut changed = false;
-    for (i, a) in axes.iter().enumerate() {
-        if a.values.len() > 1 && rng.f64() < rate {
-            g[i] = resample_different(a.values.len(), g[i], rng);
+    for (i, &n) in card.iter().enumerate() {
+        if n > 1 && rng.f64() < rate {
+            g[i] = resample_different(n, g[i], rng);
             changed = true;
         }
     }
     if !changed {
-        let mutable: Vec<usize> = axes
+        let mutable: Vec<usize> = card
             .iter()
             .enumerate()
-            .filter(|(_, a)| a.values.len() > 1)
+            .filter(|(_, &n)| n > 1)
             .map(|(i, _)| i)
             .collect();
         if !mutable.is_empty() {
             let i = mutable[rng.below(mutable.len())];
-            g[i] = resample_different(axes[i].values.len(), g[i], rng);
+            g[i] = resample_different(card[i], g[i], rng);
         }
     }
     g
+}
+
+/// Uniform crossover: each gene is taken from either parent with equal
+/// probability.
+fn uniform_crossover(a: &[usize], b: &[usize], rng: &mut Rng) -> Vec<usize> {
+    debug_assert_eq!(a.len(), b.len(), "parent genome arity mismatch");
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| if rng.f64() < 0.5 { x } else { y })
+        .collect()
+}
+
+/// Best-first NSGA-II selection order over the candidate indices in `pool`
+/// (returned as positions into `pool`): feasible candidates by
+/// non-dominated-sort rank then crowding distance, infeasible candidates
+/// behind them by ascending violation.
+fn selection_order(
+    pool: &[usize],
+    joint: &[JointPoint],
+    constraints: Constraints,
+) -> Vec<usize> {
+    let objs: Vec<Vec<f64>> = pool.iter().map(|&ci| joint[ci].objectives()).collect();
+    let viol: Vec<f64> = pool
+        .iter()
+        .map(|&ci| constraints.violation(joint[ci].area_mm2, joint[ci].power_w))
+        .collect();
+    pareto::constrained_selection_order(&objs, &viol)
+}
+
+/// NSGA-II environmental selection: the best `n` of `pool` under the
+/// constrained-crowded-comparison order, best-first.
+fn environmental_select(
+    pool: &[usize],
+    n: usize,
+    joint: &[JointPoint],
+    constraints: Constraints,
+) -> Vec<usize> {
+    selection_order(pool, joint, constraints)
+        .into_iter()
+        .take(n)
+        .map(|pos| pool[pos])
+        .collect()
 }
 
 /// Run a guided search (see [`search_with`] for the progress-callback form).
@@ -416,12 +664,25 @@ pub fn search_with(
     mut on_generation: impl FnMut(&GenStat),
 ) -> SearchOutcome {
     let ex = &cfg.explore;
-    let axes = &ex.axes;
+    let space = GenomeSpace::new(
+        &ex.axes,
+        if cfg.method_gene {
+            Some(ex.methods.as_slice())
+        } else {
+            None
+        },
+    );
     let bases: Vec<HwConfig> = ex
         .models
         .iter()
         .map(|&m| HwConfig::paper_for_model(m, ex.dram))
         .collect();
+    let anchor_method = if cfg.method_gene {
+        Some(preferred_method(&ex.methods))
+    } else {
+        None
+    };
+    let constraints = cfg.constraints;
 
     let mut candidates: Vec<Candidate> = Vec::new();
     let mut cells: Vec<ExplorePoint> = Vec::new();
@@ -430,14 +691,19 @@ pub fn search_with(
     let mut seen: BTreeSet<Vec<usize>> = BTreeSet::new();
     let mut convergence: Vec<GenStat> = Vec::new();
 
-    // the paper anchor is always candidate 0 and seeds both the archive and
-    // the hypervolume reference point
+    // the paper anchor is always candidate 0 and seeds the hypervolume
+    // reference point (and, when feasible, the archive)
     eval_batch(
         ex,
+        constraints,
         &bases,
         vec![Candidate {
             overrides: Vec::new(),
-            label: "paper (Table 2)".to_string(),
+            method: anchor_method,
+            label: match anchor_method {
+                None => "paper (Table 2)".to_string(),
+                Some(m) => format!("paper (Table 2) method={}", m.name()),
+            },
             genome: None,
         }],
         &mut candidates,
@@ -457,11 +723,16 @@ pub fn search_with(
                               archive: &mut pareto::Frontier,
                               seen: &mut BTreeSet<Vec<usize>>,
                               convergence: &mut Vec<GenStat>| {
-        let batch = fresh_candidates(axes, genomes, &bases, seen);
-        eval_batch(ex, &bases, batch, candidates, cells, joint, archive);
+        let batch = fresh_candidates(&space, genomes, &bases, anchor_method, seen);
+        eval_batch(ex, constraints, &bases, batch, candidates, cells, joint, archive);
+        let feasible = joint
+            .iter()
+            .filter(|j| constraints.feasible(j.area_mm2, j.power_w))
+            .count();
         let stat = GenStat {
             generation,
             evaluations: candidates.len(),
+            feasible,
             archive_size: archive.len(),
             hypervolume: archive.hypervolume_proxy(&hypervolume_ref),
         };
@@ -471,9 +742,22 @@ pub fn search_with(
 
     match cfg.strategy {
         SearchStrategy::Exhaustive => {
+            let mut genomes = explore::grid_genomes(&ex.axes, ex.budget);
+            if cfg.method_gene {
+                // the hardware grid (budget-capped) crossed with every
+                // configured method
+                let hw = std::mem::take(&mut genomes);
+                for g in &hw {
+                    for ki in 0..ex.methods.len() {
+                        let mut w = g.clone();
+                        w.push(ki);
+                        genomes.push(w);
+                    }
+                }
+            }
             run_generation(
                 1,
-                explore::grid_genomes(axes, ex.budget),
+                genomes,
                 &mut candidates,
                 &mut cells,
                 &mut joint,
@@ -484,8 +768,9 @@ pub fn search_with(
         }
         SearchStrategy::Random { samples, seed } => {
             let mut rng = Rng::new(seed ^ 0x5EA2_C417);
-            let genomes: Vec<Vec<usize>> =
-                (0..samples).map(|_| random_genome(axes, &mut rng)).collect();
+            let genomes: Vec<Vec<usize>> = (0..samples)
+                .map(|_| random_genome(&space.card, &mut rng))
+                .collect();
             run_generation(
                 1,
                 genomes,
@@ -500,37 +785,55 @@ pub fn search_with(
         SearchStrategy::Evolutionary {
             population,
             generations,
+            crossover_rate,
             mutation_rate,
             seed,
         } => {
             let population = population.max(1);
             let mut rng = Rng::new(seed ^ 0xE501_7104);
+            // the NSGA-II population: evaluated, genome-bearing candidate
+            // indices (the anchor is tracked by the archive, not bred from)
+            let mut pop: Vec<usize> = Vec::new();
             for g in 0..generations.max(1) {
-                let genomes: Vec<Vec<usize>> = if g == 0 {
-                    (0..population).map(|_| random_genome(axes, &mut rng)).collect()
+                let genomes: Vec<Vec<usize>> = if g == 0 || pop.is_empty() {
+                    (0..population)
+                        .map(|_| random_genome(&space.card, &mut rng))
+                        .collect()
                 } else {
-                    // elitist parent pool: every archive member that is a
-                    // grid point (the anchor has no genome)
-                    let parents: Vec<usize> = archive
-                        .keys()
-                        .into_iter()
-                        .filter(|&k| candidates[k].genome.is_some())
-                        .collect();
+                    // binary tournaments under the constrained-crowded
+                    // order, then uniform crossover + mutation
+                    let order = selection_order(&pop, &joint, constraints);
+                    let mut rank = vec![0usize; pop.len()];
+                    for (pos, &member) in order.iter().enumerate() {
+                        rank[member] = pos;
+                    }
+                    let tournament = |rng: &mut Rng| -> usize {
+                        let a = rng.below(pop.len());
+                        let b = rng.below(pop.len());
+                        pop[if rank[a] <= rank[b] { a } else { b }]
+                    };
                     (0..population)
                         .map(|_| {
-                            if parents.is_empty() {
-                                random_genome(axes, &mut rng)
+                            let p1 = tournament(&mut rng);
+                            let p2 = tournament(&mut rng);
+                            let ga = candidates[p1]
+                                .genome
+                                .as_ref()
+                                .expect("population members carry genomes");
+                            let gb = candidates[p2]
+                                .genome
+                                .as_ref()
+                                .expect("population members carry genomes");
+                            let child = if rng.f64() < crossover_rate {
+                                uniform_crossover(ga, gb, &mut rng)
                             } else {
-                                let p = parents[rng.below(parents.len())];
-                                let genome = candidates[p]
-                                    .genome
-                                    .as_ref()
-                                    .expect("parents are genome-bearing");
-                                mutate(axes, genome, mutation_rate, &mut rng)
-                            }
+                                ga.clone()
+                            };
+                            mutate(&space.card, &child, mutation_rate, &mut rng)
                         })
                         .collect()
                 };
+                let before = candidates.len();
                 run_generation(
                     g + 1,
                     genomes,
@@ -541,6 +844,8 @@ pub fn search_with(
                     &mut seen,
                     &mut convergence,
                 );
+                pop.extend(before..candidates.len());
+                pop = environmental_select(&pop, population, &joint, constraints);
             }
         }
     }
@@ -560,9 +865,22 @@ pub fn search_with(
 }
 
 impl SearchOutcome {
-    /// Rendered markdown report: axis summary, the joint frontier table,
-    /// an ASCII latency/energy scatter, the per-generation convergence
-    /// curve, and the verdict on the paper's Table 2 configuration.
+    /// Whether a candidate satisfies the run's constraints (always true for
+    /// an unconstrained run).
+    pub fn is_feasible(&self, candidate: usize) -> bool {
+        let j = &self.joint[candidate];
+        self.cfg.constraints.feasible(j.area_mm2, j.power_w)
+    }
+
+    /// Number of evaluated candidates satisfying the constraints.
+    pub fn n_feasible(&self) -> usize {
+        (0..self.candidates.len()).filter(|&c| self.is_feasible(c)).count()
+    }
+
+    /// Rendered markdown report: axis summary, constraints + feasibility,
+    /// the joint frontier table, an ASCII latency/energy scatter, the
+    /// per-generation convergence curve, and the verdict on the paper's
+    /// Table 2 configuration.
     pub fn render_markdown(&self) -> String {
         let ex = &self.cfg.explore;
         let mut t = Table::new("Design-space axes", &["Axis", "Values"]);
@@ -576,13 +894,32 @@ impl SearchOutcome {
                     .join(", "),
             ]);
         }
+        if self.cfg.method_gene {
+            t.row(&[
+                "method".to_string(),
+                ex.methods
+                    .iter()
+                    .map(|m| m.name().to_string())
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            ]);
+        }
         let mut out = t.render();
         out.push_str(&format!(
-            "({} candidates incl. the paper anchor; {} cells; strategy {})\n\n",
+            "({} candidates incl. the paper anchor; {} cells; strategy {})\n",
             self.candidates.len(),
             self.cells.len(),
             self.cfg.strategy.describe()
         ));
+        if self.cfg.constraints.any() {
+            out.push_str(&format!(
+                "constraints: {}; {} of {} candidates feasible\n",
+                self.cfg.constraints.describe(),
+                self.n_feasible(),
+                self.candidates.len()
+            ));
+        }
+        out.push('\n');
 
         let models = ex
             .models
@@ -592,9 +929,14 @@ impl SearchOutcome {
             .join(", ");
         let title = format!(
             "Joint Pareto frontier — worst case across [{models}] \
-             ({} of {} candidates non-dominated)",
+             ({} of {} candidates non-dominated{})",
             self.archive.len(),
-            self.candidates.len()
+            self.candidates.len(),
+            if self.cfg.constraints.any() {
+                " and feasible"
+            } else {
+                ""
+            }
         );
         let mut t = Table::new(
             &title,
@@ -612,13 +954,20 @@ impl SearchOutcome {
             ]);
         }
         out.push_str(&t.render());
+        if self.archive.is_empty() {
+            out.push_str(
+                "(no feasible candidate satisfies the constraints — the frontier \
+                 is empty; relax --max-area/--max-power or widen the axes)\n",
+            );
+        }
 
-        // scatter: all points '.', frontier '*', paper anchor 'P' (drawn
-        // last so it wins overlaps)
+        // scatter: dominated feasible '.', infeasible 'x', frontier '*',
+        // paper anchor 'P' (drawn last so it wins overlaps)
         let mut pts: Vec<(f64, f64, char)> = Vec::new();
         for j in &self.joint {
             if !self.archive.contains(&j.candidate) {
-                pts.push((j.latency_s, j.energy_j, '.'));
+                let mark = if self.is_feasible(j.candidate) { '.' } else { 'x' };
+                pts.push((j.latency_s, j.energy_j, mark));
             }
         }
         for &ci in &self.archive {
@@ -628,7 +977,8 @@ impl SearchOutcome {
         pts.push((anchor.latency_s, anchor.energy_j, 'P'));
         out.push('\n');
         out.push_str(&scatter_plot(
-            "joint latency vs energy ('*' frontier, '.' dominated, 'P' paper)",
+            "joint latency vs energy ('*' frontier, '.' dominated, 'x' infeasible, \
+             'P' paper)",
             "latency (s)",
             "energy (J/step)",
             &pts,
@@ -641,14 +991,31 @@ impl SearchOutcome {
             out.push_str(&format!("  {}\n", s.render()));
         }
 
-        if self.paper_dominators.is_empty() {
+        if self.cfg.constraints.any() && !self.is_feasible(0) {
+            out.push_str(&format!(
+                "=> the paper's Table 2 configuration VIOLATES the constraints \
+                 ({}; worst case {:.0} mm^2, {:.0} W) and cannot sit on the \
+                 feasible frontier.\n",
+                self.cfg.constraints.describe(),
+                anchor.area_mm2,
+                anchor.power_w,
+            ));
+        }
+        // dominance verdict against feasible competitors only: an infeasible
+        // candidate "beating" the anchor is not a deployable alternative
+        let feasible_dominators: Vec<usize> = self
+            .paper_dominators
+            .iter()
+            .copied()
+            .filter(|&c| self.is_feasible(c))
+            .collect();
+        if feasible_dominators.is_empty() {
             out.push_str(
-                "=> the paper's Table 2 configuration is ON the discovered joint \
-                 frontier (no candidate beats it for every model at once).\n",
+                "=> no feasible candidate jointly dominates the paper's Table 2 \
+                 configuration.\n",
             );
         } else {
-            let best = self
-                .paper_dominators
+            let best = feasible_dominators
                 .iter()
                 .copied()
                 .min_by(|&a, &b| {
@@ -658,9 +1025,9 @@ impl SearchOutcome {
             let j = &self.joint[best];
             out.push_str(&format!(
                 "=> the paper's Table 2 configuration is jointly dominated by {} \
-                 candidate(s); e.g. `{}`: {:+.1}% latency, {:+.1}% energy, {:+.1}% \
-                 area (worst case across models) relative to paper.\n",
-                self.paper_dominators.len(),
+                 feasible candidate(s); e.g. `{}`: {:+.1}% latency, {:+.1}% energy, \
+                 {:+.1}% area (worst case across models) relative to paper.\n",
+                feasible_dominators.len(),
                 self.candidates[best].label,
                 (j.latency_s / anchor.latency_s - 1.0) * 100.0,
                 (j.energy_j / anchor.energy_j - 1.0) * 100.0,
@@ -696,6 +1063,13 @@ impl SearchOutcome {
                     Json::obj([
                         ("label", Json::str(c.label.clone())),
                         (
+                            "method",
+                            match c.method {
+                                Some(m) => Json::str(m.name()),
+                                None => Json::Null,
+                            },
+                        ),
+                        (
                             "overrides",
                             Json::Obj(
                                 c.overrides
@@ -722,6 +1096,7 @@ impl SearchOutcome {
                         ("energy_j_per_step", Json::num(p.energy_j)),
                         ("area_mm2", Json::num(p.area_mm2)),
                         ("power_kw", Json::num(p.power_kw)),
+                        ("mean_power_w", Json::num(p.mean_power_w)),
                         ("c_t", Json::num(p.c_t)),
                     ])
                 })
@@ -736,6 +1111,8 @@ impl SearchOutcome {
                         ("latency_s", Json::num(j.latency_s)),
                         ("energy_j_per_step", Json::num(j.energy_j)),
                         ("area_mm2", Json::num(j.area_mm2)),
+                        ("power_w", Json::num(j.power_w)),
+                        ("feasible", Json::Bool(self.is_feasible(j.candidate))),
                         ("on_frontier", Json::Bool(self.archive.contains(&j.candidate))),
                         (
                             "cells",
@@ -751,7 +1128,7 @@ impl SearchOutcome {
                 Json::Arr(self.archive.iter().map(|&m| Json::int(m)).collect()),
             ),
             ("paper_point", Json::int(0)),
-            ("paper_on_frontier", Json::Bool(self.paper_dominators.is_empty())),
+            ("paper_on_frontier", Json::Bool(self.archive.contains(&0))),
             (
                 "paper_dominators",
                 Json::Arr(
@@ -759,9 +1136,28 @@ impl SearchOutcome {
                 ),
             ),
         ]);
+        let n_feasible = self.n_feasible();
+        let feasibility = Json::obj([
+            ("constrained", Json::Bool(self.cfg.constraints.any())),
+            (
+                "max_area_mm2",
+                self.cfg.constraints.max_area_mm2.map_or(Json::Null, Json::num),
+            ),
+            (
+                "max_power_w",
+                self.cfg.constraints.max_power_w.map_or(Json::Null, Json::num),
+            ),
+            ("feasible", Json::int(n_feasible)),
+            (
+                "infeasible",
+                Json::int(self.candidates.len() - n_feasible),
+            ),
+            ("anchor_feasible", Json::Bool(self.is_feasible(0))),
+        ]);
         let mut search = Json::obj([
             ("strategy", Json::str(self.cfg.strategy.name())),
             ("evaluations", Json::int(self.candidates.len())),
+            ("feasibility", feasibility),
             (
                 "convergence",
                 Json::Arr(
@@ -771,6 +1167,7 @@ impl SearchOutcome {
                             Json::obj([
                                 ("generation", Json::int(s.generation)),
                                 ("evaluations", Json::int(s.evaluations)),
+                                ("feasible", Json::int(s.feasible)),
                                 ("archive_size", Json::int(s.archive_size)),
                                 ("hypervolume", Json::num(s.hypervolume)),
                             ])
@@ -794,11 +1191,13 @@ impl SearchOutcome {
             SearchStrategy::Evolutionary {
                 population,
                 generations,
+                crossover_rate,
                 mutation_rate,
                 seed,
             } => {
                 search.push("population", Json::int(population));
                 search.push("generations", Json::int(generations));
+                search.push("crossover_rate", Json::num(crossover_rate));
                 search.push("mutation_rate", Json::num(mutation_rate));
                 search.push("strategy_seed", Json::str(seed.to_string()));
             }
@@ -821,6 +1220,7 @@ impl SearchOutcome {
                 "methods",
                 Json::Arr(ex.methods.iter().map(|m| Json::str(m.name())).collect()),
             ),
+            ("method_gene", Json::Bool(self.cfg.method_gene)),
             (
                 "objectives",
                 Json::Arr(vec![
@@ -852,13 +1252,14 @@ mod tests {
     #[test]
     fn mutation_always_moves_when_possible() {
         let axes = axes_2x2();
+        let space = GenomeSpace::new(&axes, None);
         let mut rng = Rng::new(3);
         for _ in 0..200 {
-            let g = random_genome(&axes, &mut rng);
-            let m = mutate(&axes, &g, 0.0, &mut rng); // rate 0 -> forced move
+            let g = random_genome(&space.card, &mut rng);
+            let m = mutate(&space.card, &g, 0.0, &mut rng); // rate 0 -> forced move
             assert_ne!(g, m, "offspring must differ from parent");
             for (i, &v) in m.iter().enumerate() {
-                assert!(v < axes[i].values.len());
+                assert!(v < space.card[i]);
             }
         }
     }
@@ -877,23 +1278,106 @@ mod tests {
     }
 
     #[test]
+    fn crossover_only_mixes_parent_genes() {
+        let mut rng = Rng::new(21);
+        let a = vec![0usize, 0, 0, 0];
+        let b = vec![1usize, 1, 1, 1];
+        let mut saw_a = false;
+        let mut saw_b = false;
+        for _ in 0..100 {
+            let c = uniform_crossover(&a, &b, &mut rng);
+            assert_eq!(c.len(), 4);
+            for (i, &g) in c.iter().enumerate() {
+                assert!(g == a[i] || g == b[i], "gene {i} from neither parent");
+                saw_a |= g == a[i];
+                saw_b |= g == b[i];
+            }
+        }
+        assert!(saw_a && saw_b, "crossover never drew from one parent");
+    }
+
+    #[test]
     fn fresh_candidates_dedup_and_skip_anchor() {
         let axes = parse_axes("tiles=56:64").expect("axes parse");
+        let space = GenomeSpace::new(&axes, None);
         // OlmoE's paper platform has 56 tiles -> genome [0] is the anchor
         let bases = vec![HwConfig::paper_for_model(ModelId::OlmoE_1B_7B, DramKind::Hbm2)];
         let mut seen = BTreeSet::new();
         let got = fresh_candidates(
-            &axes,
+            &space,
             vec![vec![0], vec![1], vec![1], vec![0]],
             &bases,
+            None,
             &mut seen,
         );
         assert_eq!(got.len(), 1, "anchor-equal and duplicate genomes dropped");
         assert_eq!(got[0].label, "tiles=64");
+        assert_eq!(got[0].method, None);
         // dropped genomes are registered too, so re-proposals skip early
         assert!(seen.contains(&vec![0]));
         assert!(seen.contains(&vec![1]));
-        let again = fresh_candidates(&axes, vec![vec![1], vec![0]], &bases, &mut seen);
+        let again =
+            fresh_candidates(&space, vec![vec![1], vec![0]], &bases, None, &mut seen);
         assert!(again.is_empty());
+    }
+
+    #[test]
+    fn method_gene_widens_the_genome_and_anchor_skip() {
+        let axes = parse_axes("tiles=56:64").expect("axes parse");
+        let methods = [Method::Baseline, Method::MozartC];
+        let space = GenomeSpace::new(&axes, Some(&methods));
+        assert_eq!(space.card, vec![2, 2]);
+        let (ov, m) = space.decode(&[1, 0]);
+        assert_eq!(ov, vec![HwOverride::MoeTiles(64)]);
+        assert_eq!(m, Some(Method::Baseline));
+
+        let bases = vec![HwConfig::paper_for_model(ModelId::OlmoE_1B_7B, DramKind::Hbm2)];
+        let mut seen = BTreeSet::new();
+        let got = fresh_candidates(
+            &space,
+            // anchor hw + anchor method (skipped), anchor hw + other method
+            // (kept), other hw + anchor method (kept)
+            vec![vec![0, 1], vec![0, 0], vec![1, 1]],
+            &bases,
+            Some(Method::MozartC),
+            &mut seen,
+        );
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].label, "tiles=56 method=Baseline");
+        assert_eq!(got[0].method, Some(Method::Baseline));
+        assert_eq!(got[1].label, "tiles=64 method=Mozart-C");
+    }
+
+    #[test]
+    fn preferred_method_is_mozart_c_when_available() {
+        assert_eq!(preferred_method(&Method::ALL), Method::MozartC);
+        assert_eq!(
+            preferred_method(&[Method::Baseline, Method::MozartA]),
+            Method::MozartA
+        );
+    }
+
+    #[test]
+    fn constraints_violation_and_describe() {
+        let c = Constraints::none();
+        assert!(!c.any());
+        assert!(c.feasible(1e9, 1e9));
+        assert_eq!(c.describe(), "");
+
+        let c = Constraints {
+            max_area_mm2: Some(1000.0),
+            max_power_w: Some(50.0),
+        };
+        assert!(c.any());
+        assert!(c.feasible(1000.0, 50.0), "caps are inclusive");
+        assert!(!c.feasible(1001.0, 50.0));
+        assert!(!c.feasible(1000.0, 51.0));
+        // violations accumulate across caps and scale with the excess
+        let v1 = c.violation(1500.0, 50.0);
+        let v2 = c.violation(2000.0, 50.0);
+        let v3 = c.violation(2000.0, 100.0);
+        assert!(v1 > 0.0 && v2 > v1 && v3 > v2);
+        assert_eq!(c.violation(500.0, 25.0), 0.0);
+        assert_eq!(c.describe(), "area <= 1000 mm^2, power <= 50 W");
     }
 }

@@ -38,6 +38,20 @@ impl EnergyBreakdown {
         }
     }
 
+    /// Mean power draw over one step of `makespan_s` seconds (W): total
+    /// step energy divided by the step's wall-clock. This is the simulated
+    /// *per-configuration* power — it reflects the method (overlap changes
+    /// the makespan, the layout changes the traffic) as well as the
+    /// platform — and is what the co-design search's `--max-power` budget
+    /// caps. Returns 0 for a degenerate zero-length step.
+    pub fn mean_power_w(&self, makespan_s: f64) -> f64 {
+        if makespan_s > 0.0 {
+            self.total_j() / makespan_s
+        } else {
+            0.0
+        }
+    }
+
     /// Component-wise sum.
     pub fn add(&self, other: &EnergyBreakdown) -> EnergyBreakdown {
         EnergyBreakdown {
@@ -190,5 +204,8 @@ mod tests {
         assert_eq!(e.total_j(), 15.0);
         assert_eq!(e.scale(2.0).total_j(), 30.0);
         assert_eq!(e.add(&e).total_j(), 30.0);
+        // 15 J over a 3 s step = 5 W; zero-length steps draw nothing
+        assert_eq!(e.mean_power_w(3.0), 5.0);
+        assert_eq!(e.mean_power_w(0.0), 0.0);
     }
 }

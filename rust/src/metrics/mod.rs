@@ -11,5 +11,8 @@ pub use energy::{step_energy, EnergyBreakdown};
 // `pareto::Frontier` (the streaming archive) is deliberately NOT re-exported
 // here: `coordinator::explore::Frontier` is an unrelated public type of the
 // same name, and two bare `Frontier`s in one domain invite wrong imports.
-pub use pareto::{dominates, dominators, pareto_frontier};
+pub use pareto::{
+    constrained_selection_order, crowding_distance, dominates, dominators,
+    non_dominated_sort, pareto_frontier,
+};
 pub use roofline::{profile_decoder_layer, Olmo2Scale, RooflineRow};

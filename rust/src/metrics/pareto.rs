@@ -6,13 +6,18 @@
 //! variant is worth reporting only if no other variant is at least as good on
 //! every objective and strictly better on one. This module provides the
 //! dominance predicate, an `O(n^2)` batch frontier extraction over objective
-//! vectors, and a streaming [`Frontier`] archive ([`Frontier::insert`] is
+//! vectors, a streaming [`Frontier`] archive ([`Frontier::insert`] is
 //! `O(n)` per point) for search loops that discover candidates
-//! incrementally — exact and deterministic, which is what the paper-scale
-//! grids (tens to hundreds of points) need. The invariants (no frontier
-//! member is dominated; every excluded point is dominated by a frontier
-//! member; the streaming archive equals the batch reduction) are
-//! property-tested in `tests/prop_invariants.rs`.
+//! incrementally, and the NSGA-II selection machinery the evolutionary
+//! search strategy is built on ([`non_dominated_sort`],
+//! [`crowding_distance`], and the constraint-aware
+//! [`constrained_selection_order`]) — exact and deterministic, which is what
+//! the paper-scale grids (tens to hundreds of points) need. The invariants
+//! (no frontier member is dominated; every excluded point is dominated by a
+//! frontier member; the streaming archive equals the batch reduction; front
+//! 0 of the sort equals the batch frontier; crowding distance is a function
+//! of objective values alone; feasible points always precede infeasible
+//! ones) are property-tested in `tests/prop_invariants.rs`.
 
 /// Returns true iff `a` dominates `b`: `a` is no worse than `b` on every
 /// objective and strictly better on at least one. All objectives are
@@ -52,7 +57,10 @@ pub fn pareto_frontier(points: &[Vec<f64>]) -> Vec<usize> {
 /// For one point, the indices of every point in `points` that dominates it
 /// (empty iff the point is on the frontier of `points ∪ {point}`). Used by
 /// the explorer to report *how* the paper's Table 2 configuration loses to
-/// discovered variants.
+/// discovered variants. A point exactly equal to `point` is never listed
+/// (equality carries no strict win), so querying a point against a set that
+/// contains copies of it does not report the copies as dominators —
+/// regression-tested with tied points.
 pub fn dominators(point: &[f64], points: &[Vec<f64>]) -> Vec<usize> {
     points
         .iter()
@@ -60,6 +68,154 @@ pub fn dominators(point: &[f64], points: &[Vec<f64>]) -> Vec<usize> {
         .filter(|(_, other)| dominates(other, point))
         .map(|(i, _)| i)
         .collect()
+}
+
+/// Total order over objective vectors (lexicographic `total_cmp`), used for
+/// value-based tie-breaking so every selection routine here is a function of
+/// the objective values alone — never of input order.
+fn lex_cmp(a: &[f64], b: &[f64]) -> std::cmp::Ordering {
+    for (x, y) in a.iter().zip(b.iter()) {
+        let c = x.total_cmp(y);
+        if c != std::cmp::Ordering::Equal {
+            return c;
+        }
+    }
+    a.len().cmp(&b.len())
+}
+
+/// NSGA-II fast non-dominated sort: partition `points` into fronts by
+/// dominance rank. Front 0 is exactly [`pareto_frontier`]; every point in
+/// front `k > 0` is dominated by at least one point in front `k - 1`.
+/// Exactly-equal vectors never dominate each other, so duplicates always
+/// share a front. Each front lists indices sorted ascending; the fronts
+/// partition `0..points.len()`. `O(n^2)` like the batch frontier —
+/// property-tested in `tests/prop_invariants.rs`.
+pub fn non_dominated_sort(points: &[Vec<f64>]) -> Vec<Vec<usize>> {
+    let n = points.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut dominated_by = vec![0usize; n];
+    let mut beats: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&points[i], &points[j]) {
+                beats[i].push(j);
+                dominated_by[j] += 1;
+            } else if dominates(&points[j], &points[i]) {
+                beats[j].push(i);
+                dominated_by[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next: Vec<usize> = Vec::new();
+        for &i in &current {
+            for &j in &beats[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        next.sort_unstable();
+        fronts.push(std::mem::replace(&mut current, next));
+    }
+    fronts
+}
+
+/// NSGA-II crowding distance of every point (usually the members of one
+/// front): boundary points get `f64::INFINITY`, interior points the sum over
+/// objectives of the normalized gap between their neighbours in that
+/// objective's sorted order. Distances are computed over the *unique*
+/// objective vectors and shared by exact duplicates, with value-based
+/// tie-breaking, so the result is **permutation-invariant**: it depends only
+/// on each point's objective values, never on input order (property-tested
+/// in `tests/prop_invariants.rs`). Objectives with zero spread contribute
+/// nothing. Returns one distance per input point.
+pub fn crowding_distance(points: &[Vec<f64>]) -> Vec<f64> {
+    let n = points.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let dims = points[0].len();
+    // representative index of each unique objective vector, sorted lex
+    let mut uniq: Vec<usize> = (0..n).collect();
+    uniq.sort_by(|&a, &b| lex_cmp(&points[a], &points[b]));
+    // dedup with the same comparator the binary search below uses, so every
+    // point (including -0.0/NaN oddities) finds its representative
+    uniq.dedup_by(|a, b| lex_cmp(&points[*a], &points[*b]) == std::cmp::Ordering::Equal);
+    let m = uniq.len();
+    let mut dist = vec![0.0f64; m];
+    if m <= 2 {
+        dist.iter_mut().for_each(|d| *d = f64::INFINITY);
+    } else {
+        for d in 0..dims {
+            let mut order: Vec<usize> = (0..m).collect();
+            order.sort_by(|&a, &b| {
+                points[uniq[a]][d]
+                    .total_cmp(&points[uniq[b]][d])
+                    .then_with(|| lex_cmp(&points[uniq[a]], &points[uniq[b]]))
+            });
+            let lo = points[uniq[order[0]]][d];
+            let hi = points[uniq[order[m - 1]]][d];
+            dist[order[0]] = f64::INFINITY;
+            dist[order[m - 1]] = f64::INFINITY;
+            if hi > lo {
+                for k in 1..(m - 1) {
+                    dist[order[k]] += (points[uniq[order[k + 1]]][d]
+                        - points[uniq[order[k - 1]]][d])
+                        / (hi - lo);
+                }
+            }
+        }
+    }
+    (0..n)
+        .map(|i| {
+            let pos = uniq
+                .binary_search_by(|&u| lex_cmp(&points[u], &points[i]))
+                .expect("every point has a unique representative");
+            dist[pos]
+        })
+        .collect()
+}
+
+/// NSGA-II constrained selection: indices of `points` ordered best-first
+/// under the constrained-crowded-comparison operator. `violation[i]` is the
+/// point's total constraint violation (`0.0` = feasible).
+///
+/// The order is: every feasible point before every infeasible one; feasible
+/// points by non-dominated-sort rank ascending, then crowding distance
+/// (computed within their front) descending, then index ascending;
+/// infeasible points by violation ascending, then index ascending. Taking a
+/// prefix of this order is NSGA-II environmental selection; comparing two
+/// positions in it is the binary-tournament comparator. Deterministic, and
+/// infeasible points can never displace feasible ones — property-tested in
+/// `tests/prop_invariants.rs`.
+pub fn constrained_selection_order(points: &[Vec<f64>], violation: &[f64]) -> Vec<usize> {
+    assert_eq!(points.len(), violation.len(), "violation arity mismatch");
+    let feasible: Vec<usize> = (0..points.len()).filter(|&i| violation[i] == 0.0).collect();
+    let mut infeasible: Vec<usize> =
+        (0..points.len()).filter(|&i| violation[i] != 0.0).collect();
+    infeasible.sort_by(|&a, &b| violation[a].total_cmp(&violation[b]).then(a.cmp(&b)));
+
+    let fobjs: Vec<Vec<f64>> = feasible.iter().map(|&i| points[i].clone()).collect();
+    let mut out: Vec<usize> = Vec::with_capacity(points.len());
+    for front in non_dominated_sort(&fobjs) {
+        let members: Vec<Vec<f64>> = front.iter().map(|&k| fobjs[k].clone()).collect();
+        let crowd = crowding_distance(&members);
+        let mut order: Vec<usize> = (0..front.len()).collect();
+        order.sort_by(|&a, &b| {
+            crowd[b]
+                .total_cmp(&crowd[a])
+                .then(feasible[front[a]].cmp(&feasible[front[b]]))
+        });
+        out.extend(order.into_iter().map(|k| feasible[front[k]]));
+    }
+    out.extend(infeasible);
+    out
 }
 
 /// Incremental Pareto archive over minimized objective vectors.
@@ -103,8 +259,13 @@ impl Frontier {
 
     /// Offer a point to the archive. Returns `true` iff the point was
     /// admitted (no current member dominates it); admission evicts every
-    /// member the new point dominates. All objectives are minimized and must
-    /// be finite (same contract as [`dominates`]).
+    /// member the new point dominates. Exactly-equal objective vectors do
+    /// not dominate each other, so tied members survive together (matching
+    /// the batch [`pareto_frontier`] semantics); re-offering an
+    /// already-archived `key` replaces that entry instead of duplicating it,
+    /// so [`Frontier::len`] and [`Frontier::keys`] count each key at most
+    /// once. All objectives are minimized and must be finite (same contract
+    /// as [`dominates`]).
     pub fn insert(&mut self, key: usize, objectives: &[f64]) -> bool {
         if let Some((_, first)) = self.entries.first() {
             debug_assert_eq!(first.len(), objectives.len(), "objective arity mismatch");
@@ -116,7 +277,8 @@ impl Frontier {
         {
             return false;
         }
-        self.entries.retain(|(_, member)| !dominates(objectives, member));
+        self.entries
+            .retain(|(k, member)| *k != key && !dominates(objectives, member));
         self.entries.push((key, objectives.to_vec()));
         true
     }
@@ -145,16 +307,23 @@ impl Frontier {
     }
 
     /// Cheap hypervolume *proxy* against a fixed reference point (worse than
-    /// every interesting point, all coordinates > 0): the sum over members
-    /// of the normalized box volume `prod_d max(0, (ref_d - obj_d) / ref_d)`.
-    /// Overlapping boxes are counted once per member, so this is not the
-    /// exact dominated hypervolume — but it is deterministic, `O(n·d)`, and
-    /// grows as the archive approaches the reference-relative ideal point,
-    /// which is all the per-generation convergence curve needs.
+    /// every interesting point, all coordinates > 0): the sum over *unique*
+    /// member objective vectors of the normalized box volume
+    /// `prod_d max(0, (ref_d - obj_d) / ref_d)`. Tied members (several keys
+    /// mapping to one objective vector) contribute exactly once — they are
+    /// one point of the frontier, however many candidates reached it.
+    /// Overlapping boxes of distinct points are still counted once per
+    /// point, so this is not the exact dominated hypervolume — but it is
+    /// deterministic, `O(n·d + n log n)`, and grows as the archive
+    /// approaches the reference-relative ideal point, which is all the
+    /// per-generation convergence curve needs.
     pub fn hypervolume_proxy(&self, reference: &[f64]) -> f64 {
-        self.entries
-            .iter()
-            .map(|(_, obj)| {
+        let mut objs: Vec<&[f64]> =
+            self.entries.iter().map(|(_, o)| o.as_slice()).collect();
+        objs.sort_by(|a, b| lex_cmp(a, b));
+        objs.dedup_by(|a, b| lex_cmp(a, b) == std::cmp::Ordering::Equal);
+        objs.iter()
+            .map(|obj| {
                 obj.iter()
                     .zip(reference.iter())
                     .map(|(&v, &r)| ((r - v) / r).max(0.0))
@@ -271,5 +440,117 @@ mod tests {
             vec![1.0, 2.0, 4.0], // dominated by the first
         ];
         assert_eq!(pareto_frontier(&pts), vec![0, 1]);
+    }
+
+    #[test]
+    fn tied_points_do_not_evict_or_double_count() {
+        // regression: exactly-equal objective vectors must coexist in the
+        // archive, never list each other as dominators, and count once in
+        // the hypervolume proxy
+        let tied = [2.0, 2.0];
+        let pts = vec![tied.to_vec(), tied.to_vec(), vec![1.0, 4.0]];
+        assert!(dominators(&tied, &pts).is_empty(), "a tie is not a dominator");
+
+        let mut f = Frontier::new();
+        assert!(f.insert(0, &tied));
+        assert!(f.insert(1, &tied), "a tied point must not be rejected");
+        assert!(f.insert(2, &[1.0, 4.0]));
+        assert_eq!(f.keys(), vec![0, 1, 2], "tied members evicted each other");
+
+        // both copies of (2,2) contribute ONE box: total equals the archive
+        // with a single copy
+        let reference = [10.0, 10.0];
+        let mut single = Frontier::new();
+        single.insert(0, &tied);
+        single.insert(2, &[1.0, 4.0]);
+        assert_eq!(
+            f.hypervolume_proxy(&reference),
+            single.hypervolume_proxy(&reference),
+            "tied members double-counted in the hypervolume proxy"
+        );
+    }
+
+    #[test]
+    fn reinserting_a_key_does_not_duplicate_it() {
+        let mut f = Frontier::new();
+        assert!(f.insert(5, &[3.0, 3.0]));
+        assert!(f.insert(5, &[3.0, 3.0]));
+        assert_eq!(f.len(), 1, "re-offered key duplicated its entry");
+        // a re-offer with better objectives refreshes the entry in place
+        assert!(f.insert(5, &[1.0, 1.0]));
+        assert_eq!(f.keys(), vec![5]);
+        let objs: Vec<Vec<f64>> = f.iter().map(|(_, o)| o.to_vec()).collect();
+        assert_eq!(objs, vec![vec![1.0, 1.0]]);
+    }
+
+    #[test]
+    fn non_dominated_sort_ranks_a_layered_cloud() {
+        let pts = vec![
+            vec![1.0, 4.0], // front 0
+            vec![2.0, 2.0], // front 0
+            vec![4.0, 1.0], // front 0
+            vec![3.0, 3.0], // front 1 (dominated by (2,2))
+            vec![5.0, 5.0], // front 2 (dominated by (3,3))
+            vec![2.0, 2.0], // duplicate of a front-0 point: shares front 0
+        ];
+        let fronts = non_dominated_sort(&pts);
+        assert_eq!(fronts.len(), 3);
+        assert_eq!(fronts[0], vec![0, 1, 2, 5]);
+        assert_eq!(fronts[1], vec![3]);
+        assert_eq!(fronts[2], vec![4]);
+        assert_eq!(fronts[0], pareto_frontier(&pts));
+        assert!(non_dominated_sort(&[]).is_empty());
+    }
+
+    #[test]
+    fn crowding_distance_boundaries_and_duplicates() {
+        let pts = vec![
+            vec![1.0, 4.0], // boundary
+            vec![2.0, 2.0],
+            vec![4.0, 1.0], // boundary
+            vec![2.0, 2.0], // duplicate: must share the interior distance
+        ];
+        let d = crowding_distance(&pts);
+        assert!(d[0].is_infinite() && d[2].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+        assert_eq!(d[1], d[3], "duplicates must share one distance");
+        // a 2-point set is all boundary
+        assert!(crowding_distance(&pts[..2]).iter().all(|v| v.is_infinite()));
+        assert!(crowding_distance(&[]).is_empty());
+    }
+
+    #[test]
+    fn constrained_order_puts_feasible_first() {
+        let pts = vec![
+            vec![9.0, 9.0], // feasible but awful
+            vec![1.0, 1.0], // infeasible, tiny violation
+            vec![2.0, 2.0], // infeasible, large violation
+            vec![5.0, 5.0], // feasible, dominates (9,9)
+        ];
+        let violation = vec![0.0, 0.1, 0.7, 0.0];
+        let order = constrained_selection_order(&pts, &violation);
+        // feasible first (3 dominates 0, so rank puts 3 ahead), then the
+        // infeasible points by ascending violation — even though the
+        // infeasible objectives are the best of the whole set
+        assert_eq!(order, vec![3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn constrained_order_is_a_feasible_prefix_on_random_clouds() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        for _ in 0..20 {
+            let (pts, viol) =
+                crate::testkit::constrained_objective_cloud(&mut rng, 20, 3);
+            let order = constrained_selection_order(&pts, &viol);
+            assert_eq!(order.len(), 20);
+            let n_feasible = viol.iter().filter(|&&v| v == 0.0).count();
+            for (pos, &i) in order.iter().enumerate() {
+                assert_eq!(
+                    viol[i] == 0.0,
+                    pos < n_feasible,
+                    "feasible points must form the order's prefix"
+                );
+            }
+        }
     }
 }

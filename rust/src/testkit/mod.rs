@@ -9,4 +9,4 @@ pub mod bench;
 pub mod prop;
 
 pub use bench::{bench, BenchResult};
-pub use prop::{forall, objective_cloud};
+pub use prop::{constrained_objective_cloud, forall, objective_cloud};

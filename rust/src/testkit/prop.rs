@@ -33,6 +33,38 @@ pub fn objective_cloud(rng: &mut Rng, n: usize, dims: usize) -> Vec<Vec<f64>> {
         .collect()
 }
 
+/// Random objective cloud with a *known* feasible/infeasible split for
+/// constraint-handling tests: returns `(points, violation)` where
+/// `violation[i] == 0.0` marks point `i` feasible and a positive value is
+/// its (ranking-relevant) constraint violation. Roughly half the cloud is
+/// infeasible; the first point is always feasible and (for `n >= 2`) the
+/// second always infeasible, so both sides of the split are guaranteed
+/// non-empty. Shared by the NSGA-II selection properties in
+/// `tests/prop_invariants.rs` and the `metrics::pareto` unit tests.
+pub fn constrained_objective_cloud(
+    rng: &mut Rng,
+    n: usize,
+    dims: usize,
+) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let points = objective_cloud(rng, n, dims);
+    let mut violation: Vec<f64> = (0..n)
+        .map(|_| {
+            if rng.f64() < 0.5 {
+                0.0
+            } else {
+                rng.f64() + 0.1
+            }
+        })
+        .collect();
+    if n >= 1 {
+        violation[0] = 0.0;
+    }
+    if n >= 2 {
+        violation[1] = rng.f64() + 0.1;
+    }
+    (points, violation)
+}
+
 /// Re-run a single failing case by seed.
 pub fn forall_seeded(
     name: &str,
@@ -84,6 +116,22 @@ mod tests {
                 assert!((0.0..8.01).contains(&v), "coordinate out of range: {v}");
             }
         }
+    }
+
+    #[test]
+    fn constrained_cloud_always_splits() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        for n in [2usize, 3, 10, 40] {
+            let (pts, viol) = super::constrained_objective_cloud(&mut rng, n, 3);
+            assert_eq!(pts.len(), n);
+            assert_eq!(viol.len(), n);
+            assert_eq!(viol[0], 0.0, "first point must be feasible");
+            assert!(viol[1] > 0.0, "second point must be infeasible");
+            assert!(viol.iter().all(|&v| v >= 0.0));
+        }
+        let (pts, viol) = super::constrained_objective_cloud(&mut rng, 1, 2);
+        assert_eq!((pts.len(), viol.len()), (1, 1));
+        assert_eq!(viol[0], 0.0);
     }
 
     #[test]

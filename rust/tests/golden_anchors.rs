@@ -1,0 +1,150 @@
+//! Golden-anchor regression tests: snapshot the Table 2 anchor platform
+//! metrics and all four Table 3 method cells (latency / energy / area at
+//! fixed precision) against checked-in expected values in
+//! `tests/golden/*.json`, so simulator drift is caught by `cargo test`
+//! instead of only by eyeballing `mozart report` output.
+//!
+//! Protocol (see `tests/golden/README.md`):
+//! - a missing golden file is created from the current output and the test
+//!   passes with a notice — commit the file to arm the check;
+//! - `MOZART_BLESS=1 cargo test --test golden_anchors` re-blesses every
+//!   snapshot after an intentional recalibration;
+//! - values are compared as strings at 7 significant digits, so the check
+//!   is immune to harmless formatting churn but catches any real change in
+//!   the simulated numbers.
+
+use std::path::{Path, PathBuf};
+
+use mozart::arch::area::hw_metrics;
+use mozart::config::{DramKind, HwConfig, Method, ModelConfig, ModelId};
+use mozart::coordinator::run_experiment;
+use mozart::coordinator::sweep::{cell_config, Cell};
+use mozart::util::json::Json;
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// Fixed-precision rendering: 7 significant digits in scientific notation —
+/// tight enough that any real simulator/model drift changes the string,
+/// uniform across the magnitudes involved (seconds to mm²).
+fn sig(v: f64) -> String {
+    format!("{v:.6e}")
+}
+
+/// Compare `current` against the checked-in snapshot, or (re)create the
+/// snapshot when it is missing or `MOZART_BLESS=1` is set.
+fn check_or_bless(name: &str, current: &Json) {
+    let dir = golden_dir();
+    let path = dir.join(name);
+    let rendered = current.render_pretty();
+    // exactly `MOZART_BLESS=1` re-blesses — anything else (unset, empty,
+    // `0`) must compare, so an exported-but-disabled variable can never
+    // silently overwrite the baselines
+    let bless = std::env::var("MOZART_BLESS").as_deref() == Ok("1");
+    if bless || !path.exists() {
+        std::fs::create_dir_all(&dir).expect("create tests/golden");
+        std::fs::write(&path, &rendered).expect("write golden snapshot");
+        if !bless {
+            eprintln!(
+                "golden: {} did not exist — created it from the current simulator \
+                 output; commit it so future runs catch drift",
+                path.display()
+            );
+        }
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).expect("read golden snapshot");
+    assert_eq!(
+        expected, rendered,
+        "golden anchor drift in {name}: the simulator's Table 2/3 numbers no \
+         longer match the checked-in snapshot. If this change is intentional \
+         (e.g. a recalibration), re-bless with `MOZART_BLESS=1 cargo test \
+         --test golden_anchors` and commit the updated file."
+    );
+}
+
+/// Table 2 anchor: the analytic 28nm area/power metrics of every paper
+/// model's platform (the point `mozart explore` always evaluates as
+/// candidate 0).
+#[test]
+fn golden_table2_anchor_platforms() {
+    let rows: Vec<Json> = ModelId::PAPER_MODELS
+        .iter()
+        .map(|&id| {
+            let m = ModelConfig::preset(id);
+            let hw = HwConfig::paper_for_model(id, DramKind::Hbm2);
+            let x = hw_metrics(&m, &hw);
+            Json::obj([
+                ("model", Json::str(id.name())),
+                ("area_mm2", Json::str(sig(x.total_area_mm2))),
+                ("power_kw", Json::str(sig(x.total_power_kw))),
+                ("dram_bw_gbps", Json::str(sig(x.dram_bw_gbps))),
+                ("nop_link_bw_gbps", Json::str(sig(x.nop_link_bw_gbps))),
+            ])
+        })
+        .collect();
+    check_or_bless(
+        "table2_anchors.json",
+        &Json::obj([
+            ("snapshot", Json::str("table2_anchor_platforms")),
+            ("precision", Json::str("7 significant digits")),
+            ("rows", Json::Arr(rows)),
+        ]),
+    );
+}
+
+/// Table 3 method cells: the Table 2 anchor platform (Qwen3, seq 256, HBM2,
+/// seed 7) simulated under each of the four ablation columns.
+#[test]
+fn golden_table3_method_cells() {
+    let rows: Vec<Json> = Method::ALL
+        .iter()
+        .map(|&method| {
+            let cell = Cell {
+                model: ModelId::Qwen3_30B_A3B,
+                method,
+                seq_len: 256,
+                dram: DramKind::Hbm2,
+            };
+            let cfg = cell_config(cell, 1, 7);
+            let r = run_experiment(&cfg);
+            let m = hw_metrics(&cfg.model, &cfg.hw);
+            Json::obj([
+                ("model", Json::str(cell.model.name())),
+                ("method", Json::str(method.name())),
+                ("latency_s", Json::str(sig(r.latency))),
+                ("energy_j_per_step", Json::str(sig(r.energy.total_j()))),
+                ("area_mm2", Json::str(sig(m.total_area_mm2))),
+                ("c_t", Json::str(sig(r.c_t))),
+            ])
+        })
+        .collect();
+    check_or_bless(
+        "table3_methods.json",
+        &Json::obj([
+            ("snapshot", Json::str("table3_method_cells")),
+            ("workload", Json::str("qwen3 seq=256 dram=HBM2 iters=1 seed=7")),
+            ("precision", Json::str("7 significant digits")),
+            ("rows", Json::Arr(rows)),
+        ]),
+    );
+}
+
+/// The snapshots above are only meaningful if a cell re-simulation is
+/// bit-reproducible — assert that here so a golden failure always means
+/// drift, never flakiness.
+#[test]
+fn golden_inputs_are_deterministic() {
+    let cell = Cell {
+        model: ModelId::Qwen3_30B_A3B,
+        method: Method::MozartC,
+        seq_len: 256,
+        dram: DramKind::Hbm2,
+    };
+    let a = run_experiment(&cell_config(cell, 1, 7));
+    let b = run_experiment(&cell_config(cell, 1, 7));
+    assert_eq!(sig(a.latency), sig(b.latency));
+    assert_eq!(sig(a.energy.total_j()), sig(b.energy.total_j()));
+    assert_eq!(sig(a.c_t), sig(b.c_t));
+}

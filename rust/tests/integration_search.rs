@@ -2,11 +2,15 @@
 //! archive equals the batch Pareto reduction of everything that was
 //! evaluated, joint (multi-model) objectives are the worst case across the
 //! per-model cells, the exhaustive strategy agrees with the PR-3 explorer,
-//! and the report/artifact renderers carry the search section.
+//! hard `--max-area`/`--max-power` caps keep every frontier point feasible,
+//! the method gene searches (hardware × ablation) jointly, and the
+//! report/artifact renderers carry the search + feasibility sections.
 
 use mozart::config::{DramKind, HwOverride, KnobId, Method, ModelId};
 use mozart::coordinator::explore::{explore, parse_axes, ExploreConfig};
-use mozart::coordinator::search::{search, search_with, SearchConfig, SearchStrategy};
+use mozart::coordinator::search::{
+    search, search_with, Constraints, SearchConfig, SearchStrategy,
+};
 use mozart::metrics::pareto;
 
 /// A small 2-axis design space on the smallest paper model at a reduced
@@ -30,6 +34,7 @@ fn evolutionary(seed: u64) -> SearchStrategy {
     SearchStrategy::Evolutionary {
         population: 3,
         generations: 3,
+        crossover_rate: 0.6,
         mutation_rate: 0.5,
         seed,
     }
@@ -37,10 +42,7 @@ fn evolutionary(seed: u64) -> SearchStrategy {
 
 #[test]
 fn evolutionary_search_is_bit_reproducible() {
-    let cfg = SearchConfig {
-        explore: tiny_explore(0),
-        strategy: evolutionary(13),
-    };
+    let cfg = SearchConfig::new(tiny_explore(0), evolutionary(13));
     let a = search(&cfg);
     let b = search(&cfg);
     assert_eq!(a.candidates.len(), b.candidates.len());
@@ -66,10 +68,7 @@ fn evolutionary_search_is_bit_reproducible() {
     }
     // a different strategy seed explores a (generally) different trajectory
     // but still re-evaluates nothing twice
-    let c = search(&SearchConfig {
-        explore: tiny_explore(0),
-        strategy: evolutionary(14),
-    });
+    let c = search(&SearchConfig::new(tiny_explore(0), evolutionary(14)));
     let mut genomes: Vec<_> = c.candidates.iter().filter_map(|x| x.genome.clone()).collect();
     genomes.sort();
     let unique = genomes.len();
@@ -79,14 +78,8 @@ fn evolutionary_search_is_bit_reproducible() {
 
 #[test]
 fn search_parallel_matches_sequential_bitwise() {
-    let seq = search(&SearchConfig {
-        explore: tiny_explore(1),
-        strategy: evolutionary(13),
-    });
-    let par = search(&SearchConfig {
-        explore: tiny_explore(4),
-        strategy: evolutionary(13),
-    });
+    let seq = search(&SearchConfig::new(tiny_explore(1), evolutionary(13)));
+    let par = search(&SearchConfig::new(tiny_explore(4), evolutionary(13)));
     assert_eq!(seq.cells.len(), par.cells.len());
     for (x, y) in seq.cells.iter().zip(par.cells.iter()) {
         assert_eq!(x.variant, y.variant);
@@ -99,10 +92,7 @@ fn search_parallel_matches_sequential_bitwise() {
 
 #[test]
 fn archive_matches_batch_pareto_reduction() {
-    let out = search(&SearchConfig {
-        explore: tiny_explore(0),
-        strategy: evolutionary(13),
-    });
+    let out = search(&SearchConfig::new(tiny_explore(0), evolutionary(13)));
     let objs: Vec<Vec<f64>> = out.joint.iter().map(|j| j.objectives()).collect();
     assert_eq!(out.archive, pareto::pareto_frontier(&objs));
     // archive soundness on the evaluated set
@@ -120,10 +110,7 @@ fn archive_matches_batch_pareto_reduction() {
 fn exhaustive_strategy_agrees_with_the_explorer() {
     let ex = tiny_explore(0);
     let grid = explore(&ex);
-    let out = search(&SearchConfig {
-        explore: ex,
-        strategy: SearchStrategy::Exhaustive,
-    });
+    let out = search(&SearchConfig::new(ex, SearchStrategy::Exhaustive));
     // same candidate set in the same order (anchor first, then grid order),
     // evaluated through the same cell path -> bit-identical objectives
     assert_eq!(out.candidates.len(), grid.variants.len());
@@ -155,10 +142,10 @@ fn joint_objectives_are_worst_case_across_models() {
     // hardware — exactly the case joint frontiers exist for.
     let mut ex = tiny_explore(0);
     ex.models = vec![ModelId::OlmoE_1B_7B, ModelId::TinyMoE];
-    let out = search(&SearchConfig {
-        explore: ex,
-        strategy: SearchStrategy::Random { samples: 4, seed: 5 },
-    });
+    let out = search(&SearchConfig::new(
+        ex,
+        SearchStrategy::Random { samples: 4, seed: 5 },
+    ));
     let per = 2; // models x methods
     for j in &out.joint {
         assert_eq!(j.cells.len(), per, "candidate {}", j.candidate);
@@ -192,10 +179,10 @@ fn knob_axes_search_end_to_end() {
         ex.axes[1].values[0],
         HwOverride::Knob(KnobId::MxuUtil, 0.4)
     );
-    let out = search(&SearchConfig {
-        explore: ex,
-        strategy: SearchStrategy::Random { samples: 4, seed: 3 },
-    });
+    let out = search(&SearchConfig::new(
+        ex,
+        SearchStrategy::Random { samples: 4, seed: 3 },
+    ));
     assert!(out.candidates.len() >= 2, "random proposals all collapsed");
     for c in out.candidates.iter().skip(1) {
         assert!(c.label.contains("mxu_util="), "label `{}`", c.label);
@@ -211,10 +198,7 @@ fn knob_axes_search_end_to_end() {
 fn report_artifact_and_progress_render() {
     let mut gens = 0usize;
     let out = search_with(
-        &SearchConfig {
-            explore: tiny_explore(0),
-            strategy: evolutionary(13),
-        },
+        &SearchConfig::new(tiny_explore(0), evolutionary(13)),
         |s| {
             gens += 1;
             assert_eq!(s.generation, gens);
@@ -242,8 +226,188 @@ fn report_artifact_and_progress_render() {
         "\"joint\"", "\"frontier\"", "\"search\"", "\"strategy\"", "\"evolutionary\"",
         "\"convergence\"", "\"hypervolume\"", "\"objective_mode\"",
         "\"worst_case_across_models\"", "\"on_frontier\"", "\"paper_on_frontier\"",
-        "\"population\"", "\"mutation_rate\"",
+        "\"population\"", "\"mutation_rate\"", "\"crossover_rate\"",
+        "\"feasibility\"", "\"constrained\"", "\"max_area_mm2\"", "\"max_power_w\"",
+        "\"anchor_feasible\"", "\"method_gene\"", "\"mean_power_w\"", "\"power_w\"",
     ] {
         assert!(js.contains(key), "artifact missing {key}");
+    }
+    // unconstrained run: every candidate is feasible and the feasibility
+    // section says so
+    assert_eq!(out.n_feasible(), out.candidates.len());
+    assert!(js.contains("\"constrained\":false"));
+}
+
+/// Self-calibrating hard-cap test: run the exhaustive search unconstrained,
+/// pick a cap that genuinely splits the evaluated candidates, rerun with the
+/// cap, and require every frontier point to satisfy it.
+#[test]
+fn constrained_search_frontier_respects_hard_caps() {
+    let base = search(&SearchConfig::new(tiny_explore(0), SearchStrategy::Exhaustive));
+    let mut areas: Vec<f64> = base.joint.iter().map(|j| j.area_mm2).collect();
+    areas.sort_by(f64::total_cmp);
+    let cap = areas[areas.len() / 2]; // median area: both sides non-empty
+
+    let out = search(&SearchConfig {
+        constraints: Constraints {
+            max_area_mm2: Some(cap),
+            max_power_w: None,
+        },
+        ..SearchConfig::new(tiny_explore(0), SearchStrategy::Exhaustive)
+    });
+    assert!(
+        out.joint.iter().any(|j| j.area_mm2 > cap),
+        "cap did not exclude anything"
+    );
+    assert!(!out.archive.is_empty(), "median cap leaves feasible points");
+    for &ci in &out.archive {
+        assert!(
+            out.joint[ci].area_mm2 <= cap,
+            "frontier point {ci} violates --max-area ({} > {cap})",
+            out.joint[ci].area_mm2
+        );
+        assert!(out.is_feasible(ci));
+    }
+    // the archive equals the batch Pareto reduction of the FEASIBLE subset
+    let feasible: Vec<usize> =
+        (0..out.candidates.len()).filter(|&c| out.is_feasible(c)).collect();
+    let fobjs: Vec<Vec<f64>> = feasible.iter().map(|&c| out.joint[c].objectives()).collect();
+    let mut expect: Vec<usize> = pareto::pareto_frontier(&fobjs)
+        .into_iter()
+        .map(|k| feasible[k])
+        .collect();
+    expect.sort_unstable();
+    assert_eq!(out.archive, expect);
+    assert_eq!(out.n_feasible(), feasible.len());
+
+    // the same contract holds for a power cap under the NSGA-II strategy
+    let mut powers: Vec<f64> = base.joint.iter().map(|j| j.power_w).collect();
+    powers.sort_by(f64::total_cmp);
+    let pcap = powers[powers.len() / 2];
+    let out = search(&SearchConfig {
+        constraints: Constraints {
+            max_area_mm2: None,
+            max_power_w: Some(pcap),
+        },
+        ..SearchConfig::new(tiny_explore(0), evolutionary(13))
+    });
+    for &ci in &out.archive {
+        assert!(
+            out.joint[ci].power_w <= pcap,
+            "frontier point {ci} violates --max-power"
+        );
+    }
+    // feasibility counts are monotone along the convergence curve and
+    // bounded by the evaluations
+    for s in &out.convergence {
+        assert!(s.feasible <= s.evaluations);
+    }
+    for w in out.convergence.windows(2) {
+        assert!(w[1].feasible >= w[0].feasible);
+    }
+}
+
+/// An impossible budget: everything infeasible, the frontier empty, and the
+/// artifact/report still render (the CI NSGA-II smoke exercises the same
+/// path end to end).
+#[test]
+fn impossible_constraints_yield_an_empty_frontier() {
+    let out = search(&SearchConfig {
+        constraints: Constraints {
+            max_area_mm2: Some(1.0), // 1 mm^2: nothing fits
+            max_power_w: None,
+        },
+        ..SearchConfig::new(tiny_explore(0), evolutionary(13))
+    });
+    assert!(out.archive.is_empty());
+    assert_eq!(out.n_feasible(), 0);
+    assert!(!out.is_feasible(0));
+    let md = out.render_markdown();
+    assert!(md.contains("no feasible candidate"));
+    assert!(md.contains("VIOLATES the constraints"));
+    let js = out.to_json().render();
+    assert!(js.contains("\"anchor_feasible\":false"));
+    assert!(js.contains("\"feasible\":0"));
+}
+
+/// The method gene: every candidate carries exactly one ablation, the
+/// exhaustive gene grid is (hardware x methods), and the anchor is the
+/// paper platform running its deployed method (Mozart-C).
+#[test]
+fn method_gene_searches_hardware_and_ablation_jointly() {
+    let mut ex = tiny_explore(0);
+    ex.methods = Method::ALL.to_vec();
+    let out = search(&SearchConfig {
+        method_gene: true,
+        ..SearchConfig::new(ex, SearchStrategy::Exhaustive)
+    });
+    // anchor: paper hardware + Mozart-C only
+    assert_eq!(out.candidates[0].method, Some(Method::MozartC));
+    assert!(out.candidates[0].label.contains("method=Mozart-C"));
+    assert_eq!(out.joint[0].cells.len(), 1, "gene-mode anchor runs one method");
+    // 2x2 hardware grid x 4 methods (no combo equals OlmoE's 56-tile
+    // anchor) + the anchor itself
+    assert_eq!(out.candidates.len(), 17);
+    // every candidate's cells carry exactly its method gene
+    for j in &out.joint {
+        let method = out.candidates[j.candidate].method.expect("gene set");
+        assert_eq!(j.cells.len(), 1, "one model x one method per candidate");
+        for &c in &j.cells {
+            assert_eq!(out.cells[c].method, method);
+            assert_eq!(out.cells[c].variant, j.candidate);
+        }
+    }
+    // each (hardware label, method) pair appears exactly once
+    let mut labels: Vec<&str> = out.candidates.iter().map(|c| c.label.as_str()).collect();
+    labels.sort_unstable();
+    let unique = labels.len();
+    labels.dedup();
+    assert_eq!(labels.len(), unique, "duplicate (hardware, method) candidate");
+    // the gene run is reproducible too
+    let mut ex = tiny_explore(0);
+    ex.methods = Method::ALL.to_vec();
+    let again = search(&SearchConfig {
+        method_gene: true,
+        ..SearchConfig::new(ex, SearchStrategy::Exhaustive)
+    });
+    assert_eq!(out.archive, again.archive);
+    // artifact carries the gene: every candidate names a method
+    let js = out.to_json().render();
+    assert!(js.contains("\"method_gene\":true"));
+    assert!(js.contains("\"method\":\"Baseline\""));
+}
+
+/// The gene also works under the NSGA-II strategy with constraints: the
+/// frontier answers "which ablation on which platform, within budget".
+#[test]
+fn method_gene_under_constrained_nsga2() {
+    let mut ex = tiny_explore(0);
+    ex.methods = vec![Method::Baseline, Method::MozartC];
+    // self-calibrate an area cap off the unconstrained gene grid
+    let base = search(&SearchConfig {
+        method_gene: true,
+        ..SearchConfig::new(ex.clone(), SearchStrategy::Exhaustive)
+    });
+    let mut areas: Vec<f64> = base.joint.iter().map(|j| j.area_mm2).collect();
+    areas.sort_by(f64::total_cmp);
+    let cap = areas[areas.len() / 2];
+
+    let out = search(&SearchConfig {
+        constraints: Constraints {
+            max_area_mm2: Some(cap),
+            max_power_w: None,
+        },
+        method_gene: true,
+        ..SearchConfig::new(ex, evolutionary(13))
+    });
+    for &ci in &out.archive {
+        assert!(out.joint[ci].area_mm2 <= cap);
+        assert!(out.candidates[ci].method.is_some());
+    }
+    // genomes cover the widened space: hw genes + 1 method gene
+    for c in out.candidates.iter().skip(1) {
+        let g = c.genome.as_ref().expect("searched candidates carry genomes");
+        assert_eq!(g.len(), 3, "2 hw axes + 1 method gene");
+        assert!(g[2] < 2, "method gene out of range");
     }
 }

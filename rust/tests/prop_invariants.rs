@@ -7,7 +7,7 @@ use mozart::comm::A2aStats;
 use mozart::metrics::pareto;
 use mozart::prop_assert;
 use mozart::sim::{Plan, Simulator, Tag, TaskSpec};
-use mozart::testkit::{forall, objective_cloud};
+use mozart::testkit::{constrained_objective_cloud, forall, objective_cloud};
 use mozart::trace::{Priors, RoutingTrace};
 use mozart::util::rng::Rng;
 
@@ -250,6 +250,185 @@ fn prop_streaming_frontier_matches_batch_reduction() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_non_dominated_sort_rank0_is_the_pareto_frontier() {
+    // the NSGA-II sort's first front must be exactly the batch frontier,
+    // the fronts must partition the index set, and every point of front
+    // k > 0 must be dominated by some point of front k - 1
+    forall("nds-rank0", 60, |rng| {
+        let dims = 2 + rng.below(3);
+        let n = 1 + rng.below(40);
+        let mut points = objective_cloud(rng, n, dims);
+        if n >= 2 && rng.f64() < 0.3 {
+            points[1] = points[0].clone(); // exact duplicates share a front
+        }
+        let fronts = pareto::non_dominated_sort(&points);
+        prop_assert!(!fronts.is_empty(), "no fronts on {n} points");
+        prop_assert!(
+            fronts[0] == pareto::pareto_frontier(&points),
+            "front 0 != batch frontier"
+        );
+        let mut all: Vec<usize> = fronts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        prop_assert!(
+            all == (0..n).collect::<Vec<_>>(),
+            "fronts do not partition the index set"
+        );
+        for k in 1..fronts.len() {
+            for &i in &fronts[k] {
+                prop_assert!(
+                    fronts[k - 1]
+                        .iter()
+                        .any(|&j| pareto::dominates(&points[j], &points[i])),
+                    "front-{k} point {i} not dominated from front {}",
+                    k - 1
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_crowding_distance_is_permutation_invariant() {
+    // crowding distance must be a function of a point's objective values
+    // alone: permuting the input permutes the output identically, and exact
+    // duplicates always share one distance
+    forall("crowding-permutation", 60, |rng| {
+        let dims = 2 + rng.below(3);
+        let n = 1 + rng.below(30);
+        let mut points = objective_cloud(rng, n, dims);
+        if n >= 2 && rng.f64() < 0.4 {
+            points[1] = points[0].clone();
+        }
+        let base = pareto::crowding_distance(&points);
+        prop_assert!(base.len() == n, "one distance per point");
+        prop_assert!(
+            base.iter().all(|d| *d >= 0.0),
+            "crowding distances must be non-negative"
+        );
+        let perm = rng.permutation(n);
+        let permuted: Vec<Vec<f64>> = perm.iter().map(|&i| points[i].clone()).collect();
+        let shuffled = pareto::crowding_distance(&permuted);
+        for (pos, &i) in perm.iter().enumerate() {
+            prop_assert!(
+                shuffled[pos] == base[i],
+                "distance changed under permutation at {i}: {} != {}",
+                shuffled[pos],
+                base[i]
+            );
+        }
+        for i in 0..n {
+            for j in 0..n {
+                if points[i] == points[j] {
+                    prop_assert!(
+                        base[i] == base[j],
+                        "duplicates {i},{j} got different distances"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_feasible_candidates_always_outrank_infeasible() {
+    // the constrained-NSGA-II selection order: every feasible point
+    // precedes every infeasible one (whatever their objectives), the
+    // feasible head starts with the feasible subset's Pareto frontier, and
+    // the infeasible tail is sorted by ascending violation
+    forall("feasible-outranks", 60, |rng| {
+        let dims = 2 + rng.below(3);
+        let n = 2 + rng.below(30);
+        let (points, violation) = constrained_objective_cloud(rng, n, dims);
+        let order = pareto::constrained_selection_order(&points, &violation);
+        prop_assert!(order.len() == n, "order must cover every point");
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        prop_assert!(
+            sorted == (0..n).collect::<Vec<_>>(),
+            "order is not a permutation"
+        );
+        let n_feasible = violation.iter().filter(|&&v| v == 0.0).count();
+        for (pos, &i) in order.iter().enumerate() {
+            prop_assert!(
+                (violation[i] == 0.0) == (pos < n_feasible),
+                "infeasible point {i} ranked inside the feasible prefix"
+            );
+        }
+        // the feasible prefix leads with the feasible Pareto frontier
+        let feasible: Vec<usize> = (0..n).filter(|&i| violation[i] == 0.0).collect();
+        let fobjs: Vec<Vec<f64>> = feasible.iter().map(|&i| points[i].clone()).collect();
+        let rank0: std::collections::BTreeSet<usize> = pareto::pareto_frontier(&fobjs)
+            .into_iter()
+            .map(|k| feasible[k])
+            .collect();
+        let head: std::collections::BTreeSet<usize> =
+            order[..rank0.len()].iter().copied().collect();
+        prop_assert!(
+            head == rank0,
+            "selection head {head:?} != feasible frontier {rank0:?}"
+        );
+        for w in order[n_feasible..].windows(2) {
+            prop_assert!(
+                violation[w[0]] <= violation[w[1]],
+                "infeasible tail not sorted by violation"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nsga2_without_crossover_reproduces_bit_identical_frontiers() {
+    // NSGA-II with crossover disabled and the seeds fixed must walk the
+    // exact same trajectory twice: same candidates, same cells, same
+    // archive, same convergence curve (tiny model so this stays cheap)
+    use mozart::config::{DramKind, Method, ModelId};
+    use mozart::coordinator::explore::{parse_axes, ExploreConfig};
+    use mozart::coordinator::search::{search, SearchConfig, SearchStrategy};
+    let cfg = SearchConfig::new(
+        ExploreConfig {
+            axes: parse_axes("tiles=36:49:64,dram").expect("axes parse"),
+            budget: 0,
+            models: vec![ModelId::TinyMoE],
+            methods: vec![Method::MozartC],
+            seq_len: 64,
+            dram: DramKind::Hbm2,
+            iters: 1,
+            seed: 23,
+            threads: 0,
+        },
+        SearchStrategy::Evolutionary {
+            population: 3,
+            generations: 3,
+            crossover_rate: 0.0, // mutation-only
+            mutation_rate: 0.5,
+            seed: 23,
+        },
+    );
+    let a = search(&cfg);
+    let b = search(&cfg);
+    assert_eq!(a.candidates.len(), b.candidates.len());
+    for (x, y) in a.candidates.iter().zip(b.candidates.iter()) {
+        assert_eq!(x.genome, y.genome);
+        assert_eq!(x.label, y.label);
+    }
+    assert_eq!(a.archive, b.archive, "frontiers must be bit-identical");
+    assert_eq!(a.cells.len(), b.cells.len());
+    for (x, y) in a.cells.iter().zip(b.cells.iter()) {
+        assert_eq!(x.latency_s, y.latency_s);
+        assert_eq!(x.energy_j, y.energy_j);
+        assert_eq!(x.area_mm2, y.area_mm2);
+    }
+    for (x, y) in a.convergence.iter().zip(b.convergence.iter()) {
+        assert_eq!(x.hypervolume, y.hypervolume);
+        assert_eq!(x.archive_size, y.archive_size);
+        assert_eq!(x.feasible, y.feasible);
+    }
 }
 
 #[test]
