@@ -297,6 +297,9 @@ pub struct ExpertLayout {
     pub n_chiplets: usize,
     /// Number of switch groups.
     pub n_groups: usize,
+    /// Whether [`ExpertLayout::spill_dead`] re-homed experts off dead
+    /// chiplets: the uniform experts-per-chiplet invariant is relaxed.
+    pub degraded: bool,
 }
 
 impl ExpertLayout {
@@ -316,7 +319,59 @@ impl ExpertLayout {
             expert_to_chiplet,
             n_chiplets,
             n_groups,
+            degraded: false,
         }
+    }
+
+    /// Re-home every expert living on a dead chiplet onto the surviving
+    /// chiplets (fault tolerance for `dead-chiplet` scenarios): each orphan
+    /// expert moves to the currently least-loaded survivor (group balance
+    /// first, matching the Eq. 5 objective), preferring survivors in the
+    /// dead chiplet's own group on load ties (locality keeps the spill off
+    /// the cross-group trunks), with remaining ties broken by chiplet index.
+    /// Deterministic — the randomness lives in the seeded choice of *which*
+    /// chiplets die, not in where their experts land.
+    ///
+    /// Marks the layout [`degraded`](ExpertLayout::degraded), which relaxes
+    /// the uniform experts-per-chiplet invariant in
+    /// [`validate`](ExpertLayout::validate). Panics if no chiplet survives.
+    pub fn spill_dead(&mut self, dead: &[usize]) {
+        if dead.is_empty() {
+            return;
+        }
+        let is_dead = |c: usize| dead.contains(&c);
+        assert!(
+            (0..self.n_chiplets).any(|c| !is_dead(c)),
+            "spill_dead: every chiplet is dead"
+        );
+        let mut counts = vec![0usize; self.n_chiplets];
+        for &c in &self.expert_to_chiplet {
+            counts[c] += 1;
+        }
+        // orphans in ascending expert order for determinism
+        for e in 0..self.expert_to_chiplet.len() {
+            let home = self.expert_to_chiplet[e];
+            if !is_dead(home) {
+                continue;
+            }
+            let home_group = self.group_of_chiplet(home);
+            let target = (0..self.n_chiplets)
+                .filter(|&c| !is_dead(c))
+                .min_by_key(|&c| {
+                    let foreign = usize::from(self.group_of_chiplet(c) != home_group);
+                    (counts[c], foreign, c)
+                })
+                .expect("a survivor exists");
+            counts[home] -= 1;
+            counts[target] += 1;
+            self.expert_to_chiplet[e] = target;
+        }
+        self.degraded = true;
+    }
+
+    /// Number of experts currently homed on chiplet `c`.
+    pub fn experts_on_chiplet(&self, c: usize) -> usize {
+        self.expert_to_chiplet.iter().filter(|&&x| x == c).count()
     }
 
     /// The optimized layout of Mozart-C: Algorithm 1 + Eq. 5.
@@ -346,17 +401,28 @@ impl ExpertLayout {
     }
 
     /// Structural invariants of the composed layout: valid clustering and
-    /// allocation, every expert mapped, uniform experts per chiplet.
+    /// allocation, every expert mapped, uniform experts per chiplet. A
+    /// [`degraded`](ExpertLayout::degraded) layout (post-spill) relaxes
+    /// uniformity: every expert must still land on a valid chiplet and the
+    /// total must be preserved, but survivors may hold extra experts.
     pub fn validate(&self) -> anyhow::Result<()> {
         self.clustering.validate()?;
         self.allocation.validate()?;
         anyhow::ensure!(self.expert_to_chiplet.iter().all(|&c| c < self.n_chiplets));
-        // every chiplet holds exactly n_experts / n_chiplets experts
         let mut counts = vec![0usize; self.n_chiplets];
         for &c in &self.expert_to_chiplet {
             counts[c] += 1;
         }
-        anyhow::ensure!(counts.iter().all(|&c| c == self.experts_per_chiplet()));
+        if self.degraded {
+            // spill preserves the expert population; placement is non-uniform
+            anyhow::ensure!(
+                counts.iter().sum::<usize>() == self.clustering.n_experts,
+                "spill lost an expert"
+            );
+        } else {
+            // every chiplet holds exactly n_experts / n_chiplets experts
+            anyhow::ensure!(counts.iter().all(|&c| c == self.experts_per_chiplet()));
+        }
         Ok(())
     }
 }
@@ -429,6 +495,47 @@ mod tests {
         assert_eq!(layout.group_of_chiplet(15), 3);
         // contiguous: expert 5 lives on chiplet 1
         assert_eq!(layout.expert_to_chiplet[5], 1);
+    }
+
+    #[test]
+    fn spill_rehomes_orphans_onto_survivors() {
+        let mut layout = ExpertLayout::contiguous(64, 16, 4);
+        layout.spill_dead(&[1, 5]);
+        assert!(layout.degraded);
+        layout.validate().unwrap();
+        // no expert remains on a dead chiplet, none were lost
+        assert!(layout.expert_to_chiplet.iter().all(|&c| c != 1 && c != 5));
+        assert_eq!(layout.expert_to_chiplet.len(), 64);
+        assert_eq!(layout.experts_on_chiplet(1), 0);
+        // the 8 orphans spread over the 14 survivors: max load 5, and the
+        // total is preserved
+        let total: usize = (0..16).map(|c| layout.experts_on_chiplet(c)).sum();
+        assert_eq!(total, 64);
+        let max = (0..16).map(|c| layout.experts_on_chiplet(c)).max().unwrap();
+        assert_eq!(max, 5, "orphans balance onto least-loaded survivors");
+        // spill is deterministic
+        let mut again = ExpertLayout::contiguous(64, 16, 4);
+        again.spill_dead(&[1, 5]);
+        assert_eq!(layout.expert_to_chiplet, again.expert_to_chiplet);
+    }
+
+    #[test]
+    fn spill_of_nothing_keeps_the_layout_strict() {
+        let mut layout = ExpertLayout::contiguous(64, 16, 4);
+        let before = layout.expert_to_chiplet.clone();
+        layout.spill_dead(&[]);
+        assert!(!layout.degraded);
+        assert_eq!(layout.expert_to_chiplet, before);
+        layout.validate().unwrap();
+    }
+
+    #[test]
+    fn undegraded_validate_still_requires_uniformity() {
+        let mut layout = ExpertLayout::contiguous(64, 16, 4);
+        layout.expert_to_chiplet[0] = 3; // non-uniform without the flag
+        assert!(layout.validate().is_err());
+        layout.degraded = true;
+        layout.validate().unwrap();
     }
 
     #[test]

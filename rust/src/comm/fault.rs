@@ -1,0 +1,427 @@
+//! Fault-injection scenarios for the wafer-scale platform (ROADMAP item 4).
+//!
+//! Real 3.5D integrations fail partially: a chiplet can die outright
+//! (known-good-die escapes, power delivery), 2.5D NoP or 3D hybrid-bonding
+//! links can degrade to a fraction of their design bandwidth (bump fatigue,
+//! electromigration), and DRAM stacks thermally throttle under sustained
+//! load (A3D-MoE motivates exactly these heterogeneous-integration failure
+//! modes). A [`FaultScenario`] describes such a condition as a composable
+//! list of [`Fault`]s; [`FaultScenario::effects`] lowers it to per-resource
+//! *health* vectors (fractional multipliers in `(0, 1]` plus a dead-chiplet
+//! set) that the plan builder and the [`NopTree`](crate::comm::NopTree)
+//! apply to their bandwidth and compute rates.
+//!
+//! Determinism contract: fault *placement* (which chiplet dies, which stack
+//! throttles) is drawn from [`util::rng`](crate::util::rng) seeded by
+//! [`FaultScenario::seed`] and the fault's position in the list — never by
+//! its severity parameter. Re-scaling a scenario's severity with
+//! [`FaultScenario::at_severity`] therefore keeps the placement fixed (and
+//! dead-chiplet sets nest as severity grows), which is what makes
+//! degradation curves monotone and bit-reproducible.
+//!
+//! Bit-identity contract: the empty scenario lowers to all-ones health
+//! vectors, and every consumer applies healths multiplicatively (`x * 1.0`
+//! is bitwise `x` for finite `x`), so a fault-free run is bit-identical to
+//! the pre-fault-model code path — the golden anchors do not move.
+
+use crate::util::rng::Rng;
+
+/// Seed salt for fault placement, xored with [`FaultScenario::seed`] so the
+/// placement stream is independent of the routing-trace stream.
+const PLACEMENT_SALT: u64 = 0xFA_0175;
+
+/// One injected fault. Severity parameters are *fractions of design
+/// bandwidth retained* (`frac`, in `(0, 1]`; `1.0` is a no-op) or a count
+/// of failed units.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// `count` MoE chiplets are dead: they compute nothing and their
+    /// experts spill onto the surviving chiplets
+    /// ([`ExpertLayout::spill_dead`](crate::allocation::ExpertLayout::spill_dead)).
+    /// Placement is seeded; at least one chiplet always survives.
+    DeadChiplets {
+        /// Number of MoE chiplets to kill (clamped to `n_chiplets - 1`).
+        count: usize,
+    },
+    /// Every 2.5D NoP-tree edge (group trunks and chiplet leaf links)
+    /// retains `frac` of its bandwidth — wafer-wide signaling degradation.
+    NopDegrade {
+        /// Retained fraction of NoP link bandwidth, in `(0, 1]`.
+        frac: f64,
+    },
+    /// One (seeded) chiplet's 3D hybrid-bonding stack retains `frac` of its
+    /// vertical bandwidth. The logic die reads operands from the bonded
+    /// SRAM die every cycle, so sustained compute on that chiplet scales
+    /// with the bond health.
+    HbDegrade {
+        /// Retained fraction of hybrid-bonding bandwidth, in `(0, 1]`.
+        frac: f64,
+    },
+    /// One (seeded) group DRAM stack thermally throttles to `frac` of its
+    /// design bandwidth, slowing that group's weight-streaming channel.
+    DramThrottle {
+        /// Retained fraction of the stack's DRAM bandwidth, in `(0, 1]`.
+        frac: f64,
+    },
+}
+
+impl Fault {
+    /// Stable CLI/JSON name of the fault kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Fault::DeadChiplets { .. } => "dead-chiplet",
+            Fault::NopDegrade { .. } => "nop-degrade",
+            Fault::HbDegrade { .. } => "hb-degrade",
+            Fault::DramThrottle { .. } => "dram-throttle",
+        }
+    }
+
+    /// `kind:value` rendering; the inverse of [`Fault::parse`].
+    pub fn label(&self) -> String {
+        match self {
+            Fault::DeadChiplets { count } => format!("{}:{count}", self.kind()),
+            Fault::NopDegrade { frac }
+            | Fault::HbDegrade { frac }
+            | Fault::DramThrottle { frac } => format!("{}:{frac}", self.kind()),
+        }
+    }
+
+    /// Parse one `kind:value` spec (e.g. `dead-chiplet:3`, `hb-degrade:0.5`).
+    pub fn parse(spec: &str) -> Result<Fault, String> {
+        let (kind, value) = spec
+            .split_once(':')
+            .ok_or_else(|| format!("fault `{spec}` is not of the form kind:value"))?;
+        let frac = || -> Result<f64, String> {
+            let v: f64 = value
+                .parse()
+                .map_err(|_| format!("fault `{spec}`: `{value}` is not a number"))?;
+            if !(v > 0.0 && v <= 1.0) {
+                return Err(format!(
+                    "fault `{spec}`: retained fraction must be in (0, 1], got {v} \
+                     (use dead-chiplet:N for total failures)"
+                ));
+            }
+            Ok(v)
+        };
+        match kind {
+            "dead-chiplet" | "dead-chiplets" => {
+                let count: usize = value
+                    .parse()
+                    .map_err(|_| format!("fault `{spec}`: `{value}` is not a count"))?;
+                if count == 0 {
+                    return Err(format!("fault `{spec}`: count must be >= 1"));
+                }
+                Ok(Fault::DeadChiplets { count })
+            }
+            "nop-degrade" => Ok(Fault::NopDegrade { frac: frac()? }),
+            "hb-degrade" => Ok(Fault::HbDegrade { frac: frac()? }),
+            "dram-throttle" => Ok(Fault::DramThrottle { frac: frac()? }),
+            _ => Err(format!(
+                "unknown fault kind `{kind}` (expected dead-chiplet, nop-degrade, \
+                 hb-degrade, or dram-throttle)"
+            )),
+        }
+    }
+
+    /// The fault re-scaled to severity `t` in `[0, 1]`: `t = 1` is this
+    /// fault verbatim, `t -> 0` approaches healthy. Counts scale as
+    /// `ceil(t * count)` and retained fractions interpolate linearly from
+    /// `1.0` toward `frac`, so a larger `t` is never less severe.
+    pub fn at_severity(&self, t: f64) -> Fault {
+        assert!((0.0..=1.0).contains(&t), "severity {t} outside [0, 1]");
+        let scale = |frac: f64| 1.0 - t * (1.0 - frac);
+        match *self {
+            Fault::DeadChiplets { count } => Fault::DeadChiplets {
+                count: ((t * count as f64).ceil() as usize).max(1),
+            },
+            Fault::NopDegrade { frac } => Fault::NopDegrade { frac: scale(frac) },
+            Fault::HbDegrade { frac } => Fault::HbDegrade { frac: scale(frac) },
+            Fault::DramThrottle { frac } => Fault::DramThrottle { frac: scale(frac) },
+        }
+    }
+}
+
+/// A composable, seeded fault scenario: an ordered list of faults plus the
+/// placement seed. The empty scenario is the healthy platform.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultScenario {
+    /// Injected faults, applied in order (healths compose multiplicatively).
+    pub faults: Vec<Fault>,
+    /// Placement seed for randomized fault sites (dead chiplets, throttled
+    /// stacks). Independent of the routing-trace seed.
+    pub seed: u64,
+}
+
+impl FaultScenario {
+    /// The healthy platform: no faults.
+    pub fn none() -> FaultScenario {
+        FaultScenario::default()
+    }
+
+    /// Whether the scenario injects nothing (the healthy platform).
+    pub fn is_healthy(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Parse a composite CLI spec: one or more `kind:value` faults joined
+    /// by `,` or `+` (e.g. `dead-chiplet:2,nop-degrade:0.5`).
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultScenario, String> {
+        let mut faults = Vec::new();
+        for part in spec.split([',', '+']) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            faults.push(Fault::parse(part)?);
+        }
+        if faults.is_empty() {
+            return Err(format!("fault spec `{spec}` names no faults"));
+        }
+        Ok(FaultScenario { faults, seed })
+    }
+
+    /// Canonical `,`-joined label; [`FaultScenario::parse`] round-trips it.
+    pub fn label(&self) -> String {
+        if self.is_healthy() {
+            return "healthy".to_string();
+        }
+        self.faults
+            .iter()
+            .map(Fault::label)
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// The scenario with every fault re-scaled to severity `t` in `[0, 1]`
+    /// (see [`Fault::at_severity`]); placement (the seed) is unchanged, so
+    /// severity sweeps degrade the *same* fault sites progressively.
+    pub fn at_severity(&self, t: f64) -> FaultScenario {
+        FaultScenario {
+            faults: self.faults.iter().map(|f| f.at_severity(t)).collect(),
+            seed: self.seed,
+        }
+    }
+
+    /// Lower the scenario to per-resource health vectors for a platform
+    /// with `n_chiplets` MoE chiplets in `n_groups` groups.
+    ///
+    /// Placement determinism: fault `i` draws its sites from a stream
+    /// forked off `seed` by list position, so severity parameters never
+    /// shift another fault's placement, and [`FaultScenario::at_severity`]
+    /// of a `dead-chiplet` fault kills a *prefix* of one fixed permutation
+    /// (dead sets nest as severity grows).
+    pub fn effects(&self, n_chiplets: usize, n_groups: usize) -> FaultEffects {
+        assert!(n_chiplets > 0 && n_groups > 0 && n_chiplets % n_groups == 0);
+        let mut fx = FaultEffects::healthy(n_chiplets, n_groups);
+        let mut base = Rng::new(self.seed ^ PLACEMENT_SALT);
+        for (i, fault) in self.faults.iter().enumerate() {
+            let mut rng = base.fork(i as u64);
+            match *fault {
+                Fault::DeadChiplets { count } => {
+                    let live: Vec<usize> =
+                        (0..n_chiplets).filter(|c| !fx.dead_set[*c]).collect();
+                    // kill a prefix of one permutation of the live set, and
+                    // always leave at least one survivor to absorb the spill
+                    let kill = count.min(live.len().saturating_sub(1));
+                    for &p in rng.permutation(live.len()).iter().take(kill) {
+                        fx.dead_set[live[p]] = true;
+                    }
+                }
+                Fault::NopDegrade { frac } => {
+                    for h in &mut fx.trunk_health {
+                        *h *= frac;
+                    }
+                    for h in &mut fx.leaf_health {
+                        *h *= frac;
+                    }
+                }
+                Fault::HbDegrade { frac } => {
+                    let c = rng.below(n_chiplets);
+                    fx.compute_health[c] *= frac;
+                }
+                Fault::DramThrottle { frac } => {
+                    let g = rng.below(n_groups);
+                    fx.dram_health[g] *= frac;
+                }
+            }
+        }
+        fx
+    }
+}
+
+impl std::fmt::Display for FaultScenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// A [`FaultScenario`] lowered onto a concrete platform shape: per-resource
+/// fractional healths (multipliers in `(0, 1]`) and the dead-chiplet set.
+/// All vectors are `1.0` / `false` for the healthy platform.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEffects {
+    /// `dead_set[c]` — whether MoE chiplet `c` is dead.
+    pub dead_set: Vec<bool>,
+    /// Per-group NoP trunk (root <-> switch) bandwidth health.
+    pub trunk_health: Vec<f64>,
+    /// Per-chiplet NoP leaf (switch <-> chiplet) bandwidth health.
+    pub leaf_health: Vec<f64>,
+    /// Per-chiplet sustained-compute health (hybrid-bonding degradation).
+    pub compute_health: Vec<f64>,
+    /// Per-group DRAM-stack bandwidth health (thermal throttling).
+    pub dram_health: Vec<f64>,
+}
+
+impl FaultEffects {
+    /// All-ones healths and no dead chiplets.
+    pub fn healthy(n_chiplets: usize, n_groups: usize) -> FaultEffects {
+        FaultEffects {
+            dead_set: vec![false; n_chiplets],
+            trunk_health: vec![1.0; n_groups],
+            leaf_health: vec![1.0; n_chiplets],
+            compute_health: vec![1.0; n_chiplets],
+            dram_health: vec![1.0; n_groups],
+        }
+    }
+
+    /// Whether every health is exactly `1.0` and no chiplet is dead.
+    pub fn is_healthy(&self) -> bool {
+        !self.dead_set.iter().any(|&d| d)
+            && self.trunk_health.iter().all(|&h| h == 1.0)
+            && self.leaf_health.iter().all(|&h| h == 1.0)
+            && self.compute_health.iter().all(|&h| h == 1.0)
+            && self.dram_health.iter().all(|&h| h == 1.0)
+    }
+
+    /// Dead MoE chiplet ids, ascending.
+    pub fn dead(&self) -> Vec<usize> {
+        (0..self.dead_set.len()).filter(|&c| self.dead_set[c]).collect()
+    }
+
+    /// Worst NoP leaf-link health among the *live* chiplets of group `g`
+    /// (`1.0` if the whole group is dead): the conservative pacing factor
+    /// for that group's shared weight-streaming channel.
+    pub fn group_leaf_health(&self, g: usize, chiplets_per_group: usize) -> f64 {
+        let lo = g * chiplets_per_group;
+        (lo..lo + chiplets_per_group)
+            .filter(|&c| !self.dead_set[c])
+            .map(|c| self.leaf_health[c])
+            .fold(1.0f64, f64::min)
+    }
+
+    /// Worst trunk health across groups: the serialized all-to-all root
+    /// path is paced by its slowest trunk.
+    pub fn min_trunk_health(&self) -> f64 {
+        self.trunk_health.iter().cloned().fold(1.0f64, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_each_kind() {
+        for spec in [
+            "dead-chiplet:3",
+            "nop-degrade:0.5",
+            "hb-degrade:0.25",
+            "dram-throttle:0.8",
+            "dead-chiplet:2,nop-degrade:0.5,dram-throttle:0.75",
+        ] {
+            let s = FaultScenario::parse(spec, 7).expect(spec);
+            assert_eq!(s.label(), spec, "canonical label");
+            let again = FaultScenario::parse(&s.label(), 7).expect("re-parse");
+            assert_eq!(s, again, "round-trip of `{spec}`");
+        }
+        // `+` is an accepted join character, normalized to `,`
+        let s = FaultScenario::parse("dead-chiplet:1+hb-degrade:0.5", 0).unwrap();
+        assert_eq!(s.label(), "dead-chiplet:1,hb-degrade:0.5");
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "dead-chiplet",      // no value
+            "dead-chiplet:0",    // zero count
+            "dead-chiplet:x",    // not a count
+            "nop-degrade:0",     // zero bandwidth is a dead link, not degrade
+            "nop-degrade:1.5",   // above design bandwidth
+            "hb-degrade:-0.5",   // negative
+            "meltdown:0.5",      // unknown kind
+            "",                  // empty
+            ",,",                // only separators
+        ] {
+            assert!(FaultScenario::parse(bad, 0).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn healthy_scenario_lowers_to_identity_effects() {
+        let fx = FaultScenario::none().effects(16, 4);
+        assert!(fx.is_healthy());
+        assert!(fx.dead().is_empty());
+        assert_eq!(fx.group_leaf_health(2, 4), 1.0);
+        assert_eq!(fx.min_trunk_health(), 1.0);
+    }
+
+    #[test]
+    fn placement_is_seeded_and_reproducible() {
+        let s = FaultScenario::parse("dead-chiplet:4,dram-throttle:0.5", 42).unwrap();
+        let a = s.effects(16, 4);
+        let b = s.effects(16, 4);
+        assert_eq!(a, b, "same seed, same placement");
+        let moved = (43..=47).any(|seed| {
+            let other = FaultScenario { seed, ..s.clone() };
+            other.effects(16, 4).dead() != a.dead()
+        });
+        assert!(moved, "placement never moved across five other seeds");
+        assert_eq!(a.dead().len(), 4);
+    }
+
+    #[test]
+    fn severity_scaling_keeps_placement_and_nests_dead_sets() {
+        let s = FaultScenario::parse("dead-chiplet:6,nop-degrade:0.4", 9).unwrap();
+        let mild = s.at_severity(0.34).effects(16, 4);
+        let severe = s.at_severity(1.0).effects(16, 4);
+        // dead sets nest: every mildly-dead chiplet is also severely dead
+        let (md, sd) = (mild.dead(), severe.dead());
+        assert!(md.len() < sd.len());
+        assert!(md.iter().all(|c| sd.contains(c)), "mild {md:?} severe {sd:?}");
+        // link health interpolates toward the full-severity fraction
+        assert!(mild.trunk_health[0] > severe.trunk_health[0]);
+        assert_eq!(severe.trunk_health[0], 0.4);
+        // severity 0 is healthy bandwidth (counts clamp at >= 1 dead)
+        let zero = s.at_severity(0.0);
+        assert_eq!(zero.faults[1], Fault::NopDegrade { frac: 1.0 });
+    }
+
+    #[test]
+    fn dead_chiplets_always_leave_a_survivor() {
+        let s = FaultScenario::parse("dead-chiplet:99", 1).unwrap();
+        let fx = s.effects(16, 4);
+        assert_eq!(fx.dead().len(), 15, "one survivor absorbs the spill");
+        // composition across two dead-chiplet faults still leaves one alive
+        let s = FaultScenario::parse("dead-chiplet:10,dead-chiplet:10", 1).unwrap();
+        assert_eq!(s.effects(16, 4).dead().len(), 15);
+    }
+
+    #[test]
+    fn faults_compose_multiplicatively() {
+        let s = FaultScenario::parse("nop-degrade:0.5,nop-degrade:0.5", 3).unwrap();
+        let fx = s.effects(16, 4);
+        assert_eq!(fx.trunk_health[0], 0.25);
+        assert_eq!(fx.leaf_health[7], 0.25);
+        assert!(!fx.is_healthy());
+    }
+
+    #[test]
+    fn group_leaf_health_skips_dead_chiplets() {
+        let mut fx = FaultEffects::healthy(16, 4);
+        fx.leaf_health[0] = 0.2;
+        fx.dead_set[0] = true; // the degraded leaf belongs to a dead chiplet
+        fx.leaf_health[1] = 0.6;
+        assert_eq!(fx.group_leaf_health(0, 4), 0.6);
+        assert_eq!(fx.group_leaf_health(1, 4), 1.0);
+    }
+}

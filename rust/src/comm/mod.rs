@@ -1,9 +1,12 @@
 //! On-package communication models: the all-to-all dispatch/combine stages
-//! of expert parallelism (paper §3.3 + Appendix D) and the 2.5D NoP-tree
-//! interconnect (paper §4.4).
+//! of expert parallelism (paper §3.3 + Appendix D), the 2.5D NoP-tree
+//! interconnect (paper §4.4), and the fault-injection scenarios that
+//! degrade both (ROADMAP item 4).
 
 pub mod a2a;
+pub mod fault;
 pub mod nop;
 
 pub use a2a::{A2aStats, A2aVolume};
+pub use fault::{Fault, FaultEffects, FaultScenario};
 pub use nop::NopTree;

@@ -5,7 +5,17 @@
 //! have in-network compute to aggregate MoE outputs locally. DRAM stacks
 //! attach at the switches (group channels) and at the root (attention
 //! channels).
+//!
+//! The tree is link-level: every edge (group trunk, chiplet leaf) carries
+//! an explicit capacity and a fractional *health* multiplier in `(0, 1]`
+//! (see [`crate::comm::fault`]). All healths default to `1.0`, in which
+//! case every time formula below is bitwise identical to the original
+//! healthy-path analytics. Concurrent flows can be evaluated under max-min
+//! fair sharing ([`NopTree::max_min_rates`]) instead of the single-phase
+//! max-leaf analytics, which is what models contention between all-to-all
+//! phases on a partially degraded tree.
 
+use crate::comm::fault::FaultEffects;
 use crate::config::HwConfig;
 
 /// Node identifiers in the tree.
@@ -36,10 +46,15 @@ pub struct NopTree {
     pub leaf_bw: f64,
     /// Per-hop latency (s): router traversal + serialization setup.
     pub hop_latency: f64,
+    /// Per-group trunk health multiplier in `(0, 1]` (all `1.0` = healthy).
+    pub trunk_health: Vec<f64>,
+    /// Per-chiplet leaf-link health multiplier in `(0, 1]`.
+    pub leaf_health: Vec<f64>,
 }
 
 impl NopTree {
-    /// Derive the tree topology and effective bandwidths from a platform.
+    /// Derive the tree topology and effective bandwidths from a platform
+    /// (all link healths `1.0`).
     pub fn from_hw(hw: &HwConfig) -> NopTree {
         NopTree {
             n_groups: hw.n_groups,
@@ -48,7 +63,31 @@ impl NopTree {
             trunk_bw: hw.attn_nop_bw() / hw.n_groups as f64,
             leaf_bw: hw.chiplet_nop_bw(),
             hop_latency: 50e-9, // ~50 ns per NoP router hop at 1 GHz
+            trunk_health: vec![1.0; hw.n_groups],
+            leaf_health: vec![1.0; hw.n_moe_chiplets],
         }
+    }
+
+    /// Derive the tree with the link healths of a lowered fault scenario
+    /// installed (dead chiplets keep their nominal leaf health — they carry
+    /// no traffic at all).
+    pub fn with_faults(hw: &HwConfig, fx: &FaultEffects) -> NopTree {
+        let mut tree = NopTree::from_hw(hw);
+        tree.trunk_health.clone_from(&fx.trunk_health);
+        tree.leaf_health.clone_from(&fx.leaf_health);
+        assert_eq!(tree.trunk_health.len(), tree.n_groups);
+        assert_eq!(tree.leaf_health.len(), tree.n_chiplets());
+        tree
+    }
+
+    /// Effective bandwidth of group `g`'s trunk (GB/s), health applied.
+    pub fn trunk_bw_of(&self, g: usize) -> f64 {
+        self.trunk_bw * self.trunk_health[g]
+    }
+
+    /// Effective bandwidth of chiplet `c`'s leaf link (GB/s), health applied.
+    pub fn leaf_bw_of(&self, c: usize) -> f64 {
+        self.leaf_bw * self.leaf_health[c]
     }
 
     /// Total MoE chiplets (leaves) in the tree.
@@ -100,26 +139,157 @@ impl NopTree {
     }
 
     /// Time for the all-to-all phase: the per-group trunks run in parallel,
-    /// so the finish time is set by the most-loaded group trunk; add leaf
-    /// delivery on the most-loaded chiplet edge.
+    /// so the finish time is set by the most-loaded group trunk (at its
+    /// effective, health-scaled bandwidth); add leaf delivery on the
+    /// most-loaded chiplet edge, paced conservatively by the worst leaf.
     ///
     /// `group_bytes[g]` — bytes crossing the root<->switch trunk of group g;
     /// `max_leaf_bytes` — bytes into the most-loaded chiplet.
+    ///
+    /// With all healths at `1.0` this is bitwise identical to the original
+    /// healthy-tree formula (`x * 1.0` is exact, and max/divide commute for
+    /// non-negative operands).
     pub fn a2a_phase_time(&self, group_bytes: &[f64], max_leaf_bytes: f64) -> f64 {
         assert_eq!(group_bytes.len(), self.n_groups);
         let trunk = group_bytes
             .iter()
-            .cloned()
-            .fold(0.0f64, f64::max)
-            / (self.trunk_bw * 1e9);
-        let leaf = max_leaf_bytes / (self.leaf_bw * 1e9);
+            .enumerate()
+            .map(|(g, &b)| b / (self.trunk_bw * self.trunk_health[g] * 1e9))
+            .fold(0.0f64, f64::max);
+        let min_leaf_health = self.leaf_health.iter().cloned().fold(1.0f64, f64::min);
+        let leaf = max_leaf_bytes / (self.leaf_bw * min_leaf_health * 1e9);
         // dispatch pipelines through switch: total ~ max of stages + hops
         trunk.max(leaf) + 2.0 * self.hop_latency
     }
 
-    /// Aggregate bisection bandwidth root<->leaves (GB/s).
+    /// Aggregate bisection bandwidth root<->leaves (GB/s), healths applied.
+    /// Computed as `sum(healths) * trunk_bw` so the healthy value is exactly
+    /// `trunk_bw * n_groups` (summing small integers first is exact).
     pub fn bisection_bw(&self) -> f64 {
-        self.trunk_bw * self.n_groups as f64
+        self.trunk_health.iter().sum::<f64>() * self.trunk_bw
+    }
+
+    // ---- link-level flow model -------------------------------------------
+    //
+    // Edges are flat-indexed: `0..n_chiplets` are the chiplet leaf links,
+    // `n_chiplets..n_chiplets + n_groups` are the group trunks, and the
+    // last edge is the root's aggregate egress (the attention chiplet's
+    // edges toward the switches, whose capacity is the sum of the effective
+    // trunk bandwidths).
+
+    /// Edge id of chiplet `c`'s leaf link.
+    pub fn leaf_edge(&self, c: usize) -> usize {
+        assert!(c < self.n_chiplets());
+        c
+    }
+
+    /// Edge id of group `g`'s trunk.
+    pub fn trunk_edge(&self, g: usize) -> usize {
+        assert!(g < self.n_groups);
+        self.n_chiplets() + g
+    }
+
+    /// Edge id of the root's aggregate egress.
+    pub fn root_edge(&self) -> usize {
+        self.n_chiplets() + self.n_groups
+    }
+
+    /// Total number of edges in the flow model.
+    pub fn n_edges(&self) -> usize {
+        self.n_chiplets() + self.n_groups + 1
+    }
+
+    /// Effective capacity of an edge (GB/s), health applied.
+    pub fn edge_capacity(&self, edge: usize) -> f64 {
+        let n = self.n_chiplets();
+        if edge < n {
+            self.leaf_bw_of(edge)
+        } else if edge < n + self.n_groups {
+            self.trunk_bw_of(edge - n)
+        } else {
+            assert_eq!(edge, self.root_edge(), "edge id out of range");
+            self.bisection_bw()
+        }
+    }
+
+    /// Max-min fair-share rates (GB/s) for concurrent flows, each described
+    /// by the set of edges it crosses. Classic progressive filling: the
+    /// tightest edge's equal share freezes the flows crossing it, its
+    /// capacity is drained, and the remaining flows re-share what is left.
+    /// Deterministic: ties resolve by ascending edge id.
+    pub fn max_min_rates(&self, flows: &[Vec<usize>]) -> Vec<f64> {
+        let n_edges = self.n_edges();
+        for path in flows {
+            assert!(!path.is_empty(), "flow with an empty path");
+            assert!(path.iter().all(|&e| e < n_edges), "edge id out of range");
+        }
+        let mut cap: Vec<f64> = (0..n_edges).map(|e| self.edge_capacity(e)).collect();
+        let mut rate = vec![0.0f64; flows.len()];
+        let mut fixed = vec![false; flows.len()];
+        while fixed.iter().any(|&f| !f) {
+            let mut users = vec![0usize; n_edges];
+            for (i, path) in flows.iter().enumerate() {
+                if !fixed[i] {
+                    for &e in path {
+                        users[e] += 1;
+                    }
+                }
+            }
+            let mut bottleneck: Option<(usize, f64)> = None;
+            for (e, &u) in users.iter().enumerate() {
+                if u > 0 {
+                    let share = cap[e] / u as f64;
+                    if bottleneck.is_none_or(|(_, s)| share < s) {
+                        bottleneck = Some((e, share));
+                    }
+                }
+            }
+            let (edge, share) = bottleneck.expect("unfixed flows must use an edge");
+            for (i, path) in flows.iter().enumerate() {
+                if !fixed[i] && path.contains(&edge) {
+                    rate[i] = share;
+                    fixed[i] = true;
+                    for &e in path {
+                        cap[e] = (cap[e] - share).max(0.0);
+                    }
+                }
+            }
+        }
+        rate
+    }
+
+    /// Completion time of one all-to-all phase with the per-group flows run
+    /// *concurrently* under max-min fair sharing of the root egress and the
+    /// trunks — contention-aware, unlike the serialized-root analytics of
+    /// [`NopTree::a2a_phase_time`]. On a healthy tree the fair shares
+    /// collapse to one trunk's bandwidth per group, so both models agree.
+    pub fn a2a_contended_time(&self, group_bytes: &[f64]) -> f64 {
+        assert_eq!(group_bytes.len(), self.n_groups);
+        let flows: Vec<Vec<usize>> = (0..self.n_groups)
+            .map(|g| vec![self.root_edge(), self.trunk_edge(g)])
+            .collect();
+        let rates = self.max_min_rates(&flows);
+        let xfer = group_bytes
+            .iter()
+            .zip(&rates)
+            .map(|(&b, &r)| if b > 0.0 { b / (r * 1e9) } else { 0.0 })
+            .fold(0.0f64, f64::max);
+        xfer + 2.0 * self.hop_latency
+    }
+
+    /// Slowdown of a uniform concurrent all-to-all phase on this tree
+    /// relative to the same tree with every link healthy: the multiplicative
+    /// penalty the plan builder applies to the serialized a2a root rate.
+    /// Exactly `1.0` on a healthy tree.
+    pub fn a2a_slowdown(&self) -> f64 {
+        let healthy = NopTree {
+            trunk_health: vec![1.0; self.n_groups],
+            leaf_health: vec![1.0; self.n_chiplets()],
+            ..self.clone()
+        };
+        let uniform = vec![1e9; self.n_groups];
+        // ratio of identical computations is exactly 1.0 when healthy
+        self.a2a_contended_time(&uniform) / healthy.a2a_contended_time(&uniform)
     }
 }
 
@@ -178,5 +348,97 @@ mod tests {
         assert!((t.leaf_bw - expect).abs() < 1e-9, "leaf={}", t.leaf_bw);
         assert!(t.trunk_bw > t.leaf_bw); // root edges are wider
         assert_eq!(t.bisection_bw(), t.trunk_bw * 4.0);
+    }
+
+    #[test]
+    fn healthy_phase_time_is_bitwise_the_legacy_formula() {
+        let t = tree();
+        let group_bytes = [4e9, 1e9, 0.0, 2.5e9];
+        let legacy = (4e9 / (t.trunk_bw * 1e9)).max(0.25e9 / (t.leaf_bw * 1e9))
+            + 2.0 * t.hop_latency;
+        assert_eq!(t.a2a_phase_time(&group_bytes, 0.25e9), legacy);
+    }
+
+    #[test]
+    fn degraded_links_stretch_the_phase() {
+        let mut t = tree();
+        let healthy = t.a2a_phase_time(&[1e9; 4], 0.25e9);
+        t.trunk_health[2] = 0.5;
+        let degraded = t.a2a_phase_time(&[1e9; 4], 0.25e9);
+        assert!(degraded > healthy, "{degraded} vs {healthy}");
+        // the degraded trunk is now the pacing stage
+        let expect = 1e9 / (t.trunk_bw * 0.5 * 1e9) + 2.0 * t.hop_latency;
+        assert_eq!(degraded, expect);
+        // a degraded leaf paces the leaf stage conservatively
+        let mut t = tree();
+        t.leaf_health[9] = 0.1;
+        let leaf_bound = t.a2a_phase_time(&[1e9; 4], 0.25e9);
+        assert!(leaf_bound > healthy);
+        assert_eq!(t.bisection_bw(), t.trunk_bw * 4.0, "trunks unaffected");
+    }
+
+    #[test]
+    fn healthy_fair_share_agrees_with_the_serialized_root_model() {
+        let t = tree();
+        // 4 concurrent uniform flows: root egress splits evenly, each trunk
+        // carries exactly one flow -> every rate is one trunk's bandwidth
+        // (up to water-filling rounding)
+        let contended = t.a2a_contended_time(&[1e9; 4]);
+        let serialized = 1e9 / (t.trunk_bw * 1e9) + 2.0 * t.hop_latency;
+        assert!(
+            ((contended - serialized) / serialized).abs() < 1e-12,
+            "{contended} vs {serialized}"
+        );
+        // self-vs-healthy-clone is a ratio of identical computations, so
+        // the healthy slowdown is EXACTLY 1.0 — the bit-identity guarantee
+        // the plan builder relies on
+        assert_eq!(t.a2a_slowdown(), 1.0);
+    }
+
+    #[test]
+    fn fair_share_rates_respect_capacities_and_converge() {
+        let mut t = tree();
+        t.trunk_health[0] = 0.25;
+        t.leaf_health[5] = 0.5;
+        // per-chiplet flows: leaf + trunk + root for every chiplet
+        let flows: Vec<Vec<usize>> = (0..t.n_chiplets())
+            .map(|c| vec![t.leaf_edge(c), t.trunk_edge(t.group_of(c)), t.root_edge()])
+            .collect();
+        let rates = t.max_min_rates(&flows);
+        assert_eq!(rates.len(), flows.len());
+        for (i, path) in flows.iter().enumerate() {
+            assert!(rates[i] > 0.0, "flow {i} starved");
+            for &e in path {
+                assert!(
+                    rates[i] <= t.edge_capacity(e) + 1e-9,
+                    "flow {i} exceeds edge {e}"
+                );
+            }
+        }
+        // no edge is oversubscribed in aggregate
+        for e in 0..t.n_edges() {
+            let load: f64 = flows
+                .iter()
+                .zip(&rates)
+                .filter(|(p, _)| p.contains(&e))
+                .map(|(_, &r)| r)
+                .sum();
+            assert!(load <= t.edge_capacity(e) + 1e-9, "edge {e} oversubscribed");
+        }
+        // the flows behind the degraded trunk split its reduced capacity
+        let g0: f64 = (0..4).map(|c| rates[c]).sum();
+        assert!((g0 - t.trunk_bw_of(0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slowdown_tracks_the_worst_trunk() {
+        let mut t = tree();
+        t.trunk_health = vec![0.5, 1.0, 1.0, 1.0];
+        let s = t.a2a_slowdown();
+        // transfer stretches 2x; hop latency dampens the ratio slightly
+        assert!(s > 1.5 && s < 2.0 + 1e-9, "slowdown {s}");
+        t.trunk_health = vec![0.5; 4];
+        let uniform = t.a2a_slowdown();
+        assert!(uniform >= s, "uniform degrade is at least as slow");
     }
 }

@@ -34,6 +34,9 @@ pub struct ExperimentConfig {
     pub iters: usize,
     /// RNG seed for the routing-trace generator.
     pub seed: u64,
+    /// Injected fault scenario (the empty scenario is the healthy platform
+    /// and is bit-identical to the pre-fault-model simulation path).
+    pub fault: crate::comm::FaultScenario,
 }
 
 impl ExperimentConfig {
@@ -51,6 +54,7 @@ impl ExperimentConfig {
             micro_batch: 8,
             iters: 32,
             seed: 0x4D6F_7A61, // "Moza"
+            fault: crate::comm::FaultScenario::none(),
         }
     }
 

@@ -1,0 +1,484 @@
+//! `mozart degrade` — fault-severity sweeps and graceful-degradation curves.
+//!
+//! For each (model × method) cell and each fault scenario, the sweep scales
+//! the scenario's severity from 0 (healthy) to 1 (the scenario as written)
+//! via [`FaultScenario::at_severity`], re-simulates the training step, and
+//! reports the **retained throughput** fraction
+//! `healthy latency / faulted latency` — exactly the resilience metric the
+//! NSGA-II `--min-resilience` constraint gates on
+//! (`coordinator::search`), so a degrade curve reads as "where along this
+//! fault axis does a platform fall below its resilience floor".
+//!
+//! Severity 0 is simulated with [`FaultScenario::none`] (not
+//! `at_severity(0.0)`): count-based faults such as `dead-chiplet:N` keep at
+//! least one dead chiplet at any positive interpretation of the scenario,
+//! so the healthy anchor must bypass the scenario entirely. Its retained
+//! fraction is exactly `1.0` (the same experiment divided by itself).
+//!
+//! Everything is seeded and deterministic: the same `(config, seed)` pair
+//! reproduces the same curves bit for bit, sequentially or on the parallel
+//! executor.
+
+use crate::comm::FaultScenario;
+use crate::config::{DramKind, Method, ModelId};
+use crate::coordinator::run_experiment;
+use crate::coordinator::sweep::{cell_config, parallel_map, Cell};
+use crate::util::json::Json;
+use crate::util::table::{scatter_plot, Table};
+
+/// Configuration of one degrade sweep.
+#[derive(Clone, Debug)]
+pub struct DegradeConfig {
+    /// Models to sweep (one curve set per model).
+    pub models: Vec<ModelId>,
+    /// Methods to sweep (one curve set per method).
+    pub methods: Vec<Method>,
+    /// DRAM technology for every cell.
+    pub dram: DramKind,
+    /// Fault scenarios; each yields one severity curve per (model, method).
+    pub scenarios: Vec<FaultScenario>,
+    /// Number of positive severity steps; severities are `i / steps` for
+    /// `i in 1..=steps`, plus the healthy severity-0 anchor.
+    pub steps: usize,
+    /// Sequence length per cell.
+    pub seq_len: usize,
+    /// Simulated training iterations averaged per point.
+    pub iters: usize,
+    /// Master seed (simulation, routing, and fault placement).
+    pub seed: u64,
+    /// Worker threads for the parallel executor (0 = auto).
+    pub threads: usize,
+    /// Cap on the number of *faulted* points simulated (0 = no cap). The
+    /// healthy anchors always run — retained throughput needs them — and
+    /// any truncation is reported, never silent.
+    pub budget: usize,
+}
+
+impl DegradeConfig {
+    /// Paper-flavoured default: the fastest model, the full Mozart method,
+    /// one curve per fault kind, four severity steps.
+    pub fn paper_default() -> DegradeConfig {
+        let seed = 7;
+        DegradeConfig {
+            models: vec![ModelId::OlmoE_1B_7B],
+            methods: vec![Method::MozartC],
+            dram: DramKind::Hbm2,
+            scenarios: default_scenarios(seed),
+            steps: 4,
+            seq_len: 128,
+            iters: 2,
+            seed,
+            threads: 0,
+            budget: 0,
+        }
+    }
+}
+
+/// The default scenario set: one curve per fault kind, at the reference
+/// severities used throughout the docs (4 dead chiplets, 4× link/compute/
+/// DRAM degradation at full severity).
+pub fn default_scenarios(seed: u64) -> Vec<FaultScenario> {
+    [
+        "dead-chiplet:4",
+        "nop-degrade:0.25",
+        "hb-degrade:0.25",
+        "dram-throttle:0.25",
+    ]
+    .iter()
+    .map(|s| {
+        FaultScenario::parse(s, seed).expect("default degrade scenarios parse")
+    })
+    .collect()
+}
+
+/// One simulated point on a degrade curve.
+#[derive(Clone, Debug)]
+pub struct DegradePoint {
+    /// Model of the cell.
+    pub model: ModelId,
+    /// Method of the cell.
+    pub method: Method,
+    /// Scenario label (`FaultScenario::label`); `"healthy"` only ever
+    /// appears via the severity-0 anchors, which carry their curve's label
+    /// instead so each curve is self-contained.
+    pub scenario: String,
+    /// Severity in `[0, 1]`; 0 is the healthy anchor.
+    pub severity: f64,
+    /// Mean step latency at this severity (seconds).
+    pub latency_s: f64,
+    /// Retained throughput: healthy latency / this latency. Exactly 1.0 at
+    /// severity 0.
+    pub retained: f64,
+}
+
+/// Outcome of a degrade sweep: every curve point plus truncation
+/// accounting.
+#[derive(Clone, Debug)]
+pub struct DegradeOutcome {
+    /// Sweep configuration echo.
+    pub cfg: DegradeConfig,
+    /// All points, ordered by (model, method, scenario, severity).
+    pub points: Vec<DegradePoint>,
+    /// Faulted points dropped by `cfg.budget` (0 when the budget was off
+    /// or large enough).
+    pub dropped: usize,
+}
+
+/// Run the sweep: healthy anchors first (they define retained throughput),
+/// then every (cell × scenario × severity) point over the work-stealing
+/// pool. Point order in the output is deterministic and independent of the
+/// thread count.
+pub fn run(cfg: &DegradeConfig) -> DegradeOutcome {
+    let mut cells: Vec<Cell> = Vec::new();
+    for &model in &cfg.models {
+        for &method in &cfg.methods {
+            cells.push(Cell {
+                model,
+                method,
+                seq_len: cfg.seq_len,
+                dram: cfg.dram,
+            });
+        }
+    }
+
+    // healthy anchors: one per cell
+    let healthy: Vec<f64> = parallel_map(&cells, cfg.threads, |&cell| {
+        run_experiment(&cell_config(cell, cfg.iters, cfg.seed)).latency
+    });
+
+    // faulted jobs: (cell index, scenario index, severity step 1..=steps)
+    let mut jobs: Vec<(usize, usize, usize)> = Vec::new();
+    for ci in 0..cells.len() {
+        for si in 0..cfg.scenarios.len() {
+            for ti in 1..=cfg.steps {
+                jobs.push((ci, si, ti));
+            }
+        }
+    }
+    let total = jobs.len();
+    if cfg.budget > 0 && jobs.len() > cfg.budget {
+        jobs.truncate(cfg.budget);
+    }
+    let dropped = total - jobs.len();
+
+    let faulted: Vec<f64> = parallel_map(&jobs, cfg.threads, |&(ci, si, ti)| {
+        let severity = ti as f64 / cfg.steps as f64;
+        let mut ec = cell_config(cells[ci], cfg.iters, cfg.seed);
+        ec.fault = cfg.scenarios[si].at_severity(severity);
+        run_experiment(&ec).latency
+    });
+
+    // assemble curves in deterministic (cell, scenario, severity) order
+    let mut points = Vec::with_capacity(cells.len() * cfg.scenarios.len() + faulted.len());
+    let mut by_job: std::collections::BTreeMap<(usize, usize, usize), f64> =
+        std::collections::BTreeMap::new();
+    for (j, &(ci, si, ti)) in jobs.iter().enumerate() {
+        by_job.insert((ci, si, ti), faulted[j]);
+    }
+    for (ci, cell) in cells.iter().enumerate() {
+        for (si, scenario) in cfg.scenarios.iter().enumerate() {
+            points.push(DegradePoint {
+                model: cell.model,
+                method: cell.method,
+                scenario: scenario.label(),
+                severity: 0.0,
+                latency_s: healthy[ci],
+                retained: healthy[ci] / healthy[ci], // exactly 1.0
+            });
+            for ti in 1..=cfg.steps {
+                if let Some(&lat) = by_job.get(&(ci, si, ti)) {
+                    points.push(DegradePoint {
+                        model: cell.model,
+                        method: cell.method,
+                        scenario: scenario.label(),
+                        severity: ti as f64 / cfg.steps as f64,
+                        latency_s: lat,
+                        retained: healthy[ci] / lat,
+                    });
+                }
+            }
+        }
+    }
+
+    DegradeOutcome {
+        cfg: cfg.clone(),
+        points,
+        dropped,
+    }
+}
+
+impl DegradeOutcome {
+    /// Human-readable report: one table per (model, method) cell plus an
+    /// ASCII retained-throughput-vs-severity plot overlaying every
+    /// scenario's curve (one marker letter per scenario).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# Graceful degradation under injected faults\n\n");
+        if self.dropped > 0 {
+            out.push_str(&format!(
+                "> budget truncation: {} faulted point(s) NOT simulated \
+                 (--budget {}); curves below are partial\n\n",
+                self.dropped, self.cfg.budget
+            ));
+        }
+        for &model in &self.models() {
+            for &method in &self.methods_of(model) {
+                let mut t = Table::new(
+                    &format!(
+                        "{} / {} — retained throughput vs fault severity",
+                        model.name(),
+                        method.name()
+                    ),
+                    &["scenario", "severity", "latency s/step", "retained"],
+                );
+                let mut plot: Vec<(f64, f64, char)> = Vec::new();
+                let mut legend: Vec<(char, String)> = Vec::new();
+                for p in &self.points {
+                    if p.model != model || p.method != method {
+                        continue;
+                    }
+                    t.row(&[
+                        p.scenario.clone(),
+                        format!("{:.2}", p.severity),
+                        format!("{:.4}", p.latency_s),
+                        format!("{:.3}", p.retained),
+                    ]);
+                    let mark = Self::marker(&p.scenario, &mut legend);
+                    plot.push((p.severity, p.retained, mark));
+                }
+                out.push_str(&t.render());
+                out.push('\n');
+                out.push_str(&scatter_plot(
+                    &format!("{} / {}: retained vs severity", model.name(), method.name()),
+                    "severity",
+                    "retained",
+                    &plot,
+                ));
+                out.push('\n');
+                for (mark, label) in &legend {
+                    out.push_str(&format!("  {mark} = {label}\n"));
+                }
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Stable per-scenario plot marker: first unused letter of the
+    /// scenario label, falling back through a fixed alphabet.
+    fn marker(scenario: &str, legend: &mut Vec<(char, String)>) -> char {
+        if let Some((m, _)) = legend.iter().find(|(_, l)| l == scenario) {
+            return *m;
+        }
+        let preferred = scenario.chars().find(|c| c.is_ascii_alphabetic());
+        let mut candidates: Vec<char> = preferred.into_iter().collect();
+        candidates.extend("abcdefghijklmnopqrstuvwxyz".chars());
+        let mark = candidates
+            .into_iter()
+            .find(|c| legend.iter().all(|(m, _)| m != c))
+            .unwrap_or('*');
+        legend.push((mark, scenario.to_string()));
+        mark
+    }
+
+    fn models(&self) -> Vec<ModelId> {
+        let mut v = Vec::new();
+        for p in &self.points {
+            if !v.contains(&p.model) {
+                v.push(p.model);
+            }
+        }
+        v
+    }
+
+    fn methods_of(&self, model: ModelId) -> Vec<Method> {
+        let mut v = Vec::new();
+        for p in &self.points {
+            if p.model == model && !v.contains(&p.method) {
+                v.push(p.method);
+            }
+        }
+        v
+    }
+
+    /// Machine-readable artifact (`DEGRADE_*.json`).
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                Json::obj([
+                    ("model", Json::str(p.model.name())),
+                    ("method", Json::str(p.method.name())),
+                    ("scenario", Json::str(p.scenario.as_str())),
+                    ("severity", Json::num(p.severity)),
+                    ("latency_s", Json::num(p.latency_s)),
+                    ("retained", Json::num(p.retained)),
+                ])
+            })
+            .collect();
+        Json::obj([
+            ("artifact", Json::str("degrade")),
+            (
+                "scenarios",
+                Json::Arr(
+                    self.cfg
+                        .scenarios
+                        .iter()
+                        .map(|s| Json::str(s.label()))
+                        .collect(),
+                ),
+            ),
+            ("steps", Json::int(self.cfg.steps)),
+            ("seq_len", Json::int(self.cfg.seq_len)),
+            ("iters", Json::int(self.cfg.iters)),
+            // string, not number: JSON numbers are f64 and would corrupt
+            // u64 seeds above 2^53, breaking reproduction from the artifact
+            ("seed", Json::str(self.cfg.seed.to_string())),
+            ("dram", Json::str(self.cfg.dram.name())),
+            ("dropped_by_budget", Json::int(self.dropped)),
+            ("points", Json::Arr(points)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(threads: usize) -> DegradeConfig {
+        DegradeConfig {
+            models: vec![ModelId::OlmoE_1B_7B],
+            methods: vec![Method::MozartC],
+            dram: DramKind::Hbm2,
+            scenarios: default_scenarios(11),
+            steps: 2,
+            seq_len: 64,
+            iters: 1,
+            seed: 11,
+            threads,
+            budget: 0,
+        }
+    }
+
+    #[test]
+    fn default_scenarios_cover_at_least_three_fault_kinds() {
+        let s = default_scenarios(7);
+        assert!(s.len() >= 3, "need >= 3 degrade curves, got {}", s.len());
+        let mut kinds: Vec<&str> = s
+            .iter()
+            .flat_map(|sc| sc.faults.iter().map(|f| f.kind()))
+            .collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert!(kinds.len() >= 3, "kinds not distinct: {kinds:?}");
+    }
+
+    #[test]
+    fn sweep_produces_full_curves_with_exact_healthy_anchor() {
+        let out = run(&tiny(1));
+        let cfg = tiny(1);
+        let expected = cfg.scenarios.len() * (cfg.steps + 1);
+        assert_eq!(out.points.len(), expected);
+        assert_eq!(out.dropped, 0);
+        for p in &out.points {
+            assert!(p.latency_s.is_finite() && p.latency_s > 0.0);
+            assert!(p.retained.is_finite() && p.retained > 0.0);
+            // faults never meaningfully speed the step up. Bandwidth/compute
+            // throttles only stretch durations; dead-chiplet spill also
+            // re-samples the workload over the survivor layout, so it gets a
+            // small sampling-noise allowance instead of an exact bound.
+            let tol = if p.scenario.contains("dead-chiplet") {
+                0.05
+            } else {
+                1e-6
+            };
+            assert!(
+                p.retained <= 1.0 + tol,
+                "{} severity {}: retained {} > 1",
+                p.scenario,
+                p.severity,
+                p.retained
+            );
+            if p.severity == 0.0 {
+                assert_eq!(p.retained.to_bits(), 1.0f64.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn severity_one_matches_the_scenario_as_written() {
+        // the curve's endpoint must equal a direct simulation of the
+        // un-scaled scenario — at_severity(1.0) is the identity
+        let cfg = tiny(1);
+        let out = run(&cfg);
+        let p = out
+            .points
+            .iter()
+            .find(|p| p.scenario == cfg.scenarios[0].label() && p.severity == 1.0)
+            .expect("endpoint present");
+        let mut ec = cell_config(
+            Cell {
+                model: cfg.models[0],
+                method: cfg.methods[0],
+                seq_len: cfg.seq_len,
+                dram: cfg.dram,
+            },
+            cfg.iters,
+            cfg.seed,
+        );
+        ec.fault = cfg.scenarios[0].clone();
+        let direct = run_experiment(&ec).latency;
+        assert_eq!(p.latency_s.to_bits(), direct.to_bits());
+    }
+
+    #[test]
+    fn sweep_is_reproducible_and_thread_invariant() {
+        let a = run(&tiny(1));
+        let b = run(&tiny(2));
+        assert_eq!(a.points.len(), b.points.len());
+        for (x, y) in a.points.iter().zip(b.points.iter()) {
+            assert_eq!(x.scenario, y.scenario);
+            assert_eq!(x.severity.to_bits(), y.severity.to_bits());
+            assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+            assert_eq!(x.retained.to_bits(), y.retained.to_bits());
+        }
+    }
+
+    #[test]
+    fn budget_truncates_and_reports() {
+        let mut cfg = tiny(1);
+        cfg.budget = 3;
+        let out = run(&cfg);
+        // all healthy anchors present, only `budget` faulted points
+        let anchors = out.points.iter().filter(|p| p.severity == 0.0).count();
+        assert_eq!(anchors, cfg.scenarios.len());
+        let faulted = out.points.len() - anchors;
+        assert_eq!(faulted, 3);
+        assert_eq!(out.dropped, cfg.scenarios.len() * cfg.steps - 3);
+        assert!(out.render_markdown().contains("budget truncation"));
+    }
+
+    #[test]
+    fn report_and_json_are_well_formed() {
+        let out = run(&tiny(0));
+        let md = out.render_markdown();
+        assert!(md.contains("retained throughput vs fault severity"));
+        assert!(md.contains("retained vs severity"));
+        assert!(md.contains("dead-chiplet:4"));
+        let js = out.to_json().render_pretty();
+        for key in [
+            "\"artifact\"",
+            "\"scenarios\"",
+            "\"seed\"",
+            "\"points\"",
+            "\"retained\"",
+            "\"severity\"",
+            "\"dropped_by_budget\"",
+        ] {
+            assert!(js.contains(key), "missing {key} in {js}");
+        }
+        // seed serialized as a string
+        assert!(js.contains("\"seed\": \"11\""));
+    }
+}

@@ -339,6 +339,10 @@ pub struct ExplorePoint {
     pub mean_power_w: f64,
     /// Mean all-to-all replication factor — reported only.
     pub c_t: f64,
+    /// Retained throughput fraction (healthy latency / faulted latency)
+    /// under the search's `--min-resilience` fault scenario; `None` when no
+    /// resilience evaluation ran (the plain grid explorer never sets it).
+    pub retained: Option<f64>,
 }
 
 impl ExplorePoint {
@@ -399,13 +403,17 @@ pub(crate) fn is_anchor_combo(combo: &[HwOverride], base: &HwConfig) -> bool {
 /// Evaluate one cell: simulate the overridden platform and attach the area
 /// model's objectives. This is the single cell-evaluation path shared by
 /// [`explore`] and the guided search strategies (`coordinator::search`);
-/// `vi` is recorded as the point's variant/candidate index.
+/// `vi` is recorded as the point's variant/candidate index. With a `fault`
+/// scenario (the search's `--min-resilience`), the cell is simulated a
+/// second time under the injected faults and the retained-throughput
+/// fraction (healthy latency / faulted latency) is attached.
 pub(crate) fn eval_point(
     cfg: &ExploreConfig,
     overrides: &[HwOverride],
     vi: usize,
     model: ModelId,
     method: Method,
+    fault: Option<&crate::comm::FaultScenario>,
 ) -> ExplorePoint {
     let model_cfg = ModelConfig::preset(model);
     let mut ec = ExperimentConfig::paper_default(model_cfg, method.config());
@@ -414,6 +422,11 @@ pub(crate) fn eval_point(
     ec.iters = cfg.iters;
     ec.seed = cfg.seed;
     let r = run_experiment(&ec);
+    let retained = fault.map(|scenario| {
+        let mut fc = ec.clone();
+        fc.fault = scenario.clone();
+        r.latency / run_experiment(&fc).latency
+    });
     let m = hw_metrics(&ec.model, &ec.hw);
     ExplorePoint {
         variant: vi,
@@ -425,6 +438,7 @@ pub(crate) fn eval_point(
         power_kw: m.total_power_kw,
         mean_power_w: r.energy.mean_power_w(r.latency),
         c_t: r.c_t,
+        retained,
     }
 }
 
@@ -503,7 +517,7 @@ pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
     }
     .effective_threads(specs.len());
     let points = parallel_map(&specs, threads, |&(vi, model, method)| {
-        eval_point(cfg, &variants[vi].overrides, vi, model, method)
+        eval_point(cfg, &variants[vi].overrides, vi, model, method, None)
     });
 
     let mut frontiers = Vec::new();

@@ -8,6 +8,7 @@
 //! all-to-all, §4.3 fine-grained scheduling) over the architecture model
 //! (§4.4) into end-to-end numbers.
 
+pub mod degrade;
 pub mod explore;
 pub mod search;
 pub mod sweep;
@@ -63,7 +64,7 @@ impl ExperimentResult {
 pub fn layouts_for(cfg: &ExperimentConfig, gen: &TraceGen) -> Vec<ExpertLayout> {
     let hw = &cfg.hw;
     let n_layers = cfg.model.n_moe_layers();
-    if cfg.method.expert_layout {
+    let mut layouts = if cfg.method.expert_layout {
         let profile_tokens = 4096;
         let traces = gen.profile(profile_tokens, cfg.seed ^ 0x50F1_1E);
         traces
@@ -78,7 +79,20 @@ pub fn layouts_for(cfg: &ExperimentConfig, gen: &TraceGen) -> Vec<ExpertLayout> 
             ExpertLayout::contiguous(cfg.model.n_experts, hw.n_moe_chiplets, hw.n_groups);
             n_layers
         ]
+    };
+    // Graceful degradation: experts homed on dead chiplets spill onto the
+    // least-loaded survivors (same objective as Eq. 5). The healthy scenario
+    // has no dead set and leaves the layouts untouched.
+    if !cfg.fault.is_healthy() {
+        let fx = cfg.fault.effects(hw.n_moe_chiplets, hw.n_groups);
+        let dead = fx.dead();
+        if !dead.is_empty() {
+            for layout in &mut layouts {
+                layout.spill_dead(&dead);
+            }
+        }
     }
+    layouts
 }
 
 /// Run one experiment cell: `cfg.iters` simulated training steps with fresh
@@ -216,6 +230,41 @@ mod tests {
     fn baseline_ct_is_k() {
         let r = run_experiment(&cfg(Method::MozartA));
         assert!((r.c_t - 8.0).abs() < 1e-9); // no elision -> C_T == k
+    }
+
+    #[test]
+    fn faulted_experiment_degrades_gracefully() {
+        let h = run_experiment(&cfg(Method::MozartC));
+        let mut fc = cfg(Method::MozartC);
+        fc.fault =
+            crate::comm::FaultScenario::parse("dead-chiplet:2,dram-throttle:0.25", fc.seed)
+                .unwrap();
+        let f = run_experiment(&fc);
+        assert!(
+            f.latency > h.latency,
+            "faulted {} !> healthy {}",
+            f.latency,
+            h.latency
+        );
+        assert!(f.latency.is_finite());
+    }
+
+    /// The all-ones scenario takes the faulted code path (spill check, health
+    /// vectors, contention model) yet must reproduce the healthy experiment
+    /// bit for bit — the zero-fault regression contract.
+    #[test]
+    fn all_ones_scenario_is_bit_identical_at_experiment_level() {
+        let h = run_experiment(&cfg(Method::MozartC));
+        let mut fc = cfg(Method::MozartC);
+        fc.fault = crate::comm::FaultScenario::parse(
+            "nop-degrade:1,hb-degrade:1,dram-throttle:1",
+            fc.seed,
+        )
+        .unwrap();
+        let f = run_experiment(&fc);
+        assert_eq!(h.latency.to_bits(), f.latency.to_bits());
+        assert_eq!(h.c_t.to_bits(), f.c_t.to_bits());
+        assert_eq!(h.energy.total_j().to_bits(), f.energy.total_j().to_bits());
     }
 
     #[test]

@@ -19,10 +19,13 @@
 //!
 //! **Hard constraints.** [`Constraints`] caps the worst-case die area
 //! (`--max-area`, mm²) and the worst-case simulated mean power
-//! (`--max-power`, W). Infeasible candidates are evaluated and recorded but
-//! never enter the frontier archive, and the selection ranks every feasible
-//! candidate ahead of every infeasible one (infeasible by ascending
-//! violation), so area/power budgets are hard caps rather than soft
+//! (`--max-power`, W), and can set a resilience floor (`--min-resilience
+//! X:scenario`): each candidate is additionally simulated under the named
+//! [`FaultScenario`] and must retain at least `X` of its healthy throughput
+//! in the worst case across its cells. Infeasible candidates are evaluated
+//! and recorded but never enter the frontier archive, and the selection
+//! ranks every feasible candidate ahead of every infeasible one (infeasible
+//! by ascending violation), so the budgets are hard caps rather than soft
 //! penalties. Feasibility counts land in the artifact's
 //! `search.feasibility` section.
 //!
@@ -55,6 +58,7 @@
 
 use std::collections::BTreeSet;
 
+use crate::comm::FaultScenario;
 use crate::config::{HwConfig, HwOverride, Method};
 use crate::coordinator::explore::{self, Axis, ExploreConfig, ExplorePoint};
 use crate::coordinator::sweep::{parallel_map, SweepOptions};
@@ -172,17 +176,34 @@ impl SearchStrategy {
     }
 }
 
+/// A resilience floor (`--min-resilience X:scenario`): every candidate must
+/// retain at least `frac` of its healthy throughput when the named
+/// [`FaultScenario`] is injected (retained = healthy latency / faulted
+/// latency, per cell; the candidate's joint resilience is the worst case —
+/// the minimum — across its cells).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MinResilience {
+    /// Required retained-throughput fraction in `(0, 1]`.
+    pub frac: f64,
+    /// The fault scenario the requirement is evaluated under.
+    pub scenario: FaultScenario,
+}
+
 /// Hard design-envelope constraints on the joint (worst-case) objectives.
 /// A candidate is *feasible* iff it violates none of the set caps;
 /// infeasible candidates never enter the frontier archive and are ranked
 /// behind every feasible candidate by the NSGA-II selection.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Constraints {
     /// Cap on the worst-case total die area (mm², `--max-area`).
     pub max_area_mm2: Option<f64>,
     /// Cap on the worst-case simulated mean power draw (W, `--max-power`;
     /// `metrics::energy::EnergyBreakdown::mean_power_w`).
     pub max_power_w: Option<f64>,
+    /// Floor on the worst-case retained throughput under a fault scenario
+    /// (`--min-resilience`). When set, every candidate is additionally
+    /// simulated under [`MinResilience::scenario`].
+    pub min_resilience: Option<MinResilience>,
 }
 
 impl Constraints {
@@ -193,14 +214,25 @@ impl Constraints {
 
     /// Whether any cap is set.
     pub fn any(&self) -> bool {
-        self.max_area_mm2.is_some() || self.max_power_w.is_some()
+        self.max_area_mm2.is_some()
+            || self.max_power_w.is_some()
+            || self.min_resilience.is_some()
+    }
+
+    /// The fault scenario candidates must additionally be evaluated under,
+    /// when a resilience floor is set.
+    pub fn fault_scenario(&self) -> Option<&FaultScenario> {
+        self.min_resilience.as_ref().map(|mr| &mr.scenario)
     }
 
     /// Total normalized violation of the caps: the sum over set caps of the
-    /// relative excess `max(0, value/cap - 1)`. Exactly `0.0` iff feasible;
-    /// larger is worse (the NSGA-II selection orders infeasible candidates
-    /// by this value).
-    pub fn violation(&self, area_mm2: f64, power_w: f64) -> f64 {
+    /// relative excess `max(0, value/cap - 1)` (for the resilience floor,
+    /// `max(0, floor/retained - 1)`). Exactly `0.0` iff feasible; larger is
+    /// worse (the NSGA-II selection orders infeasible candidates by this
+    /// value). `resilience` is the candidate's worst-case retained
+    /// throughput, `None` when no resilience evaluation ran — which counts
+    /// as a full violation whenever a floor is set.
+    pub fn violation(&self, area_mm2: f64, power_w: f64, resilience: Option<f64>) -> f64 {
         let mut v = 0.0;
         if let Some(cap) = self.max_area_mm2 {
             v += (area_mm2 / cap - 1.0).max(0.0);
@@ -208,16 +240,22 @@ impl Constraints {
         if let Some(cap) = self.max_power_w {
             v += (power_w / cap - 1.0).max(0.0);
         }
+        if let Some(mr) = &self.min_resilience {
+            match resilience {
+                Some(r) if r > 0.0 => v += (mr.frac / r - 1.0).max(0.0),
+                _ => v += 1.0,
+            }
+        }
         v
     }
 
-    /// Whether a (area, power) point satisfies every set cap.
-    pub fn feasible(&self, area_mm2: f64, power_w: f64) -> bool {
-        self.violation(area_mm2, power_w) == 0.0
+    /// Whether a (area, power, resilience) point satisfies every set cap.
+    pub fn feasible(&self, area_mm2: f64, power_w: f64, resilience: Option<f64>) -> bool {
+        self.violation(area_mm2, power_w, resilience) == 0.0
     }
 
-    /// Human-readable cap list, e.g. `area <= 900 mm^2, power <= 12000 W`;
-    /// empty when no cap is set.
+    /// Human-readable cap list, e.g. `area <= 900 mm^2, power <= 12000 W,
+    /// resilience >= 0.8 under dead-chiplet:2`; empty when no cap is set.
     pub fn describe(&self) -> String {
         let mut parts: Vec<String> = Vec::new();
         if let Some(cap) = self.max_area_mm2 {
@@ -225,6 +263,13 @@ impl Constraints {
         }
         if let Some(cap) = self.max_power_w {
             parts.push(format!("power <= {cap} W"));
+        }
+        if let Some(mr) = &self.min_resilience {
+            parts.push(format!(
+                "resilience >= {} under {}",
+                mr.frac,
+                mr.scenario.label()
+            ));
         }
         parts.join(", ")
     }
@@ -293,6 +338,11 @@ pub struct JointPoint {
     /// Worst simulated mean power across all evaluated cells (W) —
     /// constrained by `--max-power`, not an objective.
     pub power_w: f64,
+    /// Worst-case (minimum) retained throughput across all evaluated cells
+    /// under the constraint's fault scenario — constrained by
+    /// `--min-resilience`, not an objective. `None` when no resilience
+    /// floor is set (no faulted evaluation ran).
+    pub resilience: Option<f64>,
     /// Indices of this candidate's per-(model × method) cells in
     /// [`SearchOutcome::cells`].
     pub cells: Vec<usize>,
@@ -417,7 +467,7 @@ fn preferred_method(methods: &[Method]) -> Method {
 #[allow(clippy::too_many_arguments)]
 fn eval_batch(
     ex: &ExploreConfig,
-    constraints: Constraints,
+    constraints: &Constraints,
     bases: &[HwConfig],
     batch: Vec<Candidate>,
     candidates: &mut Vec<Candidate>,
@@ -463,9 +513,10 @@ fn eval_batch(
             }
         }
     }
+    let fault = constraints.fault_scenario();
     let threads = SweepOptions { threads: ex.threads }.effective_threads(specs.len());
     let pts = parallel_map(&specs, threads, |&(off, mi, m)| {
-        explore::eval_point(ex, &batch[off].overrides, first + off, ex.models[mi], m)
+        explore::eval_point(ex, &batch[off].overrides, first + off, ex.models[mi], m, fault)
     });
 
     let mut fresh = pts.into_iter();
@@ -493,12 +544,17 @@ fn eval_batch(
         let mut energy_j = 0.0f64;
         let mut area_mm2 = 0.0f64;
         let mut power_w = 0.0f64;
+        // joint resilience is the WORST retained fraction across cells
+        let mut resilience: Option<f64> = None;
         let mut cell_idx = Vec::with_capacity(cand_pts.len());
         for p in cand_pts {
             latency_s = latency_s.max(p.latency_s);
             energy_j = energy_j.max(p.energy_j);
             area_mm2 = area_mm2.max(p.area_mm2);
             power_w = power_w.max(p.mean_power_w);
+            if let Some(r) = p.retained {
+                resilience = Some(resilience.map_or(r, |acc: f64| acc.min(r)));
+            }
             cell_idx.push(cells.len());
             cells.push(p);
         }
@@ -508,11 +564,12 @@ fn eval_batch(
             energy_j,
             area_mm2,
             power_w,
+            resilience,
             cells: cell_idx,
         };
         // hard caps: infeasible candidates are recorded but never pollute
         // the frontier archive
-        if constraints.feasible(jp.area_mm2, jp.power_w) {
+        if constraints.feasible(jp.area_mm2, jp.power_w, jp.resilience) {
             archive.insert(ci, &jp.objectives());
         }
         joint.push(jp);
@@ -626,12 +683,18 @@ fn uniform_crossover(a: &[usize], b: &[usize], rng: &mut Rng) -> Vec<usize> {
 fn selection_order(
     pool: &[usize],
     joint: &[JointPoint],
-    constraints: Constraints,
+    constraints: &Constraints,
 ) -> Vec<usize> {
     let objs: Vec<Vec<f64>> = pool.iter().map(|&ci| joint[ci].objectives()).collect();
     let viol: Vec<f64> = pool
         .iter()
-        .map(|&ci| constraints.violation(joint[ci].area_mm2, joint[ci].power_w))
+        .map(|&ci| {
+            constraints.violation(
+                joint[ci].area_mm2,
+                joint[ci].power_w,
+                joint[ci].resilience,
+            )
+        })
         .collect();
     pareto::constrained_selection_order(&objs, &viol)
 }
@@ -642,7 +705,7 @@ fn environmental_select(
     pool: &[usize],
     n: usize,
     joint: &[JointPoint],
-    constraints: Constraints,
+    constraints: &Constraints,
 ) -> Vec<usize> {
     selection_order(pool, joint, constraints)
         .into_iter()
@@ -682,7 +745,7 @@ pub fn search_with(
     } else {
         None
     };
-    let constraints = cfg.constraints;
+    let constraints = &cfg.constraints;
 
     let mut candidates: Vec<Candidate> = Vec::new();
     let mut cells: Vec<ExplorePoint> = Vec::new();
@@ -727,7 +790,7 @@ pub fn search_with(
         eval_batch(ex, constraints, &bases, batch, candidates, cells, joint, archive);
         let feasible = joint
             .iter()
-            .filter(|j| constraints.feasible(j.area_mm2, j.power_w))
+            .filter(|j| constraints.feasible(j.area_mm2, j.power_w, j.resilience))
             .count();
         let stat = GenStat {
             generation,
@@ -869,7 +932,7 @@ impl SearchOutcome {
     /// an unconstrained run).
     pub fn is_feasible(&self, candidate: usize) -> bool {
         let j = &self.joint[candidate];
-        self.cfg.constraints.feasible(j.area_mm2, j.power_w)
+        self.cfg.constraints.feasible(j.area_mm2, j.power_w, j.resilience)
     }
 
     /// Number of evaluated candidates satisfying the constraints.
@@ -1098,6 +1161,7 @@ impl SearchOutcome {
                         ("power_kw", Json::num(p.power_kw)),
                         ("mean_power_w", Json::num(p.mean_power_w)),
                         ("c_t", Json::num(p.c_t)),
+                        ("retained", p.retained.map_or(Json::Null, Json::num)),
                     ])
                 })
                 .collect(),
@@ -1112,6 +1176,7 @@ impl SearchOutcome {
                         ("energy_j_per_step", Json::num(j.energy_j)),
                         ("area_mm2", Json::num(j.area_mm2)),
                         ("power_w", Json::num(j.power_w)),
+                        ("resilience", j.resilience.map_or(Json::Null, Json::num)),
                         ("feasible", Json::Bool(self.is_feasible(j.candidate))),
                         ("on_frontier", Json::Bool(self.archive.contains(&j.candidate))),
                         (
@@ -1146,6 +1211,22 @@ impl SearchOutcome {
             (
                 "max_power_w",
                 self.cfg.constraints.max_power_w.map_or(Json::Null, Json::num),
+            ),
+            (
+                "min_resilience",
+                self.cfg
+                    .constraints
+                    .min_resilience
+                    .as_ref()
+                    .map_or(Json::Null, |mr| Json::num(mr.frac)),
+            ),
+            (
+                "resilience_scenario",
+                self.cfg
+                    .constraints
+                    .min_resilience
+                    .as_ref()
+                    .map_or(Json::Null, |mr| Json::str(mr.scenario.label())),
             ),
             ("feasible", Json::int(n_feasible)),
             (
@@ -1361,23 +1442,52 @@ mod tests {
     fn constraints_violation_and_describe() {
         let c = Constraints::none();
         assert!(!c.any());
-        assert!(c.feasible(1e9, 1e9));
+        assert!(c.feasible(1e9, 1e9, None));
         assert_eq!(c.describe(), "");
 
         let c = Constraints {
             max_area_mm2: Some(1000.0),
             max_power_w: Some(50.0),
+            ..Constraints::none()
         };
         assert!(c.any());
-        assert!(c.feasible(1000.0, 50.0), "caps are inclusive");
-        assert!(!c.feasible(1001.0, 50.0));
-        assert!(!c.feasible(1000.0, 51.0));
+        assert!(c.feasible(1000.0, 50.0, None), "caps are inclusive");
+        assert!(!c.feasible(1001.0, 50.0, None));
+        assert!(!c.feasible(1000.0, 51.0, None));
         // violations accumulate across caps and scale with the excess
-        let v1 = c.violation(1500.0, 50.0);
-        let v2 = c.violation(2000.0, 50.0);
-        let v3 = c.violation(2000.0, 100.0);
+        let v1 = c.violation(1500.0, 50.0, None);
+        let v2 = c.violation(2000.0, 50.0, None);
+        let v3 = c.violation(2000.0, 100.0, None);
         assert!(v1 > 0.0 && v2 > v1 && v3 > v2);
-        assert_eq!(c.violation(500.0, 25.0), 0.0);
+        assert_eq!(c.violation(500.0, 25.0, None), 0.0);
         assert_eq!(c.describe(), "area <= 1000 mm^2, power <= 50 W");
+    }
+
+    #[test]
+    fn resilience_floor_gates_feasibility() {
+        let c = Constraints {
+            min_resilience: Some(MinResilience {
+                frac: 0.8,
+                scenario: FaultScenario::parse("dead-chiplet:2", 7).unwrap(),
+            }),
+            ..Constraints::none()
+        };
+        assert!(c.any());
+        assert!(c.fault_scenario().is_some());
+        assert!(c.feasible(1e9, 1e9, Some(0.8)), "floor is inclusive");
+        assert!(c.feasible(1e9, 1e9, Some(0.95)));
+        assert!(!c.feasible(1e9, 1e9, Some(0.5)));
+        // a missing resilience evaluation counts as a full violation
+        assert!(!c.feasible(1e9, 1e9, None));
+        assert_eq!(c.violation(1.0, 1.0, None), 1.0);
+        // violations grow as retained throughput falls
+        let v1 = c.violation(1.0, 1.0, Some(0.7));
+        let v2 = c.violation(1.0, 1.0, Some(0.4));
+        assert!(v1 > 0.0 && v2 > v1);
+        assert_eq!(
+            c.describe(),
+            "resilience >= 0.8 under dead-chiplet:2"
+        );
+        assert_eq!(Constraints::none().fault_scenario(), None);
     }
 }

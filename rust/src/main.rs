@@ -5,9 +5,11 @@
 //! appears there, so the dispatch table and the documentation cannot drift.
 
 use anyhow::{bail, Context, Result};
+use mozart::comm::FaultScenario;
 use mozart::config::{DramKind, ExperimentConfig, Method, ModelConfig, ModelId};
+use mozart::coordinator::degrade::{self, DegradeConfig};
 use mozart::coordinator::explore::{self, ExploreConfig};
-use mozart::coordinator::search::{self, Constraints, SearchConfig, SearchStrategy};
+use mozart::coordinator::search::{self, Constraints, MinResilience, SearchConfig, SearchStrategy};
 use mozart::coordinator::sweep::{
     self, cell_config, run_cells_seq, run_cells_with, Cell, SweepOptions,
 };
@@ -17,8 +19,9 @@ use mozart::util::cli::Args;
 use mozart::util::json::Json;
 
 /// Every dispatchable subcommand, in help order.
-const SUBCOMMANDS: [&str; 8] = [
-    "report", "simulate", "layout", "bench", "explore", "train", "platform", "help",
+const SUBCOMMANDS: [&str; 9] = [
+    "report", "simulate", "layout", "bench", "explore", "degrade", "train", "platform",
+    "help",
 ];
 
 /// The full usage text (`mozart help`). Documents every subcommand and every
@@ -39,7 +42,7 @@ COMMANDS:
   layout          expert clustering + allocation: --model ... [--seed N]
   bench           time the sweep + explore + search grids (sequential vs
                   parallel executor) and write BENCH_sweep.json:
-                  [--grid table3|appendix|explore|search|all] [--iters N]
+                  [--grid table3|appendix|explore|search|degrade|all] [--iters N]
                   [--seed N] [--threads N] [--reps N] [--out BENCH_sweep.json]
   explore         design-space exploration: enumerate or search a hardware
                   axis grid, run every (variant x model x method) cell,
@@ -57,17 +60,38 @@ COMMANDS:
                   a searchable gene (each candidate picks one method), so
                   the frontier answers which ablation to deploy on which
                   platform:
+                  --min-resilience FRAC:SCENARIO additionally requires each
+                  candidate to retain at least FRAC of its healthy
+                  throughput under the injected fault SCENARIO (same
+                  grammar as degrade's --fault), rejecting fragile
+                  platforms the unconstrained search would keep:
                   [--axes tiles,nop_bw,dram | tiles=36:64:100,
                    knob=dram_eff:0.6:0.95,...]
                   [--strategy exhaustive|random|evolutionary]
                   [--budget N] [--samples N] [--population N]
                   [--generations N] [--crossover R] [--mutation R]
                   [--max-area MM2] [--max-power W]
+                  [--min-resilience FRAC:SCENARIO]
                   [--models qwen3|olmoe|deepseek|tiny|all] [--model ...]
                   [--method baseline|a|b|c|all]
                   [--methods baseline,a,b,c|all] [--seq N] [--dram hbm2|ssd]
                   [--iters N] [--seed N] [--threads N]
                   [--out EXPLORE_design_space.json]
+  degrade         fault-injection severity sweep: for each (model x method)
+                  cell and each fault scenario, scale the scenario from
+                  severity 0 (healthy) to 1 (as written), re-simulate, and
+                  report retained throughput (healthy / faulted latency) as
+                  tables + ASCII curves, writing a DEGRADE_*.json artifact.
+                  A scenario is a comma/plus list of faults —
+                  dead-chiplet:N | nop-degrade:F | hb-degrade:F |
+                  dram-throttle:F — and --fault takes a semicolon-separated
+                  list of scenarios (default: one curve per fault kind):
+                  [--fault 'dead-chiplet:4;nop-degrade:0.25,hb-degrade:0.5']
+                  [--steps N] [--budget N  cap on faulted points, 0 = all]
+                  [--models qwen3|olmoe|deepseek|tiny|all] [--model ...]
+                  [--method baseline|a|b|c|all] [--seq N] [--dram hbm2|ssd]
+                  [--iters N] [--seed N] [--threads N]
+                  [--out DEGRADE_curves.json]
   train           real end-to-end training of the tiny MoE via PJRT:
                   [--steps N] [--artifacts artifacts/] [--log-every N]
                   [--seed N]
@@ -83,6 +107,7 @@ fn main() -> Result<()> {
         "layout" => cmd_layout(&args),
         "bench" => cmd_bench(&args),
         "explore" => cmd_explore(&args),
+        "degrade" => cmd_degrade(&args),
         "train" => cmd_train(&args),
         "platform" => cmd_platform(),
         "help" | "--help" => {
@@ -318,16 +343,44 @@ fn cmd_explore(args: &Args) -> Result<()> {
             }
         }
     };
+    let seed: u64 = args.get_parse("seed", 7)?;
+    // resilience floor: FRAC:SCENARIO, e.g. 0.8:dead-chiplet:2 — the
+    // scenario grammar (and its placement seed) is shared with `degrade`
+    let min_resilience = match args.get("min-resilience") {
+        None => None,
+        Some(spec) => {
+            let (frac_s, scen_s) = spec.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--min-resilience wants FRAC:SCENARIO, e.g. 0.8:dead-chiplet:2"
+                )
+            })?;
+            let frac: f64 = frac_s
+                .parse()
+                .with_context(|| format!("invalid --min-resilience fraction `{frac_s}`"))?;
+            if !(frac.is_finite() && frac > 0.0 && frac <= 1.0) {
+                bail!("--min-resilience fraction must be in (0, 1], got {frac}");
+            }
+            let scenario = FaultScenario::parse(scen_s, seed)
+                .map_err(|e| anyhow::anyhow!("bad --min-resilience scenario: {e}"))?;
+            if scenario.is_healthy() {
+                bail!("--min-resilience needs a non-empty fault scenario");
+            }
+            Some(MinResilience { frac, scenario })
+        }
+    };
     let constraints = Constraints {
         max_area_mm2: parse_cap("max-area", args.get("max-area"))?,
         max_power_w: parse_cap("max-power", args.get("max-power"))?,
+        min_resilience,
     };
     if constraints.any() && args.get("strategy").is_none() {
-        bail!("--max-area/--max-power require --strategy (the constrained search engine)");
+        bail!(
+            "--max-area/--max-power/--min-resilience require --strategy \
+             (the constrained search engine)"
+        );
     }
     let dram = parse_dram(args)?;
     let budget = args.get_parse("budget", 64)?;
-    let seed: u64 = args.get_parse("seed", 7)?;
     let cfg = ExploreConfig {
         axes,
         budget,
@@ -367,6 +420,72 @@ fn cmd_explore(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `mozart degrade`: fault-injection severity sweep — one retained-
+/// throughput curve per (model x method x scenario), printed as tables and
+/// ASCII plots and written to a `DEGRADE_*.json` artifact.
+fn cmd_degrade(args: &Args) -> Result<()> {
+    let model_spec = args
+        .get("models")
+        .or_else(|| args.get("model"))
+        .unwrap_or("olmoe");
+    let models: Vec<ModelId> = match model_spec.to_ascii_lowercase().as_str() {
+        "all" => ModelId::PAPER_MODELS.to_vec(),
+        s => vec![ModelId::from_name(s)
+            .context("unknown --models (qwen3|olmoe|deepseek|tiny|all)")?],
+    };
+    let methods: Vec<Method> =
+        match args.get_or("method", "c").to_ascii_lowercase().as_str() {
+            "all" => Method::ALL.to_vec(),
+            s => vec![
+                Method::from_name(s).context("unknown --method (baseline|a|b|c|all)")?,
+            ],
+        };
+    let seed: u64 = args.get_parse("seed", 7)?;
+    // one scenario per semicolon-separated part; commas/pluses compose
+    // faults WITHIN a scenario (FaultScenario grammar)
+    let scenarios = match args.get("fault") {
+        None => degrade::default_scenarios(seed),
+        Some(spec) => {
+            let mut v = Vec::new();
+            for part in spec.split(';').filter(|s| !s.trim().is_empty()) {
+                let sc = FaultScenario::parse(part.trim(), seed)
+                    .map_err(|e| anyhow::anyhow!("bad --fault scenario `{part}`: {e}"))?;
+                if sc.is_healthy() {
+                    bail!("--fault scenario `{part}` is empty");
+                }
+                v.push(sc);
+            }
+            if v.is_empty() {
+                bail!("--fault needs at least one scenario");
+            }
+            v
+        }
+    };
+    let steps: usize = args.get_parse("steps", 4)?;
+    if steps == 0 {
+        bail!("--steps must be >= 1");
+    }
+    let cfg = DegradeConfig {
+        models,
+        methods,
+        dram: parse_dram(args)?,
+        scenarios,
+        steps,
+        seq_len: args.get_parse("seq", 128)?,
+        iters: args.get_parse("iters", 2)?,
+        seed,
+        threads: args.get_parse("threads", 0)?,
+        budget: args.get_parse("budget", 0)?,
+    };
+    let outcome = degrade::run(&cfg);
+    println!("{}", outcome.render_markdown());
+    let out_path = args.get_or("out", "DEGRADE_curves.json");
+    std::fs::write(out_path, outcome.to_json().render_pretty())
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
 /// `mozart bench`: time the sweep, explore, and guided-search grids through
 /// the sequential reference path and the parallel executor, verify the
 /// results are bit-identical, and write a machine-readable
@@ -384,18 +503,23 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let mut grids: Vec<(&str, Vec<Cell>)> = Vec::new();
     let mut bench_explore = false;
     let mut bench_search = false;
+    let mut bench_degrade = false;
     match grid.as_str() {
         "table3" => grids.push(("table3", sweep::table3_cells())),
         "appendix" => grids.push(("appendix_seq128", sweep::appendix_cells(128))),
         "explore" => bench_explore = true,
         "search" => bench_search = true,
+        "degrade" => bench_degrade = true,
         "all" => {
             grids.push(("table3", sweep::table3_cells()));
             grids.push(("appendix_seq128", sweep::appendix_cells(128)));
             bench_explore = true;
             bench_search = true;
+            bench_degrade = true;
         }
-        other => bail!("unknown --grid {other} (table3|appendix|explore|search|all)"),
+        other => {
+            bail!("unknown --grid {other} (table3|appendix|explore|search|degrade|all)")
+        }
     }
 
     let mut grid_reports: Vec<Json> = Vec::new();
@@ -590,6 +714,63 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
     }
 
+    if bench_degrade {
+        // degrade hot path: one cell, the default scenario set, two
+        // severity steps; sequential vs parallel executor must agree bit
+        // for bit (assembly order is deterministic by construction)
+        let mut dcfg = DegradeConfig::paper_default();
+        dcfg.steps = 2;
+        dcfg.seq_len = 128;
+        dcfg.iters = iters;
+        dcfg.seed = seed;
+        dcfg.scenarios = degrade::default_scenarios(seed);
+        let mut seq_cfg = dcfg.clone();
+        seq_cfg.threads = 1;
+        let mut par_cfg = dcfg;
+        par_cfg.threads = threads;
+
+        let mut seq_out = None;
+        let seq = bench("degrade[severity sweep]: sequential", reps, || {
+            seq_out = Some(degrade::run(&seq_cfg));
+        });
+        let mut par_out = None;
+        let par = bench("degrade[severity sweep]: parallel", reps, || {
+            par_out = Some(degrade::run(&par_cfg));
+        });
+
+        let a = seq_out.expect("reps >= 1 guarantees one sequential pass");
+        let b = par_out.expect("reps >= 1 guarantees one parallel pass");
+        let n = a.points.len();
+        let n_workers = SweepOptions { threads }.effective_threads(n);
+        let identical = a.points.len() == b.points.len()
+            && a.points.iter().zip(b.points.iter()).all(|(x, y)| {
+                x.scenario == y.scenario
+                    && x.severity == y.severity
+                    && x.latency_s == y.latency_s
+                    && x.retained == y.retained
+            });
+        let speedup = seq.mean_s / par.mean_s;
+        println!(
+            "  -> degrade: {:.2}x speedup, {:.2} cells/s parallel, bit-identical: {identical}\n",
+            speedup,
+            n as f64 / par.mean_s
+        );
+        grid_reports.push(Json::obj([
+            ("name", Json::str("degrade_severity")),
+            ("cells", Json::int(n)),
+            ("workers", Json::int(n_workers)),
+            ("sequential", seq.to_json()),
+            ("parallel", par.to_json()),
+            ("cells_per_s_sequential", Json::num(n as f64 / seq.mean_s)),
+            ("cells_per_s_parallel", Json::num(n as f64 / par.mean_s)),
+            ("speedup_parallel_vs_sequential", Json::num(speedup)),
+            ("bit_identical", Json::Bool(identical)),
+        ]));
+        if !identical {
+            bail!("parallel degrade diverged from sequential");
+        }
+    }
+
     let report = Json::obj([
         ("bench", Json::str("sweep")),
         ("iters", Json::int(iters)),
@@ -693,6 +874,11 @@ mod tests {
             "--population",
             "--generations",
             "--mutation",
+            "--max-area",
+            "--max-power",
+            "--min-resilience",
+            "--fault",
+            "--steps",
         ] {
             assert!(HELP.contains(flag), "flag `{flag}` missing from help text");
         }

@@ -66,16 +66,27 @@ struct Resources {
     nop_root: ResourceId,
 }
 
-/// Duration helpers with all calibration knobs applied.
+/// Duration helpers with all calibration knobs *and* fault effects applied.
+///
+/// Fault health factors enter multiplicatively and default to 1.0, so the
+/// healthy path computes `bw * 1.0` everywhere — bitwise identical to the
+/// pre-fault-model formulas (for finite positive `x`, `x * 1.0 == x`
+/// exactly, and `min`/`max`/division commute with the no-op scaling).
 struct Durations {
-    /// seconds per byte on one group's stream path.
-    group_stream_spb: f64,
+    /// seconds per byte on group `g`'s stream path (DRAM throttling and
+    /// degraded ingress links slow individual groups independently).
+    group_stream_spb: Vec<f64>,
     /// seconds per byte on the attention DRAM channels.
     attn_dram_spb: f64,
-    /// seconds per byte on the serialized a2a root path.
+    /// seconds per byte on the serialized a2a root path, inflated by the
+    /// flow-level contention slowdown of the degraded NoP tree (exactly
+    /// 1.0 on a healthy tree — see [`NopTree::a2a_slowdown`]).
+    ///
+    /// [`NopTree::a2a_slowdown`]: crate::comm::NopTree::a2a_slowdown
     a2a_spb: f64,
-    /// seconds per FLOP on one MoE chiplet.
-    moe_spf: f64,
+    /// seconds per FLOP on MoE chiplet `c` (HB-link degradation starves
+    /// the arrays of operands, scaling sustained throughput).
+    moe_spf: Vec<f64>,
     /// seconds per FLOP on the attention chiplet.
     attn_spf: f64,
     chunk_overhead: f64,
@@ -85,13 +96,27 @@ struct Durations {
 }
 
 impl Durations {
-    fn new(cfg: &ExperimentConfig) -> Durations {
+    fn new(cfg: &ExperimentConfig, fx: &crate::comm::FaultEffects) -> Durations {
         let hw = &cfg.hw;
+        let per = hw.chiplets_per_group();
+        let group_stream_spb = (0..hw.n_groups)
+            .map(|g| {
+                let dram = hw.group_dram_bw() * fx.dram_health[g];
+                let nop = hw.chiplet_nop_bw()
+                    * fx.group_leaf_health(g, per)
+                    * hw.knobs.group_concurrency as f64;
+                1.0 / (dram.min(nop) * 1e9)
+            })
+            .collect();
+        let moe_spf = (0..hw.n_moe_chiplets)
+            .map(|c| 1.0 / (hw.moe_chiplet_flops() * fx.compute_health[c]))
+            .collect();
+        let a2a_slowdown = crate::comm::NopTree::with_faults(hw, fx).a2a_slowdown();
         Durations {
-            group_stream_spb: 1.0 / (hw.group_stream_bw() * 1e9),
+            group_stream_spb,
             attn_dram_spb: 1.0 / (hw.attn_dram_bw() * 1e9),
-            a2a_spb: 1.0 / (hw.a2a_root_bw() * 1e9),
-            moe_spf: 1.0 / hw.moe_chiplet_flops(),
+            a2a_spb: a2a_slowdown / (hw.a2a_root_bw() * 1e9),
+            moe_spf,
             attn_spf: 1.0 / hw.attn_chiplet_flops(),
             chunk_overhead: hw.knobs.chunk_overhead_us * 1e-6,
             a2a_occupancy: hw.knobs.a2a_link_occupancy,
@@ -230,6 +255,8 @@ impl PlanCache {
             nop_root: plan.add_resource("nop-root"),
         };
 
+        let fx = cfg.fault.effects(hw.n_moe_chiplets, hw.n_groups);
+
         let mut experts_on: Vec<Vec<Vec<usize>>> = Vec::with_capacity(n_layers);
         let mut group_of: Vec<Vec<usize>> = Vec::with_capacity(n_layers);
         for layout in layouts {
@@ -237,6 +264,13 @@ impl PlanCache {
             let mut on: Vec<Vec<usize>> = vec![Vec::new(); nc];
             for (e, &c) in layout.expert_to_chiplet.iter().enumerate() {
                 on[c].push(e);
+            }
+            for &c in &fx.dead() {
+                assert!(
+                    on[c].is_empty(),
+                    "chiplet {c} is dead but still hosts experts — \
+                     apply ExpertLayout::spill_dead before building the plan"
+                );
             }
             experts_on.push(on);
             group_of.push((0..nc).map(|c| layout.group_of_chiplet(c)).collect());
@@ -251,7 +285,7 @@ impl PlanCache {
             plan,
             spare: Vec::new(),
             res,
-            dur: Durations::new(cfg),
+            dur: Durations::new(cfg, &fx),
             lb: LayerBytes::of(cfg),
             n_mb: cfg.n_micro_batches(),
             n_layers,
@@ -405,7 +439,7 @@ impl PlanCache {
                     // dispatch (strict phase order), wired below via barrier.
                     let t = plan.add_task(TaskSpec {
                         resource: Some(res.group_stream[g]),
-                        duration: lb.expert_bytes * dur.group_stream_spb
+                        duration: lb.expert_bytes * dur.group_stream_spb[g]
                             + dur.chunk_overhead,
                         deps,
                         priority: if overlap {
@@ -553,7 +587,7 @@ impl PlanCache {
                         let flops = slots * expert_flops;
                         let t = plan.add_task(TaskSpec {
                             resource: Some(res.moe_compute[c]),
-                            duration: flops * dur.moe_spf,
+                            duration: flops * dur.moe_spf[c],
                             deps,
                             priority: (m * 64 + slot) as i64,
                             tag: Tag::MoeCompute,
@@ -588,7 +622,7 @@ impl PlanCache {
                     let deps = deps_from(spare, &mb_compute[m]);
                     let t = plan.add_task(TaskSpec {
                         resource: Some(res.group_stream[g]),
-                        duration: bytes * dur.group_stream_spb,
+                        duration: bytes * dur.group_stream_spb[g],
                         deps,
                         priority: 500_000 + (l * 16 + m) as i64,
                         tag: Tag::ActSave,
@@ -705,7 +739,7 @@ impl PlanCache {
                     }
                     let t = plan.add_task(TaskSpec {
                         resource: Some(res.group_stream[g]),
-                        duration: lb.expert_bytes * dur.group_stream_spb
+                        duration: lb.expert_bytes * dur.group_stream_spb[g]
                             + dur.chunk_overhead,
                         deps,
                         priority: if overlap {
@@ -747,7 +781,7 @@ impl PlanCache {
                 };
                 let t = plan.add_task(TaskSpec {
                     resource: Some(res.group_stream[g]),
-                    duration: bytes * dur.group_stream_spb,
+                    duration: bytes * dur.group_stream_spb[g],
                     deps,
                     priority: 100 + (n_layers - l) as i64,
                     tag: Tag::ActLoad,
@@ -825,7 +859,7 @@ impl PlanCache {
                         let flops = 2.0 * slots * expert_flops;
                         let t = plan.add_task(TaskSpec {
                             resource: Some(res.moe_compute[c]),
-                            duration: flops * dur.moe_spf,
+                            duration: flops * dur.moe_spf[c],
                             deps,
                             priority: (m * 64 + slot) as i64,
                             tag: Tag::MoeCompute,
@@ -879,7 +913,7 @@ impl PlanCache {
                 }
                 let wb = plan.add_task(TaskSpec {
                     resource: Some(res.group_stream[g]),
-                    duration: group_weight_bytes * dur.group_stream_spb,
+                    duration: group_weight_bytes * dur.group_stream_spb[g],
                     deps: wb_deps,
                     priority: 200 + (n_layers - l) as i64,
                     tag: Tag::GradWriteback,
@@ -888,7 +922,7 @@ impl PlanCache {
                 });
                 let opt = plan.add_task(TaskSpec {
                     resource: Some(res.group_stream[g]),
-                    duration: group_weight_bytes * dur.opt_factor * dur.group_stream_spb,
+                    duration: group_weight_bytes * dur.opt_factor * dur.group_stream_spb[g],
                     deps: deps_from(spare, &[wb]),
                     priority: 300 + (n_layers - l) as i64,
                     tag: Tag::OptimUpdate,
@@ -1070,5 +1104,73 @@ mod tests {
                 );
             }
         }
+    }
+
+    fn run_with_fault(method: Method, fault: &str) -> f64 {
+        let mut cfg = small_cfg(method.config());
+        cfg.fault = crate::comm::FaultScenario::parse(fault, cfg.seed).unwrap();
+        let gen = TraceGen::for_model(&cfg.model, 5);
+        let mut layouts = vec![
+            ExpertLayout::contiguous(cfg.model.n_experts, 16, 4);
+            cfg.model.n_moe_layers()
+        ];
+        let fx = cfg.fault.effects(cfg.hw.n_moe_chiplets, cfg.hw.n_groups);
+        for layout in &mut layouts {
+            layout.spill_dead(&fx.dead());
+        }
+        let mut rng = Rng::new(6);
+        let coalesce = cfg.method.efficient_a2a;
+        let w = crate::pipeline::StepWorkload::sample(&cfg, &gen, &layouts, coalesce, &mut rng);
+        let plan = build_step_plan(&StepInputs {
+            cfg: &cfg,
+            layouts: &layouts,
+            workload: &w,
+        });
+        plan.validate().unwrap();
+        Simulator::run(&plan).makespan
+    }
+
+    /// A scenario whose faults are all present but at health 1.0 exercises
+    /// the fault-aware code path end to end and must still be bit-identical
+    /// to the healthy build (health factors are no-op multiplications).
+    #[test]
+    fn all_ones_fault_scenario_is_bit_identical() {
+        for m in Method::ALL {
+            let healthy = run(m);
+            let faulted = run_with_fault(m, "nop-degrade:1,hb-degrade:1,dram-throttle:1");
+            assert_eq!(healthy.to_bits(), faulted.to_bits(), "{}", m.name());
+        }
+    }
+
+    /// Severe (20x) degradations cannot hide under pipeline slack on any
+    /// resource, so each one must strictly stretch the step. (Mild faults
+    /// on off-critical-path resources may legitimately be absorbed.)
+    #[test]
+    fn real_faults_stretch_the_step() {
+        let healthy = run(Method::MozartC);
+        for fault in [
+            "dead-chiplet:4",
+            "nop-degrade:0.05",
+            "hb-degrade:0.05",
+            "dram-throttle:0.05",
+        ] {
+            let faulted = run_with_fault(Method::MozartC, fault);
+            assert!(
+                faulted > healthy,
+                "{fault}: faulted {faulted} !> healthy {healthy}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "apply ExpertLayout::spill_dead")]
+    fn dead_chiplet_without_spill_is_rejected() {
+        let mut cfg = small_cfg(MethodConfig::mozart_c());
+        cfg.fault = crate::comm::FaultScenario::parse("dead-chiplet:1", cfg.seed).unwrap();
+        let layouts = vec![
+            ExpertLayout::contiguous(cfg.model.n_experts, 16, 4);
+            cfg.model.n_moe_layers()
+        ];
+        let _ = PlanCache::new(&cfg, &layouts);
     }
 }

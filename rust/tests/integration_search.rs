@@ -228,7 +228,9 @@ fn report_artifact_and_progress_render() {
         "\"worst_case_across_models\"", "\"on_frontier\"", "\"paper_on_frontier\"",
         "\"population\"", "\"mutation_rate\"", "\"crossover_rate\"",
         "\"feasibility\"", "\"constrained\"", "\"max_area_mm2\"", "\"max_power_w\"",
-        "\"anchor_feasible\"", "\"method_gene\"", "\"mean_power_w\"", "\"power_w\"",
+        "\"min_resilience\"", "\"resilience_scenario\"", "\"retained\"",
+        "\"resilience\"", "\"anchor_feasible\"", "\"method_gene\"",
+        "\"mean_power_w\"", "\"power_w\"",
     ] {
         assert!(js.contains(key), "artifact missing {key}");
     }
@@ -251,7 +253,7 @@ fn constrained_search_frontier_respects_hard_caps() {
     let out = search(&SearchConfig {
         constraints: Constraints {
             max_area_mm2: Some(cap),
-            max_power_w: None,
+            ..Constraints::none()
         },
         ..SearchConfig::new(tiny_explore(0), SearchStrategy::Exhaustive)
     });
@@ -286,8 +288,8 @@ fn constrained_search_frontier_respects_hard_caps() {
     let pcap = powers[powers.len() / 2];
     let out = search(&SearchConfig {
         constraints: Constraints {
-            max_area_mm2: None,
             max_power_w: Some(pcap),
+            ..Constraints::none()
         },
         ..SearchConfig::new(tiny_explore(0), evolutionary(13))
     });
@@ -315,7 +317,7 @@ fn impossible_constraints_yield_an_empty_frontier() {
     let out = search(&SearchConfig {
         constraints: Constraints {
             max_area_mm2: Some(1.0), // 1 mm^2: nothing fits
-            max_power_w: None,
+            ..Constraints::none()
         },
         ..SearchConfig::new(tiny_explore(0), evolutionary(13))
     });
@@ -328,6 +330,95 @@ fn impossible_constraints_yield_an_empty_frontier() {
     let js = out.to_json().render();
     assert!(js.contains("\"anchor_feasible\":false"));
     assert!(js.contains("\"feasible\":0"));
+}
+
+/// The PR-6 acceptance criterion: an NSGA-II run with a `--min-resilience`
+/// floor rejects at least one platform the unconstrained search accepts,
+/// and no rejected platform reaches the frontier archive.
+#[test]
+fn resilience_floor_rejects_fragile_platforms() {
+    use mozart::comm::FaultScenario;
+    use mozart::coordinator::search::MinResilience;
+
+    let scenario =
+        FaultScenario::parse("dead-chiplet:4,dram-throttle:0.2", 11).expect("scenario");
+
+    // unconstrained exhaustive baseline: every evaluated platform accepted,
+    // no resilience evaluation runs
+    let base = search(&SearchConfig::new(tiny_explore(0), SearchStrategy::Exhaustive));
+    assert_eq!(base.n_feasible(), base.candidates.len());
+    assert!(base.joint.iter().all(|j| j.resilience.is_none()));
+
+    // probe pass with a permissive floor: measures every platform's
+    // retained throughput under the scenario
+    let probe = search(&SearchConfig {
+        constraints: Constraints {
+            min_resilience: Some(MinResilience {
+                frac: 0.01,
+                scenario: scenario.clone(),
+            }),
+            ..Constraints::none()
+        },
+        ..SearchConfig::new(tiny_explore(0), SearchStrategy::Exhaustive)
+    });
+    let rvals: Vec<f64> = probe
+        .joint
+        .iter()
+        .map(|j| j.resilience.expect("floor set -> resilience evaluated"))
+        .collect();
+    for &r in &rvals {
+        assert!(r.is_finite() && r > 0.0 && r <= 1.0 + 1e-9, "retained {r}");
+    }
+    let min = rvals.iter().copied().fold(f64::INFINITY, f64::min);
+    let max = rvals.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    assert!(
+        min < max,
+        "scenario does not discriminate platforms (retained == {min} everywhere)"
+    );
+
+    // NSGA-II with the floor at the best observed resilience: every
+    // platform weaker than the best becomes infeasible
+    let floor = max.min(1.0);
+    let out = search(&SearchConfig {
+        constraints: Constraints {
+            min_resilience: Some(MinResilience {
+                frac: floor,
+                scenario,
+            }),
+            ..Constraints::none()
+        },
+        ..SearchConfig::new(tiny_explore(0), evolutionary(13))
+    });
+    let rejected: Vec<usize> = (0..out.candidates.len())
+        .filter(|&c| !out.is_feasible(c))
+        .collect();
+    assert!(
+        !rejected.is_empty(),
+        "the resilience floor rejected no platform"
+    );
+    for &ci in &rejected {
+        // the unconstrained exhaustive run covered the full grid, so every
+        // rejected platform appears there — and was accepted
+        let label = &out.candidates[ci].label;
+        let bi = base
+            .candidates
+            .iter()
+            .position(|c| &c.label == label)
+            .expect("exhaustive base covers every platform");
+        assert!(base.is_feasible(bi), "`{label}` accepted unconstrained");
+        assert!(!out.archive.contains(&ci), "rejected `{label}` on frontier");
+    }
+    // frontier members all satisfy the floor
+    for &ci in &out.archive {
+        let r = out.joint[ci].resilience.expect("evaluated under the floor");
+        assert!(r >= floor - 1e-12, "frontier member below the floor: {r}");
+    }
+    // the artifact records the floor and its scenario
+    let js = out.to_json().render();
+    assert!(js.contains("\"min_resilience\":"));
+    assert!(js.contains("\"resilience_scenario\":"));
+    assert!(js.contains("dead-chiplet:4"));
+    assert!(js.contains("\"resilience\":"));
 }
 
 /// The method gene: every candidate carries exactly one ablation, the
@@ -395,7 +486,7 @@ fn method_gene_under_constrained_nsga2() {
     let out = search(&SearchConfig {
         constraints: Constraints {
             max_area_mm2: Some(cap),
-            max_power_w: None,
+            ..Constraints::none()
         },
         method_gene: true,
         ..SearchConfig::new(ex, evolutionary(13))
