@@ -291,6 +291,29 @@ impl KnobId {
     }
 }
 
+/// Canonical bit-level fingerprint of a platform, split into the fields
+/// that shape the plan *topology* (chiplet/group counts, die geometry, the
+/// byte model, DRAM technology — everything placements and the plan DAG
+/// structure are derived from) and the fields that only *re-time* an
+/// existing topology (the core clock and the calibration knobs, which
+/// enter the simulation exclusively through the per-task duration
+/// constants).
+///
+/// Two configs with equal `topo` words build byte-identical plan
+/// structure, placements and byte/FLOP models; if their `timing` words
+/// also match they describe the same platform. `f64` fields are encoded
+/// via [`f64::to_bits`], so comparison is exact bit equality — the
+/// fingerprint never conflates two platforms that could simulate
+/// differently. This is the building block of the evaluation-cache key and
+/// the delta re-timing detector in `coordinator::cache`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct HwFingerprint {
+    /// Topology-shaping fields, canonically encoded.
+    pub topo: Vec<u64>,
+    /// Re-timing-only fields: `freq_ghz` plus every calibration knob.
+    pub timing: Vec<u64>,
+}
+
 /// Complete hardware platform description.
 #[derive(Clone, Debug)]
 pub struct HwConfig {
@@ -585,6 +608,95 @@ impl HwConfig {
         self.group_dram_bw().min(nop)
     }
 
+    /// Canonical [`HwFingerprint`] of this platform. Every field of the
+    /// config is encoded exactly once; adding a field to [`HwConfig`]
+    /// without extending this encoding is a bug (guarded by the exhaustive
+    /// destructuring below, which fails to compile on a missed field).
+    pub fn fingerprint(&self) -> HwFingerprint {
+        // Exhaustive destructure: a new field breaks this statement until
+        // the encoding below is told about it.
+        let HwConfig {
+            n_moe_chiplets,
+            n_groups,
+            moe_chiplet,
+            attn_chiplet,
+            nop,
+            mem,
+            freq_ghz,
+            knobs,
+        } = self;
+        let mut topo = Vec::with_capacity(26);
+        topo.push(*n_moe_chiplets as u64);
+        topo.push(*n_groups as u64);
+        for c in [moe_chiplet, attn_chiplet] {
+            let ChipletSpec {
+                tiles,
+                sas_per_tile,
+                pes_per_sa,
+                sram_per_tile_mib,
+                sram_bw_gbps,
+                edge_mm,
+            } = c;
+            topo.push(*tiles as u64);
+            topo.push(*sas_per_tile as u64);
+            topo.push(*pes_per_sa as u64);
+            topo.push(sram_per_tile_mib.to_bits());
+            topo.push(sram_bw_gbps.to_bits());
+            topo.push(edge_mm.to_bits());
+        }
+        let NopSpec {
+            link_bw_gbps,
+            pitch_um,
+            signal_fraction,
+            energy_pj_per_byte,
+        } = nop;
+        topo.push(link_bw_gbps.to_bits());
+        topo.push(pitch_um.to_bits());
+        topo.push(signal_fraction.to_bits());
+        topo.push(energy_pj_per_byte.to_bits());
+        let MemSpec {
+            dram,
+            dram_cap_mib,
+            group_dram_stacks,
+            attn_dram_stacks,
+            hb_link_bw_gbps,
+            hb_links,
+            sram_energy_pj_per_byte,
+        } = mem;
+        topo.push(match dram {
+            DramKind::Hbm2 => 0,
+            DramKind::Ssd => 1,
+        });
+        topo.push(dram_cap_mib.to_bits());
+        topo.push(*group_dram_stacks as u64);
+        topo.push(*attn_dram_stacks as u64);
+        topo.push(hb_link_bw_gbps.to_bits());
+        topo.push(*hb_links as u64);
+        topo.push(sram_energy_pj_per_byte.to_bits());
+
+        let CalibrationKnobs {
+            dram_eff,
+            nop_eff,
+            mxu_util,
+            group_concurrency,
+            switch_agg_factor,
+            chunk_overhead_us,
+            a2a_link_occupancy,
+            opt_traffic_factor,
+        } = knobs;
+        let mut timing = Vec::with_capacity(9);
+        timing.push(freq_ghz.to_bits());
+        timing.push(dram_eff.to_bits());
+        timing.push(nop_eff.to_bits());
+        timing.push(mxu_util.to_bits());
+        timing.push(*group_concurrency as u64);
+        timing.push(switch_agg_factor.to_bits());
+        timing.push(chunk_overhead_us.to_bits());
+        timing.push(a2a_link_occupancy.to_bits());
+        timing.push(opt_traffic_factor.to_bits());
+        HwFingerprint { topo, timing }
+    }
+
     /// Effective MoE-chiplet compute throughput (FLOP/s).
     pub fn moe_chiplet_flops(&self) -> f64 {
         self.moe_chiplet.peak_flops(self.freq_ghz) * self.knobs.mxu_util
@@ -773,6 +885,58 @@ mod tests {
         let mut hw = HwConfig::mozart_wafer(DramKind::Hbm2);
         hw.knobs.mxu_util = 1.5;
         assert!(hw.validate().is_err());
+    }
+
+    #[test]
+    fn fingerprint_equality_tracks_config_equality() {
+        let base = HwConfig::mozart_wafer(DramKind::Hbm2);
+        assert_eq!(base.fingerprint(), base.clone().fingerprint());
+        // a topology override changes the topo words
+        let tiles = base.with_overrides(&[HwOverride::MoeTiles(36)]);
+        assert_ne!(base.fingerprint().topo, tiles.fingerprint().topo);
+        assert_eq!(base.fingerprint().timing, tiles.fingerprint().timing);
+        // DRAM technology is topology (it changes the byte/bandwidth model
+        // the placements were sized for)
+        let ssd = base.with_overrides(&[HwOverride::Dram(DramKind::Ssd)]);
+        assert_ne!(base.fingerprint().topo, ssd.fingerprint().topo);
+    }
+
+    #[test]
+    fn knob_and_freq_overrides_are_pure_retiming() {
+        let base = HwConfig::mozart_wafer(DramKind::Hbm2);
+        let fast = base.with_overrides(&[HwOverride::FreqGhz(1.2)]);
+        assert_eq!(base.fingerprint().topo, fast.fingerprint().topo);
+        assert_ne!(base.fingerprint().timing, fast.fingerprint().timing);
+        for id in KnobId::ALL {
+            let v = id.get(&base.knobs);
+            let tweaked = base.with_overrides(&[HwOverride::Knob(id, v * 0.5 + 0.1)]);
+            assert_eq!(
+                base.fingerprint().topo,
+                tweaked.fingerprint().topo,
+                "knob {} must not be a topology field",
+                id.name()
+            );
+            assert_ne!(
+                base.fingerprint().timing,
+                tweaked.fingerprint().timing,
+                "knob {} missing from the timing words",
+                id.name()
+            );
+        }
+        let mut conc = base.clone();
+        conc.knobs.group_concurrency = 2;
+        assert_eq!(base.fingerprint().topo, conc.fingerprint().topo);
+        assert_ne!(base.fingerprint().timing, conc.fingerprint().timing);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_every_float_bit() {
+        let base = HwConfig::mozart_wafer(DramKind::Hbm2);
+        let mut tweaked = base.clone();
+        tweaked.nop.signal_fraction = f64::from_bits(
+            base.nop.signal_fraction.to_bits() + 1,
+        );
+        assert_ne!(base.fingerprint(), tweaked.fingerprint());
     }
 
     #[test]

@@ -9,7 +9,8 @@ pub mod model;
 pub mod parse;
 
 pub use hw::{
-    CalibrationKnobs, ChipletSpec, DramKind, HwConfig, HwOverride, KnobId, MemSpec, NopSpec,
+    CalibrationKnobs, ChipletSpec, DramKind, HwConfig, HwFingerprint, HwOverride, KnobId,
+    MemSpec, NopSpec,
 };
 pub use method::{Method, MethodConfig};
 pub use model::{ModelConfig, ModelId};

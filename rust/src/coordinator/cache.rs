@@ -1,0 +1,886 @@
+//! Evaluation memoization + delta re-timing for the explorer/search hot
+//! path (ROADMAP item 3: search-throughput overhaul).
+//!
+//! Two reuse layers, both bit-transparent (they never change a reported
+//! number — only how fast it is produced):
+//!
+//! 1. **Cell memoization** ([`EvalCache`]): a concurrent map from the
+//!    canonical evaluation-cell key ([`CellKey`]: hardware fingerprint +
+//!    model + method + workload shape + seeds + fault scenario) to the
+//!    finished [`ExperimentResult`]. Duplicate cells — re-proposed
+//!    genomes, the repeated healthy baseline of `--min-resilience` runs,
+//!    back-to-back searches sharing a `--cache-file` — are served as a
+//!    clone of the first simulation's result, which is bit-identical by
+//!    construction. Because every cell is a pure function of its key,
+//!    concurrent insert races are benign (both workers computed the same
+//!    value).
+//!
+//! 2. **Delta re-timing** ([`EvalPool`]): a small per-worker pool of
+//!    prepared topologies (trace generator, expert layouts, [`PlanCache`]
+//!    arena). A cell whose *topology words* match a pooled entry — same
+//!    model, workload shape, seed, dead-chiplet set, and every
+//!    topology-shaping hardware field — differs only in calibration knobs,
+//!    core clock, or fault severities, so the pooled plan is
+//!    [`PlanCache::retime`]d instead of rebuilt from scratch, skipping
+//!    trace profiling, layout derivation, and topology emission. The
+//!    re-timed plan emits bit-identically to a fresh build (asserted in
+//!    `pipeline::plan_builder` tests and end-to-end here).
+//!
+//! Thread discipline: the cache is shared (`&EvalCache` is `Sync`); pools
+//! are per-worker mutable state threaded through
+//! [`sweep::parallel_map_with`](super::sweep::parallel_map_with). Which
+//! worker owns which pooled topology varies run to run, but since re-timed
+//! and fresh evaluations are bit-identical, results never depend on it;
+//! only the hit/miss *counters* may differ across parallel runs.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::allocation::ExpertLayout;
+use crate::config::{ExperimentConfig, MethodConfig, ModelConfig};
+use crate::metrics::energy::EnergyBreakdown;
+use crate::pipeline::PlanCache;
+use crate::sim::{SimScratch, Tag, TagBreakdown};
+use crate::trace::TraceGen;
+use crate::util::json::Json;
+
+use super::{layouts_for, run_experiment, run_prepared, ExperimentResult};
+
+/// Canonical key of one evaluation cell, split like
+/// [`HwFingerprint`](crate::config::HwFingerprint) into the words that
+/// shape the plan topology and the words that only re-time it. Equal
+/// `topo` words ⇒ the cells share placements, byte/FLOP model, and plan
+/// structure (the [`EvalPool`] reuse criterion); equal `topo` *and*
+/// `timing` words ⇒ the same cell (the [`EvalCache`] criterion). All
+/// floats are encoded via `f64::to_bits`, strings length-prefixed, so two
+/// distinct cells never collide.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CellKey {
+    /// Topology-shaping words: hardware topo fingerprint, model
+    /// architecture, method toggles, workload shape, seed, fault dead-set.
+    pub topo: Vec<u64>,
+    /// Re-timing words: hardware timing fingerprint, iteration count,
+    /// full fault scenario (label + placement seed).
+    pub timing: Vec<u64>,
+}
+
+/// Length-prefixed little-endian packing of a string into key words.
+fn push_str(words: &mut Vec<u64>, s: &str) {
+    let b = s.as_bytes();
+    words.push(b.len() as u64);
+    for chunk in b.chunks(8) {
+        let mut w = [0u8; 8];
+        w[..chunk.len()].copy_from_slice(chunk);
+        words.push(u64::from_le_bytes(w));
+    }
+}
+
+/// Derive the canonical [`CellKey`] of an experiment config. Every field
+/// of [`ExperimentConfig`] is encoded exactly once (exhaustive
+/// destructuring guards against new fields silently escaping the key).
+pub fn cell_key(cfg: &ExperimentConfig) -> CellKey {
+    let ExperimentConfig {
+        model,
+        hw,
+        method,
+        seq_len,
+        batch_size,
+        micro_batch,
+        iters,
+        seed,
+        fault,
+    } = cfg;
+    let fp = hw.fingerprint();
+    let mut topo = fp.topo;
+
+    let ModelConfig {
+        id,
+        vocab,
+        hidden,
+        n_layers,
+        n_dense_layers,
+        dense_intermediate,
+        n_heads,
+        n_kv_heads,
+        head_dim,
+        n_experts,
+        n_shared_experts,
+        expert_intermediate,
+        top_k,
+        bytes_per_param,
+    } = model;
+    push_str(&mut topo, id.name());
+    for v in [
+        *vocab,
+        *hidden,
+        *n_layers,
+        *n_dense_layers,
+        *dense_intermediate,
+        *n_heads,
+        *n_kv_heads,
+        *head_dim,
+        *n_experts,
+        *n_shared_experts,
+        *expert_intermediate,
+        *top_k,
+        *bytes_per_param,
+    ] {
+        topo.push(v as u64);
+    }
+
+    let MethodConfig {
+        method: method_id,
+        expert_layout,
+        efficient_a2a,
+        overlap,
+    } = method;
+    push_str(&mut topo, method_id.name());
+    topo.push(
+        *expert_layout as u64 | (*efficient_a2a as u64) << 1 | (*overlap as u64) << 2,
+    );
+
+    topo.push(*seq_len as u64);
+    topo.push(*batch_size as u64);
+    topo.push(*micro_batch as u64);
+    topo.push(*seed);
+
+    // The dead-chiplet set is the only fault aspect that reshapes the
+    // topology (expert spill); severities and bandwidth degradations enter
+    // purely through the duration constants and stay in the timing words.
+    if fault.is_healthy() {
+        topo.push(0);
+    } else {
+        let dead = fault.effects(hw.n_moe_chiplets, hw.n_groups).dead();
+        topo.push(dead.len() as u64);
+        for d in dead {
+            topo.push(d as u64);
+        }
+    }
+
+    let mut timing = fp.timing;
+    timing.push(*iters as u64);
+    timing.push(fault.seed);
+    push_str(&mut timing, &fault.label());
+    CellKey { topo, timing }
+}
+
+/// Evaluation toggles threaded from the CLI into the explorer/search
+/// evaluation pipeline. Defaults are all-on — both layers are
+/// bit-transparent, so there is no accuracy reason to disable them; the
+/// `--no-eval-cache` / `--no-delta-retime` flags exist for A/B timing
+/// (the `bench --grid search` evaluations-per-second grid) and debugging.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvalOptions {
+    /// Memoize finished cells in a shared [`EvalCache`].
+    pub cache: bool,
+    /// Reuse pooled plan topologies across knob/frequency variants.
+    pub retime: bool,
+    /// Warm-start the cache from this file and write it back after the
+    /// run (the cross-run persistence behind the CI throughput smoke).
+    pub cache_file: Option<String>,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions {
+            cache: true,
+            retime: true,
+            cache_file: None,
+        }
+    }
+}
+
+/// Hit/miss accounting of one [`EvalCache`], snapshotted into the
+/// `EXPLORE_*.json` artifacts.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// Lookups served from the cache (no simulation ran).
+    pub hits: u64,
+    /// Lookups that fell through to a simulation.
+    pub misses: u64,
+    /// Entries resident at snapshot time.
+    pub entries: usize,
+    /// Entries warm-loaded from `--cache-file` at startup.
+    pub loaded: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from the cache (0 when none happened).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// The artifact's `cache` section.
+    pub fn to_json(&self, enabled: bool) -> Json {
+        Json::obj([
+            ("enabled", Json::Bool(enabled)),
+            ("hits", Json::int(self.hits as usize)),
+            ("misses", Json::int(self.misses as usize)),
+            ("hit_rate", Json::num(self.hit_rate())),
+            ("entries", Json::int(self.entries)),
+            ("loaded", Json::int(self.loaded)),
+        ])
+    }
+}
+
+/// Combined accounting of one evaluation session — the cache counters plus
+/// the pooled-retiming counters summed over every worker pool. Rendered as
+/// the flat `cache` object of the `EXPLORE_*.json` artifacts.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EvalStats {
+    /// Whether cell memoization was enabled.
+    pub cache_enabled: bool,
+    /// Whether delta re-timing was enabled.
+    pub retime_enabled: bool,
+    /// Cache hit/miss counters (all zero when the cache was disabled).
+    pub cache: CacheStats,
+    /// Fresh topology builds across all worker pools.
+    pub builds: u64,
+    /// Cells served by re-timing a pooled topology.
+    pub retimes: u64,
+}
+
+impl EvalStats {
+    /// The artifact's `cache` section (flat on purpose: bit-identity tests
+    /// strip it with a non-nested `"cache":{...}` match).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("enabled", Json::Bool(self.cache_enabled)),
+            ("hits", Json::int(self.cache.hits as usize)),
+            ("misses", Json::int(self.cache.misses as usize)),
+            ("hit_rate", Json::num(self.cache.hit_rate())),
+            ("entries", Json::int(self.cache.entries)),
+            ("loaded", Json::int(self.cache.loaded)),
+            ("retime_enabled", Json::Bool(self.retime_enabled)),
+            ("builds", Json::int(self.builds as usize)),
+            ("retimes", Json::int(self.retimes as usize)),
+        ])
+    }
+}
+
+/// One evaluation session: the shared memoization cache (optionally
+/// file-backed) plus the pool of per-worker [`EvalPool`]s threaded through
+/// [`sweep::parallel_map_with`](super::sweep::parallel_map_with). Owned by
+/// one `explore`/`search`/`degrade` run; [`EvalSession::finish`] aggregates
+/// the counters and writes the cache file back.
+pub struct EvalSession {
+    opts: EvalOptions,
+    cache: Option<EvalCache>,
+    pools: super::sweep::StatePool<EvalPool>,
+}
+
+impl EvalSession {
+    /// Open a session: allocate the cache (warm-loaded from
+    /// `opts.cache_file` when set) and an empty pool-of-pools.
+    pub fn new(opts: EvalOptions) -> EvalSession {
+        let cache = opts.cache.then(|| match &opts.cache_file {
+            Some(path) => EvalCache::load(path),
+            None => EvalCache::new(),
+        });
+        EvalSession {
+            opts,
+            cache,
+            pools: super::sweep::StatePool::new(),
+        }
+    }
+
+    /// The shared cache, when memoization is enabled.
+    pub fn cache(&self) -> Option<&EvalCache> {
+        self.cache.as_ref()
+    }
+
+    /// The per-worker pool store (pass to `parallel_map_with`).
+    pub fn pools(&self) -> &super::sweep::StatePool<EvalPool> {
+        &self.pools
+    }
+
+    /// A fresh worker pool honoring this session's re-timing toggle (the
+    /// `init` closure of `parallel_map_with`).
+    pub fn new_pool(&self) -> EvalPool {
+        EvalPool::new(self.opts.retime)
+    }
+
+    /// Borrow an evaluation context for one worker's pool.
+    pub fn ctx<'a>(&'a self, pool: &'a mut EvalPool) -> EvalCtx<'a> {
+        EvalCtx {
+            cache: self.cache(),
+            pool,
+        }
+    }
+
+    /// Close the session: drain the worker pools, sum their counters, write
+    /// the cache file back (a failed write warns on stderr — persistence is
+    /// best-effort), and return the aggregated stats.
+    pub fn finish(&self) -> EvalStats {
+        let mut stats = EvalStats {
+            cache_enabled: self.opts.cache,
+            retime_enabled: self.opts.retime,
+            ..EvalStats::default()
+        };
+        for pool in self.pools.drain() {
+            stats.builds += pool.builds;
+            stats.retimes += pool.retimes;
+        }
+        if let Some(cache) = &self.cache {
+            stats.cache = cache.stats();
+            if let Some(path) = &self.opts.cache_file {
+                if let Err(e) = cache.save(path) {
+                    eprintln!("warning: could not write eval cache `{path}`: {e}");
+                }
+            }
+        }
+        stats
+    }
+}
+
+/// Borrowed evaluation context — the session's shared cache plus one
+/// worker's mutable pool — threaded through the cell-evaluation path.
+pub struct EvalCtx<'a> {
+    /// Shared memoization cache, if enabled.
+    pub cache: Option<&'a EvalCache>,
+    /// This worker's topology pool.
+    pub pool: &'a mut EvalPool,
+}
+
+impl EvalCtx<'_> {
+    /// Evaluate one cell through the cache and the pool (see [`run_cell`]).
+    pub fn run(&mut self, cfg: &ExperimentConfig) -> ExperimentResult {
+        run_cell(cfg, self.cache, self.pool)
+    }
+
+    /// A context with no memoization cache — runs go straight to `pool`
+    /// (which re-times or rebuilds per its own toggle). For callers outside
+    /// any session (tests, one-off evaluations).
+    pub fn detached(pool: &mut EvalPool) -> EvalCtx<'_> {
+        EvalCtx { cache: None, pool }
+    }
+}
+
+/// Concurrent cell-memoization cache: [`CellKey`] → [`ExperimentResult`].
+/// Shared by reference across sweep workers and across search
+/// generations; optionally persisted to a `--cache-file` so repeated runs
+/// (CI smokes, iterative co-design sessions) never re-simulate a cell.
+#[derive(Debug, Default)]
+pub struct EvalCache {
+    map: Mutex<HashMap<CellKey, ExperimentResult>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    loaded: usize,
+}
+
+/// Magic first line of the persisted cache format.
+const CACHE_HEADER: &str = "mozart-evalcache v1";
+
+impl EvalCache {
+    /// An empty cache.
+    pub fn new() -> EvalCache {
+        EvalCache::default()
+    }
+
+    /// A cache warm-started from `path`. A missing, unreadable, corrupt,
+    /// or version-mismatched file yields an empty cache — persistence is
+    /// an accelerator, never a correctness dependency.
+    pub fn load(path: &str) -> EvalCache {
+        let mut cache = EvalCache::new();
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return cache;
+        };
+        let mut lines = text.lines();
+        if lines.next() != Some(CACHE_HEADER) {
+            return cache;
+        }
+        let map = cache.map.get_mut().expect("fresh cache lock");
+        for line in lines {
+            let mut parts = line.split('|');
+            let (Some(t), Some(m), Some(r)) = (parts.next(), parts.next(), parts.next())
+            else {
+                continue;
+            };
+            if parts.next().is_some() {
+                continue;
+            }
+            let (Some(topo), Some(timing), Some(words)) =
+                (parse_words(t), parse_words(m), parse_words(r))
+            else {
+                continue;
+            };
+            let Some(result) = decode_result(&words) else {
+                continue;
+            };
+            map.insert(CellKey { topo, timing }, result);
+        }
+        cache.loaded = map.len();
+        cache
+    }
+
+    /// Write every entry back to `path` (sorted by key for deterministic
+    /// bytes). Errors are reported to the caller; the in-memory cache is
+    /// unaffected.
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        let map = self.map.lock().expect("eval cache poisoned");
+        let mut entries: Vec<(&CellKey, &ExperimentResult)> = map.iter().collect();
+        entries.sort_by(|a, b| a.0.topo.cmp(&b.0.topo).then(a.0.timing.cmp(&b.0.timing)));
+        let mut out = String::with_capacity(entries.len() * 256 + 32);
+        out.push_str(CACHE_HEADER);
+        out.push('\n');
+        for (key, result) in entries {
+            render_words(&mut out, &key.topo);
+            out.push('|');
+            render_words(&mut out, &key.timing);
+            out.push('|');
+            render_words(&mut out, &encode_result(result));
+            out.push('\n');
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(out.as_bytes())
+    }
+
+    /// Look up a finished cell, counting the hit or miss.
+    pub fn lookup(&self, key: &CellKey) -> Option<ExperimentResult> {
+        let map = self.map.lock().expect("eval cache poisoned");
+        match map.get(key) {
+            Some(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(r.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record a freshly simulated cell. Racing inserts of the same key are
+    /// benign: both workers computed the same deterministic result.
+    pub fn insert(&self, key: CellKey, result: ExperimentResult) {
+        let mut map = self.map.lock().expect("eval cache poisoned");
+        map.insert(key, result);
+    }
+
+    /// Snapshot the hit/miss counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.lock().expect("eval cache poisoned").len(),
+            loaded: self.loaded,
+        }
+    }
+}
+
+/// Hex words, space-separated.
+fn render_words(out: &mut String, words: &[u64]) {
+    use std::fmt::Write as _;
+    for (i, w) in words.iter().enumerate() {
+        if i > 0 {
+            out.push(' ');
+        }
+        write!(out, "{w:x}").expect("write to string");
+    }
+}
+
+fn parse_words(s: &str) -> Option<Vec<u64>> {
+    s.split_whitespace()
+        .map(|w| u64::from_str_radix(w, 16).ok())
+        .collect()
+}
+
+/// Bit-exact flat encoding of an [`ExperimentResult`]: scalar fields, the
+/// two tag breakdowns in [`Tag::ALL`] order, and the energy components.
+fn encode_result(r: &ExperimentResult) -> Vec<u64> {
+    let ExperimentResult {
+        latency,
+        latency_std,
+        c_t,
+        tag_busy,
+        critical,
+        energy,
+        group_imbalance,
+        moe_utilization,
+        iters,
+    } = r;
+    let mut words = Vec::with_capacity(6 + 2 * Tag::COUNT + 5);
+    for v in [*latency, *latency_std, *c_t, *group_imbalance, *moe_utilization] {
+        words.push(v.to_bits());
+    }
+    words.push(*iters as u64);
+    for b in [tag_busy, critical] {
+        for (_, v) in b.iter() {
+            words.push(v.to_bits());
+        }
+    }
+    let EnergyBreakdown {
+        compute_j,
+        dram_j,
+        nop_j,
+        sram_j,
+        static_j,
+    } = energy;
+    for v in [*compute_j, *dram_j, *nop_j, *sram_j, *static_j] {
+        words.push(v.to_bits());
+    }
+    words
+}
+
+fn decode_result(words: &[u64]) -> Option<ExperimentResult> {
+    if words.len() != 6 + 2 * Tag::COUNT + 5 {
+        return None;
+    }
+    let f = |i: usize| f64::from_bits(words[i]);
+    let mut tag_busy = TagBreakdown::zero();
+    let mut critical = TagBreakdown::zero();
+    for (i, tag) in Tag::ALL.into_iter().enumerate() {
+        tag_busy.add(tag, f64::from_bits(words[6 + i]));
+        critical.add(tag, f64::from_bits(words[6 + Tag::COUNT + i]));
+    }
+    let e = 6 + 2 * Tag::COUNT;
+    Some(ExperimentResult {
+        latency: f(0),
+        latency_std: f(1),
+        c_t: f(2),
+        group_imbalance: f(3),
+        moe_utilization: f(4),
+        iters: words[5] as usize,
+        tag_busy,
+        critical,
+        energy: EnergyBreakdown {
+            compute_j: f(e),
+            dram_j: f(e + 1),
+            nop_j: f(e + 2),
+            sram_j: f(e + 3),
+            static_j: f(e + 4),
+        },
+    })
+}
+
+/// Upper bound on pooled topologies per worker. Each slot holds a trace
+/// generator, per-layer layouts, and a plan arena — a few MB for the paper
+/// models — and a search batch rarely cycles through more than a handful
+/// of distinct topologies per worker between re-timing opportunities.
+const POOL_CAP: usize = 4;
+
+struct PoolSlot {
+    topo: Vec<u64>,
+    gen: TraceGen,
+    layouts: Vec<ExpertLayout>,
+    plan: PlanCache,
+}
+
+/// Per-worker pool of prepared topologies for delta re-timing, plus the
+/// reusable simulator scratch. Created once per sweep worker (via
+/// [`sweep::StatePool`](super::sweep::StatePool)) and reused across every
+/// cell that worker evaluates — including across search generations.
+pub struct EvalPool {
+    enabled: bool,
+    scratch: SimScratch,
+    slots: Vec<PoolSlot>,
+    /// Fresh topology builds (pool misses + disabled-path runs).
+    pub builds: u64,
+    /// Cells served by re-timing a pooled topology.
+    pub retimes: u64,
+}
+
+impl EvalPool {
+    /// A pool that re-times when `enabled`, or transparently falls back to
+    /// full [`run_experiment`] builds when not.
+    pub fn new(enabled: bool) -> EvalPool {
+        EvalPool {
+            enabled,
+            scratch: SimScratch::new(),
+            slots: Vec::new(),
+            builds: 0,
+            retimes: 0,
+        }
+    }
+
+    /// Simulate `cfg`, re-timing a pooled topology when one matches.
+    fn run(&mut self, cfg: &ExperimentConfig, key: Option<&CellKey>) -> ExperimentResult {
+        let Some(key) = key.filter(|_| self.enabled) else {
+            self.builds += 1;
+            return run_experiment(cfg);
+        };
+        if let Some(i) = self.slots.iter().position(|s| s.topo == key.topo) {
+            // MRU ordering: keep hot topologies at the front.
+            let mut slot = self.slots.remove(i);
+            slot.plan.retime(cfg);
+            let r = run_prepared(cfg, &slot.gen, &slot.layouts, &mut slot.plan, &mut self.scratch);
+            self.slots.insert(0, slot);
+            self.retimes += 1;
+            return r;
+        }
+        // Pool miss: prepare the topology exactly like `run_experiment`
+        // (same derivation order, same validation), then keep it.
+        let gen = TraceGen::for_model(&cfg.model, cfg.seed);
+        let layouts = layouts_for(cfg, &gen);
+        for layout in &layouts {
+            layout.validate().expect("layout invariants");
+        }
+        let mut plan = PlanCache::new(cfg, &layouts);
+        let r = run_prepared(cfg, &gen, &layouts, &mut plan, &mut self.scratch);
+        self.slots.insert(
+            0,
+            PoolSlot {
+                topo: key.topo.clone(),
+                gen,
+                layouts,
+                plan,
+            },
+        );
+        self.slots.truncate(POOL_CAP);
+        self.builds += 1;
+        r
+    }
+}
+
+/// Evaluate one cell through both reuse layers: cache lookup first, then a
+/// pooled (re-timed) or fresh simulation, then cache insert. This is the
+/// single simulation entry point of the explorer, the guided search, and
+/// the degrade sweep; with `cache: None` and a disabled pool it is exactly
+/// [`run_experiment`].
+pub fn run_cell(
+    cfg: &ExperimentConfig,
+    cache: Option<&EvalCache>,
+    pool: &mut EvalPool,
+) -> ExperimentResult {
+    let key = (cache.is_some() || pool.enabled).then(|| cell_key(cfg));
+    if let (Some(c), Some(k)) = (cache, key.as_ref()) {
+        if let Some(r) = c.lookup(k) {
+            return r;
+        }
+    }
+    let r = pool.run(cfg, key.as_ref());
+    if let (Some(c), Some(k)) = (cache, key) {
+        c.insert(k, r.clone());
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{
+        DramKind, HwConfig, HwOverride, KnobId, Method, ModelConfig, ModelId,
+    };
+
+    fn small_cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::paper_default(
+            ModelConfig::preset(ModelId::OlmoE_1B_7B),
+            Method::MozartC.config(),
+        );
+        c.seq_len = 64;
+        c.iters = 2;
+        c
+    }
+
+    #[test]
+    fn cell_key_splits_topology_from_timing() {
+        let base = small_cfg();
+        let k0 = cell_key(&base);
+        assert_eq!(k0, cell_key(&base.clone()));
+
+        let mut knob = base.clone();
+        knob.hw = knob.hw.with_overrides(&[HwOverride::Knob(KnobId::MxuUtil, 0.5)]);
+        let k1 = cell_key(&knob);
+        assert_eq!(k0.topo, k1.topo, "knob change must keep the topology words");
+        assert_ne!(k0.timing, k1.timing);
+
+        let mut tiles = base.clone();
+        tiles.hw = tiles.hw.with_overrides(&[HwOverride::MoeTiles(36)]);
+        assert_ne!(k0.topo, cell_key(&tiles).topo);
+
+        // bandwidth faults re-time; dead chiplets reshape the topology
+        let mut bw = base.clone();
+        bw.fault = crate::comm::FaultScenario::parse("dram-throttle:0.3", bw.seed).unwrap();
+        let kbw = cell_key(&bw);
+        assert_eq!(k0.topo, kbw.topo);
+        assert_ne!(k0.timing, kbw.timing);
+        let mut dead = base.clone();
+        dead.fault = crate::comm::FaultScenario::parse("dead-chiplet:2", dead.seed).unwrap();
+        assert_ne!(k0.topo, cell_key(&dead).topo);
+
+        // every workload knob lands in the key
+        for f in [
+            |c: &mut ExperimentConfig| c.seq_len = 128,
+            |c: &mut ExperimentConfig| c.iters = 3,
+            |c: &mut ExperimentConfig| c.seed ^= 1,
+            |c: &mut ExperimentConfig| c.method = Method::Baseline.config(),
+            |c: &mut ExperimentConfig| {
+                c.model = ModelConfig::preset(ModelId::TinyMoE);
+            },
+        ] {
+            let mut v = base.clone();
+            f(&mut v);
+            assert_ne!(cell_key(&v), k0);
+        }
+    }
+
+    /// The end-to-end delta re-timing contract: a pool that re-times across
+    /// knob / frequency / bandwidth-fault variants reproduces the uncached
+    /// `run_experiment` bit for bit.
+    #[test]
+    fn pooled_run_is_bit_identical_to_run_experiment() {
+        let base = small_cfg();
+        let mut variants = vec![base.clone()];
+        for ov in [
+            vec![HwOverride::FreqGhz(1.25)],
+            vec![HwOverride::Knob(KnobId::DramEff, 0.7)],
+            vec![
+                HwOverride::Knob(KnobId::NopEff, 0.6),
+                HwOverride::Knob(KnobId::SwitchAggFactor, 3.0),
+            ],
+        ] {
+            let mut c = base.clone();
+            c.hw = c.hw.with_overrides(&ov);
+            variants.push(c);
+        }
+        let mut faulted = base.clone();
+        faulted.fault =
+            crate::comm::FaultScenario::parse("nop-degrade:0.5,hb-degrade:0.25", faulted.seed)
+                .unwrap();
+        variants.push(faulted);
+        // a topology change in the middle forces a pool miss mid-stream
+        let mut retiled = base.clone();
+        retiled.hw = retiled.hw.with_overrides(&[HwOverride::MoeTiles(36)]);
+        variants.push(retiled);
+        variants.push(base.clone()); // back to a pooled topology
+
+        let mut pool = EvalPool::new(true);
+        for (i, cfg) in variants.iter().enumerate() {
+            let fresh = run_experiment(cfg);
+            let pooled = run_cell(cfg, None, &mut pool);
+            assert_eq!(
+                fresh.latency.to_bits(),
+                pooled.latency.to_bits(),
+                "variant {i} latency"
+            );
+            assert_eq!(fresh.latency_std.to_bits(), pooled.latency_std.to_bits());
+            assert_eq!(fresh.c_t.to_bits(), pooled.c_t.to_bits());
+            assert_eq!(
+                fresh.energy.total_j().to_bits(),
+                pooled.energy.total_j().to_bits(),
+                "variant {i} energy"
+            );
+            assert_eq!(fresh.tag_busy, pooled.tag_busy, "variant {i}");
+            assert_eq!(fresh.critical, pooled.critical, "variant {i}");
+            assert_eq!(
+                fresh.group_imbalance.to_bits(),
+                pooled.group_imbalance.to_bits()
+            );
+            assert_eq!(
+                fresh.moe_utilization.to_bits(),
+                pooled.moe_utilization.to_bits()
+            );
+        }
+        assert!(pool.retimes >= 4, "retimes {} — pool never re-timed", pool.retimes);
+        assert_eq!(
+            pool.builds + pool.retimes,
+            variants.len() as u64,
+            "every variant ran exactly once"
+        );
+    }
+
+    #[test]
+    fn cache_serves_duplicates_without_resimulating() {
+        let cfg = small_cfg();
+        let cache = EvalCache::new();
+        let mut pool = EvalPool::new(true);
+        let a = run_cell(&cfg, Some(&cache), &mut pool);
+        let b = run_cell(&cfg, Some(&cache), &mut pool);
+        assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!(pool.builds, 1, "second lookup must not simulate");
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_file_round_trips_bit_exactly() {
+        let cfg = small_cfg();
+        let cache = EvalCache::new();
+        let mut pool = EvalPool::new(false);
+        let fresh = run_cell(&cfg, Some(&cache), &mut pool);
+
+        let dir = std::env::temp_dir().join("mozart-evalcache-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.txt");
+        let path = path.to_str().unwrap();
+        cache.save(path).unwrap();
+
+        let warmed = EvalCache::load(path);
+        assert_eq!(warmed.loaded, 1);
+        let key = cell_key(&cfg);
+        let replayed = warmed.lookup(&key).expect("persisted cell present");
+        assert_eq!(fresh.latency.to_bits(), replayed.latency.to_bits());
+        assert_eq!(fresh.latency_std.to_bits(), replayed.latency_std.to_bits());
+        assert_eq!(fresh.c_t.to_bits(), replayed.c_t.to_bits());
+        assert_eq!(fresh.tag_busy, replayed.tag_busy);
+        assert_eq!(fresh.critical, replayed.critical);
+        assert_eq!(
+            fresh.energy.total_j().to_bits(),
+            replayed.energy.total_j().to_bits()
+        );
+        assert_eq!(fresh.iters, replayed.iters);
+        let s = warmed.stats();
+        assert_eq!((s.hits, s.misses), (1, 0));
+
+        // corrupt / mismatched files load as empty, never panic
+        std::fs::write(path, "not a cache\n1 2 3").unwrap();
+        assert_eq!(EvalCache::load(path).stats().entries, 0);
+        std::fs::write(path, format!("{CACHE_HEADER}\nzz|yy|xx\n1 2|3\n")).unwrap();
+        assert_eq!(EvalCache::load(path).stats().entries, 0);
+        assert_eq!(EvalCache::load("/nonexistent/evalcache").stats().entries, 0);
+    }
+
+    #[test]
+    fn result_encoding_is_lossless() {
+        let cfg = small_cfg();
+        let r = run_experiment(&cfg);
+        let decoded = decode_result(&encode_result(&r)).expect("well-formed words");
+        assert_eq!(r.latency.to_bits(), decoded.latency.to_bits());
+        assert_eq!(r.tag_busy, decoded.tag_busy);
+        assert_eq!(r.critical, decoded.critical);
+        assert_eq!(
+            r.energy.mean_power_w(r.latency).to_bits(),
+            decoded.energy.mean_power_w(decoded.latency).to_bits()
+        );
+        assert!(decode_result(&[1, 2, 3]).is_none());
+    }
+
+    #[test]
+    fn pool_caps_resident_topologies() {
+        let base = small_cfg();
+        let mut pool = EvalPool::new(true);
+        for tiles in [36, 40, 44, 48, 52, 56] {
+            let mut c = base.clone();
+            c.hw = c.hw.with_overrides(&[HwOverride::MoeTiles(tiles)]);
+            c.iters = 1;
+            run_cell(&c, None, &mut pool);
+        }
+        assert!(pool.slots.len() <= POOL_CAP);
+        assert_eq!(pool.builds, 6);
+    }
+
+    #[test]
+    fn disabled_pool_and_cache_fall_back_to_plain_runs() {
+        let cfg = small_cfg();
+        let fresh = run_experiment(&cfg);
+        let mut pool = EvalPool::new(false);
+        let r = run_cell(&cfg, None, &mut pool);
+        assert_eq!(fresh.latency.to_bits(), r.latency.to_bits());
+        assert!(pool.slots.is_empty());
+        assert_eq!(pool.builds, 1);
+    }
+
+    #[test]
+    fn paper_default_hw_fingerprint_is_stable_across_clones() {
+        let hw = HwConfig::paper_for_model(ModelId::Qwen3_30B_A3B, DramKind::Hbm2);
+        assert_eq!(hw.fingerprint(), hw.clone().fingerprint());
+    }
+}

@@ -21,8 +21,8 @@
 
 use crate::comm::FaultScenario;
 use crate::config::{DramKind, Method, ModelId};
-use crate::coordinator::run_experiment;
-use crate::coordinator::sweep::{cell_config, parallel_map, Cell};
+use crate::coordinator::cache::{EvalOptions, EvalSession, EvalStats};
+use crate::coordinator::sweep::{cell_config, parallel_map_with, Cell};
 use crate::util::json::Json;
 use crate::util::table::{scatter_plot, Table};
 
@@ -52,6 +52,10 @@ pub struct DegradeConfig {
     /// healthy anchors always run — retained throughput needs them — and
     /// any truncation is reported, never silent.
     pub budget: usize,
+    /// Evaluation-throughput toggles (memoization cache, delta re-timing).
+    /// Bit-transparent: severity points of the bandwidth-fault curves share
+    /// the healthy topology and re-time it instead of rebuilding.
+    pub eval: EvalOptions,
 }
 
 impl DegradeConfig {
@@ -70,6 +74,7 @@ impl DegradeConfig {
             seed,
             threads: 0,
             budget: 0,
+            eval: EvalOptions::default(),
         }
     }
 }
@@ -122,6 +127,9 @@ pub struct DegradeOutcome {
     /// Faulted points dropped by `cfg.budget` (0 when the budget was off
     /// or large enough).
     pub dropped: usize,
+    /// Evaluation-throughput accounting (cache hits, plan builds/re-times).
+    /// Wall-clock only — never influences a curve point.
+    pub eval: EvalStats,
 }
 
 /// Run the sweep: healthy anchors first (they define retained throughput),
@@ -141,10 +149,19 @@ pub fn run(cfg: &DegradeConfig) -> DegradeOutcome {
         }
     }
 
+    let session = EvalSession::new(cfg.eval.clone());
+
     // healthy anchors: one per cell
-    let healthy: Vec<f64> = parallel_map(&cells, cfg.threads, |&cell| {
-        run_experiment(&cell_config(cell, cfg.iters, cfg.seed)).latency
-    });
+    let healthy: Vec<f64> = parallel_map_with(
+        &cells,
+        cfg.threads,
+        session.pools(),
+        || session.new_pool(),
+        |pool, &cell| {
+            let mut ctx = session.ctx(pool);
+            ctx.run(&cell_config(cell, cfg.iters, cfg.seed)).latency
+        },
+    );
 
     // faulted jobs: (cell index, scenario index, severity step 1..=steps)
     let mut jobs: Vec<(usize, usize, usize)> = Vec::new();
@@ -161,12 +178,19 @@ pub fn run(cfg: &DegradeConfig) -> DegradeOutcome {
     }
     let dropped = total - jobs.len();
 
-    let faulted: Vec<f64> = parallel_map(&jobs, cfg.threads, |&(ci, si, ti)| {
-        let severity = ti as f64 / cfg.steps as f64;
-        let mut ec = cell_config(cells[ci], cfg.iters, cfg.seed);
-        ec.fault = cfg.scenarios[si].at_severity(severity);
-        run_experiment(&ec).latency
-    });
+    let faulted: Vec<f64> = parallel_map_with(
+        &jobs,
+        cfg.threads,
+        session.pools(),
+        || session.new_pool(),
+        |pool, &(ci, si, ti)| {
+            let severity = ti as f64 / cfg.steps as f64;
+            let mut ec = cell_config(cells[ci], cfg.iters, cfg.seed);
+            ec.fault = cfg.scenarios[si].at_severity(severity);
+            let mut ctx = session.ctx(pool);
+            ctx.run(&ec).latency
+        },
+    );
 
     // assemble curves in deterministic (cell, scenario, severity) order
     let mut points = Vec::with_capacity(cells.len() * cfg.scenarios.len() + faulted.len());
@@ -204,6 +228,7 @@ pub fn run(cfg: &DegradeConfig) -> DegradeOutcome {
         cfg: cfg.clone(),
         points,
         dropped,
+        eval: session.finish(),
     }
 }
 
@@ -337,6 +362,7 @@ impl DegradeOutcome {
             ("seed", Json::str(self.cfg.seed.to_string())),
             ("dram", Json::str(self.cfg.dram.name())),
             ("dropped_by_budget", Json::int(self.dropped)),
+            ("cache", self.eval.to_json()),
             ("points", Json::Arr(points)),
         ])
     }
@@ -358,6 +384,7 @@ mod tests {
             seed: 11,
             threads,
             budget: 0,
+            eval: EvalOptions::default(),
         }
     }
 
@@ -428,8 +455,34 @@ mod tests {
             cfg.seed,
         );
         ec.fault = cfg.scenarios[0].clone();
-        let direct = run_experiment(&ec).latency;
+        let direct = crate::coordinator::run_experiment(&ec).latency;
         assert_eq!(p.latency_s.to_bits(), direct.to_bits());
+    }
+
+    /// The throughput layers must not change a single curve point, and the
+    /// bandwidth-severity sweeps must actually exercise the re-timing path
+    /// (they share the healthy topology).
+    #[test]
+    fn pooled_sweep_is_bit_identical_to_plain_runs() {
+        let fast = tiny(1);
+        let mut slow = tiny(1);
+        slow.eval = EvalOptions {
+            cache: false,
+            retime: false,
+            cache_file: None,
+        };
+        let a = run(&fast);
+        let b = run(&slow);
+        assert_eq!(a.points.len(), b.points.len());
+        for (x, y) in a.points.iter().zip(b.points.iter()) {
+            assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+            assert_eq!(x.retained.to_bits(), y.retained.to_bits());
+        }
+        assert!(a.eval.retimes > 0, "bandwidth severities should re-time");
+        assert_eq!(b.eval.retimes, 0);
+        // disabled layers: every cell is a plain full build, nothing cached
+        assert_eq!(b.eval.builds, a.eval.builds + a.eval.retimes);
+        assert_eq!(b.eval.cache.misses, 0);
     }
 
     #[test]

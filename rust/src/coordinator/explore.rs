@@ -26,8 +26,8 @@ use crate::arch::area::hw_metrics;
 use crate::config::{
     DramKind, ExperimentConfig, HwConfig, HwOverride, KnobId, Method, ModelConfig, ModelId,
 };
-use crate::coordinator::sweep::{parallel_map, SweepOptions};
-use crate::coordinator::run_experiment;
+use crate::coordinator::cache::{EvalCtx, EvalOptions, EvalSession, EvalStats};
+use crate::coordinator::sweep::{parallel_map_with, SweepOptions};
 use crate::metrics::pareto;
 use crate::util::json::Json;
 use crate::util::table::{scatter_plot, Table};
@@ -284,6 +284,10 @@ pub struct ExploreConfig {
     pub seed: u64,
     /// Worker threads; 0 = one per available core, 1 = sequential.
     pub threads: usize,
+    /// Evaluation-reuse toggles (cell memoization, delta re-timing, cache
+    /// persistence). Both reuse layers are bit-transparent, so these only
+    /// affect throughput, never a reported number.
+    pub eval: EvalOptions,
 }
 
 impl ExploreConfig {
@@ -302,6 +306,7 @@ impl ExploreConfig {
             iters: 2,
             seed: 7,
             threads: 0,
+            eval: EvalOptions::default(),
         }
     }
 }
@@ -382,6 +387,9 @@ pub struct ExploreOutcome {
     pub points: Vec<ExplorePoint>,
     /// One Pareto analysis per (model, method) pair.
     pub frontiers: Vec<Frontier>,
+    /// Cache / re-timing accounting of the run (the artifact's `cache`
+    /// section). Never affects a reported number.
+    pub eval: EvalStats,
 }
 
 /// True iff every override in `combo` is a no-op against `base` — i.e. the
@@ -407,6 +415,13 @@ pub(crate) fn is_anchor_combo(combo: &[HwOverride], base: &HwConfig) -> bool {
 /// scenario (the search's `--min-resilience`), the cell is simulated a
 /// second time under the injected faults and the retained-throughput
 /// fraction (healthy latency / faulted latency) is attached.
+///
+/// Both runs flow through `ctx` (cell cache + worker plan pool): the
+/// healthy result is memoized independently of the fault evaluation, so a
+/// `--min-resilience` search never re-simulates a healthy cell it already
+/// knows, and — because a bandwidth-degrading fault shares the healthy
+/// topology — the faulted run re-times the healthy plan instead of
+/// rebuilding it.
 pub(crate) fn eval_point(
     cfg: &ExploreConfig,
     overrides: &[HwOverride],
@@ -414,6 +429,7 @@ pub(crate) fn eval_point(
     model: ModelId,
     method: Method,
     fault: Option<&crate::comm::FaultScenario>,
+    ctx: &mut EvalCtx<'_>,
 ) -> ExplorePoint {
     let model_cfg = ModelConfig::preset(model);
     let mut ec = ExperimentConfig::paper_default(model_cfg, method.config());
@@ -421,11 +437,11 @@ pub(crate) fn eval_point(
     ec.seq_len = cfg.seq_len;
     ec.iters = cfg.iters;
     ec.seed = cfg.seed;
-    let r = run_experiment(&ec);
+    let r = ctx.run(&ec);
     let retained = fault.map(|scenario| {
         let mut fc = ec.clone();
         fc.fault = scenario.clone();
-        r.latency / run_experiment(&fc).latency
+        r.latency / ctx.run(&fc).latency
     });
     let m = hw_metrics(&ec.model, &ec.hw);
     ExplorePoint {
@@ -466,6 +482,7 @@ pub(crate) fn eval_point(
 ///     iters: 1,
 ///     seed: 7,
 ///     threads: 1,
+///     eval: mozart::coordinator::cache::EvalOptions::default(),
 /// };
 /// let out = explore(&cfg);
 /// assert_eq!(out.points.len(), 2); // the paper anchor + the tiles=36 variant
@@ -516,9 +533,17 @@ pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
         threads: cfg.threads,
     }
     .effective_threads(specs.len());
-    let points = parallel_map(&specs, threads, |&(vi, model, method)| {
-        eval_point(cfg, &variants[vi].overrides, vi, model, method, None)
-    });
+    let session = EvalSession::new(cfg.eval.clone());
+    let points = parallel_map_with(
+        &specs,
+        threads,
+        session.pools(),
+        || session.new_pool(),
+        |pool, &(vi, model, method)| {
+            let mut ctx = session.ctx(pool);
+            eval_point(cfg, &variants[vi].overrides, vi, model, method, None, &mut ctx)
+        },
+    );
 
     let mut frontiers = Vec::new();
     for &model in &cfg.models {
@@ -560,6 +585,7 @@ pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
         variants,
         points,
         frontiers,
+        eval: session.finish(),
     }
 }
 
@@ -774,6 +800,7 @@ impl ExploreOutcome {
             ("variants", variants),
             ("points", points),
             ("frontiers", frontiers),
+            ("cache", self.eval.to_json()),
         ])
     }
 }

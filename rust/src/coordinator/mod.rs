@@ -8,6 +8,7 @@
 //! all-to-all, §4.3 fine-grained scheduling) over the architecture model
 //! (§4.4) into end-to-end numbers.
 
+pub mod cache;
 pub mod degrade;
 pub mod explore;
 pub mod search;
@@ -108,10 +109,29 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
     for layout in &layouts {
         layout.validate().expect("layout invariants");
     }
-    let coalesce = cfg.method.efficient_a2a;
-    let mut cache = PlanCache::new(cfg, &layouts);
+    let mut plan_cache = PlanCache::new(cfg, &layouts);
     let mut scratch = SimScratch::new();
+    run_prepared(cfg, &gen, &layouts, &mut plan_cache, &mut scratch)
+}
 
+/// The iteration loop shared by [`run_experiment`] and the pooled delta
+/// re-timing path ([`cache::EvalPool`]): simulate `cfg.iters` training
+/// steps over an already-prepared topology and aggregate.
+///
+/// Contract: `gen`/`layouts` were derived from a config with the same
+/// topology fingerprint as `cfg` (same model, seed, workload shape, and
+/// fault dead-set), and `plan_cache` has been built or
+/// [`PlanCache::retime`]d for `cfg`. Under that contract the result is
+/// bit-identical to `run_experiment(cfg)` — every quantity in the loop is
+/// a deterministic function of `cfg` and the prepared state.
+pub fn run_prepared(
+    cfg: &ExperimentConfig,
+    gen: &TraceGen,
+    layouts: &[ExpertLayout],
+    cache: &mut PlanCache,
+    scratch: &mut SimScratch,
+) -> ExperimentResult {
+    let coalesce = cfg.method.efficient_a2a;
     let mut rng = Rng::new(cfg.seed ^ 0x5EED);
     let mut latencies = Vec::with_capacity(cfg.iters);
     let mut cts = Vec::with_capacity(cfg.iters);
@@ -123,7 +143,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
 
     for it in 0..cfg.iters {
         let mut step_rng = rng.fork(it as u64);
-        let workload = StepWorkload::sample(cfg, &gen, &layouts, coalesce, &mut step_rng);
+        let workload = StepWorkload::sample(cfg, gen, layouts, coalesce, &mut step_rng);
         let plan = cache.rebuild(&workload);
         if it == 0 {
             // Guard the engine's contract once per experiment: durations/
@@ -134,7 +154,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
             // step on the hot path for no additional coverage.
             plan.validate().expect("step plan invariants");
         }
-        let res = Simulator::run_with(plan, &mut scratch);
+        let res = Simulator::run_with(plan, scratch);
         latencies.push(res.makespan);
         cts.push(workload.mean_c_t);
         tag_busy.accumulate_div(&res.tag_busy, cfg.iters as f64);

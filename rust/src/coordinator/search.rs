@@ -5,9 +5,23 @@
 //! [`SearchStrategy`] proposes candidates over the gene space (the axis
 //! value sets, plus — in co-design mode — the Mozart method itself), each
 //! candidate is evaluated through the explorer's shared cell path on the
-//! work-stealing pool ([`parallel_map`]), and an incremental Pareto archive
+//! work-stealing pool ([`parallel_map_with`], threading a per-worker
+//! [`crate::coordinator::cache::EvalPool`] of re-timeable plan topologies
+//! plus the run's shared memoization cache), and an incremental Pareto
+//! archive
 //! ([`pareto::Frontier`]) tracks the non-dominated set in `O(n)` per point
 //! instead of re-reducing the whole cloud per generation.
+//!
+//! **Surrogate preselection.** With `--surrogate-frac F` (F < 1), each
+//! generation's fresh offspring are first ranked by a closed-form roofline
+//! estimate ([`roofline::surrogate_step_latency`], worst case across the
+//! candidate's cells) and only the best `ceil(F * batch)` are fully
+//! simulated; the rest are returned to the proposal pool (their genomes are
+//! un-registered so later generations may resurface them). The Spearman rank
+//! correlation between the surrogate and the true joint latencies of the
+//! simulated candidates is recorded per generation, so the artifact shows
+//! how trustworthy the preselection was. `F = 1` (the default) disables the
+//! path entirely and reproduces the unfiltered search bit for bit.
 //!
 //! **NSGA-II evolutionary strategy.** [`SearchStrategy::Evolutionary`] is a
 //! full NSGA-II-style loop: binary-tournament parent selection under the
@@ -52,19 +66,22 @@
 //! bit-identical regardless of thread count — asserted in
 //! `tests/integration_search.rs` and checked by `mozart bench --grid search`.
 //!
-//! **Convergence.** After every generation the archive's hypervolume proxy
-//! (vs a fixed reference of 2× the paper anchor's objectives) is recorded;
-//! the curve lands in the `EXPLORE_*.json` artifact's `search` section.
+//! **Convergence.** After every generation the archive's exact dominated
+//! hypervolume ([`pareto::Frontier::hypervolume`], vs a fixed reference of
+//! 2× the paper anchor's objectives) is recorded; the curve lands in the
+//! `EXPLORE_*.json` artifact's `search` section.
 
 use std::collections::BTreeSet;
 
 use crate::comm::FaultScenario;
-use crate::config::{HwConfig, HwOverride, Method};
+use crate::config::{ExperimentConfig, HwConfig, HwOverride, Method, ModelConfig};
+use crate::coordinator::cache::{EvalSession, EvalStats};
 use crate::coordinator::explore::{self, Axis, ExploreConfig, ExplorePoint};
-use crate::coordinator::sweep::{parallel_map, SweepOptions};
-use crate::metrics::pareto;
+use crate::coordinator::sweep::{parallel_map_with, SweepOptions};
+use crate::metrics::{pareto, roofline};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::util::stats;
 use crate::util::table::{scatter_plot, Table};
 
 /// How the search proposes candidates over the gene space.
@@ -92,6 +109,7 @@ use crate::util::table::{scatter_plot, Table};
 ///     iters: 1,
 ///     seed: 7,
 ///     threads: 1,
+///     eval: mozart::coordinator::cache::EvalOptions::default(),
 /// };
 /// let cfg = SearchConfig::new(explore, SearchStrategy::Random { samples: 2, seed: 7 });
 /// let a = search(&cfg);
@@ -292,6 +310,12 @@ pub struct SearchConfig {
     /// trailing gene (`--methods ...`) instead of being evaluated on all of
     /// them, so the frontier answers "which ablation on which platform".
     pub method_gene: bool,
+    /// Fraction in `(0, 1]` of each generation's fresh offspring that gets
+    /// fully simulated (`--surrogate-frac`); the batch is ranked by the
+    /// roofline surrogate first and the tail is skipped. `1.0` (the
+    /// default) disables preselection and is bit-identical to not having
+    /// the feature at all.
+    pub surrogate_frac: f64,
 }
 
 impl SearchConfig {
@@ -302,6 +326,7 @@ impl SearchConfig {
             strategy,
             constraints: Constraints::none(),
             method_gene: false,
+            surrogate_frac: 1.0,
         }
     }
 }
@@ -355,6 +380,20 @@ impl JointPoint {
     }
 }
 
+/// Surrogate-preselection accounting for one generation (only present when
+/// `--surrogate-frac < 1` actually filtered the generation's offspring).
+#[derive(Clone, Debug)]
+pub struct SurrogateStat {
+    /// Fresh offspring the strategy proposed this generation.
+    pub proposed: usize,
+    /// Offspring that survived the surrogate cut and were fully simulated.
+    pub simulated: usize,
+    /// Spearman rank correlation between the surrogate estimates and the
+    /// true joint latencies of the *simulated* offspring; `None` when fewer
+    /// than two offspring were simulated or the ranks are degenerate.
+    pub spearman: Option<f64>,
+}
+
 /// Archive/convergence snapshot after one generation.
 #[derive(Clone, Debug)]
 pub struct GenStat {
@@ -367,20 +406,34 @@ pub struct GenStat {
     pub feasible: usize,
     /// Archive size after this generation (feasible non-dominated set).
     pub archive_size: usize,
-    /// Hypervolume proxy of the archive vs the fixed reference point.
+    /// Exact dominated hypervolume of the archive vs the fixed reference
+    /// point ([`pareto::Frontier::hypervolume`]).
     pub hypervolume: f64,
+    /// Surrogate-preselection accounting; `None` when the generation was
+    /// not filtered (`--surrogate-frac 1` or nothing fresh to filter).
+    pub surrogate: Option<SurrogateStat>,
 }
 
 impl GenStat {
     /// One-line rendering, shared by the CLI's live per-generation progress
     /// and the report's convergence section so the two never drift.
     pub fn render(&self) -> String {
-        format!(
+        let mut line = format!(
             "gen {:>2}: {:>4} candidates evaluated ({} feasible), archive {:>3}, \
              hypervolume {:.4}",
             self.generation, self.evaluations, self.feasible, self.archive_size,
             self.hypervolume
-        )
+        );
+        if let Some(s) = &self.surrogate {
+            line.push_str(&format!(
+                ", surrogate {}/{} simulated (rho {})",
+                s.simulated,
+                s.proposed,
+                s.spearman
+                    .map_or("n/a".to_string(), |r| format!("{r:.2}"))
+            ));
+        }
+        line
     }
 }
 
@@ -405,8 +458,12 @@ pub struct SearchOutcome {
     pub paper_dominators: Vec<usize>,
     /// Per-generation convergence curve.
     pub convergence: Vec<GenStat>,
-    /// Reference point of the hypervolume proxy (2× the anchor objectives).
+    /// Reference point of the hypervolume (2× the anchor objectives).
     pub hypervolume_ref: Vec<f64>,
+    /// Evaluation-throughput accounting: memoization-cache hit rates and
+    /// plan-pool build/retime counts. Affects wall-clock only, never the
+    /// reported numbers.
+    pub eval: EvalStats,
 }
 
 /// The discrete gene space of one search: one gene per hardware axis, plus
@@ -470,6 +527,7 @@ fn eval_batch(
     constraints: &Constraints,
     bases: &[HwConfig],
     batch: Vec<Candidate>,
+    session: &EvalSession,
     candidates: &mut Vec<Candidate>,
     cells: &mut Vec<ExplorePoint>,
     joint: &mut Vec<JointPoint>,
@@ -515,9 +573,24 @@ fn eval_batch(
     }
     let fault = constraints.fault_scenario();
     let threads = SweepOptions { threads: ex.threads }.effective_threads(specs.len());
-    let pts = parallel_map(&specs, threads, |&(off, mi, m)| {
-        explore::eval_point(ex, &batch[off].overrides, first + off, ex.models[mi], m, fault)
-    });
+    let pts = parallel_map_with(
+        &specs,
+        threads,
+        session.pools(),
+        || session.new_pool(),
+        |pool, &(off, mi, m)| {
+            let mut ctx = session.ctx(pool);
+            explore::eval_point(
+                ex,
+                &batch[off].overrides,
+                first + off,
+                ex.models[mi],
+                m,
+                fault,
+                &mut ctx,
+            )
+        },
+    );
 
     let mut fresh = pts.into_iter();
     for (off, cand) in batch.into_iter().enumerate() {
@@ -575,6 +648,35 @@ fn eval_batch(
         joint.push(jp);
         candidates.push(cand);
     }
+}
+
+/// Joint (worst-case across the candidate's cells) roofline surrogate of a
+/// candidate's step latency: the same `(model, method)` cell enumeration and
+/// config construction as the simulated path, but each cell costs a handful
+/// of closed-form arithmetic ops instead of a discrete-event simulation.
+/// Comparable across candidates of one search only — the values are ranks'
+/// raw material, never reported as latencies.
+fn surrogate_score(ex: &ExploreConfig, bases: &[HwConfig], cand: &Candidate) -> f64 {
+    let methods: Vec<Method> = match cand.method {
+        Some(m) => vec![m],
+        None => ex.methods.clone(),
+    };
+    let mut worst = 0.0f64;
+    for (mi, &model) in ex.models.iter().enumerate() {
+        let hw = bases[mi].with_overrides(&cand.overrides);
+        for &m in &methods {
+            let mut ec = ExperimentConfig::paper_default(
+                ModelConfig::preset(model),
+                m.config(),
+            );
+            ec.hw = hw.clone();
+            ec.seq_len = ex.seq_len;
+            ec.iters = ex.iters;
+            ec.seed = ex.seed;
+            worst = worst.max(roofline::surrogate_step_latency(&ec));
+        }
+    }
+    worst
 }
 
 /// Turn proposed genomes into fresh [`Candidate`]s: drops genomes already
@@ -746,6 +848,7 @@ pub fn search_with(
         None
     };
     let constraints = &cfg.constraints;
+    let session = EvalSession::new(ex.eval.clone());
 
     let mut candidates: Vec<Candidate> = Vec::new();
     let mut cells: Vec<ExplorePoint> = Vec::new();
@@ -769,6 +872,7 @@ pub fn search_with(
             },
             genome: None,
         }],
+        &session,
         &mut candidates,
         &mut cells,
         &mut joint,
@@ -778,6 +882,7 @@ pub fn search_with(
         joint[0].objectives().iter().map(|v| v * 2.0).collect();
 
     // one macro per generation: evaluate a batch of genomes, then record
+    let surrogate_frac = cfg.surrogate_frac;
     let mut run_generation = |generation: usize,
                               genomes: Vec<Vec<usize>>,
                               candidates: &mut Vec<Candidate>,
@@ -786,8 +891,47 @@ pub fn search_with(
                               archive: &mut pareto::Frontier,
                               seen: &mut BTreeSet<Vec<usize>>,
                               convergence: &mut Vec<GenStat>| {
-        let batch = fresh_candidates(&space, genomes, &bases, anchor_method, seen);
-        eval_batch(ex, constraints, &bases, batch, candidates, cells, joint, archive);
+        let mut batch = fresh_candidates(&space, genomes, &bases, anchor_method, seen);
+        // surrogate preselection: rank the fresh offspring by the roofline
+        // estimate and simulate only the most promising fraction; the rest
+        // give their genomes back to the proposal pool
+        let mut preselect: Option<(usize, Vec<f64>)> = None;
+        if surrogate_frac < 1.0 && batch.len() > 1 {
+            let proposed = batch.len();
+            let scores: Vec<f64> =
+                batch.iter().map(|c| surrogate_score(ex, &bases, c)).collect();
+            let keep = ((surrogate_frac * proposed as f64).ceil() as usize)
+                .clamp(1, proposed);
+            let mut order: Vec<usize> = (0..proposed).collect();
+            order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]).then(a.cmp(&b)));
+            let kept_set: BTreeSet<usize> = order[..keep].iter().copied().collect();
+            let mut kept: Vec<Candidate> = Vec::with_capacity(keep);
+            let mut kept_scores: Vec<f64> = Vec::with_capacity(keep);
+            for (i, c) in batch.into_iter().enumerate() {
+                if kept_set.contains(&i) {
+                    kept_scores.push(scores[i]);
+                    kept.push(c);
+                } else if let Some(g) = &c.genome {
+                    // un-register so a later generation may re-propose it
+                    seen.remove(g);
+                }
+            }
+            batch = kept;
+            preselect = Some((proposed, kept_scores));
+        }
+        let first_joint = joint.len();
+        eval_batch(
+            ex, constraints, &bases, batch, &session, candidates, cells, joint, archive,
+        );
+        let surrogate = preselect.map(|(proposed, scores)| {
+            let truth: Vec<f64> =
+                joint[first_joint..].iter().map(|j| j.latency_s).collect();
+            SurrogateStat {
+                proposed,
+                simulated: truth.len(),
+                spearman: stats::spearman(&scores, &truth),
+            }
+        });
         let feasible = joint
             .iter()
             .filter(|j| constraints.feasible(j.area_mm2, j.power_w, j.resilience))
@@ -797,7 +941,8 @@ pub fn search_with(
             evaluations: candidates.len(),
             feasible,
             archive_size: archive.len(),
-            hypervolume: archive.hypervolume_proxy(&hypervolume_ref),
+            hypervolume: archive.hypervolume(&hypervolume_ref),
+            surrogate,
         };
         on_generation(&stat);
         convergence.push(stat);
@@ -924,6 +1069,7 @@ pub fn search_with(
         paper_dominators,
         convergence,
         hypervolume_ref,
+        eval: session.finish(),
     }
 }
 
@@ -1048,7 +1194,8 @@ impl SearchOutcome {
         ));
 
         out.push_str(
-            "convergence (hypervolume proxy vs ref = 2x the paper anchor's objectives):\n",
+            "convergence (exact dominated hypervolume vs ref = 2x the paper \
+             anchor's objectives):\n",
         );
         for s in &self.convergence {
             out.push_str(&format!("  {}\n", s.render()));
@@ -1238,6 +1385,7 @@ impl SearchOutcome {
         let mut search = Json::obj([
             ("strategy", Json::str(self.cfg.strategy.name())),
             ("evaluations", Json::int(self.candidates.len())),
+            ("surrogate_frac", Json::num(self.cfg.surrogate_frac)),
             ("feasibility", feasibility),
             (
                 "convergence",
@@ -1251,6 +1399,20 @@ impl SearchOutcome {
                                 ("feasible", Json::int(s.feasible)),
                                 ("archive_size", Json::int(s.archive_size)),
                                 ("hypervolume", Json::num(s.hypervolume)),
+                                (
+                                    "surrogate",
+                                    s.surrogate.as_ref().map_or(Json::Null, |ss| {
+                                        Json::obj([
+                                            ("proposed", Json::int(ss.proposed)),
+                                            ("simulated", Json::int(ss.simulated)),
+                                            (
+                                                "spearman",
+                                                ss.spearman
+                                                    .map_or(Json::Null, Json::num),
+                                            ),
+                                        ])
+                                    }),
+                                ),
                             ])
                         })
                         .collect(),
@@ -1283,6 +1445,30 @@ impl SearchOutcome {
                 search.push("strategy_seed", Json::str(seed.to_string()));
             }
         }
+        // throughput accounting: flat summaries of the preselection and the
+        // memoization/re-timing layers (neither influences any reported
+        // number — stripping these two objects from the artifact recovers
+        // the uncached, unfiltered rendering byte for byte)
+        let gens: Vec<&SurrogateStat> =
+            self.convergence.iter().filter_map(|s| s.surrogate.as_ref()).collect();
+        let proposed: usize = gens.iter().map(|s| s.proposed).sum();
+        let simulated: usize = gens.iter().map(|s| s.simulated).sum();
+        let rhos: Vec<f64> = gens.iter().filter_map(|s| s.spearman).collect();
+        let surrogate = Json::obj([
+            ("enabled", Json::Bool(self.cfg.surrogate_frac < 1.0)),
+            ("frac", Json::num(self.cfg.surrogate_frac)),
+            ("proposed", Json::int(proposed)),
+            ("simulated", Json::int(simulated)),
+            ("skipped", Json::int(proposed - simulated)),
+            (
+                "spearman_mean",
+                if rhos.is_empty() {
+                    Json::Null
+                } else {
+                    Json::num(rhos.iter().sum::<f64>() / rhos.len() as f64)
+                },
+            ),
+        ]);
         Json::obj([
             ("explore", Json::str("design_space_search")),
             ("axes", axes),
@@ -1316,6 +1502,8 @@ impl SearchOutcome {
             ("joint", joint),
             ("frontier", frontier),
             ("search", search),
+            ("cache", self.eval.to_json()),
+            ("surrogate", surrogate),
         ])
     }
 }
@@ -1427,6 +1615,98 @@ mod tests {
         assert_eq!(got[0].label, "tiles=56 method=Baseline");
         assert_eq!(got[0].method, Some(Method::Baseline));
         assert_eq!(got[1].label, "tiles=64 method=Mozart-C");
+    }
+
+    fn tiny_search(axes: &str, strategy: SearchStrategy) -> SearchConfig {
+        let explore = ExploreConfig {
+            axes: parse_axes(axes).expect("axes parse"),
+            budget: 0,
+            models: vec![ModelId::OlmoE_1B_7B],
+            methods: vec![Method::MozartC],
+            seq_len: 64,
+            dram: DramKind::Hbm2,
+            iters: 1,
+            seed: 7,
+            threads: 1,
+            eval: crate::coordinator::cache::EvalOptions::default(),
+        };
+        SearchConfig::new(explore, strategy)
+    }
+
+    #[test]
+    fn caching_layers_never_change_reported_numbers() {
+        // a timing-only axis: every candidate shares the anchor's topology,
+        // so the pooled delta re-timing path covers every non-anchor cell
+        let strategy = SearchStrategy::Evolutionary {
+            population: 4,
+            generations: 3,
+            crossover_rate: 0.9,
+            mutation_rate: 0.4,
+            seed: 11,
+        };
+        let fast = tiny_search("freq=0.8:1.2:1.4", strategy);
+        let mut slow = fast.clone();
+        slow.explore.eval = crate::coordinator::cache::EvalOptions {
+            cache: false,
+            retime: false,
+            cache_file: None,
+        };
+        let a = search(&fast);
+        let b = search(&slow);
+        assert_eq!(a.archive, b.archive);
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        for (x, y) in a.joint.iter().zip(b.joint.iter()) {
+            assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+            assert_eq!(x.area_mm2.to_bits(), y.area_mm2.to_bits());
+        }
+        for (x, y) in a.convergence.iter().zip(b.convergence.iter()) {
+            assert_eq!(x.hypervolume.to_bits(), y.hypervolume.to_bits());
+        }
+        // the throughput layers actually engaged on the fast run
+        assert!(a.eval.cache_enabled && a.eval.retime_enabled);
+        assert!(!b.eval.cache_enabled && !b.eval.retime_enabled);
+        assert!(a.eval.cache.misses > 0);
+        assert!(a.eval.retimes > 0, "freq-only deltas should re-time");
+        assert_eq!(b.eval.retimes, 0);
+    }
+
+    #[test]
+    fn surrogate_preselection_filters_and_logs() {
+        // 12 draws over a 4-genome space: several distinct fresh offspring,
+        // so frac=0.5 must actually skip some
+        let strategy = SearchStrategy::Random { samples: 12, seed: 3 };
+        let mut cfg = tiny_search("freq=0.8:1.2,tiles=36:64", strategy);
+        cfg.surrogate_frac = 0.5;
+        let out = search(&cfg);
+        let stats: Vec<&SurrogateStat> =
+            out.convergence.iter().filter_map(|s| s.surrogate.as_ref()).collect();
+        assert!(!stats.is_empty(), "frac < 1 must log surrogate stats");
+        for s in &stats {
+            assert!(s.simulated <= s.proposed);
+            assert!(s.simulated >= 1);
+            if let Some(r) = s.spearman {
+                assert!((-1.0..=1.0).contains(&r));
+            }
+        }
+        assert!(
+            stats.iter().any(|s| s.simulated < s.proposed),
+            "half the offspring should be skipped"
+        );
+        // every archive member still points at an evaluated candidate, and
+        // the artifact carries the throughput sections
+        assert!(out.archive.iter().all(|&c| c < out.candidates.len()));
+        let rendered = out.to_json().render();
+        assert!(rendered.contains("\"surrogate\""));
+        assert!(rendered.contains("\"cache\""));
+
+        // frac = 1.0 (the default) never filters and never logs
+        let full = search(&tiny_search(
+            "freq=0.8:1.2,tiles=36:64",
+            SearchStrategy::Random { samples: 12, seed: 3 },
+        ));
+        assert!(full.convergence.iter().all(|s| s.surrogate.is_none()));
+        assert!(out.candidates.len() <= full.candidates.len());
     }
 
     #[test]

@@ -160,6 +160,104 @@ where
         .collect()
 }
 
+/// A pool of per-worker mutable states for [`parallel_map_with`], kept
+/// alive by the caller so state (plan pools, scratch buffers) persists
+/// across consecutive map calls — e.g. across search generations. States
+/// are checked out by whichever worker asks first and returned afterwards;
+/// since evaluation results never depend on which pooled state served them
+/// (re-timed and fresh builds are bit-identical), this reassignment is
+/// invisible in every reported number.
+#[derive(Debug, Default)]
+pub struct StatePool<S> {
+    states: std::sync::Mutex<Vec<S>>,
+}
+
+impl<S> StatePool<S> {
+    /// An empty pool; states are created lazily by `init` inside
+    /// [`parallel_map_with`].
+    pub fn new() -> StatePool<S> {
+        StatePool {
+            states: std::sync::Mutex::new(Vec::new()),
+        }
+    }
+
+    fn checkout(&self, init: impl FnOnce() -> S) -> S {
+        self.states
+            .lock()
+            .expect("state pool poisoned")
+            .pop()
+            .unwrap_or_else(init)
+    }
+
+    fn restore(&self, state: S) {
+        self.states.lock().expect("state pool poisoned").push(state);
+    }
+
+    /// Drain the pooled states (e.g. to aggregate per-worker counters).
+    pub fn drain(&self) -> Vec<S> {
+        std::mem::take(&mut *self.states.lock().expect("state pool poisoned"))
+    }
+}
+
+/// [`parallel_map`] with a per-worker mutable state threaded through `f`.
+/// Each worker checks one state out of `pool` (creating it with `init` on
+/// first use) and returns it when the map finishes, so a pool owned by the
+/// caller carries worker state across calls. Scheduling, ordering, and the
+/// `threads <= 1` inline path match [`parallel_map`] exactly.
+pub fn parallel_map_with<T, R, S, F, I>(
+    items: &[T],
+    threads: usize,
+    pool: &StatePool<S>,
+    init: I,
+    f: F,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    S: Send,
+    F: Fn(&mut S, &T) -> R + Sync,
+    I: Fn() -> S + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        let mut state = pool.checkout(&init);
+        let out = items.iter().map(|it| f(&mut state, it)).collect();
+        pool.restore(state);
+        return out;
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads.min(n))
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut state = pool.checkout(&init);
+                    let mut done: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        done.push((i, f(&mut state, &items[i])));
+                    }
+                    pool.restore(state);
+                    done
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("parallel_map_with worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("every index claimed exactly once"))
+        .collect()
+}
+
 /// The Table 3 / Figure 6(a) grid: 3 models x 4 methods at seq 256, HBM2.
 pub fn table3_cells() -> Vec<Cell> {
     let mut v = Vec::new();
@@ -286,6 +384,36 @@ mod tests {
         // degenerate shapes
         assert_eq!(parallel_map::<u64, u64, _>(&[], 4, |&x| x), Vec::<u64>::new());
         assert_eq!(parallel_map(&[3u64], 4, |&x| x + 1), vec![4]);
+    }
+
+    #[test]
+    fn parallel_map_with_threads_state_and_reuses_it_across_calls() {
+        let items: Vec<u64> = (0..50).collect();
+        let pool: StatePool<u64> = StatePool::new();
+        // state is a per-worker counter; results must not depend on it
+        let par = parallel_map_with(&items, 4, &pool, || 0u64, |s, &x| {
+            *s += 1;
+            x * 3
+        });
+        assert_eq!(par, items.iter().map(|&x| x * 3).collect::<Vec<_>>());
+        let states = pool.drain();
+        assert!(!states.is_empty() && states.len() <= 4);
+        assert_eq!(states.iter().sum::<u64>(), 50, "every item counted once");
+
+        // sequential path checks a state out of the same pool and restores it
+        let pool: StatePool<u64> = StatePool::new();
+        let a = parallel_map_with(&items[..3], 1, &pool, || 100u64, |s, &x| {
+            *s += 1;
+            x
+        });
+        assert_eq!(a, vec![0, 1, 2]);
+        let b = parallel_map_with(&items[..2], 1, &pool, || 0u64, |s, &x| {
+            *s += 1;
+            x
+        });
+        assert_eq!(b, vec![0, 1]);
+        // the second call reused the first call's state (init never re-ran)
+        assert_eq!(pool.drain(), vec![105]);
     }
 
     #[test]

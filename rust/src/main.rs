@@ -6,12 +6,13 @@
 
 use anyhow::{bail, Context, Result};
 use mozart::comm::FaultScenario;
-use mozart::config::{DramKind, ExperimentConfig, Method, ModelConfig, ModelId};
+use mozart::config::{DramKind, ExperimentConfig, HwOverride, Method, ModelConfig, ModelId};
+use mozart::coordinator::cache::{EvalOptions, EvalSession};
 use mozart::coordinator::degrade::{self, DegradeConfig};
 use mozart::coordinator::explore::{self, ExploreConfig};
 use mozart::coordinator::search::{self, Constraints, MinResilience, SearchConfig, SearchStrategy};
 use mozart::coordinator::sweep::{
-    self, cell_config, run_cells_seq, run_cells_with, Cell, SweepOptions,
+    self, cell_config, parallel_map_with, run_cells_seq, run_cells_with, Cell, SweepOptions,
 };
 use mozart::report::{self, ReportOpts};
 use mozart::testkit::bench;
@@ -41,7 +42,11 @@ COMMANDS:
                   [--iters N] [--seed N] [--config file]
   layout          expert clustering + allocation: --model ... [--seed N]
   bench           time the sweep + explore + search grids (sequential vs
-                  parallel executor) and write BENCH_sweep.json:
+                  parallel executor) and write BENCH_sweep.json. The search
+                  grid also times a duplicate-heavy evaluation batch through
+                  every (memoization x delta-re-timing) mode and reports
+                  evaluations/second plus the speedup over the no-reuse
+                  baseline:
                   [--grid table3|appendix|explore|search|degrade|all] [--iters N]
                   [--seed N] [--threads N] [--reps N] [--out BENCH_sweep.json]
   explore         design-space exploration: enumerate or search a hardware
@@ -64,7 +69,17 @@ COMMANDS:
                   candidate to retain at least FRAC of its healthy
                   throughput under the injected fault SCENARIO (same
                   grammar as degrade's --fault), rejecting fragile
-                  platforms the unconstrained search would keep:
+                  platforms the unconstrained search would keep.
+                  Evaluation reuse is on by default and bit-transparent:
+                  identical cells are served from a memoization cache and
+                  timing-only variants re-time a pooled topology instead of
+                  rebuilding it (--no-eval-cache / --no-delta-retime turn
+                  the layers off; --cache-file persists the cache across
+                  runs). --surrogate-frac F (0 < F <= 1, default 1 = off)
+                  ranks each generation's offspring by a cheap roofline
+                  estimate and fully simulates only the top fraction,
+                  logging the surrogate-vs-simulator Spearman rho per
+                  generation:
                   [--axes tiles,nop_bw,dram | tiles=36:64:100,
                    knob=dram_eff:0.6:0.95,...]
                   [--strategy exhaustive|random|evolutionary]
@@ -72,6 +87,8 @@ COMMANDS:
                   [--generations N] [--crossover R] [--mutation R]
                   [--max-area MM2] [--max-power W]
                   [--min-resilience FRAC:SCENARIO]
+                  [--surrogate-frac F]
+                  [--no-eval-cache] [--no-delta-retime] [--cache-file FILE]
                   [--models qwen3|olmoe|deepseek|tiny|all] [--model ...]
                   [--method baseline|a|b|c|all]
                   [--methods baseline,a,b,c|all] [--seq N] [--dram hbm2|ssd]
@@ -88,6 +105,7 @@ COMMANDS:
                   list of scenarios (default: one curve per fault kind):
                   [--fault 'dead-chiplet:4;nop-degrade:0.25,hb-degrade:0.5']
                   [--steps N] [--budget N  cap on faulted points, 0 = all]
+                  [--no-eval-cache] [--no-delta-retime] [--cache-file FILE]
                   [--models qwen3|olmoe|deepseek|tiny|all] [--model ...]
                   [--method baseline|a|b|c|all] [--seq N] [--dram hbm2|ssd]
                   [--iters N] [--seed N] [--threads N]
@@ -172,6 +190,17 @@ fn cmd_report(args: &Args) -> Result<()> {
 fn parse_dram(args: &Args) -> Result<DramKind> {
     DramKind::from_name(args.get_or("dram", "hbm2"))
         .context("unknown --dram (hbm2|ssd)")
+}
+
+/// Shared evaluation-reuse options (`explore` and `degrade`). Both reuse
+/// layers default ON because they are bit-transparent; the `--no-*` switches
+/// exist for A/B timing and for falsifying that claim.
+fn parse_eval(args: &Args) -> EvalOptions {
+    EvalOptions {
+        cache: !args.flag("no-eval-cache"),
+        retime: !args.flag("no-delta-retime"),
+        cache_file: args.get("cache-file").map(str::to_string),
+    }
 }
 
 fn parse_cell(args: &Args) -> Result<Cell> {
@@ -379,6 +408,15 @@ fn cmd_explore(args: &Args) -> Result<()> {
              (the constrained search engine)"
         );
     }
+    // surrogate preselection only makes sense for the generational search
+    // engine (it filters proposed offspring before full simulation)
+    let surrogate_frac: f64 = args.get_parse("surrogate-frac", 1.0)?;
+    if !(surrogate_frac.is_finite() && surrogate_frac > 0.0 && surrogate_frac <= 1.0) {
+        bail!("--surrogate-frac must be in (0, 1], got {surrogate_frac}");
+    }
+    if args.get("surrogate-frac").is_some() && args.get("strategy").is_none() {
+        bail!("--surrogate-frac requires --strategy (it filters search offspring)");
+    }
     let dram = parse_dram(args)?;
     let budget = args.get_parse("budget", 64)?;
     let cfg = ExploreConfig {
@@ -391,6 +429,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
         iters: args.get_parse("iters", 2)?,
         seed,
         threads: args.get_parse("threads", 0)?,
+        eval: parse_eval(args),
     };
     let out_path = args.get_or("out", "EXPLORE_design_space.json");
     let json = match args.get("strategy") {
@@ -407,6 +446,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
                 strategy,
                 constraints,
                 method_gene,
+                surrogate_frac,
             };
             let outcome = search::search_with(&scfg, |s| println!("{}", s.render()));
             println!();
@@ -476,6 +516,7 @@ fn cmd_degrade(args: &Args) -> Result<()> {
         seed,
         threads: args.get_parse("threads", 0)?,
         budget: args.get_parse("budget", 0)?,
+        eval: parse_eval(args),
     };
     let outcome = degrade::run(&cfg);
     println!("{}", outcome.render_markdown());
@@ -712,6 +753,86 @@ fn cmd_bench(args: &Args) -> Result<()> {
         if !identical {
             bail!("parallel search diverged from sequential");
         }
+
+        // evaluation-reuse throughput grid: a duplicate-heavy batch (a few
+        // re-timing-only frequency points, each repeated several times) runs
+        // through every memoization x delta-re-timing mode. Both reuse
+        // layers are bit-transparent, so every mode must reproduce the
+        // baseline latencies bit for bit; only evaluations/second may
+        // differ.
+        let freqs = [0.8, 1.0, 1.2];
+        let repeats = 8;
+        let base = cell_config(
+            Cell {
+                model: ModelId::TinyMoE,
+                method: Method::MozartC,
+                seq_len: 64,
+                dram: DramKind::Hbm2,
+            },
+            iters,
+            seed,
+        );
+        let cfgs: Vec<ExperimentConfig> = (0..repeats)
+            .flat_map(|_| {
+                freqs.iter().map(|&f| {
+                    let mut c = base.clone();
+                    c.hw = c.hw.with_overrides(&[HwOverride::FreqGhz(f)]);
+                    c
+                })
+            })
+            .collect();
+        let n = cfgs.len();
+        let modes: [(&str, EvalOptions); 4] = [
+            ("baseline", EvalOptions { cache: false, retime: false, cache_file: None }),
+            ("retime", EvalOptions { cache: false, retime: true, cache_file: None }),
+            ("memo", EvalOptions { cache: true, retime: false, cache_file: None }),
+            ("memo_retime", EvalOptions { cache: true, retime: true, cache_file: None }),
+        ];
+        let mut baseline: Option<(f64, Vec<f64>)> = None;
+        for (mode, opts) in modes {
+            let mut out = None;
+            let timing = bench(&format!("eval-reuse[{mode}]: {n} evals"), reps, || {
+                let session = EvalSession::new(opts.clone());
+                let lats: Vec<f64> = parallel_map_with(
+                    &cfgs,
+                    1,
+                    session.pools(),
+                    || session.new_pool(),
+                    |pool, cfg| {
+                        let mut ctx = session.ctx(pool);
+                        ctx.run(cfg).latency
+                    },
+                );
+                out = Some((lats, session.finish()));
+            });
+            let (lats, stats) = out.expect("reps >= 1 guarantees one pass");
+            let evals_per_s = n as f64 / timing.mean_s;
+            let (identical, speedup) = if let Some((base_eps, base_lats)) = &baseline {
+                (base_lats == &lats, evals_per_s / base_eps)
+            } else {
+                (true, 1.0)
+            };
+            if baseline.is_none() {
+                baseline = Some((evals_per_s, lats));
+            }
+            println!(
+                "  -> eval-reuse[{mode}]: {evals_per_s:.2} evals/s, \
+                 {speedup:.2}x vs baseline, bit-identical: {identical}\n"
+            );
+            grid_reports.push(Json::obj([
+                ("name", Json::str(format!("eval_reuse_{mode}"))),
+                ("cells", Json::int(n)),
+                ("workers", Json::int(1)),
+                ("timing", timing.to_json()),
+                ("evals_per_s", Json::num(evals_per_s)),
+                ("speedup_vs_baseline", Json::num(speedup)),
+                ("cache", stats.to_json()),
+                ("bit_identical", Json::Bool(identical)),
+            ]));
+            if !identical {
+                bail!("evaluation-reuse mode {mode} diverged from the baseline");
+            }
+        }
     }
 
     if bench_degrade {
@@ -879,6 +1000,10 @@ mod tests {
             "--min-resilience",
             "--fault",
             "--steps",
+            "--surrogate-frac",
+            "--no-eval-cache",
+            "--no-delta-retime",
+            "--cache-file",
         ] {
             assert!(HELP.contains(flag), "flag `{flag}` missing from help text");
         }
@@ -892,7 +1017,12 @@ mod tests {
         // (`kv.`) lookups whose keys are config-file paths, not flags.
         let src = include_str!("main.rs");
         let mut flags: Vec<String> = Vec::new();
-        for pat in ["args.get_or(\"", "args.get_parse(\"", "args.get(\""] {
+        for pat in [
+            "args.get_or(\"",
+            "args.get_parse(\"",
+            "args.get(\"",
+            "args.flag(\"",
+        ] {
             let mut rest = src;
             while let Some(pos) = rest.find(pat) {
                 rest = &rest[pos + pat.len()..];

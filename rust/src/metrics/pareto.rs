@@ -331,6 +331,78 @@ impl Frontier {
             })
             .sum()
     }
+
+    /// **Exact** dominated hypervolume against a fixed reference point, in
+    /// the same normalized units as [`Frontier::hypervolume_proxy`]: each
+    /// objective is scaled by its reference coordinate and clipped to
+    /// `[0, 1]`, and the result is the volume of the *union* of the boxes
+    /// `[obj_norm, 1]^d` — overlap between members is counted once, so the
+    /// value is always `<=` the proxy and a flat convergence curve really
+    /// means the frontier stopped improving (the proxy can keep growing on
+    /// mutually overlapping points). Exact for up to three objectives — a
+    /// dimension sweep over the sorted last coordinate with a 2-D union
+    /// area per slab, `O(n² log n)` — and falls back to the proxy for
+    /// higher arities, where the sweep would not be worth its cost for the
+    /// archive sizes the search produces.
+    pub fn hypervolume(&self, reference: &[f64]) -> f64 {
+        if reference.len() > 3 {
+            return self.hypervolume_proxy(reference);
+        }
+        let mut pts: Vec<Vec<f64>> = self
+            .entries
+            .iter()
+            .map(|(_, o)| {
+                o.iter()
+                    .zip(reference.iter())
+                    .map(|(&v, &r)| (v / r).clamp(0.0, 1.0))
+                    .collect()
+            })
+            .collect();
+        pts.sort_by(|a, b| lex_cmp(a, b));
+        pts.dedup_by(|a, b| lex_cmp(a, b) == std::cmp::Ordering::Equal);
+        if pts.is_empty() {
+            return 0.0;
+        }
+        match reference.len() {
+            1 => pts.iter().map(|p| 1.0 - p[0]).fold(0.0, f64::max),
+            2 => union_area_2d(pts.iter().map(|p| (p[0], p[1])).collect()),
+            _ => {
+                // z-sweep: within the slab [z_k, z_next) exactly the points
+                // with z <= z_k contribute, covering their 2-D union area
+                let n = pts.len();
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_by(|&a, &b| pts[a][2].total_cmp(&pts[b][2]));
+                let mut hv = 0.0;
+                for k in 0..n {
+                    let z = pts[order[k]][2];
+                    let z_next = if k + 1 < n { pts[order[k + 1]][2] } else { 1.0 };
+                    if z_next > z {
+                        let xy: Vec<(f64, f64)> = order[..=k]
+                            .iter()
+                            .map(|&j| (pts[j][0], pts[j][1]))
+                            .collect();
+                        hv += (z_next - z) * union_area_2d(xy);
+                    }
+                }
+                hv
+            }
+        }
+    }
+}
+
+/// Area of the union of the boxes `[x, 1] × [y, 1]` over normalized points
+/// in `[0, 1]²`: an x-sweep where the covered height over the slab
+/// `[x_i, x_next)` is set by the lowest `y` seen so far.
+fn union_area_2d(mut pts: Vec<(f64, f64)>) -> f64 {
+    pts.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let mut area = 0.0;
+    let mut best_y = 1.0f64;
+    for (i, &(x, y)) in pts.iter().enumerate() {
+        let x_next = if i + 1 < pts.len() { pts[i + 1].0 } else { 1.0 };
+        best_y = best_y.min(y);
+        area += (x_next - x) * (1.0 - best_y);
+    }
+    area
 }
 
 #[cfg(test)]
@@ -430,6 +502,96 @@ mod tests {
         behind.insert(0, &[12.0, 3.0]);
         assert_eq!(behind.hypervolume_proxy(&reference), 0.0);
         assert_eq!(Frontier::new().hypervolume_proxy(&reference), 0.0);
+    }
+
+    #[test]
+    fn exact_hypervolume_hand_cases() {
+        let reference = [10.0, 10.0];
+        // single point: exact equals the proxy (one box, no overlap)
+        let mut f = Frontier::new();
+        f.insert(0, &[5.0, 5.0]);
+        assert!((f.hypervolume(&reference) - 0.25).abs() < 1e-12);
+        assert!((f.hypervolume(&reference) - f.hypervolume_proxy(&reference)).abs() < 1e-12);
+
+        // two overlapping boxes: union 0.16 + 0.16 - 0.04; the proxy
+        // double-counts the overlap (0.32)
+        let mut f = Frontier::new();
+        f.insert(0, &[2.0, 8.0]);
+        f.insert(1, &[8.0, 2.0]);
+        assert!((f.hypervolume(&reference) - 0.28).abs() < 1e-12);
+        assert!((f.hypervolume_proxy(&reference) - 0.32).abs() < 1e-12);
+
+        // 1-D: the best point sets the whole volume
+        let mut f = Frontier::new();
+        f.insert(0, &[4.0]);
+        assert!((f.hypervolume(&[10.0]) - 0.6).abs() < 1e-12);
+
+        // 3-D nested boxes: the union is the outer (better) box alone
+        let mut f = Frontier::new();
+        f.insert(0, &[5.0, 5.0, 5.0]);
+        f.insert(1, &[2.0, 2.0, 2.0]);
+        assert!((f.hypervolume(&[10.0, 10.0, 10.0]) - 0.512).abs() < 1e-12);
+
+        // points at/behind the reference contribute nothing; empty is zero
+        let mut f = Frontier::new();
+        f.insert(0, &[12.0, 3.0]);
+        assert!((f.hypervolume(&reference) - 0.0).abs() < 1e-12);
+        assert_eq!(Frontier::new().hypervolume(&reference), 0.0);
+
+        // tied members count once (same contract as the proxy)
+        let mut f = Frontier::new();
+        f.insert(0, &[5.0, 5.0]);
+        f.insert(1, &[5.0, 5.0]);
+        assert!((f.hypervolume(&reference) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_hypervolume_matches_monte_carlo() {
+        let mut rng = crate::util::rng::Rng::new(0x48_56);
+        for dims in [2usize, 3] {
+            for trial in 0..3 {
+                let reference = vec![10.0f64; dims];
+                let mut f = Frontier::new();
+                for i in 0..(4 + trial * 3) {
+                    let p: Vec<f64> = (0..dims).map(|_| rng.f64() * 10.0).collect();
+                    f.insert(i, &p);
+                }
+                let exact = f.hypervolume(&reference);
+                // a dominated normalized sample u has SOME member with
+                // obj_norm <= u on every coordinate
+                let members: Vec<Vec<f64>> = f
+                    .iter()
+                    .map(|(_, o)| o.iter().map(|&v| v / 10.0).collect())
+                    .collect();
+                let n = 200_000;
+                let mut hits = 0usize;
+                for _ in 0..n {
+                    let u: Vec<f64> = (0..dims).map(|_| rng.f64()).collect();
+                    if members
+                        .iter()
+                        .any(|m| m.iter().zip(u.iter()).all(|(&mv, &uv)| mv <= uv))
+                    {
+                        hits += 1;
+                    }
+                }
+                let mc = hits as f64 / n as f64;
+                assert!(
+                    (exact - mc).abs() < 0.006,
+                    "d={dims} trial={trial}: exact {exact} vs MC {mc}"
+                );
+                // union can never exceed the sum-of-boxes proxy
+                assert!(exact <= f.hypervolume_proxy(&reference) + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_hypervolume_falls_back_to_the_proxy_above_three_dims() {
+        let reference = [10.0, 10.0, 10.0, 10.0];
+        let mut f = Frontier::new();
+        f.insert(0, &[5.0, 5.0, 5.0, 5.0]);
+        f.insert(1, &[2.0, 8.0, 8.0, 8.0]);
+        assert_eq!(f.hypervolume(&reference), f.hypervolume_proxy(&reference));
     }
 
     #[test]

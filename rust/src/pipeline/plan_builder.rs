@@ -301,6 +301,36 @@ impl PlanCache {
         }
     }
 
+    /// Re-time the cached topology for a config that differs from the
+    /// cached one only in calibration knobs, core clock, and/or fault
+    /// severities that leave the dead-chiplet set unchanged (the
+    /// `coordinator::cache` delta re-timing path). The duration constants
+    /// are the *only* knob/frequency/fault-severity-dependent state in the
+    /// cache — placements, the plan arena, and the byte/FLOP model are all
+    /// derived from topology fields — so recomputing [`Durations`] and
+    /// swapping in the new config makes a subsequent [`PlanCache::rebuild`]
+    /// emit exactly what a fresh [`PlanCache::new`] for `cfg` would emit
+    /// (asserted bit-for-bit in the tests below).
+    ///
+    /// The caller is responsible for only re-timing across configs with
+    /// equal topology fingerprints (`HwConfig::fingerprint().topo` plus
+    /// model/method/workload/seed and the fault dead-set); the debug
+    /// assertion catches dead-set drift, which would leave experts homed on
+    /// chiplets the new scenario kills.
+    pub fn retime(&mut self, cfg: &ExperimentConfig) {
+        let fx = cfg.fault.effects(cfg.hw.n_moe_chiplets, cfg.hw.n_groups);
+        debug_assert_eq!(
+            fx.dead(),
+            self.cfg
+                .fault
+                .effects(self.cfg.hw.n_moe_chiplets, self.cfg.hw.n_groups)
+                .dead(),
+            "retime across different dead-chiplet sets (topology change)"
+        );
+        self.dur = Durations::new(cfg, &fx);
+        self.cfg = cfg.clone();
+    }
+
     /// The most recently rebuilt plan.
     pub fn plan(&self) -> &Plan {
         &self.plan
@@ -1104,6 +1134,81 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Delta re-timing contract: a `PlanCache` built for one platform and
+    /// re-timed to a knob/frequency/fault-severity variant emits plans
+    /// bit-identical to a cache freshly built for that variant.
+    #[test]
+    fn retimed_cache_matches_fresh_build() {
+        use crate::config::{HwOverride, KnobId};
+        let base = small_cfg(Method::MozartC.config());
+        let gen = TraceGen::for_model(&base.model, 5);
+        let layouts = vec![
+            ExpertLayout::contiguous(base.model.n_experts, 16, 4);
+            base.model.n_moe_layers()
+        ];
+        let coalesce = base.method.efficient_a2a;
+
+        // knob, frequency, and bandwidth-fault-severity variants of the
+        // same topology (no dead chiplets -> layouts unchanged)
+        let mut variants: Vec<ExperimentConfig> = vec![
+            {
+                let mut c = base.clone();
+                c.hw = c.hw.with_overrides(&[HwOverride::FreqGhz(1.3)]);
+                c
+            },
+            {
+                let mut c = base.clone();
+                c.hw = c.hw.with_overrides(&[
+                    HwOverride::Knob(KnobId::MxuUtil, 0.5),
+                    HwOverride::Knob(KnobId::ChunkOverheadUs, 0.7),
+                ]);
+                c
+            },
+        ];
+        let mut faulted = base.clone();
+        faulted.fault = crate::comm::FaultScenario::parse(
+            "nop-degrade:0.4,dram-throttle:0.3",
+            faulted.seed,
+        )
+        .unwrap();
+        variants.push(faulted);
+
+        let mut cache = PlanCache::new(&base, &layouts);
+        for (vi, cfg) in variants.iter().enumerate() {
+            cache.retime(cfg);
+            let mut rng = Rng::new(11);
+            for it in 0..2 {
+                let mut step_rng = rng.fork(it);
+                let w = crate::pipeline::StepWorkload::sample(
+                    cfg, &gen, &layouts, coalesce, &mut step_rng,
+                );
+                let fresh = build_step_plan(&StepInputs {
+                    cfg,
+                    layouts: &layouts,
+                    workload: &w,
+                });
+                let cached = cache.rebuild(&w);
+                assert_eq!(
+                    cached, &fresh,
+                    "variant {vi}: retimed rebuild {it} diverged from fresh build"
+                );
+            }
+        }
+        // re-timing back to the base restores the original emission exactly
+        cache.retime(&base);
+        let mut rng = Rng::new(11);
+        let mut step_rng = rng.fork(0);
+        let w = crate::pipeline::StepWorkload::sample(
+            &base, &gen, &layouts, coalesce, &mut step_rng,
+        );
+        let fresh = build_step_plan(&StepInputs {
+            cfg: &base,
+            layouts: &layouts,
+            workload: &w,
+        });
+        assert_eq!(cache.rebuild(&w), &fresh, "round-trip retime diverged");
     }
 
     fn run_with_fault(method: Method, fault: &str) -> f64 {

@@ -534,7 +534,7 @@ pub fn q3(opts: ReportOpts) -> String {
     let cfg = SearchConfig {
         constraints: Constraints {
             max_area_mm2: Some(anchor_area),
-            max_power_w: None,
+            ..Constraints::none()
         },
         method_gene: true,
         ..SearchConfig::new(

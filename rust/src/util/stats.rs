@@ -64,6 +64,52 @@ pub fn imbalance(xs: &[f64]) -> f64 {
     }
 }
 
+/// Average ranks (1-based, ties share the mean of their rank block).
+fn average_ranks(xs: &[f64]) -> Vec<f64> {
+    let mut order: Vec<usize> = (0..xs.len()).collect();
+    order.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
+    let mut ranks = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i;
+        while j + 1 < order.len() && xs[order[j + 1]] == xs[order[i]] {
+            j += 1;
+        }
+        // positions i..=j are tied; each gets the mean 1-based rank
+        let r = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &order[i..=j] {
+            ranks[k] = r;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Spearman rank correlation between two paired samples (ties averaged).
+/// `None` when the lengths differ, fewer than two pairs exist, or either
+/// side has zero rank variance (correlation undefined).
+pub fn spearman(xs: &[f64], ys: &[f64]) -> Option<f64> {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return None;
+    }
+    let rx = average_ranks(xs);
+    let ry = average_ranks(ys);
+    let mx = mean(&rx);
+    let my = mean(&ry);
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (&a, &b) in rx.iter().zip(ry.iter()) {
+        cov += (a - mx) * (b - my);
+        vx += (a - mx) * (a - mx);
+        vy += (b - my) * (b - my);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return None;
+    }
+    Some(cov / (vx * vy).sqrt())
+}
+
 /// Streaming mean/variance accumulator (Welford).
 #[derive(Clone, Debug, Default)]
 pub struct Welford {
@@ -156,6 +202,25 @@ mod tests {
     fn imbalance_balanced_is_one() {
         assert_eq!(imbalance(&[2.0, 2.0, 2.0]), 1.0);
         assert!((imbalance(&[1.0, 3.0]) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_rank_correlation() {
+        // perfect monotone (nonlinear) relation -> exactly 1
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let cubes = [1.0, 8.0, 27.0, 64.0];
+        assert_eq!(spearman(&xs, &cubes), Some(1.0));
+        // perfect inverse -> exactly -1
+        let rev = [64.0, 27.0, 8.0, 1.0];
+        assert_eq!(spearman(&xs, &rev), Some(-1.0));
+        // ties share averaged ranks: rho stays in (-1, 1) but positive
+        let tied = [1.0, 1.0, 2.0, 3.0];
+        let r = spearman(&tied, &xs).unwrap();
+        assert!(r > 0.8 && r < 1.0, "rho {r}");
+        // undefined cases
+        assert_eq!(spearman(&xs, &[1.0, 2.0]), None);
+        assert_eq!(spearman(&[1.0], &[2.0]), None);
+        assert_eq!(spearman(&[5.0, 5.0, 5.0], &xs), None);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 use mozart::comm::FaultScenario;
 use mozart::config::{DramKind, Method, ModelId};
+use mozart::coordinator::cache::EvalOptions;
 use mozart::coordinator::degrade::{default_scenarios, run, DegradeConfig};
 use mozart::coordinator::run_experiment;
 use mozart::coordinator::sweep::{cell_config, Cell};
@@ -21,6 +22,7 @@ fn tiny(threads: usize) -> DegradeConfig {
         seed: 11,
         threads,
         budget: 0,
+        eval: EvalOptions::default(),
     }
 }
 
@@ -175,6 +177,8 @@ fn degrade_artifact_schema_is_stable() {
         "\"severity\"",
         "\"latency_s\"",
         "\"retained\"",
+        "\"cache\"",
+        "\"hit_rate\"",
     ] {
         assert!(js.contains(key), "artifact missing {key}");
     }

@@ -4,6 +4,7 @@
 //! one, and the report/artifact renderers carry the expected structure.
 
 use mozart::config::{DramKind, HwOverride, Method, ModelId};
+use mozart::coordinator::cache::EvalOptions;
 use mozart::coordinator::explore::{explore, Axis, ExploreConfig};
 use mozart::metrics::pareto;
 
@@ -32,6 +33,7 @@ fn tiny_cfg(threads: usize) -> ExploreConfig {
         iters: 1,
         seed: 11,
         threads,
+        eval: EvalOptions::default(),
     }
 }
 
@@ -102,7 +104,7 @@ fn report_and_artifact_render() {
     for key in [
         "\"explore\"", "\"axes\"", "\"variants\"", "\"points\"", "\"frontiers\"",
         "\"latency_s\"", "\"energy_j_per_step\"", "\"area_mm2\"", "\"on_frontier\"",
-        "\"paper_on_frontier\"",
+        "\"paper_on_frontier\"", "\"cache\"", "\"hit_rate\"",
     ] {
         assert!(js.contains(key), "artifact missing {key}");
     }

@@ -7,6 +7,7 @@
 //! report/artifact renderers carry the search + feasibility sections.
 
 use mozart::config::{DramKind, HwOverride, KnobId, Method, ModelId};
+use mozart::coordinator::cache::EvalOptions;
 use mozart::coordinator::explore::{explore, parse_axes, ExploreConfig};
 use mozart::coordinator::search::{
     search, search_with, Constraints, SearchConfig, SearchStrategy,
@@ -27,6 +28,7 @@ fn tiny_explore(threads: usize) -> ExploreConfig {
         iters: 1,
         seed: 11,
         threads,
+        eval: EvalOptions::default(),
     }
 }
 
@@ -231,6 +233,7 @@ fn report_artifact_and_progress_render() {
         "\"min_resilience\"", "\"resilience_scenario\"", "\"retained\"",
         "\"resilience\"", "\"anchor_feasible\"", "\"method_gene\"",
         "\"mean_power_w\"", "\"power_w\"",
+        "\"cache\"", "\"hit_rate\"", "\"surrogate\"", "\"surrogate_frac\"",
     ] {
         assert!(js.contains(key), "artifact missing {key}");
     }

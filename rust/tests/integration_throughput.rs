@@ -1,0 +1,242 @@
+//! Search-throughput overhaul contracts (ROADMAP item: cell memoization +
+//! delta re-timing + surrogate preselection): every reuse layer is
+//! bit-transparent end to end — a seeded NSGA-II run with the cache and
+//! pooled re-timing on reproduces the uncached run bit for bit, a
+//! timing-only explore grid re-times every non-anchor cell, the surrogate
+//! at `frac = 1.0` is a no-op, `--min-resilience` simulates each candidate
+//! exactly twice (healthy + faulted, never the healthy run twice), and a
+//! shared cache file serves a repeat run entirely from memoized cells.
+
+use mozart::config::{DramKind, Method, ModelId};
+use mozart::coordinator::cache::EvalOptions;
+use mozart::coordinator::explore::{explore, parse_axes, ExploreConfig};
+use mozart::coordinator::search::{
+    search, Constraints, MinResilience, SearchConfig, SearchStrategy,
+};
+
+fn explore_cfg(axes: &str) -> ExploreConfig {
+    ExploreConfig {
+        axes: parse_axes(axes).expect("axes parse"),
+        budget: 0,
+        models: vec![ModelId::OlmoE_1B_7B],
+        methods: vec![Method::MozartC],
+        seq_len: 64,
+        dram: DramKind::Hbm2,
+        iters: 1,
+        seed: 11,
+        threads: 1,
+        eval: EvalOptions::default(),
+    }
+}
+
+fn no_reuse() -> EvalOptions {
+    EvalOptions {
+        cache: false,
+        retime: false,
+        cache_file: None,
+    }
+}
+
+fn evolutionary(seed: u64) -> SearchStrategy {
+    SearchStrategy::Evolutionary {
+        population: 4,
+        generations: 3,
+        crossover_rate: 0.6,
+        mutation_rate: 0.5,
+        seed,
+    }
+}
+
+/// Remove the flat `"cache":{...}` stats object from a rendered artifact.
+/// It is the only section allowed to differ between a cached and an
+/// uncached run (hit/miss counters are throughput accounting, not results).
+fn strip_cache_section(js: &str) -> String {
+    let start = js.find("\"cache\":{").expect("artifact has a cache section");
+    let end = js[start..].find('}').expect("cache object closes") + start + 1;
+    format!("{}{}", &js[..start], &js[end..])
+}
+
+/// The PR acceptance criterion: a seeded NSGA-II search over a mixed
+/// (topology x timing) genome space with memoization + re-timing on is
+/// bit-identical to the same search with every reuse layer off — down to
+/// the rendered artifact, modulo the cache-stats section itself.
+#[test]
+fn cached_search_is_bit_identical_to_uncached() {
+    let fast = SearchConfig::new(explore_cfg("tiles=36:64,freq=0.8:1.2"), evolutionary(13));
+    let mut slow = fast.clone();
+    slow.explore.eval = no_reuse();
+
+    let a = search(&fast);
+    let b = search(&slow);
+
+    assert_eq!(a.candidates.len(), b.candidates.len());
+    for (x, y) in a.candidates.iter().zip(b.candidates.iter()) {
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.genome, y.genome);
+    }
+    assert_eq!(a.cells.len(), b.cells.len());
+    for (x, y) in a.cells.iter().zip(b.cells.iter()) {
+        assert_eq!(x.variant, y.variant);
+        assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+        assert_eq!(x.area_mm2.to_bits(), y.area_mm2.to_bits());
+        assert_eq!(x.c_t.to_bits(), y.c_t.to_bits());
+    }
+    for (x, y) in a.joint.iter().zip(b.joint.iter()) {
+        assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+        assert_eq!(x.area_mm2.to_bits(), y.area_mm2.to_bits());
+        assert_eq!(x.power_w.to_bits(), y.power_w.to_bits());
+    }
+    assert_eq!(a.archive, b.archive);
+    assert_eq!(a.paper_dominators, b.paper_dominators);
+    for (x, y) in a.convergence.iter().zip(b.convergence.iter()) {
+        assert_eq!(x.hypervolume.to_bits(), y.hypervolume.to_bits());
+        assert_eq!(x.archive_size, y.archive_size);
+    }
+    // the artifacts agree byte for byte outside the cache-stats section
+    assert_eq!(
+        strip_cache_section(&a.to_json().render()),
+        strip_cache_section(&b.to_json().render())
+    );
+    // the accounting tells the two runs apart
+    assert!(a.eval.cache_enabled && a.eval.retime_enabled);
+    assert!(a.eval.cache.misses > 0, "cached run never simulated?");
+    assert!(!b.eval.cache_enabled && !b.eval.retime_enabled);
+    assert_eq!(b.eval.cache.misses + b.eval.cache.hits, 0);
+    assert_eq!(b.eval.retimes, 0);
+}
+
+/// A frequency-only grid shares the anchor's topology words, so with one
+/// worker the explorer builds the topology once and re-times every other
+/// cell — and the results still match the no-reuse run bit for bit.
+#[test]
+fn timing_only_grid_retimes_every_non_anchor_cell() {
+    let fast = explore_cfg("freq=0.8:1.2:1.4");
+    let mut slow = fast.clone();
+    slow.eval = no_reuse();
+
+    let a = explore(&fast);
+    let b = explore(&slow);
+    assert_eq!(a.points.len(), 4, "paper anchor + 3 frequency points");
+    assert_eq!(a.points.len(), b.points.len());
+    for (x, y) in a.points.iter().zip(b.points.iter()) {
+        assert_eq!(x.variant, y.variant);
+        assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits(), "variant {}", x.variant);
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "variant {}", x.variant);
+        assert_eq!(x.area_mm2.to_bits(), y.area_mm2.to_bits(), "variant {}", x.variant);
+    }
+    assert_eq!(a.frontiers[0].members, b.frontiers[0].members);
+    // one build (the first cell), everything else re-timed
+    assert_eq!(a.eval.builds, 1, "single worker, single topology");
+    assert_eq!(a.eval.retimes, 3);
+    assert_eq!(a.eval.cache.hits, 0, "all four cells are distinct");
+    assert_eq!(b.eval.retimes, 0);
+}
+
+/// `--surrogate-frac 1.0` (the default) is a no-op: no generation logs
+/// surrogate stats and the artifact reports the feature disabled. At
+/// `0.5` the same seeded random proposal stream is filtered — every cell
+/// that IS simulated matches the unfiltered run bit for bit (preselection
+/// skips work, it never changes surviving numbers).
+#[test]
+fn surrogate_frac_one_is_a_no_op_and_half_only_skips_work() {
+    let strategy = SearchStrategy::Random { samples: 8, seed: 5 };
+    let full = SearchConfig::new(explore_cfg("tiles=36:64,freq=0.8:1.2"), strategy);
+    assert_eq!(full.surrogate_frac, 1.0, "preselection defaults to off");
+    let a = search(&full);
+    assert!(a.convergence.iter().all(|s| s.surrogate.is_none()));
+    let js = a.to_json().render();
+    assert!(js.contains("\"surrogate\""));
+    assert!(js.contains("\"enabled\":false"));
+
+    let mut half = full.clone();
+    half.surrogate_frac = 0.5;
+    let b = search(&half);
+    let stats: Vec<_> = b.convergence.iter().filter_map(|s| s.surrogate.as_ref()).collect();
+    assert!(!stats.is_empty(), "frac 0.5 must log surrogate stats");
+    assert!(stats.iter().any(|s| s.simulated < s.proposed), "nothing was filtered");
+    // same seed -> same proposal stream -> the filtered run evaluates a
+    // subset, and every shared candidate has bit-identical objectives
+    assert!(b.candidates.len() <= a.candidates.len());
+    for (ci, c) in b.candidates.iter().enumerate() {
+        let ai = a
+            .candidates
+            .iter()
+            .position(|x| x.label == c.label)
+            .expect("filtered run evaluated a candidate the full run did not");
+        assert_eq!(
+            b.joint[ci].latency_s.to_bits(),
+            a.joint[ai].latency_s.to_bits(),
+            "candidate `{}`",
+            c.label
+        );
+        assert_eq!(b.joint[ci].energy_j.to_bits(), a.joint[ai].energy_j.to_bits());
+        assert_eq!(b.joint[ci].area_mm2.to_bits(), a.joint[ai].area_mm2.to_bits());
+    }
+}
+
+/// `--min-resilience` costs exactly two simulations per candidate (one
+/// healthy, one faulted): the healthy result feeds both the objectives and
+/// the retained-throughput ratio, so the cache sees two distinct misses per
+/// candidate and zero redundant lookups. A second run sharing the cache
+/// file replays entirely from memoized cells — zero simulations — and
+/// still reproduces the first run bit for bit.
+#[test]
+fn resilience_runs_two_cells_per_candidate_and_cache_file_replays() {
+    use mozart::comm::FaultScenario;
+
+    let dir = std::env::temp_dir().join(format!("mozart-throughput-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cache_file = dir.join("eval.cache");
+    let cache_file = cache_file.to_str().unwrap().to_string();
+    let _ = std::fs::remove_file(&cache_file);
+
+    let mut ex = explore_cfg("tiles=36:64,dram");
+    ex.eval.cache_file = Some(cache_file.clone());
+    let cfg = SearchConfig {
+        constraints: Constraints {
+            min_resilience: Some(MinResilience {
+                frac: 0.01,
+                scenario: FaultScenario::parse("dram-throttle:0.3", 11).expect("scenario"),
+            }),
+            ..Constraints::none()
+        },
+        ..SearchConfig::new(ex, SearchStrategy::Exhaustive)
+    };
+
+    let a = search(&cfg);
+    let n = a.candidates.len() as u64;
+    assert!(n >= 2);
+    assert!(a.joint.iter().all(|j| j.resilience.is_some()));
+    assert_eq!(
+        a.eval.cache.misses,
+        2 * n,
+        "exactly one healthy + one faulted simulation per candidate"
+    );
+    assert_eq!(a.eval.cache.hits, 0, "no cell was looked up twice");
+    assert_eq!(a.eval.builds + a.eval.retimes, 2 * n);
+    assert_eq!(a.eval.cache.entries as u64, 2 * n);
+
+    // run 2: warm-started from the persisted cache — no simulation at all
+    let b = search(&cfg);
+    assert_eq!(b.eval.cache.loaded as u64, 2 * n);
+    assert_eq!(b.eval.cache.hits, 2 * n, "every cell replayed from the file");
+    assert_eq!(b.eval.cache.misses, 0);
+    assert_eq!(b.eval.builds + b.eval.retimes, 0);
+    for (x, y) in a.joint.iter().zip(b.joint.iter()) {
+        assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+        assert_eq!(x.area_mm2.to_bits(), y.area_mm2.to_bits());
+        assert_eq!(
+            x.resilience.unwrap().to_bits(),
+            y.resilience.unwrap().to_bits()
+        );
+    }
+    assert_eq!(a.archive, b.archive);
+    assert_eq!(
+        strip_cache_section(&a.to_json().render()),
+        strip_cache_section(&b.to_json().render())
+    );
+    let _ = std::fs::remove_file(&cache_file);
+}

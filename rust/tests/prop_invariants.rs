@@ -401,6 +401,7 @@ fn prop_nsga2_without_crossover_reproduces_bit_identical_frontiers() {
             iters: 1,
             seed: 23,
             threads: 0,
+            eval: mozart::coordinator::cache::EvalOptions::default(),
         },
         SearchStrategy::Evolutionary {
             population: 3,
