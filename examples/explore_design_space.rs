@@ -10,7 +10,8 @@
 //! --budget 12`); copy it into `rust/examples/` to build it as a cargo
 //! example target.
 
-use mozart::config::{DramKind, Method, ModelId};
+use mozart::config::{DramKind, Method, ModelId, SchedPolicy};
+use mozart::coordinator::cache::EvalOptions;
 use mozart::coordinator::explore::{explore, parse_axes, ExploreConfig};
 
 fn main() {
@@ -28,6 +29,10 @@ fn main() {
         iters: 2,
         seed: 7,
         threads: 0, // one worker per core
+        // the paper's schedule; `SchedPolicy::ALL.to_vec()` would add the
+        // per-platform schedule frontier (--scheds all) to the report
+        scheds: vec![SchedPolicy::Streaming],
+        eval: EvalOptions::default(), // cell memoization + delta re-timing on
     };
 
     // 2. run every (variant x model x method) cell through the same

@@ -1,16 +1,18 @@
 //! Guided design-space search: drive the constrained NSGA-II strategy over
-//! a hardware axis grid — with the Mozart ablation as a searchable gene —
-//! and read the archive + convergence curve programmatically: the co-design
-//! loop of `mozart explore --strategy evolutionary --methods all
-//! --max-area ...`, as library code.
+//! a hardware axis grid — with the Mozart ablation and the DAG scheduling
+//! policy as searchable genes — and read the archive + convergence curve
+//! programmatically: the co-design loop of `mozart explore --strategy
+//! evolutionary --methods all --scheds all --max-area ...`, as library code.
 //!
 //! Like every walkthrough in this directory, this is reference code outside
 //! the cargo package (the equivalent CLI run is
 //! `cargo run --release -p mozart -- explore --strategy evolutionary
-//! --methods all --max-area 16000 --population 8 --generations 6`); copy it
-//! into `rust/examples/` to build it as a cargo example target.
+//! --methods all --scheds all --max-area 16000 --population 8
+//! --generations 6`); copy it into `rust/examples/` to build it as a cargo
+//! example target.
 
-use mozart::config::{DramKind, Method, ModelId};
+use mozart::config::{DramKind, Method, ModelId, SchedPolicy};
+use mozart::coordinator::cache::EvalOptions;
 use mozart::coordinator::explore::{parse_axes, ExploreConfig};
 use mozart::coordinator::search::{
     search_with, Constraints, SearchConfig, SearchStrategy,
@@ -22,17 +24,19 @@ fn main() {
     //    DRAM-efficiency fit?)
     let axes = parse_axes("tiles,nop_bw,knob=dram_eff:0.6:0.95").expect("axes parse");
 
-    // 2. constrained NSGA-II with the method gene: each candidate is one
-    //    (hardware point, Mozart ablation) pair, the objectives are the
-    //    worst case across the configured models, and candidates whose
-    //    worst-case die area exceeds the budget never reach the frontier —
-    //    they are ranked behind every feasible candidate instead
+    // 2. constrained NSGA-II with the method and sched genes: each candidate
+    //    is one (hardware point, Mozart ablation, dispatch policy) triple,
+    //    the objectives are the worst case across the configured models, and
+    //    candidates whose worst-case die area exceeds the budget never reach
+    //    the frontier — they are ranked behind every feasible candidate
     let cfg = SearchConfig {
         constraints: Constraints {
             max_area_mm2: Some(16_000.0),
             max_power_w: None,
+            min_resilience: None, // no retained-throughput floor
         },
         method_gene: true, // --methods all: "which ablation on which platform"
+        sched_gene: true,  // --scheds all: "which dispatch policy on which platform"
         ..SearchConfig::new(
             ExploreConfig {
                 axes,
@@ -44,6 +48,8 @@ fn main() {
                 iters: 2,
                 seed: 7, // one seed: simulation AND strategy are reproducible
                 threads: 0,
+                scheds: SchedPolicy::ALL.to_vec(),
+                eval: EvalOptions::default(),
             },
             SearchStrategy::Evolutionary {
                 population: 8,

@@ -14,6 +14,9 @@ pub use hw::{
 };
 pub use method::{Method, MethodConfig};
 pub use model::{ModelConfig, ModelId};
+// Re-exported here because the scheduling policy is part of a fully
+// specified experiment, like the method and the fault scenario.
+pub use crate::sim::sched::SchedPolicy;
 
 /// A fully-specified experiment: which model, which hardware, which method,
 /// and the workload parameters the paper sweeps.
@@ -38,6 +41,10 @@ pub struct ExperimentConfig {
     /// Injected fault scenario (the empty scenario is the healthy platform
     /// and is bit-identical to the pre-fault-model simulation path).
     pub fault: crate::comm::FaultScenario,
+    /// DAG scheduling policy the simulator dispatches tasks with
+    /// (`streaming` is the paper's schedule and bit-identical to the
+    /// pre-trait engine; tie-break seeds derive from `seed`).
+    pub sched: SchedPolicy,
 }
 
 impl ExperimentConfig {
@@ -56,6 +63,7 @@ impl ExperimentConfig {
             iters: 32,
             seed: 0x4D6F_7A61, // "Moza"
             fault: crate::comm::FaultScenario::none(),
+            sched: SchedPolicy::Streaming,
         }
     }
 

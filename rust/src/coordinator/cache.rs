@@ -91,6 +91,7 @@ pub fn cell_key(cfg: &ExperimentConfig) -> CellKey {
         iters,
         seed,
         fault,
+        sched,
     } = cfg;
     let fp = hw.fingerprint();
     let mut topo = fp.topo;
@@ -163,6 +164,11 @@ pub fn cell_key(cfg: &ExperimentConfig) -> CellKey {
     timing.push(*iters as u64);
     timing.push(fault.seed);
     push_str(&mut timing, &fault.label());
+    // The scheduling policy changes when tasks run, never which tasks
+    // exist, so it re-times the same plan topology: encoding it in the
+    // timing words keeps [`EvalPool`] topology reuse valid across
+    // policies while [`EvalCache`] entries never collide.
+    timing.push(sched.index() as u64);
     CellKey { topo, timing }
 }
 
@@ -376,7 +382,9 @@ pub struct EvalCache {
 }
 
 /// Magic first line of the persisted cache format.
-const CACHE_HEADER: &str = "mozart-evalcache v1";
+// v2: cell keys grew a scheduling-policy timing word (PR 8); v1 files are
+// discarded on load rather than carried as permanently-dead entries.
+const CACHE_HEADER: &str = "mozart-evalcache v2";
 
 impl EvalCache {
     /// An empty cache.

@@ -20,9 +20,9 @@
 //! executor.
 
 use crate::comm::FaultScenario;
-use crate::config::{DramKind, Method, ModelId};
+use crate::config::{DramKind, Method, ModelId, SchedPolicy};
 use crate::coordinator::cache::{EvalOptions, EvalSession, EvalStats};
-use crate::coordinator::sweep::{cell_config, parallel_map_with, Cell};
+use crate::coordinator::sweep::{cell_config_sched, parallel_map_with, Cell};
 use crate::util::json::Json;
 use crate::util::table::{scatter_plot, Table};
 
@@ -52,6 +52,10 @@ pub struct DegradeConfig {
     /// healthy anchors always run — retained throughput needs them — and
     /// any truncation is reported, never silent.
     pub budget: usize,
+    /// DAG scheduling policy every cell (healthy and faulted) is simulated
+    /// under (`--sched`); both sides of each retained-throughput ratio use
+    /// the same policy, so the curves compare like with like.
+    pub sched: SchedPolicy,
     /// Evaluation-throughput toggles (memoization cache, delta re-timing).
     /// Bit-transparent: severity points of the bandwidth-fault curves share
     /// the healthy topology and re-time it instead of rebuilding.
@@ -74,6 +78,7 @@ impl DegradeConfig {
             seed,
             threads: 0,
             budget: 0,
+            sched: SchedPolicy::Streaming,
             eval: EvalOptions::default(),
         }
     }
@@ -159,7 +164,8 @@ pub fn run(cfg: &DegradeConfig) -> DegradeOutcome {
         || session.new_pool(),
         |pool, &cell| {
             let mut ctx = session.ctx(pool);
-            ctx.run(&cell_config(cell, cfg.iters, cfg.seed)).latency
+            ctx.run(&cell_config_sched(cell, cfg.iters, cfg.seed, cfg.sched))
+                .latency
         },
     );
 
@@ -185,7 +191,7 @@ pub fn run(cfg: &DegradeConfig) -> DegradeOutcome {
         || session.new_pool(),
         |pool, &(ci, si, ti)| {
             let severity = ti as f64 / cfg.steps as f64;
-            let mut ec = cell_config(cells[ci], cfg.iters, cfg.seed);
+            let mut ec = cell_config_sched(cells[ci], cfg.iters, cfg.seed, cfg.sched);
             ec.fault = cfg.scenarios[si].at_severity(severity);
             let mut ctx = session.ctx(pool);
             ctx.run(&ec).latency
@@ -361,6 +367,7 @@ impl DegradeOutcome {
             // u64 seeds above 2^53, breaking reproduction from the artifact
             ("seed", Json::str(self.cfg.seed.to_string())),
             ("dram", Json::str(self.cfg.dram.name())),
+            ("sched", Json::str(self.cfg.sched.name())),
             ("dropped_by_budget", Json::int(self.dropped)),
             ("cache", self.eval.to_json()),
             ("points", Json::Arr(points)),
@@ -384,6 +391,7 @@ mod tests {
             seed: 11,
             threads,
             budget: 0,
+            sched: SchedPolicy::Streaming,
             eval: EvalOptions::default(),
         }
     }
@@ -444,7 +452,7 @@ mod tests {
             .iter()
             .find(|p| p.scenario == cfg.scenarios[0].label() && p.severity == 1.0)
             .expect("endpoint present");
-        let mut ec = cell_config(
+        let mut ec = cell_config_sched(
             Cell {
                 model: cfg.models[0],
                 method: cfg.methods[0],
@@ -453,6 +461,7 @@ mod tests {
             },
             cfg.iters,
             cfg.seed,
+            cfg.sched,
         );
         ec.fault = cfg.scenarios[0].clone();
         let direct = crate::coordinator::run_experiment(&ec).latency;

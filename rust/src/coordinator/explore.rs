@@ -25,6 +25,7 @@
 use crate::arch::area::hw_metrics;
 use crate::config::{
     DramKind, ExperimentConfig, HwConfig, HwOverride, KnobId, Method, ModelConfig, ModelId,
+    SchedPolicy,
 };
 use crate::coordinator::cache::{EvalCtx, EvalOptions, EvalSession, EvalStats};
 use crate::coordinator::sweep::{parallel_map_with, SweepOptions};
@@ -274,6 +275,11 @@ pub struct ExploreConfig {
     pub models: Vec<ModelId>,
     /// Optimization methods to evaluate each variant with.
     pub methods: Vec<Method>,
+    /// DAG scheduling policies to evaluate each variant under. The first
+    /// entry is the reference policy: the paper-anchor verdicts and the
+    /// schedule-frontier comparisons are relative to it. With more than one
+    /// entry the report gains a per-(model, method) schedule frontier.
+    pub scheds: Vec<SchedPolicy>,
     /// Sequence length per sample.
     pub seq_len: usize,
     /// Base DRAM technology (overridden by a `dram` axis value, if present).
@@ -301,6 +307,7 @@ impl ExploreConfig {
             budget: 64,
             models: vec![ModelId::Qwen3_30B_A3B],
             methods: vec![Method::MozartC],
+            scheds: vec![SchedPolicy::Streaming],
             seq_len: 256,
             dram: DramKind::Hbm2,
             iters: 2,
@@ -330,6 +337,8 @@ pub struct ExplorePoint {
     pub model: ModelId,
     /// Method this cell simulated.
     pub method: Method,
+    /// DAG scheduling policy the simulator dispatched this cell with.
+    pub sched: SchedPolicy,
     /// Mean end-to-end latency per training step (seconds) — minimized.
     pub latency_s: f64,
     /// Mean energy per training step (Joules) — minimized.
@@ -374,6 +383,34 @@ pub struct Frontier {
     /// Point indices dominating the paper anchor; empty iff the paper's
     /// Table 2 configuration is itself on the frontier.
     pub paper_dominators: Vec<usize>,
+}
+
+/// One (model, method) slice of the schedule frontier: for every hardware
+/// variant of the slice, the step latency under each evaluated scheduling
+/// policy, and the winning (lowest-latency) policy. This is the per-platform
+/// "which schedule should this design point run?" view the multi-`--scheds`
+/// explorer reports.
+#[derive(Clone, Debug)]
+pub struct SchedFrontier {
+    /// Model of this slice.
+    pub model: ModelId,
+    /// Method of this slice.
+    pub method: Method,
+    /// One row per evaluated variant, ascending variant index.
+    pub rows: Vec<SchedRow>,
+}
+
+/// One hardware variant's row of a [`SchedFrontier`].
+#[derive(Clone, Debug)]
+pub struct SchedRow {
+    /// Index into [`ExploreOutcome::variants`].
+    pub variant: usize,
+    /// Step latency (seconds) under each policy, parallel to
+    /// [`ExploreConfig::scheds`].
+    pub latency_by_sched: Vec<f64>,
+    /// Index (into [`ExploreConfig::scheds`]) of the lowest-latency policy;
+    /// exact ties break to the earlier list position ([`pareto::argmin`]).
+    pub best: usize,
 }
 
 /// Everything one exploration run produced.
@@ -428,6 +465,7 @@ pub(crate) fn eval_point(
     vi: usize,
     model: ModelId,
     method: Method,
+    sched: SchedPolicy,
     fault: Option<&crate::comm::FaultScenario>,
     ctx: &mut EvalCtx<'_>,
 ) -> ExplorePoint {
@@ -437,6 +475,7 @@ pub(crate) fn eval_point(
     ec.seq_len = cfg.seq_len;
     ec.iters = cfg.iters;
     ec.seed = cfg.seed;
+    ec.sched = sched;
     let r = ctx.run(&ec);
     let retained = fault.map(|scenario| {
         let mut fc = ec.clone();
@@ -448,6 +487,7 @@ pub(crate) fn eval_point(
         variant: vi,
         model,
         method,
+        sched,
         latency_s: r.latency,
         energy_j: r.energy.total_j(),
         area_mm2: m.total_area_mm2,
@@ -465,7 +505,7 @@ pub(crate) fn eval_point(
 /// # Examples
 ///
 /// ```
-/// use mozart::config::{DramKind, HwOverride, Method, ModelId};
+/// use mozart::config::{DramKind, HwOverride, Method, ModelId, SchedPolicy};
 /// use mozart::coordinator::explore::{explore, Axis, ExploreConfig};
 ///
 /// // one tiny axis at a reduced workload, sequentially
@@ -477,6 +517,7 @@ pub(crate) fn eval_point(
 ///     budget: 0,
 ///     models: vec![ModelId::OlmoE_1B_7B],
 ///     methods: vec![Method::MozartC],
+///     scheds: vec![SchedPolicy::Streaming],
 ///     seq_len: 64,
 ///     dram: DramKind::Hbm2,
 ///     iters: 1,
@@ -515,7 +556,7 @@ pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
         });
     }
 
-    let mut specs: Vec<(usize, ModelId, Method)> = Vec::new();
+    let mut specs: Vec<(usize, ModelId, Method, SchedPolicy)> = Vec::new();
     for vi in 0..variants.len() {
         for (mi, &model) in cfg.models.iter().enumerate() {
             // in a multi-model explore a combo may survive the global skip
@@ -525,7 +566,9 @@ pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
                 continue;
             }
             for &method in &cfg.methods {
-                specs.push((vi, model, method));
+                for &sched in &cfg.scheds {
+                    specs.push((vi, model, method, sched));
+                }
             }
         }
     }
@@ -539,9 +582,9 @@ pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
         threads,
         session.pools(),
         || session.new_pool(),
-        |pool, &(vi, model, method)| {
+        |pool, &(vi, model, method, sched)| {
             let mut ctx = session.ctx(pool);
-            eval_point(cfg, &variants[vi].overrides, vi, model, method, None, &mut ctx)
+            eval_point(cfg, &variants[vi].overrides, vi, model, method, sched, None, &mut ctx)
         },
     );
 
@@ -559,10 +602,12 @@ pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
                 .into_iter()
                 .map(|k| idxs[k])
                 .collect();
+            // the anchor is variant 0 under the reference (first) policy —
+            // with several scheds, variant 0 appears once per policy
             let paper_point = idxs
                 .iter()
                 .copied()
-                .find(|&i| points[i].variant == 0)
+                .find(|&i| points[i].variant == 0 && points[i].sched == cfg.scheds[0])
                 .expect("paper anchor is always evaluated");
             let paper_obj = points[paper_point].objectives();
             let paper_dominators: Vec<usize> = pareto::dominators(&paper_obj, &objs)
@@ -590,9 +635,93 @@ pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
 }
 
 impl ExploreOutcome {
+    /// The per-(model, method) schedule frontier: for each variant of the
+    /// slice, its latency under every evaluated policy and the argmin
+    /// winner. Rows are ascending by variant index; one frontier per entry
+    /// of [`ExploreOutcome::frontiers`], in the same order. With a single
+    /// `--sched` the rows are trivial (one column, winner 0) but still
+    /// well-formed, so artifact consumers need no special case.
+    pub fn sched_frontiers(&self) -> Vec<SchedFrontier> {
+        let ns = self.cfg.scheds.len();
+        self.frontiers
+            .iter()
+            .map(|f| {
+                let mut rows: Vec<SchedRow> = Vec::new();
+                for &i in &f.points {
+                    let p = &self.points[i];
+                    let si = self
+                        .cfg
+                        .scheds
+                        .iter()
+                        .position(|&s| s == p.sched)
+                        .expect("every point's policy is one of cfg.scheds");
+                    let row = match rows.iter_mut().find(|r| r.variant == p.variant) {
+                        Some(r) => r,
+                        None => {
+                            rows.push(SchedRow {
+                                variant: p.variant,
+                                latency_by_sched: vec![f64::NAN; ns],
+                                best: 0,
+                            });
+                            rows.last_mut().expect("just pushed")
+                        }
+                    };
+                    row.latency_by_sched[si] = p.latency_s;
+                }
+                rows.sort_by_key(|r| r.variant);
+                for r in &mut rows {
+                    r.best = pareto::argmin(&r.latency_by_sched)
+                        .expect("cfg.scheds is never empty");
+                }
+                SchedFrontier {
+                    model: f.model,
+                    method: f.method,
+                    rows,
+                }
+            })
+            .collect()
+    }
+
+    fn render_sched_frontier(&self, sf: &SchedFrontier) -> String {
+        let title = format!(
+            "Schedule frontier — {} / {}",
+            sf.model.name(),
+            sf.method.name()
+        );
+        let mut cols: Vec<String> = vec!["Variant".to_string()];
+        cols.extend(self.cfg.scheds.iter().map(|s| format!("{} (s)", s.name())));
+        cols.push("Best".to_string());
+        let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&title, &col_refs);
+        let mut wins = vec![0usize; self.cfg.scheds.len()];
+        for r in &sf.rows {
+            wins[r.best] += 1;
+            let mut cells = vec![self.variants[r.variant].label.clone()];
+            cells.extend(r.latency_by_sched.iter().map(|l| format!("{l:.4}")));
+            cells.push(self.cfg.scheds[r.best].name().to_string());
+            t.row(&cells);
+        }
+        let mut s = t.render();
+        let tally = self
+            .cfg
+            .scheds
+            .iter()
+            .zip(&wins)
+            .map(|(p, w)| format!("{} x{}", p.name(), w))
+            .collect::<Vec<_>>()
+            .join(", ");
+        s.push_str(&format!(
+            "=> winning policy per variant (exact latency ties break to the \
+             earlier --scheds entry): {tally}.\n"
+        ));
+        s
+    }
+
     /// Rendered markdown report: axis summary, one frontier table + ASCII
     /// latency/energy scatter per (model, method), and the Q3-style verdict
-    /// on where the paper's Table 2 configuration lands.
+    /// on where the paper's Table 2 configuration lands. With more than one
+    /// scheduling policy, a per-(model, method) schedule-frontier table
+    /// follows the Pareto sections.
     pub fn render_markdown(&self) -> String {
         let mut t = Table::new("Design-space axes", &["Axis", "Values"]);
         for a in &self.cfg.axes {
@@ -612,9 +741,26 @@ impl ExploreOutcome {
             self.points.len(),
             self.cfg.budget
         ));
+        if self.cfg.scheds.len() > 1 {
+            out.push_str(&format!(
+                "(schedulers: {})\n\n",
+                self.cfg
+                    .scheds
+                    .iter()
+                    .map(|s| s.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ));
+        }
         for f in &self.frontiers {
             out.push_str(&self.render_frontier(f));
             out.push('\n');
+        }
+        if self.cfg.scheds.len() > 1 {
+            for sf in &self.sched_frontiers() {
+                out.push_str(&self.render_sched_frontier(sf));
+                out.push('\n');
+            }
         }
         out
     }
@@ -748,6 +894,7 @@ impl ExploreOutcome {
                         ("variant", Json::int(p.variant)),
                         ("model", Json::str(p.model.name())),
                         ("method", Json::str(p.method.name())),
+                        ("sched", Json::str(p.sched.name())),
                         ("latency_s", Json::num(p.latency_s)),
                         ("energy_j_per_step", Json::num(p.energy_j)),
                         ("area_mm2", Json::num(p.area_mm2)),
@@ -782,6 +929,45 @@ impl ExploreOutcome {
                 })
                 .collect(),
         );
+        let sched_frontier = Json::Arr(
+            self.sched_frontiers()
+                .iter()
+                .map(|sf| {
+                    Json::obj([
+                        ("model", Json::str(sf.model.name())),
+                        ("method", Json::str(sf.method.name())),
+                        (
+                            "rows",
+                            Json::Arr(
+                                sf.rows
+                                    .iter()
+                                    .map(|r| {
+                                        Json::obj([
+                                            ("variant", Json::int(r.variant)),
+                                            (
+                                                "latency_by_sched",
+                                                Json::Arr(
+                                                    r.latency_by_sched
+                                                        .iter()
+                                                        .map(|&l| Json::num(l))
+                                                        .collect(),
+                                                ),
+                                            ),
+                                            (
+                                                "best_sched",
+                                                Json::str(
+                                                    self.cfg.scheds[r.best].name(),
+                                                ),
+                                            ),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
         Json::obj([
             ("explore", Json::str("design_space")),
             ("axes", axes),
@@ -792,6 +978,16 @@ impl ExploreOutcome {
             // u64 seeds above 2^53 (same policy as BENCH_sweep.json)
             ("seed", Json::str(self.cfg.seed.to_string())),
             ("base_dram", Json::str(self.cfg.dram.name())),
+            (
+                "scheds",
+                Json::Arr(
+                    self.cfg
+                        .scheds
+                        .iter()
+                        .map(|s| Json::str(s.name()))
+                        .collect(),
+                ),
+            ),
             ("objectives", Json::Arr(vec![
                 Json::str("latency_s"),
                 Json::str("energy_j_per_step"),
@@ -800,6 +996,7 @@ impl ExploreOutcome {
             ("variants", variants),
             ("points", points),
             ("frontiers", frontiers),
+            ("sched_frontier", sched_frontier),
             ("cache", self.eval.to_json()),
         ])
     }

@@ -74,7 +74,9 @@
 use std::collections::BTreeSet;
 
 use crate::comm::FaultScenario;
-use crate::config::{ExperimentConfig, HwConfig, HwOverride, Method, ModelConfig};
+use crate::config::{
+    ExperimentConfig, HwConfig, HwOverride, Method, ModelConfig, SchedPolicy,
+};
 use crate::coordinator::cache::{EvalSession, EvalStats};
 use crate::coordinator::explore::{self, Axis, ExploreConfig, ExplorePoint};
 use crate::coordinator::sweep::{parallel_map_with, SweepOptions};
@@ -92,7 +94,7 @@ use crate::util::table::{scatter_plot, Table};
 /// same archive bit for bit:
 ///
 /// ```
-/// use mozart::config::{DramKind, HwOverride, Method, ModelId};
+/// use mozart::config::{DramKind, HwOverride, Method, ModelId, SchedPolicy};
 /// use mozart::coordinator::explore::{Axis, ExploreConfig};
 /// use mozart::coordinator::search::{search, SearchConfig, SearchStrategy};
 ///
@@ -104,6 +106,7 @@ use crate::util::table::{scatter_plot, Table};
 ///     budget: 0,
 ///     models: vec![ModelId::OlmoE_1B_7B],
 ///     methods: vec![Method::MozartC],
+///     scheds: vec![SchedPolicy::Streaming],
 ///     seq_len: 64,
 ///     dram: DramKind::Hbm2,
 ///     iters: 1,
@@ -310,6 +313,14 @@ pub struct SearchConfig {
     /// trailing gene (`--methods ...`) instead of being evaluated on all of
     /// them, so the frontier answers "which ablation on which platform".
     pub method_gene: bool,
+    /// When set, each candidate carries one of `explore.scheds` as a
+    /// trailing gene (`--scheds ...`, after the method gene when both are
+    /// active) instead of being evaluated on all of them, so the frontier
+    /// answers "which schedule on which platform". Without the gene, every
+    /// candidate is evaluated under all configured policies and the
+    /// objectives take the worst case across them — the same semantics the
+    /// method list has without its gene.
+    pub sched_gene: bool,
     /// Fraction in `(0, 1]` of each generation's fresh offspring that gets
     /// fully simulated (`--surrogate-frac`); the batch is ranked by the
     /// roofline surrogate first and the tail is skipped. `1.0` (the
@@ -326,6 +337,7 @@ impl SearchConfig {
             strategy,
             constraints: Constraints::none(),
             method_gene: false,
+            sched_gene: false,
             surrogate_frac: 1.0,
         }
     }
@@ -341,8 +353,13 @@ pub struct Candidate {
     /// specific method (co-design mode); `None` when it is evaluated on
     /// every configured method (worst-case mode).
     pub method: Option<Method>,
+    /// The scheduling-policy gene: `Some(s)` when this candidate is
+    /// evaluated under one specific policy (`--scheds` co-design mode);
+    /// `None` when it is evaluated under every configured policy
+    /// (worst-case mode).
+    pub sched: Option<SchedPolicy>,
     /// Display label (`"paper (Table 2)"` or `"tiles=36 dram=SSD
-    /// method=Mozart-B"` style).
+    /// method=Mozart-B sched=heft"` style).
     pub label: String,
     /// Per-gene value indices the strategy proposed; `None` for the anchor,
     /// which is not a grid point.
@@ -467,27 +484,37 @@ pub struct SearchOutcome {
 }
 
 /// The discrete gene space of one search: one gene per hardware axis, plus
-/// a trailing method gene in co-design mode.
+/// a trailing method gene and/or scheduling-policy gene in co-design mode
+/// (axes first, then method, then sched).
 struct GenomeSpace<'a> {
     axes: &'a [Axis],
     /// `Some(methods)` when the method is a searchable gene.
     methods: Option<&'a [Method]>,
+    /// `Some(scheds)` when the scheduling policy is a searchable gene.
+    scheds: Option<&'a [SchedPolicy]>,
     /// Cardinality of each gene position.
     card: Vec<usize>,
 }
 
 impl<'a> GenomeSpace<'a> {
-    fn new(axes: &'a [Axis], methods: Option<&'a [Method]>) -> GenomeSpace<'a> {
+    fn new(
+        axes: &'a [Axis],
+        methods: Option<&'a [Method]>,
+        scheds: Option<&'a [SchedPolicy]>,
+    ) -> GenomeSpace<'a> {
         let mut card: Vec<usize> = axes.iter().map(|a| a.values.len()).collect();
         if let Some(ms) = methods {
             card.push(ms.len());
         }
-        GenomeSpace { axes, methods, card }
+        if let Some(ss) = scheds {
+            card.push(ss.len());
+        }
+        GenomeSpace { axes, methods, scheds, card }
     }
 
     /// Decode a genome into hardware overrides and (in co-design mode) the
-    /// candidate's method.
-    fn decode(&self, g: &[usize]) -> (Vec<HwOverride>, Option<Method>) {
+    /// candidate's method and scheduling policy.
+    fn decode(&self, g: &[usize]) -> (Vec<HwOverride>, Option<Method>, Option<SchedPolicy>) {
         let overrides: Vec<HwOverride> = self
             .axes
             .iter()
@@ -495,7 +522,9 @@ impl<'a> GenomeSpace<'a> {
             .map(|(a, &i)| a.values[i])
             .collect();
         let method = self.methods.map(|ms| ms[g[self.axes.len()]]);
-        (overrides, method)
+        let sched_pos = self.axes.len() + usize::from(self.methods.is_some());
+        let sched = self.scheds.map(|ss| ss[g[sched_pos]]);
+        (overrides, method, sched)
     }
 }
 
@@ -510,16 +539,28 @@ fn preferred_method(methods: &[Method]) -> Method {
     }
 }
 
+/// The anchor's scheduling policy in co-design mode: the paper's schedule
+/// is the streaming dispatcher, so that is the reference whenever it is
+/// configured; otherwise the first listed policy (the `--scheds` reference
+/// position, matching the explorer's convention).
+fn preferred_sched(scheds: &[SchedPolicy]) -> SchedPolicy {
+    if scheds.contains(&SchedPolicy::Streaming) {
+        SchedPolicy::Streaming
+    } else {
+        *scheds.first().expect("at least one scheduler configured")
+    }
+}
+
 /// Evaluate a batch of fresh candidates over the work-stealing pool and fold
 /// them into the outcome state. Cells are appended candidate-major (models
-/// outer, methods inner), so a candidate's cells are contiguous. Only
-/// feasible candidates enter the frontier archive.
+/// outer, methods next, scheds innermost), so a candidate's cells are
+/// contiguous. Only feasible candidates enter the frontier archive.
 ///
 /// A candidate whose overrides are a no-op for one model — and whose method
-/// gene matches the anchor's — would simulate a cell bit-identical to the
-/// anchor's (identical `ExperimentConfig`), so that cell reuses candidate
-/// 0's result instead of re-running the discrete-event simulation — the
-/// search-side mirror of the per-model anchor-duplicate skip in
+/// and sched genes match the anchor's — would simulate a cell bit-identical
+/// to the anchor's (identical `ExperimentConfig`), so that cell reuses
+/// candidate 0's result instead of re-running the discrete-event simulation
+/// — the search-side mirror of the per-model anchor-duplicate skip in
 /// [`explore::explore`].
 #[allow(clippy::too_many_arguments)]
 fn eval_batch(
@@ -544,14 +585,20 @@ fn eval_batch(
             None => ex.methods.clone(),
         }
     };
+    let scheds_of = |c: &Candidate| -> Vec<SchedPolicy> {
+        match c.sched {
+            Some(s) => vec![s],
+            None => ex.scheds.clone(),
+        }
+    };
     // which (candidate, model) pairs can reuse the anchor's cells: same
-    // method set as the anchor and hardware that is a no-op for that model
-    // (none while evaluating the anchor batch itself)
-    let anchor_cand_method = candidates.first().map(|c| c.method);
+    // method and sched sets as the anchor and hardware that is a no-op for
+    // that model (none while evaluating the anchor batch itself)
+    let anchor_genes = candidates.first().map(|c| (c.method, c.sched));
     let mut reuse = vec![false; batch.len() * n_models];
-    if let Some(am) = anchor_cand_method {
+    if let Some((am, asched)) = anchor_genes {
         for (off, cand) in batch.iter().enumerate() {
-            if cand.method != am {
+            if cand.method != am || cand.sched != asched {
                 continue;
             }
             for mi in 0..n_models {
@@ -560,14 +607,16 @@ fn eval_batch(
             }
         }
     }
-    let mut specs: Vec<(usize, usize, Method)> = Vec::new();
+    let mut specs: Vec<(usize, usize, Method, SchedPolicy)> = Vec::new();
     for (off, cand) in batch.iter().enumerate() {
         for mi in 0..n_models {
             if reuse[off * n_models + mi] {
                 continue;
             }
             for m in methods_of(cand) {
-                specs.push((off, mi, m));
+                for s in scheds_of(cand) {
+                    specs.push((off, mi, m, s));
+                }
             }
         }
     }
@@ -578,7 +627,7 @@ fn eval_batch(
         threads,
         session.pools(),
         || session.new_pool(),
-        |pool, &(off, mi, m)| {
+        |pool, &(off, mi, m, s)| {
             let mut ctx = session.ctx(pool);
             explore::eval_point(
                 ex,
@@ -586,6 +635,7 @@ fn eval_batch(
                 first + off,
                 ex.models[mi],
                 m,
+                s,
                 fault,
                 &mut ctx,
             )
@@ -596,19 +646,21 @@ fn eval_batch(
     for (off, cand) in batch.into_iter().enumerate() {
         let ci = first + off;
         let methods = methods_of(&cand);
-        let mut cand_pts: Vec<ExplorePoint> = Vec::with_capacity(n_models * methods.len());
+        let scheds = scheds_of(&cand);
+        let width = methods.len() * scheds.len();
+        let mut cand_pts: Vec<ExplorePoint> = Vec::with_capacity(n_models * width);
         for mi in 0..n_models {
             if reuse[off * n_models + mi] {
-                for ki in 0..methods.len() {
+                for w in 0..width {
                     // the anchor's cells sit at the head of `cells` in the
-                    // same (model-major, method-minor) order and — because
-                    // the method sets match — the same width
-                    let mut anchor_cell = cells[mi * methods.len() + ki].clone();
+                    // same (model-major, method-then-sched-minor) order and
+                    // — because the gene sets match — the same width
+                    let mut anchor_cell = cells[mi * width + w].clone();
                     anchor_cell.variant = ci;
                     cand_pts.push(anchor_cell);
                 }
             } else {
-                for _ in 0..methods.len() {
+                for _ in 0..width {
                     cand_pts.push(fresh.next().expect("one simulated point per spec"));
                 }
             }
@@ -680,16 +732,17 @@ fn surrogate_score(ex: &ExploreConfig, bases: &[HwConfig], cand: &Candidate) -> 
 }
 
 /// Turn proposed genomes into fresh [`Candidate`]s: drops genomes already
-/// seen and combos that re-describe the paper anchor (same method gene, and
-/// hardware that is a no-op for every configured model — the anchor is
-/// candidate 0 already). Every inspected genome — including dropped ones —
-/// is registered in `seen`, so a re-proposal skips the rebuild and anchor
-/// check next time.
+/// seen and combos that re-describe the paper anchor (same method and sched
+/// genes, and hardware that is a no-op for every configured model — the
+/// anchor is candidate 0 already). Every inspected genome — including
+/// dropped ones — is registered in `seen`, so a re-proposal skips the
+/// rebuild and anchor check next time.
 fn fresh_candidates(
     space: &GenomeSpace,
     genomes: Vec<Vec<usize>>,
     bases: &[HwConfig],
     anchor_method: Option<Method>,
+    anchor_sched: Option<SchedPolicy>,
     seen: &mut BTreeSet<Vec<usize>>,
 ) -> Vec<Candidate> {
     let mut out: Vec<Candidate> = Vec::new();
@@ -698,8 +751,9 @@ fn fresh_candidates(
             continue;
         }
         seen.insert(g.clone());
-        let (overrides, method) = space.decode(&g);
+        let (overrides, method, sched) = space.decode(&g);
         if method == anchor_method
+            && sched == anchor_sched
             && bases.iter().all(|b| explore::is_anchor_combo(&overrides, b))
         {
             continue;
@@ -709,15 +763,22 @@ fn fresh_candidates(
             .map(|o| o.label())
             .collect::<Vec<_>>()
             .join(" ");
-        if let Some(m) = method {
+        let push_part = |part: String, label: &mut String| {
             if !label.is_empty() {
                 label.push(' ');
             }
-            label.push_str(&format!("method={}", m.name()));
+            label.push_str(&part);
+        };
+        if let Some(m) = method {
+            push_part(format!("method={}", m.name()), &mut label);
+        }
+        if let Some(s) = sched {
+            push_part(format!("sched={}", s.name()), &mut label);
         }
         out.push(Candidate {
             overrides,
             method,
+            sched,
             label,
             genome: Some(g),
         });
@@ -836,6 +897,11 @@ pub fn search_with(
         } else {
             None
         },
+        if cfg.sched_gene {
+            Some(ex.scheds.as_slice())
+        } else {
+            None
+        },
     );
     let bases: Vec<HwConfig> = ex
         .models
@@ -844,6 +910,11 @@ pub fn search_with(
         .collect();
     let anchor_method = if cfg.method_gene {
         Some(preferred_method(&ex.methods))
+    } else {
+        None
+    };
+    let anchor_sched = if cfg.sched_gene {
+        Some(preferred_sched(&ex.scheds))
     } else {
         None
     };
@@ -866,9 +937,16 @@ pub fn search_with(
         vec![Candidate {
             overrides: Vec::new(),
             method: anchor_method,
-            label: match anchor_method {
-                None => "paper (Table 2)".to_string(),
-                Some(m) => format!("paper (Table 2) method={}", m.name()),
+            sched: anchor_sched,
+            label: {
+                let mut l = "paper (Table 2)".to_string();
+                if let Some(m) = anchor_method {
+                    l.push_str(&format!(" method={}", m.name()));
+                }
+                if let Some(s) = anchor_sched {
+                    l.push_str(&format!(" sched={}", s.name()));
+                }
+                l
             },
             genome: None,
         }],
@@ -891,7 +969,8 @@ pub fn search_with(
                               archive: &mut pareto::Frontier,
                               seen: &mut BTreeSet<Vec<usize>>,
                               convergence: &mut Vec<GenStat>| {
-        let mut batch = fresh_candidates(&space, genomes, &bases, anchor_method, seen);
+        let mut batch =
+            fresh_candidates(&space, genomes, &bases, anchor_method, anchor_sched, seen);
         // surrogate preselection: rank the fresh offspring by the roofline
         // estimate and simulate only the most promising fraction; the rest
         // give their genomes back to the proposal pool
@@ -959,6 +1038,17 @@ pub fn search_with(
                     for ki in 0..ex.methods.len() {
                         let mut w = g.clone();
                         w.push(ki);
+                        genomes.push(w);
+                    }
+                }
+            }
+            if cfg.sched_gene {
+                // ... and with every configured scheduling policy
+                let prev = std::mem::take(&mut genomes);
+                for g in &prev {
+                    for si in 0..ex.scheds.len() {
+                        let mut w = g.clone();
+                        w.push(si);
                         genomes.push(w);
                     }
                 }
@@ -1109,6 +1199,16 @@ impl SearchOutcome {
                 ex.methods
                     .iter()
                     .map(|m| m.name().to_string())
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            ]);
+        }
+        if self.cfg.sched_gene {
+            t.row(&[
+                "sched".to_string(),
+                ex.scheds
+                    .iter()
+                    .map(|s| s.name().to_string())
                     .collect::<Vec<_>>()
                     .join(", "),
             ]);
@@ -1280,6 +1380,13 @@ impl SearchOutcome {
                             },
                         ),
                         (
+                            "sched",
+                            match c.sched {
+                                Some(s) => Json::str(s.name()),
+                                None => Json::Null,
+                            },
+                        ),
+                        (
                             "overrides",
                             Json::Obj(
                                 c.overrides
@@ -1302,6 +1409,7 @@ impl SearchOutcome {
                         ("candidate", Json::int(p.variant)),
                         ("model", Json::str(p.model.name())),
                         ("method", Json::str(p.method.name())),
+                        ("sched", Json::str(p.sched.name())),
                         ("latency_s", Json::num(p.latency_s)),
                         ("energy_j_per_step", Json::num(p.energy_j)),
                         ("area_mm2", Json::num(p.area_mm2)),
@@ -1489,6 +1597,11 @@ impl SearchOutcome {
             ),
             ("method_gene", Json::Bool(self.cfg.method_gene)),
             (
+                "scheds",
+                Json::Arr(ex.scheds.iter().map(|s| Json::str(s.name())).collect()),
+            ),
+            ("sched_gene", Json::Bool(self.cfg.sched_gene)),
+            (
                 "objectives",
                 Json::Arr(vec![
                     Json::str("latency_s"),
@@ -1521,7 +1634,7 @@ mod tests {
     #[test]
     fn mutation_always_moves_when_possible() {
         let axes = axes_2x2();
-        let space = GenomeSpace::new(&axes, None);
+        let space = GenomeSpace::new(&axes, None, None);
         let mut rng = Rng::new(3);
         for _ in 0..200 {
             let g = random_genome(&space.card, &mut rng);
@@ -1568,7 +1681,7 @@ mod tests {
     #[test]
     fn fresh_candidates_dedup_and_skip_anchor() {
         let axes = parse_axes("tiles=56:64").expect("axes parse");
-        let space = GenomeSpace::new(&axes, None);
+        let space = GenomeSpace::new(&axes, None, None);
         // OlmoE's paper platform has 56 tiles -> genome [0] is the anchor
         let bases = vec![HwConfig::paper_for_model(ModelId::OlmoE_1B_7B, DramKind::Hbm2)];
         let mut seen = BTreeSet::new();
@@ -1577,16 +1690,18 @@ mod tests {
             vec![vec![0], vec![1], vec![1], vec![0]],
             &bases,
             None,
+            None,
             &mut seen,
         );
         assert_eq!(got.len(), 1, "anchor-equal and duplicate genomes dropped");
         assert_eq!(got[0].label, "tiles=64");
         assert_eq!(got[0].method, None);
+        assert_eq!(got[0].sched, None);
         // dropped genomes are registered too, so re-proposals skip early
         assert!(seen.contains(&vec![0]));
         assert!(seen.contains(&vec![1]));
         let again =
-            fresh_candidates(&space, vec![vec![1], vec![0]], &bases, None, &mut seen);
+            fresh_candidates(&space, vec![vec![1], vec![0]], &bases, None, None, &mut seen);
         assert!(again.is_empty());
     }
 
@@ -1594,11 +1709,12 @@ mod tests {
     fn method_gene_widens_the_genome_and_anchor_skip() {
         let axes = parse_axes("tiles=56:64").expect("axes parse");
         let methods = [Method::Baseline, Method::MozartC];
-        let space = GenomeSpace::new(&axes, Some(&methods));
+        let space = GenomeSpace::new(&axes, Some(&methods), None);
         assert_eq!(space.card, vec![2, 2]);
-        let (ov, m) = space.decode(&[1, 0]);
+        let (ov, m, s) = space.decode(&[1, 0]);
         assert_eq!(ov, vec![HwOverride::MoeTiles(64)]);
         assert_eq!(m, Some(Method::Baseline));
+        assert_eq!(s, None);
 
         let bases = vec![HwConfig::paper_for_model(ModelId::OlmoE_1B_7B, DramKind::Hbm2)];
         let mut seen = BTreeSet::new();
@@ -1609,6 +1725,7 @@ mod tests {
             vec![vec![0, 1], vec![0, 0], vec![1, 1]],
             &bases,
             Some(Method::MozartC),
+            None,
             &mut seen,
         );
         assert_eq!(got.len(), 2);
@@ -1617,12 +1734,60 @@ mod tests {
         assert_eq!(got[1].label, "tiles=64 method=Mozart-C");
     }
 
+    #[test]
+    fn sched_gene_trails_the_method_gene() {
+        let axes = parse_axes("tiles=56:64").expect("axes parse");
+        let methods = [Method::Baseline, Method::MozartC];
+        let scheds = [SchedPolicy::Streaming, SchedPolicy::Heft];
+        let space = GenomeSpace::new(&axes, Some(&methods), Some(&scheds));
+        assert_eq!(space.card, vec![2, 2, 2]);
+        let (ov, m, s) = space.decode(&[1, 0, 1]);
+        assert_eq!(ov, vec![HwOverride::MoeTiles(64)]);
+        assert_eq!(m, Some(Method::Baseline));
+        assert_eq!(s, Some(SchedPolicy::Heft));
+
+        // without the method gene the sched gene sits right after the axes
+        let space = GenomeSpace::new(&axes, None, Some(&scheds));
+        assert_eq!(space.card, vec![2, 2]);
+        let (_, m, s) = space.decode(&[0, 1]);
+        assert_eq!(m, None);
+        assert_eq!(s, Some(SchedPolicy::Heft));
+
+        let bases = vec![HwConfig::paper_for_model(ModelId::OlmoE_1B_7B, DramKind::Hbm2)];
+        let mut seen = BTreeSet::new();
+        let got = fresh_candidates(
+            &space,
+            // anchor hw + anchor sched (skipped), anchor hw + other sched
+            // (kept), other hw + anchor sched (kept)
+            vec![vec![0, 0], vec![0, 1], vec![1, 0]],
+            &bases,
+            None,
+            Some(SchedPolicy::Streaming),
+            &mut seen,
+        );
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].label, "tiles=56 sched=heft");
+        assert_eq!(got[0].sched, Some(SchedPolicy::Heft));
+        assert_eq!(got[1].label, "tiles=64 sched=streaming");
+        assert_eq!(got[1].sched, Some(SchedPolicy::Streaming));
+    }
+
+    #[test]
+    fn preferred_sched_is_streaming_when_available() {
+        assert_eq!(preferred_sched(&SchedPolicy::ALL), SchedPolicy::Streaming);
+        assert_eq!(
+            preferred_sched(&[SchedPolicy::Heft, SchedPolicy::List]),
+            SchedPolicy::Heft
+        );
+    }
+
     fn tiny_search(axes: &str, strategy: SearchStrategy) -> SearchConfig {
         let explore = ExploreConfig {
             axes: parse_axes(axes).expect("axes parse"),
             budget: 0,
             models: vec![ModelId::OlmoE_1B_7B],
             methods: vec![Method::MozartC],
+            scheds: vec![SchedPolicy::Streaming],
             seq_len: 64,
             dram: DramKind::Hbm2,
             iters: 1,

@@ -17,7 +17,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::config::{
-    DramKind, ExperimentConfig, Method, ModelConfig, ModelId,
+    DramKind, ExperimentConfig, Method, ModelConfig, ModelId, SchedPolicy,
 };
 use crate::coordinator::{run_experiment, ExperimentResult};
 
@@ -44,7 +44,8 @@ pub struct CellResult {
 }
 
 /// Build the `ExperimentConfig` for a cell with the paper's workload
-/// defaults and this run's iteration budget.
+/// defaults and this run's iteration budget (streaming scheduler — the
+/// paper's schedule; see [`cell_config_sched`] to override).
 pub fn cell_config(cell: Cell, iters: usize, seed: u64) -> ExperimentConfig {
     let model = ModelConfig::preset(cell.model);
     let mut cfg = ExperimentConfig::paper_default(model, cell.method.config());
@@ -52,6 +53,20 @@ pub fn cell_config(cell: Cell, iters: usize, seed: u64) -> ExperimentConfig {
     cfg.seq_len = cell.seq_len;
     cfg.iters = iters;
     cfg.seed = seed;
+    cfg
+}
+
+/// [`cell_config`] with an explicit scheduling policy (`--sched`). With
+/// [`SchedPolicy::Streaming`] this is exactly `cell_config` — the default
+/// sweep path stays bit-identical.
+pub fn cell_config_sched(
+    cell: Cell,
+    iters: usize,
+    seed: u64,
+    sched: SchedPolicy,
+) -> ExperimentConfig {
+    let mut cfg = cell_config(cell, iters, seed);
+    cfg.sched = sched;
     cfg
 }
 
@@ -106,6 +121,25 @@ pub fn run_cells_with(
     parallel_map(cells, threads, |&cell| CellResult {
         cell,
         result: run_experiment(&cell_config(cell, iters, seed)),
+    })
+}
+
+/// [`run_cells_with`] under an explicit scheduling policy: every cell of
+/// the grid simulates with `sched` instead of the streaming default. Used
+/// by `--sched` on the report grids and by `bench --grid sched`'s
+/// per-policy throughput rows. Bit-identical to [`run_cells_with`] when
+/// `sched` is [`SchedPolicy::Streaming`].
+pub fn run_cells_sched(
+    cells: &[Cell],
+    iters: usize,
+    seed: u64,
+    sched: SchedPolicy,
+    opts: SweepOptions,
+) -> Vec<CellResult> {
+    let threads = opts.effective_threads(cells.len());
+    parallel_map(cells, threads, |&cell| CellResult {
+        cell,
+        result: run_experiment(&cell_config_sched(cell, iters, seed, sched)),
     })
 }
 

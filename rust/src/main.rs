@@ -6,13 +6,16 @@
 
 use anyhow::{bail, Context, Result};
 use mozart::comm::FaultScenario;
-use mozart::config::{DramKind, ExperimentConfig, HwOverride, Method, ModelConfig, ModelId};
+use mozart::config::{
+    DramKind, ExperimentConfig, HwOverride, Method, ModelConfig, ModelId, SchedPolicy,
+};
 use mozart::coordinator::cache::{EvalOptions, EvalSession};
 use mozart::coordinator::degrade::{self, DegradeConfig};
 use mozart::coordinator::explore::{self, ExploreConfig};
 use mozart::coordinator::search::{self, Constraints, MinResilience, SearchConfig, SearchStrategy};
 use mozart::coordinator::sweep::{
-    self, cell_config, parallel_map_with, run_cells_seq, run_cells_with, Cell, SweepOptions,
+    self, cell_config, cell_config_sched, parallel_map_with, run_cells_seq, run_cells_sched,
+    run_cells_with, Cell, SweepOptions,
 };
 use mozart::report::{self, ReportOpts};
 use mozart::testkit::bench;
@@ -39,6 +42,7 @@ COMMANDS:
                   fig14_16 q1 q2 q3 all   [--iters N] [--seed N]
   simulate        one experiment cell: --model qwen3|olmoe|deepseek|tiny
                   --method baseline|a|b|c [--seq N] [--dram hbm2|ssd]
+                  [--sched streaming|list|heft|greedy]
                   [--iters N] [--seed N] [--config file]
   layout          expert clustering + allocation: --model ... [--seed N]
   bench           time the sweep + explore + search grids (sequential vs
@@ -46,8 +50,11 @@ COMMANDS:
                   grid also times a duplicate-heavy evaluation batch through
                   every (memoization x delta-re-timing) mode and reports
                   evaluations/second plus the speedup over the no-reuse
-                  baseline:
-                  [--grid table3|appendix|explore|search|degrade|all] [--iters N]
+                  baseline. The sched grid times the Table 3 sweep under
+                  every scheduling policy (per-policy cells/second) and
+                  checks streaming reproduces the default path bit for bit:
+                  [--grid table3|appendix|explore|search|degrade|sched|all]
+                  [--iters N]
                   [--seed N] [--threads N] [--reps N] [--out BENCH_sweep.json]
   explore         design-space exploration: enumerate or search a hardware
                   axis grid, run every (variant x model x method) cell,
@@ -64,7 +71,13 @@ COMMANDS:
                   --methods (requires --strategy) makes the Mozart ablation
                   a searchable gene (each candidate picks one method), so
                   the frontier answers which ablation to deploy on which
-                  platform:
+                  platform.
+                  --sched pins one DAG scheduling policy for every cell;
+                  --scheds evaluates several. Without --strategy the grid
+                  explorer runs every listed policy per variant and reports
+                  a per-platform schedule frontier (which policy wins on
+                  which hardware); with --strategy the policy becomes a
+                  searchable gene, one per candidate, alongside --methods.
                   --min-resilience FRAC:SCENARIO additionally requires each
                   candidate to retain at least FRAC of its healthy
                   throughput under the injected fault SCENARIO (same
@@ -91,7 +104,10 @@ COMMANDS:
                   [--no-eval-cache] [--no-delta-retime] [--cache-file FILE]
                   [--models qwen3|olmoe|deepseek|tiny|all] [--model ...]
                   [--method baseline|a|b|c|all]
-                  [--methods baseline,a,b,c|all] [--seq N] [--dram hbm2|ssd]
+                  [--methods baseline,a,b,c|all]
+                  [--sched streaming|list|heft|greedy]
+                  [--scheds streaming,list,heft,greedy|all]
+                  [--seq N] [--dram hbm2|ssd]
                   [--iters N] [--seed N] [--threads N]
                   [--out EXPLORE_design_space.json]
   degrade         fault-injection severity sweep: for each (model x method)
@@ -108,6 +124,7 @@ COMMANDS:
                   [--no-eval-cache] [--no-delta-retime] [--cache-file FILE]
                   [--models qwen3|olmoe|deepseek|tiny|all] [--model ...]
                   [--method baseline|a|b|c|all] [--seq N] [--dram hbm2|ssd]
+                  [--sched streaming|list|heft|greedy]
                   [--iters N] [--seed N] [--threads N]
                   [--out DEGRADE_curves.json]
   train           real end-to-end training of the tiny MoE via PJRT:
@@ -192,6 +209,13 @@ fn parse_dram(args: &Args) -> Result<DramKind> {
         .context("unknown --dram (hbm2|ssd)")
 }
 
+/// Shared `--sched` option parsing — the DAG dispatch policy the simulator
+/// runs under. Streaming is the paper's schedule and the engine default.
+fn parse_sched(args: &Args) -> Result<SchedPolicy> {
+    SchedPolicy::from_name(args.get_or("sched", "streaming"))
+        .context("unknown --sched (streaming|list|heft|greedy)")
+}
+
 /// Shared evaluation-reuse options (`explore` and `degrade`). Both reuse
 /// layers default ON because they are bit-transparent; the `--no-*` switches
 /// exist for A/B timing and for falsifying that claim.
@@ -221,7 +245,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let cell = parse_cell(args)?;
     let iters = args.get_parse("iters", 4)?;
     let seed = args.get_parse("seed", 7)?;
-    let mut cfg: ExperimentConfig = cell_config(cell, iters, seed);
+    let sched = parse_sched(args)?;
+    let mut cfg: ExperimentConfig = cell_config_sched(cell, iters, seed, sched);
     if let Some(path) = args.get("config") {
         let kv = mozart::config::parse::KvConfig::load(path)?;
         kv.apply_knobs(&mut cfg.hw.knobs)?;
@@ -231,11 +256,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
     let r = mozart::coordinator::run_experiment(&cfg);
     println!(
-        "model={} method={} seq={} dram={} iters={}",
+        "model={} method={} seq={} dram={} sched={} iters={}",
         cell.model.name(),
         cell.method.name(),
         cell.seq_len,
         cell.dram.name(),
+        sched.name(),
         iters
     );
     println!(
@@ -355,6 +381,24 @@ fn cmd_explore(args: &Args) -> Result<()> {
             false,
         ),
     };
+    // `--scheds` (plural) spans several dispatch policies: without
+    // --strategy the grid explorer evaluates every listed policy per variant
+    // and reports the schedule frontier; with --strategy the policy becomes
+    // a searchable gene (each candidate picks one). `--sched` pins a single
+    // policy either way.
+    let (scheds, sched_gene): (Vec<SchedPolicy>, bool) = match args.get("scheds") {
+        Some(spec) => {
+            if args.get("sched").is_some() {
+                bail!("--scheds and --sched conflict; pass exactly one");
+            }
+            (
+                SchedPolicy::parse_list(spec)
+                    .map_err(|e| anyhow::anyhow!("bad --scheds: {e}"))?,
+                args.get("strategy").is_some(),
+            )
+        }
+        None => (vec![parse_sched(args)?], false),
+    };
     // hard design-envelope caps (constrained-NSGA-II ranking); the flags are
     // fetched with literal `args.get("...")` calls so the HELP source-scan
     // test keeps covering them
@@ -424,6 +468,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
         budget,
         models,
         methods,
+        scheds,
         seq_len: args.get_parse("seq", 256)?,
         dram,
         iters: args.get_parse("iters", 2)?,
@@ -446,6 +491,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
                 strategy,
                 constraints,
                 method_gene,
+                sched_gene,
                 surrogate_frac,
             };
             let outcome = search::search_with(&scfg, |s| println!("{}", s.render()));
@@ -516,6 +562,7 @@ fn cmd_degrade(args: &Args) -> Result<()> {
         seed,
         threads: args.get_parse("threads", 0)?,
         budget: args.get_parse("budget", 0)?,
+        sched: parse_sched(args)?,
         eval: parse_eval(args),
     };
     let outcome = degrade::run(&cfg);
@@ -545,21 +592,26 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let mut bench_explore = false;
     let mut bench_search = false;
     let mut bench_degrade = false;
+    let mut bench_sched = false;
     match grid.as_str() {
         "table3" => grids.push(("table3", sweep::table3_cells())),
         "appendix" => grids.push(("appendix_seq128", sweep::appendix_cells(128))),
         "explore" => bench_explore = true,
         "search" => bench_search = true,
         "degrade" => bench_degrade = true,
+        "sched" => bench_sched = true,
         "all" => {
             grids.push(("table3", sweep::table3_cells()));
             grids.push(("appendix_seq128", sweep::appendix_cells(128)));
             bench_explore = true;
             bench_search = true;
             bench_degrade = true;
+            bench_sched = true;
         }
         other => {
-            bail!("unknown --grid {other} (table3|appendix|explore|search|degrade|all)")
+            bail!(
+                "unknown --grid {other} (table3|appendix|explore|search|degrade|sched|all)"
+            )
         }
     }
 
@@ -835,6 +887,49 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
     }
 
+    if bench_sched {
+        // per-policy scheduler throughput over the Table 3 grid. Streaming
+        // IS the engine's default dispatch order, so its run must reproduce
+        // the plain sweep bit for bit; the other policies only have to pass
+        // the schedule-validity oracle (asserted inside the engine in debug
+        // builds) and are timed for the policy-overhead comparison.
+        let cells = sweep::table3_cells();
+        let n = cells.len();
+        let n_workers = opts.effective_threads(n);
+        let reference = run_cells_with(&cells, iters, seed, opts);
+        for policy in SchedPolicy::ALL {
+            let mut out = None;
+            let timing = bench(
+                &format!("sched[{}]: {n} cells", policy.name()),
+                reps,
+                || out = Some(run_cells_sched(&cells, iters, seed, policy, opts)),
+            );
+            let results = out.expect("reps >= 1 guarantees one pass");
+            let identical = policy != SchedPolicy::Streaming
+                || results.iter().zip(reference.iter()).all(|(x, y)| {
+                    x.result.latency == y.result.latency
+                        && x.result.c_t == y.result.c_t
+                        && x.result.tag_busy == y.result.tag_busy
+                });
+            println!(
+                "  -> sched[{}]: {:.2} cells/s, default-identical: {identical}\n",
+                policy.name(),
+                n as f64 / timing.mean_s
+            );
+            grid_reports.push(Json::obj([
+                ("name", Json::str(format!("sched_{}", policy.name()))),
+                ("cells", Json::int(n)),
+                ("workers", Json::int(n_workers)),
+                ("timing", timing.to_json()),
+                ("cells_per_s", Json::num(n as f64 / timing.mean_s)),
+                ("bit_identical", Json::Bool(identical)),
+            ]));
+            if !identical {
+                bail!("streaming scheduler diverged from the default sweep path");
+            }
+        }
+    }
+
     if bench_degrade {
         // degrade hot path: one cell, the default scenario set, two
         // severity steps; sequential vs parallel executor must agree bit
@@ -989,6 +1084,9 @@ mod tests {
             "--model",
             "--models",
             "--method",
+            "--methods",
+            "--sched",
+            "--scheds",
             "--threads",
             "--strategy",
             "--samples",

@@ -70,6 +70,19 @@ pub fn dominators(point: &[f64], points: &[Vec<f64>]) -> Vec<usize> {
         .collect()
 }
 
+/// Index of the smallest value under `f64::total_cmp` (first index on exact
+/// ties, so the result is deterministic even with duplicated minima), or
+/// `None` for an empty slice. Used by the explorer's schedule frontier to
+/// pick the winning policy per variant; `total_cmp` keeps NaNs from
+/// poisoning the scan (they order above every real value).
+pub fn argmin(values: &[f64]) -> Option<usize> {
+    values
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.total_cmp(b))
+        .map(|(i, _)| i)
+}
+
 /// Total order over objective vectors (lexicographic `total_cmp`), used for
 /// value-based tie-breaking so every selection routine here is a function of
 /// the objective values alone — never of input order.
@@ -408,6 +421,19 @@ fn union_area_2d(mut pts: Vec<(f64, f64)>) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn argmin_is_first_minimum_and_nan_safe() {
+        assert_eq!(argmin(&[]), None);
+        assert_eq!(argmin(&[2.0]), Some(0));
+        assert_eq!(argmin(&[3.0, 1.0, 2.0]), Some(1));
+        // exact ties break to the first index — deterministic winners
+        assert_eq!(argmin(&[1.0, 1.0, 1.0]), Some(0));
+        assert_eq!(argmin(&[2.0, 1.0, 1.0]), Some(1));
+        // total_cmp orders NaN above every real value, so a NaN entry can
+        // never win against a finite latency
+        assert_eq!(argmin(&[f64::NAN, 5.0]), Some(1));
+    }
 
     #[test]
     fn dominance_basics() {

@@ -1067,6 +1067,56 @@ mod tests {
         }
     }
 
+    /// Every dispatch policy must produce a valid schedule for a REAL step
+    /// plan, not just the synthetic fixtures in `sim::sched`: run the traced
+    /// engine under each policy and hand the trace to the schedule-validity
+    /// oracle. Streaming must reproduce the default engine path bit for bit.
+    #[test]
+    fn every_policy_schedules_a_real_step_plan_validly() {
+        use crate::config::SchedPolicy;
+        use crate::sim::SimScratch;
+        let cfg = small_cfg(Method::MozartC.config());
+        let gen = TraceGen::for_model(&cfg.model, 5);
+        let layouts = vec![
+            ExpertLayout::contiguous(cfg.model.n_experts, 16, 4);
+            cfg.model.n_moe_layers()
+        ];
+        let mut rng = Rng::new(6);
+        let w = crate::pipeline::StepWorkload::sample(
+            &cfg,
+            &gen,
+            &layouts,
+            cfg.method.efficient_a2a,
+            &mut rng,
+        );
+        let plan = build_step_plan(&StepInputs {
+            cfg: &cfg,
+            layouts: &layouts,
+            workload: &w,
+        });
+        let reference = Simulator::run(&plan);
+        let mut scratch = SimScratch::new();
+        for policy in SchedPolicy::ALL {
+            let (res, trace) =
+                Simulator::run_policy_traced(&plan, policy, cfg.seed, &mut scratch);
+            trace
+                .validate(&plan)
+                .unwrap_or_else(|e| panic!("{}: oracle rejected: {e}", policy.name()));
+            assert!(
+                res.makespan.is_finite() && res.makespan > 0.0,
+                "{}: empty schedule",
+                policy.name()
+            );
+            if policy == SchedPolicy::Streaming {
+                assert_eq!(
+                    res.makespan.to_bits(),
+                    reference.makespan.to_bits(),
+                    "streaming diverged from the default engine path"
+                );
+            }
+        }
+    }
+
     #[test]
     fn ablation_is_monotone() {
         // each added optimization must not slow the step down

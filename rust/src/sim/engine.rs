@@ -1,10 +1,19 @@
-//! Event-driven list-scheduling engine over a task-DAG plan.
+//! Event-driven scheduling engine over a task-DAG plan.
 //!
-//! Tasks become *ready* when all dependencies finish; ready tasks contend
-//! for their (sequential) resource and are served in (ready-time, priority,
-//! id) order. The engine records start/finish per task, per-tag and
-//! per-resource busy time, the makespan, and the critical path (the chain
-//! of dependency/resource waits that determined the final finish time).
+//! Tasks become *ready* when all dependencies finish; a pluggable
+//! [`Scheduler`] policy (see [`super::sched`]) picks which ready task to
+//! dispatch next, and the engine resolves its start time against the
+//! sequential resource model (start = max(ready, resource free)). The
+//! default [`SchedPolicy::Streaming`] policy serves ready tasks in
+//! (ready-time, priority, id) order — byte-for-byte the engine's
+//! historical baked-in behavior. The engine records start/finish per task,
+//! per-tag and per-resource busy time, the makespan, and the critical path
+//! (the chain of dependency/resource waits that determined the final
+//! finish time).
+//!
+//! In debug builds every run additionally records a [`ScheduleTrace`] and
+//! feeds it through the schedule-validity oracle
+//! ([`ScheduleTrace::validate`]); release builds skip both.
 //!
 //! Hot-path design (sweeps run this tens of thousands of times):
 //! - per-tag accounting is a dense [`TagBreakdown`] indexed by
@@ -12,42 +21,18 @@
 //! - float orderings use `f64::total_cmp`, so a NaN duration can never
 //!   panic mid-run (NaNs are rejected loudly by [`Plan::validate`]);
 //! - all per-run working memory (in-degrees, the CSR dependent adjacency,
-//!   ready times, the ready heap, resource state) lives in a reusable
-//!   [`SimScratch`], so repeated [`Simulator::run_with`] calls allocate
-//!   only the `start`/`finish`/`resource_busy` vectors they return.
+//!   ready times, the streaming ready heap, resource state) lives in a
+//!   reusable [`SimScratch`], so repeated [`Simulator::run_with`] calls
+//!   allocate only the `start`/`finish`/`resource_busy` vectors they
+//!   return (the streaming policy borrows the scratch's persistent heap).
 
-use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::plan::{Plan, Tag, TagBreakdown, TaskId};
-
-/// Heap entry: min-heap by (ready_time, priority, id).
-#[derive(PartialEq)]
-struct Entry {
-    ready: f64,
-    priority: i64,
-    id: TaskId,
-}
-
-impl Eq for Entry {}
-
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Entry {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // reverse for min-heap; total_cmp matches partial_cmp on the
-        // non-NaN, non-negative times the engine produces
-        other
-            .ready
-            .total_cmp(&self.ready)
-            .then(other.priority.cmp(&self.priority))
-            .then(other.id.cmp(&self.id))
-    }
-}
+use super::sched::{
+    Entry, GreedySched, HeftSched, ListSched, ReplaySched, SchedPolicy, ScheduleTrace, Scheduler,
+    StreamingSched,
+};
 
 /// What determined a task's start time (for critical-path extraction).
 #[derive(Clone, Copy, Debug)]
@@ -165,19 +150,126 @@ impl SimScratch {
 pub struct Simulator;
 
 impl Simulator {
-    /// Execute the plan, returning timing and accounting. Convenience
-    /// wrapper over [`Simulator::run_with`] with throwaway scratch.
+    /// Execute the plan under the default streaming policy, returning
+    /// timing and accounting. Convenience wrapper over
+    /// [`Simulator::run_with`] with throwaway scratch.
     pub fn run(plan: &Plan) -> SimResult {
         Simulator::run_with(plan, &mut SimScratch::new())
     }
 
-    /// Execute the plan using caller-provided scratch buffers. Results are
-    /// identical to [`Simulator::run`]; repeated calls avoid re-allocating
-    /// the engine's working memory.
+    /// Execute the plan under the default streaming policy using
+    /// caller-provided scratch buffers. Results are identical to
+    /// [`Simulator::run`]; repeated calls avoid re-allocating the engine's
+    /// working memory.
     pub fn run_with(plan: &Plan, scratch: &mut SimScratch) -> SimResult {
+        Simulator::run_policy(plan, SchedPolicy::Streaming, 0, scratch)
+    }
+
+    /// Execute the plan under `policy` with tie-break seed `seed` (ignored
+    /// by `streaming` and `list`; see [`super::sched`] for the documented
+    /// tie orders). `SchedPolicy::Streaming` is bit-identical to
+    /// [`Simulator::run_with`]. In debug builds the run is traced and the
+    /// schedule-validity oracle panics on any violated invariant.
+    pub fn run_policy(
+        plan: &Plan,
+        policy: SchedPolicy,
+        seed: u64,
+        scratch: &mut SimScratch,
+    ) -> SimResult {
+        #[cfg(debug_assertions)]
+        {
+            let (res, trace) = Simulator::run_policy_traced(plan, policy, seed, scratch);
+            if let Err(e) = trace.validate(plan) {
+                panic!(
+                    "schedule-validity oracle rejected a {} schedule: {e}",
+                    policy.name()
+                );
+            }
+            res
+        }
+        #[cfg(not(debug_assertions))]
+        Simulator::dispatch(plan, policy, seed, scratch, None)
+    }
+
+    /// Execute the plan under `policy` and return the explicit
+    /// [`ScheduleTrace`] alongside the result (always recorded, in every
+    /// build). The trace can be validated with [`ScheduleTrace::validate`]
+    /// and replayed with [`Simulator::replay`].
+    pub fn run_policy_traced(
+        plan: &Plan,
+        policy: SchedPolicy,
+        seed: u64,
+        scratch: &mut SimScratch,
+    ) -> (SimResult, ScheduleTrace) {
+        let mut trace = ScheduleTrace::default();
+        let res = Simulator::dispatch(plan, policy, seed, scratch, Some(&mut trace));
+        (res, trace)
+    }
+
+    /// Re-execute a recorded trace's dispatch order through the engine.
+    /// For any trace produced by [`Simulator::run_policy_traced`] on the
+    /// same plan, the replayed result is bit-identical to the original run
+    /// (the dispatch order fully determines the schedule).
+    pub fn replay(plan: &Plan, trace: &ScheduleTrace, scratch: &mut SimScratch) -> SimResult {
+        let mut sched = ReplaySched::new(&trace.order);
+        Simulator::run_core(plan, &mut sched, scratch, None)
+    }
+
+    /// Execute the plan under a caller-supplied [`Scheduler`]
+    /// implementation (the extension point for scheduling research beyond
+    /// the built-in [`SchedPolicy`] set).
+    pub fn run_sched<S: Scheduler + ?Sized>(
+        plan: &Plan,
+        sched: &mut S,
+        scratch: &mut SimScratch,
+    ) -> SimResult {
+        Simulator::run_core(plan, sched, scratch, None)
+    }
+
+    /// Policy dispatch: monomorphize the core per built-in policy. The
+    /// streaming policy borrows the scratch's persistent heap so the hot
+    /// default path stays allocation-free.
+    fn dispatch(
+        plan: &Plan,
+        policy: SchedPolicy,
+        seed: u64,
+        scratch: &mut SimScratch,
+        trace: Option<&mut ScheduleTrace>,
+    ) -> SimResult {
+        match policy {
+            SchedPolicy::Streaming => {
+                let mut s = StreamingSched::with_heap(std::mem::take(&mut scratch.heap));
+                let res = Simulator::run_core(plan, &mut s, scratch, trace);
+                scratch.heap = s.into_heap();
+                res
+            }
+            SchedPolicy::List => {
+                Simulator::run_core(plan, &mut ListSched::new(), scratch, trace)
+            }
+            SchedPolicy::Heft => {
+                Simulator::run_core(plan, &mut HeftSched::new(seed), scratch, trace)
+            }
+            SchedPolicy::Greedy => {
+                Simulator::run_core(plan, &mut GreedySched::new(seed), scratch, trace)
+            }
+        }
+    }
+
+    /// The engine core, generic over the scheduling policy. The dispatch
+    /// loop is byte-for-byte the historical engine with the heap pop/push
+    /// replaced by `sched.next_task` / `sched.task_ready` callbacks.
+    fn run_core<S: Scheduler + ?Sized>(
+        plan: &Plan,
+        sched: &mut S,
+        scratch: &mut SimScratch,
+        mut trace: Option<&mut ScheduleTrace>,
+    ) -> SimResult {
         let n = plan.tasks.len();
         let nres = plan.resource_names.len();
         scratch.reset(n, nres);
+        if let Some(tr) = trace.as_deref_mut() {
+            tr.reset(n);
+        }
 
         // reverse dependency graph as CSR: count, prefix-sum, fill. The
         // `indeg` buffer doubles as the dependent counter during the first
@@ -204,13 +296,10 @@ impl Simulator {
             scratch.indeg[i] = t.deps.len();
         }
 
+        sched.prepare(plan);
         for (i, t) in plan.tasks.iter().enumerate() {
             if t.deps.is_empty() {
-                scratch.heap.push(Entry {
-                    ready: 0.0,
-                    priority: t.priority,
-                    id: i,
-                });
+                sched.task_ready(i, 0.0, plan);
             }
         }
 
@@ -219,26 +308,30 @@ impl Simulator {
         let mut finish = vec![0.0f64; n];
         let mut done = 0usize;
 
-        while let Some(e) = scratch.heap.pop() {
-            let i = e.id;
+        while let Some(i) = sched.next_task(plan, &scratch.res_free) {
+            debug_assert_eq!(
+                scratch.indeg[i], 0,
+                "scheduler dispatched task {i} before its dependencies finished"
+            );
             let t = &plan.tasks[i];
+            let ready = scratch.ready_time[i];
             let (s, c) = match t.resource {
                 Some(r) => {
-                    if scratch.res_free[r] > e.ready {
+                    if scratch.res_free[r] > ready {
                         (
                             scratch.res_free[r],
                             StartCause::Resource(scratch.res_last[r].unwrap()),
                         )
                     } else {
                         match scratch.last_dep[i] {
-                            Some(d) => (e.ready, StartCause::Dep(d)),
-                            None => (e.ready, StartCause::Source),
+                            Some(d) => (ready, StartCause::Dep(d)),
+                            None => (ready, StartCause::Source),
                         }
                     }
                 }
                 None => match scratch.last_dep[i] {
-                    Some(d) => (e.ready, StartCause::Dep(d)),
-                    None => (e.ready, StartCause::Source),
+                    Some(d) => (ready, StartCause::Dep(d)),
+                    None => (ready, StartCause::Source),
                 },
             };
             let f = s + t.duration;
@@ -250,6 +343,10 @@ impl Simulator {
                 scratch.res_last[r] = Some(i);
                 res_busy[r] += t.duration;
             }
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.record(i, t.resource, s, f);
+            }
+            sched.task_complete(i, f, plan);
             done += 1;
             for k in scratch.dep_heads[i]..scratch.dep_heads[i + 1] {
                 let j = scratch.dep_edges[k];
@@ -259,17 +356,16 @@ impl Simulator {
                 }
                 scratch.indeg[j] -= 1;
                 if scratch.indeg[j] == 0 {
-                    scratch.heap.push(Entry {
-                        ready: scratch.ready_time[j],
-                        priority: plan.tasks[j].priority,
-                        id: j,
-                    });
+                    sched.task_ready(j, scratch.ready_time[j], plan);
                 }
             }
         }
         assert_eq!(done, n, "plan contains a cycle (validate() first)");
 
         let makespan = finish.iter().cloned().fold(0.0f64, f64::max);
+        if let Some(tr) = trace.as_deref_mut() {
+            tr.makespan = makespan;
+        }
 
         // per-tag accounting: O(1) dense-array adds
         let mut tag_busy = TagBreakdown::zero();

@@ -9,9 +9,17 @@
 //! cycle-accurate simulator reports at the micro-batch x layer x stream-
 //! chunk level (its per-cycle detail is only used to *validate* those
 //! aggregates against Verilog, which we cannot ship).
+//!
+//! *Which* ready task runs next is a pluggable [`Scheduler`] policy
+//! ([`sched`]): the paper's streaming order (default), FIFO list, HEFT
+//! upward-rank, or work-conserving greedy — all bit-reproducible, all
+//! checked by the schedule-validity oracle ([`ScheduleTrace::validate`])
+//! in debug builds and tests.
 
 pub mod engine;
 pub mod plan;
+pub mod sched;
 
 pub use engine::{SimResult, SimScratch, Simulator};
 pub use plan::{Plan, ResourceId, Tag, TagBreakdown, TaskId, TaskSpec};
+pub use sched::{SchedPolicy, ScheduleTrace, Scheduler, TaskSlot};

@@ -157,7 +157,12 @@ pub struct TaskSpec {
 pub struct Plan {
     /// Display names of the sequential resources, indexed by `ResourceId`.
     pub resource_names: Vec<String>,
-    /// The task DAG, indexed by `TaskId`; deps always point backwards.
+    /// The task DAG, indexed by `TaskId`. Deps *usually* point backwards
+    /// (tasks are appended in dependency order), but forward edges are
+    /// legal and do occur — the pipeline builder patches barrier gates
+    /// with higher ids into earlier tasks' deps in baseline mode — so
+    /// consumers must never assume `dep < id` (acyclicity is what
+    /// [`Plan::validate`] actually checks).
     pub tasks: Vec<TaskSpec>,
 }
 

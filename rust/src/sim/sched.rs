@@ -1,0 +1,918 @@
+//! Pluggable DAG scheduling policies and the schedule-validity oracle.
+//!
+//! The engine in [`super::engine`] resolves *when* a dispatched task runs
+//! (start = max(ready time, resource free time)); a [`Scheduler`] decides
+//! *which* ready task is dispatched next. Extracting that decision into a
+//! trait (in the spirit of dslab-dag's callback-driven design: the engine
+//! calls back on task-ready / task-complete and asks for the next task over
+//! the shared resource model) turns scheduling into an ablatable policy
+//! dimension — "good allocation" and "good scheduling" can finally be
+//! separated, which is the axis the paper's fine-grained streaming schedule
+//! argues matters.
+//!
+//! Four interchangeable, bit-reproducible policies ship:
+//!
+//! - [`SchedPolicy::Streaming`] — the paper's schedule and the default:
+//!   ready tasks are served in (ready-time, priority, id) order, where the
+//!   plan builder's priorities stream hot expert clusters first. This is
+//!   byte-for-byte the engine's historical baked-in behavior.
+//! - [`SchedPolicy::List`] — plain FIFO list scheduling: tasks dispatch in
+//!   the order they became ready (sources in id order, then dependents in
+//!   completion-propagation order). No priorities, no look-ahead.
+//! - [`SchedPolicy::Heft`] — HEFT-style upward-rank priority: tasks with
+//!   the longest remaining dependent chain (rank = duration + max dependent
+//!   rank) dispatch first.
+//! - [`SchedPolicy::Greedy`] — work-conserving earliest-estimated-finish:
+//!   among ready tasks, dispatch the one that would finish soonest given
+//!   the current resource free times (lazily re-sorted as resources drain).
+//!
+//! **Tie-breaking is seeded and documented** so every policy is
+//! bit-reproducible: `streaming` breaks ties by (priority, id) and ignores
+//! the seed; `list` has no ties (FIFO); `heft` and `greedy` break equal
+//! priorities by `mix64(seed ^ id * GOLDEN)` then id. The same seed always
+//! produces the same schedule, on any thread count, because scheduling runs
+//! entirely inside one engine call.
+//!
+//! Every engine run in a debug build records a [`ScheduleTrace`] and feeds
+//! it to the **schedule-validity oracle** [`ScheduleTrace::validate`]: no
+//! task starts before its dependencies finish, no two tasks overlap on a
+//! sequential resource, every task is placed exactly once, starts are tight
+//! (work-conserving given the dispatch order), and the recorded makespan
+//! equals the critical path through the trace-induced graph. Release
+//! builds skip the oracle; tests run it against every policy on every
+//! Table 2/3 cell (`tests/integration_sched.rs`).
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::plan::{Plan, ResourceId, TaskId};
+
+/// Which scheduling policy the engine dispatches ready tasks with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SchedPolicy {
+    /// The paper's streaming schedule (default): (ready, priority, id)
+    /// min-order — bit-identical to the historical engine.
+    Streaming,
+    /// FIFO list scheduling in ready-event order.
+    List,
+    /// HEFT-style upward-rank priority (longest remaining chain first).
+    Heft,
+    /// Work-conserving earliest-estimated-finish.
+    Greedy,
+}
+
+impl SchedPolicy {
+    /// Every policy, in declaration order (CLI/report ordering).
+    pub const ALL: [SchedPolicy; 4] = [
+        SchedPolicy::Streaming,
+        SchedPolicy::List,
+        SchedPolicy::Heft,
+        SchedPolicy::Greedy,
+    ];
+
+    /// Stable dense index (declaration order, matching [`SchedPolicy::ALL`]).
+    pub const fn index(self) -> usize {
+        self as usize
+    }
+
+    /// CLI / report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::Streaming => "streaming",
+            SchedPolicy::List => "list",
+            SchedPolicy::Heft => "heft",
+            SchedPolicy::Greedy => "greedy",
+        }
+    }
+
+    /// Parse a single policy name (as passed to `--sched`).
+    pub fn from_name(s: &str) -> Option<SchedPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "streaming" => Some(SchedPolicy::Streaming),
+            "list" => Some(SchedPolicy::List),
+            "heft" => Some(SchedPolicy::Heft),
+            "greedy" => Some(SchedPolicy::Greedy),
+            _ => None,
+        }
+    }
+
+    /// Parse a `--scheds` list: comma-separated names or `all`, deduplicated
+    /// preserving first-occurrence order (mirrors `Method::parse_list`).
+    pub fn parse_list(s: &str) -> Result<Vec<SchedPolicy>, String> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("all") {
+            return Ok(SchedPolicy::ALL.to_vec());
+        }
+        let mut out = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let p = SchedPolicy::from_name(part)
+                .ok_or_else(|| format!("unknown scheduler `{part}` (streaming|list|heft|greedy|all)"))?;
+            if !out.contains(&p) {
+                out.push(p);
+            }
+        }
+        if out.is_empty() {
+            return Err("no schedulers given".to_string());
+        }
+        Ok(out)
+    }
+}
+
+/// SplitMix64 finalizer — the documented seeded tie-break hash. `heft` and
+/// `greedy` order equal-priority ready tasks by `tie_key(seed, id)` then
+/// `id`, so a schedule is a pure function of (plan, policy, seed).
+pub(crate) fn tie_key(seed: u64, id: TaskId) -> u64 {
+    let mut z = seed
+        ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Callback interface between the engine and a scheduling policy.
+///
+/// The engine owns the resource model and the clock: it computes start =
+/// max(ready, resource-free) for whatever task the policy picks, so any
+/// policy produces a *valid* schedule by construction (the oracle proves
+/// it). The policy only chooses the dispatch order:
+///
+/// 1. [`Scheduler::prepare`] — once per run, before any dispatch (build
+///    ranks, size buffers).
+/// 2. [`Scheduler::task_ready`] — `id` has all dependencies finished and
+///    may be dispatched from now on; `ready` is its final ready time.
+/// 3. [`Scheduler::next_task`] — pick the next ready task to dispatch,
+///    given the current per-resource free times. `None` ends the run.
+/// 4. [`Scheduler::task_complete`] — `id` was dispatched and assigned its
+///    finish time (bookkeeping hook; none of the built-ins need it).
+pub trait Scheduler {
+    /// Called once per run before any `task_ready`, with the full plan.
+    fn prepare(&mut self, _plan: &Plan) {}
+
+    /// Task `id` became ready at time `ready` (all dependencies finished).
+    fn task_ready(&mut self, id: TaskId, ready: f64, plan: &Plan);
+
+    /// Pick the next ready task to dispatch. `res_free[r]` is the time
+    /// resource `r` becomes free. Returning `None` means no ready tasks
+    /// remain (the run is complete, or the plan has a cycle — the engine
+    /// checks which).
+    fn next_task(&mut self, plan: &Plan, res_free: &[f64]) -> Option<TaskId>;
+
+    /// Task `id` was dispatched and will finish at `finish`.
+    fn task_complete(&mut self, _id: TaskId, _finish: f64, _plan: &Plan) {}
+}
+
+/// Heap entry of the streaming policy: min-heap by (ready, priority, id).
+/// Lives here (not in `engine`) so the policy and the scratch buffer share
+/// one definition.
+#[derive(PartialEq)]
+pub(crate) struct Entry {
+    pub(crate) ready: f64,
+    pub(crate) priority: i64,
+    pub(crate) id: TaskId,
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reverse for min-heap; total_cmp matches partial_cmp on the
+        // non-NaN, non-negative times the engine produces
+        other
+            .ready
+            .total_cmp(&self.ready)
+            .then(other.priority.cmp(&self.priority))
+            .then(other.id.cmp(&self.id))
+    }
+}
+
+/// The paper's streaming schedule: ready tasks served in (ready-time,
+/// priority, id) min-order. Ties break by plan priority then task id —
+/// no seed involved — so this is byte-for-byte the engine's historical
+/// behavior and the default policy.
+#[derive(Default)]
+pub struct StreamingSched {
+    heap: BinaryHeap<Entry>,
+}
+
+impl StreamingSched {
+    /// Fresh policy with an empty ready heap.
+    pub fn new() -> StreamingSched {
+        StreamingSched::default()
+    }
+
+    /// Wrap a caller-owned heap (the engine lends `SimScratch`'s persistent
+    /// heap so the hot streaming path stays allocation-free).
+    pub(crate) fn with_heap(heap: BinaryHeap<Entry>) -> StreamingSched {
+        StreamingSched { heap }
+    }
+
+    /// Hand the (now empty) heap back for reuse.
+    pub(crate) fn into_heap(self) -> BinaryHeap<Entry> {
+        self.heap
+    }
+}
+
+impl Scheduler for StreamingSched {
+    fn prepare(&mut self, _plan: &Plan) {
+        self.heap.clear();
+    }
+
+    fn task_ready(&mut self, id: TaskId, ready: f64, plan: &Plan) {
+        self.heap.push(Entry {
+            ready,
+            priority: plan.tasks[id].priority,
+            id,
+        });
+    }
+
+    fn next_task(&mut self, _plan: &Plan, _res_free: &[f64]) -> Option<TaskId> {
+        self.heap.pop().map(|e| e.id)
+    }
+}
+
+/// FIFO list scheduling: dispatch in ready-event order. Sources enqueue in
+/// id order; dependents enqueue in the engine's (deterministic) completion-
+/// propagation order. There are no ties to break.
+#[derive(Default)]
+pub struct ListSched {
+    queue: VecDeque<TaskId>,
+}
+
+impl ListSched {
+    /// Fresh policy with an empty ready queue.
+    pub fn new() -> ListSched {
+        ListSched::default()
+    }
+}
+
+impl Scheduler for ListSched {
+    fn prepare(&mut self, _plan: &Plan) {
+        self.queue.clear();
+    }
+
+    fn task_ready(&mut self, id: TaskId, _ready: f64, _plan: &Plan) {
+        self.queue.push_back(id);
+    }
+
+    fn next_task(&mut self, _plan: &Plan, _res_free: &[f64]) -> Option<TaskId> {
+        self.queue.pop_front()
+    }
+}
+
+/// Max-heap entry for [`HeftSched`]: highest rank first, then the seeded
+/// tie key ascending, then id ascending.
+#[derive(PartialEq)]
+struct HeftEntry {
+    rank: f64,
+    tie: u64,
+    id: TaskId,
+}
+
+impl Eq for HeftEntry {}
+
+impl PartialOrd for HeftEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeftEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.rank
+            .total_cmp(&other.rank)
+            .then(other.tie.cmp(&self.tie))
+            .then(other.id.cmp(&self.id))
+    }
+}
+
+/// HEFT-style upward-rank list scheduling: `rank(i) = duration(i) + max`
+/// rank over dependents (0 for sinks), computed once per run over a Kahn
+/// topological order (the plan builder patches *forward* dependency edges
+/// into baseline plans, so reverse-id iteration would be wrong). Ready
+/// tasks dispatch by descending rank; ties break by `tie_key(seed, id)`
+/// then id.
+pub struct HeftSched {
+    seed: u64,
+    rank: Vec<f64>,
+    heap: BinaryHeap<HeftEntry>,
+}
+
+impl HeftSched {
+    /// Policy with the given tie-break seed.
+    pub fn new(seed: u64) -> HeftSched {
+        HeftSched {
+            seed,
+            rank: Vec::new(),
+            heap: BinaryHeap::new(),
+        }
+    }
+}
+
+/// Upward ranks over any topological order (Kahn). Public to the crate so
+/// tests can cross-check the policy's priorities.
+pub(crate) fn upward_ranks(plan: &Plan) -> Vec<f64> {
+    let n = plan.tasks.len();
+    let mut out: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    let mut indeg = vec![0usize; n];
+    for (i, t) in plan.tasks.iter().enumerate() {
+        indeg[i] = t.deps.len();
+        for &d in &t.deps {
+            out[d].push(i);
+        }
+    }
+    let mut queue: VecDeque<TaskId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut topo: Vec<TaskId> = Vec::with_capacity(n);
+    while let Some(i) = queue.pop_front() {
+        topo.push(i);
+        for &j in &out[i] {
+            indeg[j] -= 1;
+            if indeg[j] == 0 {
+                queue.push_back(j);
+            }
+        }
+    }
+    debug_assert_eq!(topo.len(), n, "plan contains a cycle (validate() first)");
+    let mut rank = vec![0.0f64; n];
+    for &i in topo.iter().rev() {
+        let mut best = 0.0f64;
+        for &j in &out[i] {
+            if rank[j] > best {
+                best = rank[j];
+            }
+        }
+        rank[i] = best + plan.tasks[i].duration;
+    }
+    rank
+}
+
+impl Scheduler for HeftSched {
+    fn prepare(&mut self, plan: &Plan) {
+        self.rank = upward_ranks(plan);
+        self.heap.clear();
+    }
+
+    fn task_ready(&mut self, id: TaskId, _ready: f64, _plan: &Plan) {
+        self.heap.push(HeftEntry {
+            rank: self.rank[id],
+            tie: tie_key(self.seed, id),
+            id,
+        });
+    }
+
+    fn next_task(&mut self, _plan: &Plan, _res_free: &[f64]) -> Option<TaskId> {
+        self.heap.pop().map(|e| e.id)
+    }
+}
+
+/// Min-heap entry for [`GreedySched`]: earliest estimated finish first,
+/// then the seeded tie key, then id (Ord reversed for `BinaryHeap`).
+#[derive(PartialEq)]
+struct GreedyEntry {
+    est: f64,
+    tie: u64,
+    id: TaskId,
+}
+
+impl Eq for GreedyEntry {}
+
+impl PartialOrd for GreedyEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for GreedyEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .est
+            .total_cmp(&self.est)
+            .then(other.tie.cmp(&self.tie))
+            .then(other.id.cmp(&self.id))
+    }
+}
+
+/// Work-conserving earliest-estimated-finish: among ready tasks, dispatch
+/// the one with the smallest `max(ready, res_free[r]) + duration`. The
+/// heap is lazily repaired: entries are pushed with the estimate at
+/// ready-time (a lower bound, since resource free times only grow) and
+/// re-pushed with the refreshed estimate when popped stale; a popped entry
+/// whose estimate is current dispatches. Within one `next_task` call the
+/// free times are fixed, so every entry is re-pushed at most once and the
+/// loop terminates. Ties break by `tie_key(seed, id)` then id.
+pub struct GreedySched {
+    seed: u64,
+    ready: Vec<f64>,
+    heap: BinaryHeap<GreedyEntry>,
+}
+
+impl GreedySched {
+    /// Policy with the given tie-break seed.
+    pub fn new(seed: u64) -> GreedySched {
+        GreedySched {
+            seed,
+            ready: Vec::new(),
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    fn estimate(&self, id: TaskId, plan: &Plan, res_free: &[f64]) -> f64 {
+        let t = &plan.tasks[id];
+        let ready = self.ready[id];
+        let start = match t.resource {
+            Some(r) if res_free[r] > ready => res_free[r],
+            _ => ready,
+        };
+        start + t.duration
+    }
+}
+
+impl Scheduler for GreedySched {
+    fn prepare(&mut self, plan: &Plan) {
+        self.ready.clear();
+        self.ready.resize(plan.tasks.len(), 0.0);
+        self.heap.clear();
+    }
+
+    fn task_ready(&mut self, id: TaskId, ready: f64, plan: &Plan) {
+        self.ready[id] = ready;
+        self.heap.push(GreedyEntry {
+            est: ready + plan.tasks[id].duration,
+            tie: tie_key(self.seed, id),
+            id,
+        });
+    }
+
+    fn next_task(&mut self, plan: &Plan, res_free: &[f64]) -> Option<TaskId> {
+        loop {
+            let e = self.heap.pop()?;
+            let cur = self.estimate(e.id, plan, res_free);
+            if cur > e.est {
+                self.heap.push(GreedyEntry {
+                    est: cur,
+                    tie: e.tie,
+                    id: e.id,
+                });
+            } else {
+                return Some(e.id);
+            }
+        }
+    }
+}
+
+/// Replays a fixed dispatch order (the `order` of a recorded
+/// [`ScheduleTrace`]) through the engine. Used by `Simulator::replay` to
+/// prove a trace round-trips to the exact same timings.
+pub(crate) struct ReplaySched<'a> {
+    order: &'a [TaskId],
+    cursor: usize,
+}
+
+impl<'a> ReplaySched<'a> {
+    pub(crate) fn new(order: &'a [TaskId]) -> ReplaySched<'a> {
+        ReplaySched { order, cursor: 0 }
+    }
+}
+
+impl Scheduler for ReplaySched<'_> {
+    fn task_ready(&mut self, _id: TaskId, _ready: f64, _plan: &Plan) {}
+
+    fn next_task(&mut self, _plan: &Plan, _res_free: &[f64]) -> Option<TaskId> {
+        let i = *self.order.get(self.cursor)?;
+        self.cursor += 1;
+        Some(i)
+    }
+}
+
+/// Where one task sat in a schedule: its resource binding (copied from the
+/// plan and cross-checked by the oracle) and its start/finish times.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TaskSlot {
+    /// Sequential resource the task occupied (None = pure dependency node).
+    pub resource: Option<ResourceId>,
+    /// Assigned start time (seconds).
+    pub start: f64,
+    /// Assigned finish time (start + duration).
+    pub finish: f64,
+}
+
+/// Explicit record of one engine run: per-task placement slots, the
+/// dispatch order the policy chose, and the resulting makespan.
+/// [`ScheduleTrace::validate`] is the schedule-validity oracle.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScheduleTrace {
+    /// Per-task `{resource, start, finish}`, indexed by `TaskId`.
+    pub slots: Vec<TaskSlot>,
+    /// Task ids in dispatch order (the policy's decisions, verbatim).
+    pub order: Vec<TaskId>,
+    /// Recorded end-to-end schedule length.
+    pub makespan: f64,
+}
+
+impl ScheduleTrace {
+    /// Size for a plan with `n` tasks and clear any previous recording.
+    pub(crate) fn reset(&mut self, n: usize) {
+        self.slots.clear();
+        self.slots.resize(n, TaskSlot::default());
+        self.order.clear();
+        self.makespan = 0.0;
+    }
+
+    /// Record one dispatch.
+    pub(crate) fn record(&mut self, id: TaskId, resource: Option<ResourceId>, start: f64, finish: f64) {
+        self.slots[id] = TaskSlot {
+            resource,
+            start,
+            finish,
+        };
+        self.order.push(id);
+    }
+
+    /// The schedule-validity oracle. Checks, in order:
+    ///
+    /// 1. **placement** — every task of `plan` is dispatched exactly once,
+    ///    on the resource the plan binds it to;
+    /// 2. **dependency precedence** — no task starts before every
+    ///    dependency has finished;
+    /// 3. **resource exclusivity** — tasks sharing a sequential resource
+    ///    never overlap (each starts at or after the previous occupant's
+    ///    finish, in dispatch order);
+    /// 4. **tightness** — every start equals max(ready time, resource free
+    ///    time): the engine is work-conserving given the dispatch order, so
+    ///    a slack start means the trace was not produced by this engine;
+    /// 5. **makespan = critical path** — the recorded makespan equals both
+    ///    the max finish time and an independently recomputed longest path
+    ///    through the trace-induced graph (dependency edges plus
+    ///    resource-succession edges).
+    ///
+    /// All comparisons are exact (`f64` equality): the engine assigns times
+    /// by copying and single additions, so a valid trace reproduces them
+    /// bit-for-bit.
+    pub fn validate(&self, plan: &Plan) -> anyhow::Result<()> {
+        let n = plan.tasks.len();
+        let nres = plan.resource_names.len();
+        anyhow::ensure!(
+            self.slots.len() == n,
+            "trace has {} slots for a {}-task plan",
+            self.slots.len(),
+            n
+        );
+        anyhow::ensure!(
+            self.order.len() == n,
+            "trace dispatched {} of {} tasks",
+            self.order.len(),
+            n
+        );
+
+        // (1) placement: dispatch order is a permutation of the task ids
+        let mut dispatched = vec![false; n];
+        for &i in &self.order {
+            anyhow::ensure!(i < n, "trace dispatches unknown task {i}");
+            anyhow::ensure!(!dispatched[i], "task {i} dispatched twice");
+            dispatched[i] = true;
+        }
+
+        // (2)-(4): one pass in dispatch order over the resource model
+        let mut res_free = vec![0.0f64; nres];
+        let mut finished = vec![false; n];
+        for &i in &self.order {
+            let t = &plan.tasks[i];
+            let slot = &self.slots[i];
+            anyhow::ensure!(
+                slot.resource == t.resource,
+                "task {i} placed on {:?}, plan binds {:?}",
+                slot.resource,
+                t.resource
+            );
+            anyhow::ensure!(
+                slot.finish == slot.start + t.duration,
+                "task {i} duration distorted: {} -> {} vs duration {}",
+                slot.start,
+                slot.finish,
+                t.duration
+            );
+            let mut ready = 0.0f64;
+            for &d in &t.deps {
+                anyhow::ensure!(
+                    finished[d] && self.slots[d].finish <= slot.start,
+                    "dependency violation: task {i} starts at {} before dep {d} finishes at {}",
+                    slot.start,
+                    self.slots[d].finish
+                );
+                if self.slots[d].finish > ready {
+                    ready = self.slots[d].finish;
+                }
+            }
+            let expected = match t.resource {
+                Some(r) => {
+                    anyhow::ensure!(
+                        slot.start >= res_free[r],
+                        "resource overlap: task {i} starts at {} while resource {r} is busy until {}",
+                        slot.start,
+                        res_free[r]
+                    );
+                    let s = if res_free[r] > ready { res_free[r] } else { ready };
+                    res_free[r] = slot.finish;
+                    s
+                }
+                None => ready,
+            };
+            anyhow::ensure!(
+                slot.start == expected,
+                "slack start: task {i} starts at {} but was dispatchable at {}",
+                slot.start,
+                expected
+            );
+            finished[i] = true;
+        }
+
+        // (5) makespan == critical path through the trace-induced graph
+        // (dependency edges + resource-succession edges), recomputed
+        // independently of the recorded start/finish values
+        let mut cp = vec![0.0f64; n];
+        let mut res_pred: Vec<Option<TaskId>> = vec![None; nres];
+        let mut critical = 0.0f64;
+        let mut max_finish = 0.0f64;
+        for &i in &self.order {
+            let t = &plan.tasks[i];
+            let mut longest = 0.0f64;
+            for &d in &t.deps {
+                if cp[d] > longest {
+                    longest = cp[d];
+                }
+            }
+            if let Some(r) = t.resource {
+                if let Some(p) = res_pred[r] {
+                    if cp[p] > longest {
+                        longest = cp[p];
+                    }
+                }
+                res_pred[r] = Some(i);
+            }
+            cp[i] = longest + t.duration;
+            if cp[i] > critical {
+                critical = cp[i];
+            }
+            if self.slots[i].finish > max_finish {
+                max_finish = self.slots[i].finish;
+            }
+        }
+        anyhow::ensure!(
+            self.makespan == max_finish,
+            "recorded makespan {} != max finish {}",
+            self.makespan,
+            max_finish
+        );
+        anyhow::ensure!(
+            self.makespan == critical,
+            "recorded makespan {} != critical path {} through the trace",
+            self.makespan,
+            critical
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::plan::{Plan, Tag, TaskSpec};
+    use crate::sim::{SimScratch, Simulator};
+
+    fn spec(resource: Option<usize>, duration: f64, deps: &[usize], priority: i64) -> TaskSpec {
+        TaskSpec {
+            resource,
+            duration,
+            deps: deps.to_vec(),
+            priority,
+            tag: Tag::Barrier,
+            bytes: 0.0,
+            flops: 0.0,
+        }
+    }
+
+    /// The wide-DAG fixture where rank-based scheduling provably beats
+    /// FIFO: four short sources ahead (in id order) of a chain head whose
+    /// dependent chain dominates the makespan.
+    fn wide_dag() -> Plan {
+        let mut p = Plan::new();
+        let r0 = p.add_resource("sources");
+        let r1 = p.add_resource("chain");
+        for _ in 0..4 {
+            p.add_task(spec(Some(r0), 1.0, &[], 0));
+        }
+        let head = p.add_task(spec(Some(r0), 1.0, &[], 0));
+        let mut prev = head;
+        for _ in 0..10 {
+            prev = p.add_task(spec(Some(r1), 1.0, &[prev], 0));
+        }
+        p
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in SchedPolicy::ALL {
+            assert_eq!(SchedPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(SchedPolicy::from_name("nope"), None);
+        for (i, p) in SchedPolicy::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i, "ALL order diverged from index()");
+        }
+    }
+
+    #[test]
+    fn parse_list_mirrors_method_semantics() {
+        assert_eq!(SchedPolicy::parse_list("all").unwrap(), SchedPolicy::ALL.to_vec());
+        assert_eq!(SchedPolicy::parse_list("ALL").unwrap(), SchedPolicy::ALL.to_vec());
+        assert_eq!(
+            SchedPolicy::parse_list("heft,streaming,heft").unwrap(),
+            vec![SchedPolicy::Heft, SchedPolicy::Streaming],
+            "dedup preserves first-occurrence order"
+        );
+        assert_eq!(
+            SchedPolicy::parse_list(" list , greedy ").unwrap(),
+            vec![SchedPolicy::List, SchedPolicy::Greedy]
+        );
+        assert!(SchedPolicy::parse_list("quantum").unwrap_err().contains("quantum"));
+        assert!(SchedPolicy::parse_list(",,").is_err());
+    }
+
+    #[test]
+    fn tie_keys_are_seeded_and_spread() {
+        assert_eq!(tie_key(7, 3), tie_key(7, 3));
+        assert_ne!(tie_key(7, 3), tie_key(8, 3));
+        assert_ne!(tie_key(7, 3), tie_key(7, 4));
+    }
+
+    #[test]
+    fn upward_ranks_follow_longest_chain() {
+        let p = wide_dag();
+        let rank = upward_ranks(&p);
+        // chain head carries the whole chain; sinks carry their own duration
+        assert_eq!(rank[4], 11.0);
+        assert_eq!(rank[0], 1.0);
+        assert_eq!(rank[p.n_tasks() - 1], 1.0);
+        // forward deps (higher-id task depended on by a lower-id one) must
+        // not break the rank computation — mirror of the plan builder's
+        // baseline barrier gates
+        let mut fwd = Plan::new();
+        let r = fwd.add_resource("r");
+        fwd.add_task(TaskSpec {
+            resource: Some(r),
+            duration: 1.0,
+            deps: vec![1], // forward edge
+            priority: 0,
+            tag: Tag::Barrier,
+            bytes: 0.0,
+            flops: 0.0,
+        });
+        fwd.add_task(spec(Some(r), 2.0, &[], 0));
+        let fr = upward_ranks(&fwd);
+        assert_eq!(fr[1], 3.0, "rank must flow across the forward edge");
+        assert_eq!(fr[0], 1.0);
+    }
+
+    #[test]
+    fn streaming_policy_is_bit_identical_to_run_with() {
+        let p = wide_dag();
+        let a = Simulator::run(&p);
+        let b = Simulator::run_policy(&p, SchedPolicy::Streaming, 0xDEAD_BEEF, &mut SimScratch::new());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.start, b.start);
+        assert_eq!(a.finish, b.finish);
+        assert_eq!(a.critical_path, b.critical_path);
+    }
+
+    #[test]
+    fn every_policy_validates_on_the_fixture() {
+        let p = wide_dag();
+        for policy in SchedPolicy::ALL {
+            let (res, trace) =
+                Simulator::run_policy_traced(&p, policy, 42, &mut SimScratch::new());
+            trace
+                .validate(&p)
+                .unwrap_or_else(|e| panic!("{} schedule rejected: {e}", policy.name()));
+            assert_eq!(res.makespan.to_bits(), trace.makespan.to_bits());
+        }
+    }
+
+    #[test]
+    fn heft_beats_list_on_the_wide_dag() {
+        let p = wide_dag();
+        let mut scratch = SimScratch::new();
+        let list = Simulator::run_policy(&p, SchedPolicy::List, 0, &mut scratch);
+        let heft = Simulator::run_policy(&p, SchedPolicy::Heft, 0, &mut scratch);
+        // FIFO burns 5s before the chain head; HEFT dispatches it first
+        assert_eq!(list.makespan, 15.0);
+        assert_eq!(heft.makespan, 11.0);
+    }
+
+    #[test]
+    fn greedy_dispatches_earliest_finish() {
+        // one resource, two sources: short (id 1) finishes earlier than
+        // long (id 0); greedy must pick it first despite the id order
+        let mut p = Plan::new();
+        let r = p.add_resource("r");
+        let long = p.add_task(spec(Some(r), 5.0, &[], 0));
+        let short = p.add_task(spec(Some(r), 1.0, &[], 0));
+        let res = Simulator::run_policy(&p, SchedPolicy::Greedy, 0, &mut SimScratch::new());
+        assert_eq!(res.start[short], 0.0);
+        assert_eq!(res.start[long], 1.0);
+    }
+
+    #[test]
+    fn seeded_ties_are_reproducible_and_seed_sensitive() {
+        // many identical contenders: order is pure tie-breaking
+        let mut p = Plan::new();
+        let r = p.add_resource("r");
+        for _ in 0..16 {
+            p.add_task(spec(Some(r), 1.0, &[], 0));
+        }
+        for policy in [SchedPolicy::Heft, SchedPolicy::Greedy] {
+            let a = Simulator::run_policy(&p, policy, 1, &mut SimScratch::new());
+            let b = Simulator::run_policy(&p, policy, 1, &mut SimScratch::new());
+            assert_eq!(a.start, b.start, "{} not reproducible", policy.name());
+            let c = Simulator::run_policy(&p, policy, 2, &mut SimScratch::new());
+            assert_ne!(
+                a.start,
+                c.start,
+                "{} ignored its tie-break seed on an all-tie plan",
+                policy.name()
+            );
+        }
+        // streaming documents that it ignores the seed entirely
+        let s1 = Simulator::run_policy(&p, SchedPolicy::Streaming, 1, &mut SimScratch::new());
+        let s2 = Simulator::run_policy(&p, SchedPolicy::Streaming, 99, &mut SimScratch::new());
+        assert_eq!(s1.start, s2.start);
+    }
+
+    #[test]
+    fn replay_reproduces_the_trace_bitwise() {
+        let p = wide_dag();
+        for policy in SchedPolicy::ALL {
+            let (res, trace) =
+                Simulator::run_policy_traced(&p, policy, 9, &mut SimScratch::new());
+            let replayed = Simulator::replay(&p, &trace, &mut SimScratch::new());
+            assert_eq!(res.makespan.to_bits(), replayed.makespan.to_bits());
+            assert_eq!(res.start, replayed.start);
+            assert_eq!(res.finish, replayed.finish);
+            assert_eq!(res.critical_path, replayed.critical_path);
+        }
+    }
+
+    #[test]
+    fn oracle_rejects_mutated_traces() {
+        let p = wide_dag();
+        let (_, trace) =
+            Simulator::run_policy_traced(&p, SchedPolicy::Streaming, 0, &mut SimScratch::new());
+        trace.validate(&p).unwrap();
+
+        // dependency violation: chain task yanked before its parent
+        let mut t = trace.clone();
+        let last = p.n_tasks() - 1;
+        t.slots[last].start = 0.0;
+        t.slots[last].finish = p.tasks[last].duration;
+        assert!(t.validate(&p).is_err(), "dependency violation accepted");
+
+        // resource overlap: two source tasks at the same instant
+        let mut t = trace.clone();
+        t.slots[1].start = t.slots[0].start;
+        t.slots[1].finish = t.slots[0].start + p.tasks[1].duration;
+        assert!(t.validate(&p).is_err(), "resource overlap accepted");
+
+        // double placement
+        let mut t = trace.clone();
+        t.order[1] = t.order[0];
+        assert!(t.validate(&p).is_err(), "double dispatch accepted");
+
+        // makespan lie
+        let mut t = trace.clone();
+        t.makespan += 1.0;
+        assert!(t.validate(&p).is_err(), "inflated makespan accepted");
+
+        // slack start: delay a task beyond its tight start
+        let mut t = trace.clone();
+        t.slots[0].start += 0.5;
+        t.slots[0].finish += 0.5;
+        assert!(t.validate(&p).is_err(), "non-work-conserving start accepted");
+    }
+
+    #[test]
+    fn empty_plan_trace_is_valid() {
+        let p = Plan::new();
+        let (res, trace) =
+            Simulator::run_policy_traced(&p, SchedPolicy::List, 0, &mut SimScratch::new());
+        trace.validate(&p).unwrap();
+        assert_eq!(res.makespan, 0.0);
+    }
+}

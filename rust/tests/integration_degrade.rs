@@ -4,7 +4,7 @@
 //! scenario grammar round-trips, and the artifact schema is stable.
 
 use mozart::comm::FaultScenario;
-use mozart::config::{DramKind, Method, ModelId};
+use mozart::config::{DramKind, Method, ModelId, SchedPolicy};
 use mozart::coordinator::cache::EvalOptions;
 use mozart::coordinator::degrade::{default_scenarios, run, DegradeConfig};
 use mozart::coordinator::run_experiment;
@@ -22,6 +22,7 @@ fn tiny(threads: usize) -> DegradeConfig {
         seed: 11,
         threads,
         budget: 0,
+        sched: SchedPolicy::Streaming,
         eval: EvalOptions::default(),
     }
 }

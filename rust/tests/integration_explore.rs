@@ -3,7 +3,7 @@
 //! Pareto frontier contains no dominated point and excludes every dominated
 //! one, and the report/artifact renderers carry the expected structure.
 
-use mozart::config::{DramKind, HwOverride, Method, ModelId};
+use mozart::config::{DramKind, HwOverride, Method, ModelId, SchedPolicy};
 use mozart::coordinator::cache::EvalOptions;
 use mozart::coordinator::explore::{explore, Axis, ExploreConfig};
 use mozart::metrics::pareto;
@@ -28,6 +28,7 @@ fn tiny_cfg(threads: usize) -> ExploreConfig {
         budget: 0,
         models: vec![ModelId::OlmoE_1B_7B],
         methods: vec![Method::MozartC],
+        scheds: vec![SchedPolicy::Streaming],
         seq_len: 64,
         dram: DramKind::Hbm2,
         iters: 1,

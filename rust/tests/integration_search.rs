@@ -6,7 +6,7 @@
 //! the method gene searches (hardware × ablation) jointly, and the
 //! report/artifact renderers carry the search + feasibility sections.
 
-use mozart::config::{DramKind, HwOverride, KnobId, Method, ModelId};
+use mozart::config::{DramKind, HwOverride, KnobId, Method, ModelId, SchedPolicy};
 use mozart::coordinator::cache::EvalOptions;
 use mozart::coordinator::explore::{explore, parse_axes, ExploreConfig};
 use mozart::coordinator::search::{
@@ -23,6 +23,7 @@ fn tiny_explore(threads: usize) -> ExploreConfig {
         budget: 0,
         models: vec![ModelId::OlmoE_1B_7B],
         methods: vec![Method::MozartC],
+        scheds: vec![SchedPolicy::Streaming],
         seq_len: 64,
         dram: DramKind::Hbm2,
         iters: 1,

@@ -7,7 +7,7 @@
 //! exactly twice (healthy + faulted, never the healthy run twice), and a
 //! shared cache file serves a repeat run entirely from memoized cells.
 
-use mozart::config::{DramKind, Method, ModelId};
+use mozart::config::{DramKind, Method, ModelId, SchedPolicy};
 use mozart::coordinator::cache::EvalOptions;
 use mozart::coordinator::explore::{explore, parse_axes, ExploreConfig};
 use mozart::coordinator::search::{
@@ -20,6 +20,7 @@ fn explore_cfg(axes: &str) -> ExploreConfig {
         budget: 0,
         models: vec![ModelId::OlmoE_1B_7B],
         methods: vec![Method::MozartC],
+        scheds: vec![SchedPolicy::Streaming],
         seq_len: 64,
         dram: DramKind::Hbm2,
         iters: 1,

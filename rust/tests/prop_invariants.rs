@@ -396,6 +396,7 @@ fn prop_nsga2_without_crossover_reproduces_bit_identical_frontiers() {
             budget: 0,
             models: vec![ModelId::TinyMoE],
             methods: vec![Method::MozartC],
+            scheds: vec![mozart::config::SchedPolicy::Streaming],
             seq_len: 64,
             dram: DramKind::Hbm2,
             iters: 1,
@@ -591,6 +592,100 @@ fn prop_serializing_resources_never_speeds_up() {
             serialized >= parallel - 1e-9,
             "serializing sped things up: {serialized} < {parallel}"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_oracle_rejects_mutated_traces() {
+    // soundness of the schedule-validity oracle: a genuine trace from any
+    // policy validates, and every class of corruption — a distorted slot
+    // time, a double dispatch, a makespan lie — is rejected
+    use mozart::config::SchedPolicy;
+    use mozart::sim::SimScratch;
+    forall("oracle-soundness", 40, |rng| {
+        let plan = random_plan(rng);
+        let policy = SchedPolicy::ALL[rng.below(4)];
+        let (_, trace) = Simulator::run_policy_traced(
+            &plan,
+            policy,
+            rng.next_u64(),
+            &mut SimScratch::new(),
+        );
+        trace.validate(&plan).map_err(|e| e.to_string())?;
+
+        // slot-time distortion: start moves, finish does not, so either the
+        // duration or the tightness invariant must trip
+        let mut t = trace.clone();
+        let victim = rng.below(plan.tasks.len());
+        t.slots[victim].start += 1.0 + rng.f64();
+        prop_assert!(t.validate(&plan).is_err(), "distorted slot accepted");
+
+        // double dispatch breaks the placement permutation
+        let mut t = trace.clone();
+        t.order[1] = t.order[0];
+        prop_assert!(t.validate(&plan).is_err(), "double dispatch accepted");
+
+        // a makespan lie fails the independent critical-path recomputation
+        let mut t = trace.clone();
+        t.makespan += 1.0;
+        prop_assert!(t.validate(&plan).is_err(), "makespan lie accepted");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_policies_conserve_work() {
+    // a dispatch policy reorders work but never changes it: per-tag busy
+    // seconds are summed by the engine in fixed task-id order, so they are
+    // bit-identical across all four policies on any plan
+    use mozart::config::SchedPolicy;
+    use mozart::sim::SimScratch;
+    forall("policy-work-conservation", 30, |rng| {
+        let plan = random_plan(rng);
+        let seed = rng.next_u64();
+        let mut scratch = SimScratch::new();
+        let reference =
+            Simulator::run_policy(&plan, SchedPolicy::Streaming, seed, &mut scratch);
+        for policy in SchedPolicy::ALL {
+            let res = Simulator::run_policy(&plan, policy, seed, &mut scratch);
+            prop_assert!(
+                res.tag_busy == reference.tag_busy,
+                "{} changed total per-tag busy time",
+                policy.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_makespan_never_beats_the_dependency_critical_path() {
+    // resource contention can only add to the dependency-only longest path,
+    // never subtract: every policy's makespan respects the DP lower bound
+    use mozart::config::SchedPolicy;
+    use mozart::sim::SimScratch;
+    forall("makespan-lower-bound", 30, |rng| {
+        let plan = random_plan(rng);
+        // deps always point backwards in random_plan, so task-id order is
+        // topological and one forward DP pass computes the bound
+        let mut lb = vec![0.0f64; plan.tasks.len()];
+        let mut bound = 0.0f64;
+        for (i, t) in plan.tasks.iter().enumerate() {
+            let longest = t.deps.iter().map(|&d| lb[d]).fold(0.0f64, f64::max);
+            lb[i] = longest + t.duration;
+            bound = bound.max(lb[i]);
+        }
+        let mut scratch = SimScratch::new();
+        for policy in SchedPolicy::ALL {
+            let res = Simulator::run_policy(&plan, policy, 7, &mut scratch);
+            prop_assert!(
+                res.makespan >= bound - 1e-9,
+                "{}: makespan {} < dependency bound {bound}",
+                policy.name(),
+                res.makespan
+            );
+        }
         Ok(())
     });
 }
