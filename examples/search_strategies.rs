@@ -32,8 +32,8 @@ fn main() {
     let cfg = SearchConfig {
         constraints: Constraints {
             max_area_mm2: Some(16_000.0),
-            max_power_w: None,
-            min_resilience: None, // no retained-throughput floor
+            // no power cap, no retained-throughput floor
+            ..Constraints::none()
         },
         method_gene: true, // --methods all: "which ablation on which platform"
         sched_gene: true,  // --scheds all: "which dispatch policy on which platform"

@@ -478,7 +478,7 @@ mod tests {
         slow.eval = EvalOptions {
             cache: false,
             retime: false,
-            cache_file: None,
+            ..Default::default()
         };
         let a = run(&fast);
         let b = run(&slow);

@@ -357,6 +357,10 @@ pub struct ExplorePoint {
     /// under the search's `--min-resilience` fault scenario; `None` when no
     /// resilience evaluation ran (the plain grid explorer never sets it).
     pub retained: Option<f64>,
+    /// Serving scores (p99 latency, SLO-goodput) when a serving workload
+    /// was evaluated — set by searches with `--objective p99|goodput`;
+    /// `None` otherwise (the plain grid explorer never sets it).
+    pub serve: Option<crate::coordinator::serve::ServeMetrics>,
 }
 
 impl ExplorePoint {
@@ -459,6 +463,7 @@ pub(crate) fn is_anchor_combo(combo: &[HwOverride], base: &HwConfig) -> bool {
 /// knows, and — because a bandwidth-degrading fault shares the healthy
 /// topology — the faulted run re-times the healthy plan instead of
 /// rebuilding it.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn eval_point(
     cfg: &ExploreConfig,
     overrides: &[HwOverride],
@@ -467,6 +472,7 @@ pub(crate) fn eval_point(
     method: Method,
     sched: SchedPolicy,
     fault: Option<&crate::comm::FaultScenario>,
+    serve: Option<&crate::coordinator::serve::ServeEvalSpec>,
     ctx: &mut EvalCtx<'_>,
 ) -> ExplorePoint {
     let model_cfg = ModelConfig::preset(model);
@@ -482,6 +488,9 @@ pub(crate) fn eval_point(
         fc.fault = scenario.clone();
         r.latency / ctx.run(&fc).latency
     });
+    let serve = serve.map(|spec| {
+        crate::coordinator::serve::serve_cell_eval(|c| ctx.run(c).latency, &ec, spec)
+    });
     let m = hw_metrics(&ec.model, &ec.hw);
     ExplorePoint {
         variant: vi,
@@ -495,6 +504,7 @@ pub(crate) fn eval_point(
         mean_power_w: r.energy.mean_power_w(r.latency),
         c_t: r.c_t,
         retained,
+        serve,
     }
 }
 
@@ -584,7 +594,17 @@ pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
         || session.new_pool(),
         |pool, &(vi, model, method, sched)| {
             let mut ctx = session.ctx(pool);
-            eval_point(cfg, &variants[vi].overrides, vi, model, method, sched, None, &mut ctx)
+            eval_point(
+                cfg,
+                &variants[vi].overrides,
+                vi,
+                model,
+                method,
+                sched,
+                None,
+                None,
+                &mut ctx,
+            )
         },
     );
 

@@ -12,6 +12,7 @@ pub mod cache;
 pub mod degrade;
 pub mod explore;
 pub mod search;
+pub mod serve;
 pub mod sweep;
 
 use crate::allocation::ExpertLayout;

@@ -59,6 +59,18 @@
 //! configured cell, with all per-cell values recorded. With one model the
 //! joint frontier degenerates to that model's frontier.
 //!
+//! **Serving objectives.** With `--objective p99|goodput` the first
+//! minimized objective is no longer the training-step latency but an
+//! online-serving score: every candidate's cells additionally build a
+//! token-bucketed service model (through the same memoization cache) and
+//! replay one fixed seeded arrival stream through the
+//! [`crate::sim::serve`] queueing engine; the candidate is scored on the
+//! worst-case p99 sojourn latency (minimized) or SLO-goodput (maximized,
+//! entering the objective vector as its inverse) across its cells. The
+//! surrogate preselection still ranks by the roofline *step-latency*
+//! estimate — a proxy for the serving scores, which the recorded Spearman
+//! correlation makes auditable.
+//!
 //! **Determinism.** All strategy randomness comes from one seeded
 //! [`Rng`] driven on the coordinating thread; candidate evaluation derives
 //! its randomness from each cell's own config (same discipline as the sweep
@@ -79,6 +91,7 @@ use crate::config::{
 };
 use crate::coordinator::cache::{EvalSession, EvalStats};
 use crate::coordinator::explore::{self, Axis, ExploreConfig, ExplorePoint};
+use crate::coordinator::serve::ServeEvalSpec;
 use crate::coordinator::sweep::{parallel_map_with, SweepOptions};
 use crate::metrics::{pareto, roofline};
 use crate::util::json::Json;
@@ -194,6 +207,52 @@ impl SearchStrategy {
                  mutation_rate={mutation_rate}, seed={seed})"
             ),
         }
+    }
+}
+
+/// The first minimized objective of the search (`--objective`); energy and
+/// area are always the second and third. The default scores candidates on
+/// training-step latency exactly as before; the serving objectives replay
+/// the configured [`ServeEvalSpec`] traffic against every candidate's
+/// service model (see [`crate::coordinator::serve::serve_cell_eval`]) and
+/// score the worst case across its cells.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Worst-case mean training-step latency (seconds) — the default.
+    Latency,
+    /// Worst-case online-serving p99 sojourn latency (ms).
+    P99,
+    /// Worst-case SLO-goodput (requests/s). Goodput is maximized; it
+    /// enters the minimized objective vector as its inverse.
+    Goodput,
+}
+
+impl Objective {
+    /// Stable CLI / JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::P99 => "p99",
+            Objective::Goodput => "goodput",
+        }
+    }
+
+    /// Parse a `--objective` value.
+    pub fn parse(s: &str) -> Result<Objective, String> {
+        match s {
+            "latency" => Ok(Objective::Latency),
+            "p99" => Ok(Objective::P99),
+            "goodput" => Ok(Objective::Goodput),
+            other => Err(format!(
+                "unknown objective `{other}` (expected latency, p99, or goodput)"
+            )),
+        }
+    }
+
+    /// Whether candidates must additionally be scored on the serving
+    /// workload.
+    pub fn needs_serve(&self) -> bool {
+        !matches!(self, Objective::Latency)
     }
 }
 
@@ -327,6 +386,15 @@ pub struct SearchConfig {
     /// default) disables preselection and is bit-identical to not having
     /// the feature at all.
     pub surrogate_frac: f64,
+    /// First minimized objective (`--objective`, default step latency).
+    /// The serving objectives score every candidate on the serving
+    /// workload ([`SearchConfig::serve_spec`]).
+    pub objective: Objective,
+    /// Serving workload candidates are scored on. `None` with a serving
+    /// objective falls back to [`ServeEvalSpec::paper_default`]; `Some`
+    /// with `--objective latency` still records the serving metrics per
+    /// candidate without changing the optimized objectives.
+    pub serve: Option<ServeEvalSpec>,
 }
 
 impl SearchConfig {
@@ -339,6 +407,19 @@ impl SearchConfig {
             method_gene: false,
             sched_gene: false,
             surrogate_frac: 1.0,
+            objective: Objective::Latency,
+            serve: None,
+        }
+    }
+
+    /// The serving workload candidates are actually scored on, if any:
+    /// the configured spec, or the paper default when a serving objective
+    /// is selected without one.
+    pub fn serve_spec(&self) -> Option<ServeEvalSpec> {
+        match (&self.serve, self.objective) {
+            (Some(s), _) => Some(s.clone()),
+            (None, Objective::Latency) => None,
+            (None, _) => Some(ServeEvalSpec::paper_default()),
         }
     }
 }
@@ -385,15 +466,44 @@ pub struct JointPoint {
     /// `--min-resilience`, not an objective. `None` when no resilience
     /// floor is set (no faulted evaluation ran).
     pub resilience: Option<f64>,
+    /// Worst (maximum) serving p99 sojourn latency across all evaluated
+    /// cells (ms); `None` when no serving workload was evaluated.
+    pub p99_ms: Option<f64>,
+    /// Worst (minimum) SLO-goodput across all evaluated cells (req/s);
+    /// `None` when no serving workload was evaluated.
+    pub goodput_rps: Option<f64>,
     /// Indices of this candidate's per-(model × method) cells in
     /// [`SearchOutcome::cells`].
     pub cells: Vec<usize>,
 }
 
 impl JointPoint {
-    /// The minimized joint objective vector (latency, energy, area).
+    /// The minimized joint objective vector (latency, energy, area) —
+    /// shorthand for [`JointPoint::objectives_for`] with
+    /// [`Objective::Latency`].
     pub fn objectives(&self) -> Vec<f64> {
-        vec![self.latency_s, self.energy_j, self.area_mm2]
+        self.objectives_for(Objective::Latency)
+    }
+
+    /// The minimized joint objective vector under the given first
+    /// objective: `[latency | p99 | 1/goodput, energy, area]`. Goodput is
+    /// maximized, so it enters as its inverse (guarded so a zero-goodput
+    /// candidate maps to a large finite value rather than infinity, which
+    /// would break the exact hypervolume).
+    pub fn objectives_for(&self, obj: Objective) -> Vec<f64> {
+        let first = match obj {
+            Objective::Latency => self.latency_s,
+            Objective::P99 => self
+                .p99_ms
+                .expect("p99 objective requires serving metrics on every candidate"),
+            Objective::Goodput => {
+                let g = self
+                    .goodput_rps
+                    .expect("goodput objective requires serving metrics on every candidate");
+                1.0 / (g + 1e-9)
+            }
+        };
+        vec![first, self.energy_j, self.area_mm2]
     }
 }
 
@@ -566,6 +676,8 @@ fn preferred_sched(scheds: &[SchedPolicy]) -> SchedPolicy {
 fn eval_batch(
     ex: &ExploreConfig,
     constraints: &Constraints,
+    objective: Objective,
+    serve_spec: Option<&ServeEvalSpec>,
     bases: &[HwConfig],
     batch: Vec<Candidate>,
     session: &EvalSession,
@@ -637,6 +749,7 @@ fn eval_batch(
                 m,
                 s,
                 fault,
+                serve_spec,
                 &mut ctx,
             )
         },
@@ -669,8 +782,12 @@ fn eval_batch(
         let mut energy_j = 0.0f64;
         let mut area_mm2 = 0.0f64;
         let mut power_w = 0.0f64;
-        // joint resilience is the WORST retained fraction across cells
+        // joint resilience is the WORST retained fraction across cells;
+        // likewise serving: worst p99 is the maximum, worst goodput the
+        // minimum
         let mut resilience: Option<f64> = None;
+        let mut p99_ms: Option<f64> = None;
+        let mut goodput_rps: Option<f64> = None;
         let mut cell_idx = Vec::with_capacity(cand_pts.len());
         for p in cand_pts {
             latency_s = latency_s.max(p.latency_s);
@@ -679,6 +796,11 @@ fn eval_batch(
             power_w = power_w.max(p.mean_power_w);
             if let Some(r) = p.retained {
                 resilience = Some(resilience.map_or(r, |acc: f64| acc.min(r)));
+            }
+            if let Some(sv) = p.serve {
+                p99_ms = Some(p99_ms.map_or(sv.p99_ms, |acc: f64| acc.max(sv.p99_ms)));
+                goodput_rps =
+                    Some(goodput_rps.map_or(sv.goodput_rps, |acc: f64| acc.min(sv.goodput_rps)));
             }
             cell_idx.push(cells.len());
             cells.push(p);
@@ -690,12 +812,14 @@ fn eval_batch(
             area_mm2,
             power_w,
             resilience,
+            p99_ms,
+            goodput_rps,
             cells: cell_idx,
         };
         // hard caps: infeasible candidates are recorded but never pollute
         // the frontier archive
         if constraints.feasible(jp.area_mm2, jp.power_w, jp.resilience) {
-            archive.insert(ci, &jp.objectives());
+            archive.insert(ci, &jp.objectives_for(objective));
         }
         joint.push(jp);
         candidates.push(cand);
@@ -847,8 +971,10 @@ fn selection_order(
     pool: &[usize],
     joint: &[JointPoint],
     constraints: &Constraints,
+    objective: Objective,
 ) -> Vec<usize> {
-    let objs: Vec<Vec<f64>> = pool.iter().map(|&ci| joint[ci].objectives()).collect();
+    let objs: Vec<Vec<f64>> =
+        pool.iter().map(|&ci| joint[ci].objectives_for(objective)).collect();
     let viol: Vec<f64> = pool
         .iter()
         .map(|&ci| {
@@ -869,8 +995,9 @@ fn environmental_select(
     n: usize,
     joint: &[JointPoint],
     constraints: &Constraints,
+    objective: Objective,
 ) -> Vec<usize> {
-    selection_order(pool, joint, constraints)
+    selection_order(pool, joint, constraints, objective)
         .into_iter()
         .take(n)
         .map(|pos| pool[pos])
@@ -919,6 +1046,12 @@ pub fn search_with(
         None
     };
     let constraints = &cfg.constraints;
+    let objective = cfg.objective;
+    // the serving workload, when any: every candidate replays the same
+    // arrival stream against its own service model (built through the
+    // memoization cache, so candidates sharing a topology share the cost)
+    let serve_spec = cfg.serve_spec();
+    let serve_ref = serve_spec.as_ref();
     let session = EvalSession::new(ex.eval.clone());
 
     let mut candidates: Vec<Candidate> = Vec::new();
@@ -933,6 +1066,8 @@ pub fn search_with(
     eval_batch(
         ex,
         constraints,
+        objective,
+        serve_ref,
         &bases,
         vec![Candidate {
             overrides: Vec::new(),
@@ -957,7 +1092,7 @@ pub fn search_with(
         &mut archive,
     );
     let hypervolume_ref: Vec<f64> =
-        joint[0].objectives().iter().map(|v| v * 2.0).collect();
+        joint[0].objectives_for(objective).iter().map(|v| v * 2.0).collect();
 
     // one macro per generation: evaluate a batch of genomes, then record
     let surrogate_frac = cfg.surrogate_frac;
@@ -1000,7 +1135,8 @@ pub fn search_with(
         }
         let first_joint = joint.len();
         eval_batch(
-            ex, constraints, &bases, batch, &session, candidates, cells, joint, archive,
+            ex, constraints, objective, serve_ref, &bases, batch, &session, candidates,
+            cells, joint, archive,
         );
         let surrogate = preselect.map(|(proposed, scores)| {
             let truth: Vec<f64> =
@@ -1100,7 +1236,7 @@ pub fn search_with(
                 } else {
                     // binary tournaments under the constrained-crowded
                     // order, then uniform crossover + mutation
-                    let order = selection_order(&pop, &joint, constraints);
+                    let order = selection_order(&pop, &joint, constraints, objective);
                     let mut rank = vec![0usize; pop.len()];
                     for (pos, &member) in order.iter().enumerate() {
                         rank[member] = pos;
@@ -1143,12 +1279,13 @@ pub fn search_with(
                     &mut convergence,
                 );
                 pop.extend(before..candidates.len());
-                pop = environmental_select(&pop, population, &joint, constraints);
+                pop = environmental_select(&pop, population, &joint, constraints, objective);
             }
         }
     }
 
-    let joint_objs: Vec<Vec<f64>> = joint.iter().map(|j| j.objectives()).collect();
+    let joint_objs: Vec<Vec<f64>> =
+        joint.iter().map(|j| j.objectives_for(objective)).collect();
     let paper_dominators = pareto::dominators(&joint_objs[0], &joint_objs);
     SearchOutcome {
         cfg: cfg.clone(),
@@ -1228,6 +1365,17 @@ impl SearchOutcome {
                 self.candidates.len()
             ));
         }
+        if let Some(spec) = self.cfg.serve_spec() {
+            out.push_str(&format!(
+                "objective: {} — serving workload {} for {} s, SLO {} ms, \
+                 batch close {}\n",
+                self.cfg.objective.name(),
+                spec.arrivals.label(),
+                spec.duration_s,
+                spec.slo_ms,
+                spec.params.close.label(),
+            ));
+        }
         out.push('\n');
 
         let models = ex
@@ -1247,17 +1395,34 @@ impl SearchOutcome {
                 ""
             }
         );
+        let first_hdr = match self.cfg.objective {
+            Objective::Latency => "Latency (s)",
+            Objective::P99 => "Serve p99 (ms)",
+            Objective::Goodput => "Goodput (req/s)",
+        };
         let mut t = Table::new(
             &title,
-            &["Candidate", "Latency (s)", "Energy (J/step)", "Area (mm^2)"],
+            &["Candidate", first_hdr, "Energy (J/step)", "Area (mm^2)"],
         );
         let mut members = self.archive.clone();
-        members.sort_by(|&a, &b| self.joint[a].latency_s.total_cmp(&self.joint[b].latency_s));
+        // best-first under the selected objective (for goodput that is
+        // the smallest inverse, i.e. the highest goodput)
+        members.sort_by(|&a, &b| {
+            self.joint[a].objectives_for(self.cfg.objective)[0]
+                .total_cmp(&self.joint[b].objectives_for(self.cfg.objective)[0])
+        });
         for &ci in &members {
             let j = &self.joint[ci];
+            let first = match self.cfg.objective {
+                Objective::Latency => format!("{:.4}", j.latency_s),
+                Objective::P99 => format!("{:.2}", j.p99_ms.unwrap_or(f64::NAN)),
+                Objective::Goodput => {
+                    format!("{:.1}", j.goodput_rps.unwrap_or(f64::NAN))
+                }
+            };
             t.row(&[
                 self.candidates[ci].label.clone(),
-                format!("{:.4}", j.latency_s),
+                first,
                 format!("{:.1}", j.energy_j),
                 format!("{:.0}", j.area_mm2),
             ]);
@@ -1417,6 +1582,14 @@ impl SearchOutcome {
                         ("mean_power_w", Json::num(p.mean_power_w)),
                         ("c_t", Json::num(p.c_t)),
                         ("retained", p.retained.map_or(Json::Null, Json::num)),
+                        (
+                            "serve_p99_ms",
+                            p.serve.map_or(Json::Null, |s| Json::num(s.p99_ms)),
+                        ),
+                        (
+                            "serve_goodput_rps",
+                            p.serve.map_or(Json::Null, |s| Json::num(s.goodput_rps)),
+                        ),
                     ])
                 })
                 .collect(),
@@ -1432,6 +1605,8 @@ impl SearchOutcome {
                         ("area_mm2", Json::num(j.area_mm2)),
                         ("power_w", Json::num(j.power_w)),
                         ("resilience", j.resilience.map_or(Json::Null, Json::num)),
+                        ("p99_ms", j.p99_ms.map_or(Json::Null, Json::num)),
+                        ("goodput_rps", j.goodput_rps.map_or(Json::Null, Json::num)),
                         ("feasible", Json::Bool(self.is_feasible(j.candidate))),
                         ("on_frontier", Json::Bool(self.archive.contains(&j.candidate))),
                         (
@@ -1601,15 +1776,31 @@ impl SearchOutcome {
                 Json::Arr(ex.scheds.iter().map(|s| Json::str(s.name())).collect()),
             ),
             ("sched_gene", Json::Bool(self.cfg.sched_gene)),
+            ("objective", Json::str(self.cfg.objective.name())),
             (
                 "objectives",
                 Json::Arr(vec![
-                    Json::str("latency_s"),
+                    Json::str(match self.cfg.objective {
+                        Objective::Latency => "latency_s",
+                        Objective::P99 => "p99_ms",
+                        Objective::Goodput => "inverse_goodput_rps",
+                    }),
                     Json::str("energy_j_per_step"),
                     Json::str("area_mm2"),
                 ]),
             ),
             ("objective_mode", Json::str("worst_case_across_models")),
+            (
+                "serve_workload",
+                self.cfg.serve_spec().map_or(Json::Null, |s| {
+                    Json::obj([
+                        ("arrivals", Json::str(s.arrivals.label())),
+                        ("duration_s", Json::num(s.duration_s)),
+                        ("slo_ms", Json::num(s.slo_ms)),
+                        ("batch_close", Json::str(s.params.close.label())),
+                    ])
+                }),
+            ),
             ("candidates", candidates),
             ("points", points),
             ("joint", joint),
@@ -1814,7 +2005,7 @@ mod tests {
         slow.explore.eval = crate::coordinator::cache::EvalOptions {
             cache: false,
             retime: false,
-            cache_file: None,
+            ..Default::default()
         };
         let a = search(&fast);
         let b = search(&slow);
@@ -1872,6 +2063,98 @@ mod tests {
         ));
         assert!(full.convergence.iter().all(|s| s.surrogate.is_none()));
         assert!(out.candidates.len() <= full.candidates.len());
+    }
+
+    #[test]
+    fn serving_objective_search_is_deterministic_and_scored() {
+        let strategy = SearchStrategy::Evolutionary {
+            population: 3,
+            generations: 2,
+            crossover_rate: 0.9,
+            mutation_rate: 0.5,
+            seed: 5,
+        };
+        let mut cfg = tiny_search("freq=0.8:1.2,tiles=36:64", strategy);
+        cfg.objective = Objective::P99;
+        // a short workload keeps the test fast without losing coverage
+        let mut spec = ServeEvalSpec::paper_default();
+        spec.duration_s = 0.5;
+        cfg.serve = Some(spec);
+        let a = search(&cfg);
+        let b = search(&cfg);
+        assert!(a.candidates.len() > 1);
+        // every candidate carries serving metrics and is ranked by them
+        for j in &a.joint {
+            let p99 = j.p99_ms.expect("p99 scored on every candidate");
+            let good = j.goodput_rps.expect("goodput scored on every candidate");
+            assert!(p99 > 0.0 && good >= 0.0, "p99={p99} goodput={good}");
+            assert_eq!(j.objectives_for(Objective::P99)[0], p99);
+        }
+        assert_eq!(a.archive, b.archive, "seeded serving search must reproduce");
+        for (x, y) in a.joint.iter().zip(b.joint.iter()) {
+            assert_eq!(x.p99_ms.unwrap().to_bits(), y.p99_ms.unwrap().to_bits());
+            assert_eq!(
+                x.goodput_rps.unwrap().to_bits(),
+                y.goodput_rps.unwrap().to_bits()
+            );
+        }
+        assert_eq!(a.hypervolume_ref.len(), 3);
+        assert_eq!(a.hypervolume_ref[0], 2.0 * a.joint[0].p99_ms.unwrap());
+        // the artifact names the objective and echoes the workload
+        let rendered = a.to_json().render_pretty();
+        assert!(rendered.contains("\"objective\": \"p99\""));
+        assert!(rendered.contains("\"serve_workload\""));
+        assert!(rendered.contains("\"p99_ms\""));
+        assert!(a.render_markdown().contains("Serve p99 (ms)"));
+        // the default latency objective never scores serving at all
+        let plain = search(&tiny_search("freq=0.8:1.2,tiles=36:64", strategy));
+        assert!(plain.joint.iter().all(|j| j.p99_ms.is_none()));
+        assert!(plain.cells.iter().all(|c| c.serve.is_none()));
+        assert!(!plain
+            .to_json()
+            .render_pretty()
+            .contains("\"serve_workload\": {"));
+    }
+
+    #[test]
+    fn objective_parse_round_trips() {
+        for obj in [Objective::Latency, Objective::P99, Objective::Goodput] {
+            assert_eq!(Objective::parse(obj.name()), Ok(obj));
+        }
+        assert!(Objective::parse("throughput").is_err());
+        assert_eq!(Objective::Latency.name(), "latency");
+        assert!(!Objective::Latency.needs_serve());
+        assert!(Objective::P99.needs_serve() && Objective::Goodput.needs_serve());
+    }
+
+    #[test]
+    fn goodput_objective_inverts_and_guards_zero() {
+        let jp = JointPoint {
+            candidate: 1,
+            latency_s: 2.0,
+            energy_j: 3.0,
+            area_mm2: 4.0,
+            power_w: 5.0,
+            resilience: None,
+            p99_ms: Some(40.0),
+            goodput_rps: Some(100.0),
+            cells: vec![],
+        };
+        assert_eq!(jp.objectives(), vec![2.0, 3.0, 4.0]);
+        assert_eq!(jp.objectives_for(Objective::P99)[0], 40.0);
+        let inv = jp.objectives_for(Objective::Goodput)[0];
+        assert!((inv - 0.01).abs() < 1e-6, "inverse of 100 req/s, got {inv}");
+        // higher goodput -> smaller minimized value
+        let mut better = jp.clone();
+        better.goodput_rps = Some(200.0);
+        assert!(
+            better.objectives_for(Objective::Goodput)[0] < inv,
+            "goodput must be maximized"
+        );
+        // zero goodput stays finite so the exact hypervolume never sees inf
+        let mut dead = jp;
+        dead.goodput_rps = Some(0.0);
+        assert!(dead.objectives_for(Objective::Goodput)[0].is_finite());
     }
 
     #[test]

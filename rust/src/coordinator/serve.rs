@@ -1,0 +1,666 @@
+//! `mozart serve` — online serving saturation sweeps.
+//!
+//! The training simulator scores one fixed step; this driver scores
+//! *traffic*. For one (model, method, platform) cell it:
+//!
+//! 1. builds a [`ServiceModel`] — batch service times bucketed by token
+//!    count, each bucket timed by a real step simulation of the cell at
+//!    `batch_size = micro_batch = 1` and `seq_len = bucket`, scaled by
+//!    [`FORWARD_FRACTION`] (serving runs the forward pass only; the
+//!    backward pass is ~2x the forward FLOPs, so a full training step
+//!    is ~3x a forward pass);
+//! 2. replays the configured open-loop [`ArrivalProcess`] at each load
+//!    multiplier through the [`simulate_serve`] queueing engine
+//!    (continuous batching, the configured [`BatchClose`] policy);
+//! 3. reports one [`ServePoint`] per load: goodput vs offered load,
+//!    exact + P² streaming p50/p99/p999 latency, server utilization,
+//!    tokens/s and tokens/s/mm² — the saturation curve.
+//!
+//! Every point's [`ServeTrace`] is checked by the queueing-invariant
+//! oracle ([`ServeTrace::validate`]) *unconditionally* (not just in
+//! debug builds), and the Little's-law residual ([`littles_law`]) is
+//! recorded in the artifact so CI can assert it stays under 1%.
+//!
+//! Everything is seeded: the same `(config, seed)` reproduces the same
+//! curve bit for bit at any `--threads` value (each load point derives
+//! its own arrival seed from the master seed and its index).
+
+use crate::config::{DramKind, ExperimentConfig, Method, ModelId, SchedPolicy};
+use crate::coordinator::cache::{EvalOptions, EvalSession, EvalStats};
+use crate::coordinator::sweep::{cell_config_sched, parallel_map, parallel_map_with, Cell};
+use crate::metrics::slo::{littles_law, P2Quantile};
+use crate::sim::serve::{simulate_serve, BatchClose, ServeParams, ServeTrace, ServiceModel};
+use crate::trace::arrivals::{ArrivalProcess, RequestShape};
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::table::{scatter_plot, Table};
+
+/// Fraction of a training-step latency attributed to the forward pass
+/// (serving cost). The backward pass costs roughly twice the forward
+/// FLOPs, so forward ≈ 1/3 of the step.
+pub const FORWARD_FRACTION: f64 = 1.0 / 3.0;
+
+/// Token ceilings of the service-model buckets: one step simulation per
+/// bucket, covering single-job decodes up to full batched prefills.
+pub const SERVICE_BUCKETS: [usize; 5] = [128, 256, 512, 1024, 2048];
+
+/// Configuration of one serving sweep.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Model served by the cell.
+    pub model: ModelId,
+    /// Mozart ablation the cell runs.
+    pub method: Method,
+    /// DRAM technology of the platform.
+    pub dram: DramKind,
+    /// DAG scheduling policy for the service-model step simulations.
+    pub sched: SchedPolicy,
+    /// Open-loop arrival process at load multiplier 1.0.
+    pub arrivals: ArrivalProcess,
+    /// Token-count distribution of generated requests (file traces carry
+    /// their own token counts).
+    pub shape: RequestShape,
+    /// Traffic duration per load point, seconds (the queue then drains).
+    pub duration_s: f64,
+    /// Latency SLO in milliseconds; completions within it count toward
+    /// goodput.
+    pub slo_ms: f64,
+    /// Queueing-engine knobs (batch-close policy, queue cap, chunking).
+    pub params: ServeParams,
+    /// Load multipliers swept (each scales the arrival process via
+    /// [`ArrivalProcess::at_load`]).
+    pub loads: Vec<f64>,
+    /// Cap on the number of load points simulated (0 = no cap); any
+    /// truncation is reported, never silent.
+    pub budget: usize,
+    /// Simulated iterations averaged per service-model bucket.
+    pub iters: usize,
+    /// Master seed (service-model sims and arrival streams).
+    pub seed: u64,
+    /// Worker threads (0/1 = sequential); never changes a result bit.
+    pub threads: usize,
+    /// Evaluation-throughput toggles for the service-model simulations.
+    pub eval: EvalOptions,
+}
+
+impl ServeConfig {
+    /// Paper-flavoured default: the fastest model under the full Mozart
+    /// method, Poisson traffic at 100 req/s, a 50 ms SLO, and a load
+    /// sweep from 25% to 150% of the nominal rate.
+    pub fn paper_default() -> ServeConfig {
+        ServeConfig {
+            model: ModelId::OlmoE_1B_7B,
+            method: Method::MozartC,
+            dram: DramKind::Hbm2,
+            sched: SchedPolicy::Streaming,
+            arrivals: ArrivalProcess::Poisson { rate: 100.0 },
+            shape: RequestShape::default(),
+            duration_s: 10.0,
+            slo_ms: 50.0,
+            params: ServeParams::default(),
+            loads: vec![0.25, 0.5, 0.75, 1.0, 1.25, 1.5],
+            budget: 0,
+            iters: 2,
+            seed: 7,
+            threads: 0,
+            eval: EvalOptions::default(),
+        }
+    }
+}
+
+/// Build the token-bucketed service model for one platform/model/method
+/// combination: one step simulation per [`SERVICE_BUCKETS`] entry (the
+/// `base` config with `seq_len = bucket`, `batch_size = micro_batch =
+/// 1`), scaled by [`FORWARD_FRACTION`]. `run` is the evaluation hook —
+/// typically `EvalCtx::run(..).latency`, so the memoization cache
+/// applies and repeated bucket configs across search candidates are
+/// never re-simulated. `base` carries the hardware (including any
+/// explore overrides), model, method, seed, and scheduling policy.
+pub fn build_service_model(
+    mut run: impl FnMut(&ExperimentConfig) -> f64,
+    base: &ExperimentConfig,
+) -> ServiceModel {
+    let buckets: Vec<(u64, f64)> = SERVICE_BUCKETS
+        .iter()
+        .map(|&b| {
+            let mut ec = base.clone();
+            ec.seq_len = b;
+            ec.batch_size = 1;
+            ec.micro_batch = 1;
+            (b as u64, run(&ec) * FORWARD_FRACTION)
+        })
+        .collect();
+    ServiceModel::new(buckets).expect("simulated bucket latencies are positive")
+}
+
+/// The serving workload a search candidate is scored on when the
+/// NSGA-II objective is `p99` or `goodput` (`--objective`): one fixed
+/// arrival stream replayed against each candidate's service model.
+#[derive(Clone, Debug)]
+pub struct ServeEvalSpec {
+    /// Open-loop arrival process (replayed identically per candidate).
+    pub arrivals: ArrivalProcess,
+    /// Token-count distribution of the generated requests.
+    pub shape: RequestShape,
+    /// Traffic duration, seconds.
+    pub duration_s: f64,
+    /// Latency SLO, milliseconds (goodput counts completions within it).
+    pub slo_ms: f64,
+    /// Queueing-engine knobs.
+    pub params: ServeParams,
+}
+
+impl ServeEvalSpec {
+    /// Default search workload: Poisson at 100 req/s for 2 s under a
+    /// 50 ms SLO — small enough to score every candidate, long enough
+    /// for stable tail percentiles.
+    pub fn paper_default() -> ServeEvalSpec {
+        ServeEvalSpec {
+            arrivals: ArrivalProcess::Poisson { rate: 100.0 },
+            shape: RequestShape::default(),
+            duration_s: 2.0,
+            slo_ms: 50.0,
+            params: ServeParams::default(),
+        }
+    }
+}
+
+/// The serving scores of one evaluated search cell.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeMetrics {
+    /// Exact p99 sojourn latency, ms — minimized by `--objective p99`.
+    pub p99_ms: f64,
+    /// SLO-goodput, requests/s — maximized by `--objective goodput`.
+    pub goodput_rps: f64,
+}
+
+/// Score one search cell on the serving workload: build the cell's
+/// service model through `run` (cached — see [`build_service_model`]),
+/// replay the spec's arrival stream, and measure p99 / goodput. The
+/// arrival seed derives from `base.seed` only, so every candidate of
+/// one search faces the identical traffic. The trace is validated by
+/// the queueing-invariant oracle unconditionally.
+pub fn serve_cell_eval(
+    run: impl FnMut(&ExperimentConfig) -> f64,
+    base: &ExperimentConfig,
+    spec: &ServeEvalSpec,
+) -> ServeMetrics {
+    let model = build_service_model(run, base);
+    let requests = spec
+        .arrivals
+        .generate(spec.duration_s, &spec.shape, base.seed ^ 0x5E2E_CE11);
+    let trace = simulate_serve(&requests, &model, &spec.params);
+    let p = measure_point(&trace, &model, 1.0, spec.slo_ms / 1e3, spec.duration_s, 0.0);
+    ServeMetrics {
+        p99_ms: p.p99_ms,
+        goodput_rps: p.goodput_rps,
+    }
+}
+
+/// One point on the saturation curve.
+#[derive(Clone, Debug)]
+pub struct ServePoint {
+    /// Load multiplier applied to the arrival process.
+    pub load: f64,
+    /// Offered load actually generated, requests/s.
+    pub offered_rps: f64,
+    /// Requests offered over the duration.
+    pub requests: usize,
+    /// Requests completed.
+    pub completed: usize,
+    /// Requests dropped at admission (queue cap).
+    pub dropped: usize,
+    /// Completions within the SLO, per second of horizon.
+    pub goodput_rps: f64,
+    /// Completions within the SLO.
+    pub slo_met: usize,
+    /// Mean sojourn latency, ms.
+    pub mean_ms: f64,
+    /// Exact (sort-based) p50 sojourn latency, ms.
+    pub p50_ms: f64,
+    /// Exact p99 sojourn latency, ms.
+    pub p99_ms: f64,
+    /// Exact p999 sojourn latency, ms.
+    pub p999_ms: f64,
+    /// Streaming P² p50 estimate, ms (cross-checked against `p50_ms`).
+    pub p2_p50_ms: f64,
+    /// Streaming P² p99 estimate, ms.
+    pub p2_p99_ms: f64,
+    /// Streaming P² p999 estimate, ms.
+    pub p2_p999_ms: f64,
+    /// Time-average requests in system (Little's law LHS).
+    pub little_l: f64,
+    /// Little's-law relative residual `|L - λW| / L` (must be < 0.01).
+    pub little_rel_err: f64,
+    /// Server busy fraction over the horizon.
+    pub utilization: f64,
+    /// Tokens served per second of horizon.
+    pub tokens_per_s: f64,
+    /// Tokens served per second per mm² of wafer area.
+    pub tokens_per_s_mm2: f64,
+    /// Batches executed.
+    pub batches: usize,
+    /// Horizon the rates are normalized over (max of duration and the
+    /// drain end), seconds.
+    pub horizon_s: f64,
+}
+
+/// Measure one load point from its queueing trace. `area_mm2` feeds the
+/// tokens/s/mm² density metric; `slo_s`/`duration_s` come from the
+/// sweep config. Validates the trace against the oracle (always, not
+/// just in debug builds) before measuring.
+pub fn measure_point(
+    trace: &ServeTrace,
+    model: &ServiceModel,
+    load: f64,
+    slo_s: f64,
+    duration_s: f64,
+    area_mm2: f64,
+) -> ServePoint {
+    trace
+        .validate(model)
+        .expect("serve trace failed the queueing-invariant oracle");
+    let spans = trace.completed_spans();
+    let drain_end = trace.batches.last().map_or(0.0, |b| b.finish_s);
+    let horizon = duration_s.max(drain_end);
+
+    let mut lat_ms: Vec<f64> = spans.iter().map(|&(a, f)| (f - a) * 1e3).collect();
+    let mut p2 = [
+        P2Quantile::new(0.5),
+        P2Quantile::new(0.99),
+        P2Quantile::new(0.999),
+    ];
+    for &l in &lat_ms {
+        for q in p2.iter_mut() {
+            q.observe(l);
+        }
+    }
+    lat_ms.sort_by(f64::total_cmp);
+    let pct = |p: f64| {
+        if lat_ms.is_empty() {
+            0.0
+        } else {
+            stats::percentile(&lat_ms, p)
+        }
+    };
+    let p2v = |q: &P2Quantile| if q.count() == 0 { 0.0 } else { q.value() };
+
+    let slo_met = spans.iter().filter(|&&(a, f)| f - a <= slo_s).count();
+    let little = littles_law(&spans, horizon);
+    let busy: f64 = trace.batches.iter().map(|b| b.finish_s - b.start_s).sum();
+    let tokens: u64 = trace.batches.iter().map(|b| b.tokens).sum();
+
+    ServePoint {
+        load,
+        offered_rps: trace.requests.len() as f64 / duration_s,
+        requests: trace.requests.len(),
+        completed: spans.len(),
+        dropped: trace.dropped(),
+        goodput_rps: slo_met as f64 / horizon,
+        slo_met,
+        mean_ms: if lat_ms.is_empty() { 0.0 } else { stats::mean(&lat_ms) },
+        p50_ms: pct(50.0),
+        p99_ms: pct(99.0),
+        p999_ms: pct(99.9),
+        p2_p50_ms: p2v(&p2[0]),
+        p2_p99_ms: p2v(&p2[1]),
+        p2_p999_ms: p2v(&p2[2]),
+        little_l: little.l,
+        little_rel_err: little.rel_err,
+        utilization: busy / horizon,
+        tokens_per_s: tokens as f64 / horizon,
+        tokens_per_s_mm2: if area_mm2 > 0.0 {
+            tokens as f64 / horizon / area_mm2
+        } else {
+            0.0
+        },
+        batches: trace.batches.len(),
+        horizon_s: horizon,
+    }
+}
+
+/// Outcome of a serving sweep: the saturation curve plus accounting.
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    /// Sweep configuration echo.
+    pub cfg: ServeConfig,
+    /// The service model the queueing engine used.
+    pub model: ServiceModel,
+    /// Wafer area of the platform, mm² (density metric denominator).
+    pub area_mm2: f64,
+    /// One point per simulated load, in `cfg.loads` order.
+    pub points: Vec<ServePoint>,
+    /// Load points dropped by `cfg.budget`.
+    pub dropped_loads: usize,
+    /// Evaluation accounting for the service-model simulations.
+    pub eval: EvalStats,
+}
+
+/// Run the sweep: build the service model (through the evaluation
+/// cache), then simulate every load point on the work-stealing pool.
+/// Deterministic and thread-invariant.
+pub fn run(cfg: &ServeConfig) -> ServeOutcome {
+    assert!(!cfg.loads.is_empty(), "serve sweep needs at least one load");
+    assert!(cfg.duration_s > 0.0, "serve duration must be > 0");
+    assert!(cfg.slo_ms > 0.0, "SLO must be > 0");
+
+    let cell = Cell {
+        model: cfg.model,
+        method: cfg.method,
+        seq_len: SERVICE_BUCKETS[0],
+        dram: cfg.dram,
+    };
+    let session = EvalSession::new(cfg.eval.clone());
+    // service model: one bucket each, through the session's cache/pool
+    let bucket_jobs: Vec<usize> = (0..SERVICE_BUCKETS.len()).collect();
+    let bucket_lat: Vec<f64> = parallel_map_with(
+        &bucket_jobs,
+        cfg.threads,
+        session.pools(),
+        || session.new_pool(),
+        |pool, &bi| {
+            let mut ec = cell_config_sched(cell, cfg.iters, cfg.seed, cfg.sched);
+            ec.seq_len = SERVICE_BUCKETS[bi];
+            ec.batch_size = 1;
+            ec.micro_batch = 1;
+            let mut ctx = session.ctx(pool);
+            ctx.run(&ec).latency
+        },
+    );
+    let model = ServiceModel::new(
+        SERVICE_BUCKETS
+            .iter()
+            .zip(bucket_lat.iter())
+            .map(|(&b, &l)| (b as u64, l * FORWARD_FRACTION))
+            .collect(),
+    )
+    .expect("simulated bucket latencies are positive");
+
+    let probe = cell_config_sched(cell, cfg.iters, cfg.seed, cfg.sched);
+    let area_mm2 = crate::arch::area::hw_metrics(&probe.model, &probe.hw).total_area_mm2;
+
+    let mut loads = cfg.loads.clone();
+    let total = loads.len();
+    if cfg.budget > 0 && loads.len() > cfg.budget {
+        loads.truncate(cfg.budget);
+    }
+    let dropped_loads = total - loads.len();
+
+    let jobs: Vec<(usize, f64)> = loads.iter().copied().enumerate().collect();
+    let points: Vec<ServePoint> = parallel_map(&jobs, cfg.threads, |&(pi, load)| {
+        // every point derives its own arrival seed: independent streams,
+        // identical at any thread count
+        let pseed = cfg
+            .seed
+            .wrapping_add((pi as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let requests = cfg
+            .arrivals
+            .at_load(load)
+            .generate(cfg.duration_s, &cfg.shape, pseed);
+        let trace = simulate_serve(&requests, &model, &cfg.params);
+        measure_point(&trace, &model, load, cfg.slo_ms / 1e3, cfg.duration_s, area_mm2)
+    });
+
+    ServeOutcome {
+        cfg: cfg.clone(),
+        model,
+        area_mm2,
+        points,
+        dropped_loads,
+        eval: session.finish(),
+    }
+}
+
+impl ServeOutcome {
+    /// Human-readable report: the saturation table plus ASCII p99 and
+    /// goodput curves against offered load.
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# Online serving saturation sweep\n\n");
+        out.push_str(&format!(
+            "- cell: {} / {} / {} / sched={}\n- arrivals: {} (x{} load points), duration {} s\n- batching: {}, decode chunk {}, queue cap {}\n- SLO: {} ms\n\n",
+            self.cfg.model.name(),
+            self.cfg.method.name(),
+            self.cfg.dram.name(),
+            self.cfg.sched.name(),
+            self.cfg.arrivals.label(),
+            self.points.len(),
+            self.cfg.duration_s,
+            self.cfg.params.close.label(),
+            self.cfg.params.decode_chunk,
+            self.cfg.params.queue_cap,
+            self.cfg.slo_ms,
+        ));
+        if self.dropped_loads > 0 {
+            out.push_str(&format!(
+                "> budget truncation: {} load point(s) NOT simulated \
+                 (--budget {}); the curve below is partial\n\n",
+                self.dropped_loads, self.cfg.budget
+            ));
+        }
+        let mut t = Table::new(
+            "saturation curve",
+            &[
+                "load", "offered r/s", "done", "drop", "goodput r/s", "p50 ms",
+                "p99 ms", "p999 ms", "util", "tok/s/mm2",
+            ],
+        );
+        let mut p99_plot: Vec<(f64, f64, char)> = Vec::new();
+        let mut good_plot: Vec<(f64, f64, char)> = Vec::new();
+        for p in &self.points {
+            t.row(&[
+                format!("{:.2}", p.load),
+                format!("{:.1}", p.offered_rps),
+                format!("{}", p.completed),
+                format!("{}", p.dropped),
+                format!("{:.1}", p.goodput_rps),
+                format!("{:.2}", p.p50_ms),
+                format!("{:.2}", p.p99_ms),
+                format!("{:.2}", p.p999_ms),
+                format!("{:.2}", p.utilization),
+                format!("{:.3}", p.tokens_per_s_mm2),
+            ]);
+            p99_plot.push((p.offered_rps, p.p99_ms, '9'));
+            good_plot.push((p.offered_rps, p.goodput_rps, 'g'));
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+        out.push_str(&scatter_plot(
+            "p99 latency vs offered load (the knee is saturation)",
+            "offered req/s",
+            "p99 ms",
+            &p99_plot,
+        ));
+        out.push('\n');
+        out.push_str(&scatter_plot(
+            &format!("goodput vs offered load (SLO {} ms)", self.cfg.slo_ms),
+            "offered req/s",
+            "goodput req/s",
+            &good_plot,
+        ));
+        out.push('\n');
+        out
+    }
+
+    /// Machine-readable artifact (`SERVE_*.json`, schema version 1).
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                Json::obj([
+                    ("load", Json::num(p.load)),
+                    ("offered_rps", Json::num(p.offered_rps)),
+                    ("requests", Json::int(p.requests)),
+                    ("completed", Json::int(p.completed)),
+                    ("dropped", Json::int(p.dropped)),
+                    ("goodput_rps", Json::num(p.goodput_rps)),
+                    ("slo_met", Json::int(p.slo_met)),
+                    ("mean_ms", Json::num(p.mean_ms)),
+                    ("p50_ms", Json::num(p.p50_ms)),
+                    ("p99_ms", Json::num(p.p99_ms)),
+                    ("p999_ms", Json::num(p.p999_ms)),
+                    ("p2_p50_ms", Json::num(p.p2_p50_ms)),
+                    ("p2_p99_ms", Json::num(p.p2_p99_ms)),
+                    ("p2_p999_ms", Json::num(p.p2_p999_ms)),
+                    ("little_l", Json::num(p.little_l)),
+                    ("little_rel_err", Json::num(p.little_rel_err)),
+                    ("utilization", Json::num(p.utilization)),
+                    ("tokens_per_s", Json::num(p.tokens_per_s)),
+                    ("tokens_per_s_mm2", Json::num(p.tokens_per_s_mm2)),
+                    ("batches", Json::int(p.batches)),
+                    ("horizon_s", Json::num(p.horizon_s)),
+                ])
+            })
+            .collect();
+        let buckets: Vec<Json> = self
+            .model
+            .buckets()
+            .iter()
+            .map(|&(t, l)| {
+                Json::obj([
+                    ("max_tokens", Json::int(t as usize)),
+                    ("latency_s", Json::num(l)),
+                ])
+            })
+            .collect();
+        Json::obj([
+            ("artifact", Json::str("serve")),
+            ("version", Json::int(1)),
+            ("model", Json::str(self.cfg.model.name())),
+            ("method", Json::str(self.cfg.method.name())),
+            ("dram", Json::str(self.cfg.dram.name())),
+            ("sched", Json::str(self.cfg.sched.name())),
+            ("arrivals", Json::str(&self.cfg.arrivals.label())),
+            ("duration_s", Json::num(self.cfg.duration_s)),
+            ("slo_ms", Json::num(self.cfg.slo_ms)),
+            ("batch_close", Json::str(&self.cfg.params.close.label())),
+            ("max_batch_jobs", Json::int(self.cfg.params.max_batch_jobs)),
+            ("queue_cap", Json::int(self.cfg.params.queue_cap)),
+            ("decode_chunk", Json::int(self.cfg.params.decode_chunk as usize)),
+            ("iters", Json::int(self.cfg.iters)),
+            // string, not number: JSON numbers are f64 and would corrupt
+            // u64 seeds above 2^53, breaking reproduction from the artifact
+            ("seed", Json::str(self.cfg.seed.to_string())),
+            ("forward_fraction", Json::num(FORWARD_FRACTION)),
+            ("area_mm2", Json::num(self.area_mm2)),
+            ("oracle", Json::str("validated")),
+            ("dropped_by_budget", Json::int(self.dropped_loads)),
+            ("service_model", Json::Arr(buckets)),
+            ("cache", self.eval.to_json()),
+            ("points", Json::Arr(points)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(threads: usize) -> ServeConfig {
+        ServeConfig {
+            arrivals: ArrivalProcess::Poisson { rate: 150.0 },
+            duration_s: 1.0,
+            loads: vec![0.5, 1.0],
+            iters: 1,
+            seed: 11,
+            threads,
+            ..ServeConfig::paper_default()
+        }
+    }
+
+    #[test]
+    fn sweep_points_pass_oracle_and_littles_law() {
+        let out = run(&tiny(1));
+        assert_eq!(out.points.len(), 2);
+        for p in &out.points {
+            assert!(p.requests > 0, "no traffic generated");
+            assert_eq!(p.completed + p.dropped, p.requests, "conservation");
+            assert!(
+                p.little_rel_err < 0.01,
+                "Little's law violated: rel_err {}",
+                p.little_rel_err
+            );
+            assert!(p.p50_ms <= p.p99_ms && p.p99_ms <= p.p999_ms);
+            assert!(p.utilization > 0.0 && p.utilization <= 1.0 + 1e-9);
+            assert!(p.tokens_per_s > 0.0 && p.tokens_per_s_mm2 > 0.0);
+        }
+        // higher load => more offered traffic
+        assert!(out.points[1].offered_rps > out.points[0].offered_rps);
+    }
+
+    #[test]
+    fn sweep_is_reproducible_and_thread_invariant() {
+        let a = run(&tiny(1));
+        let b = run(&tiny(2));
+        assert_eq!(a.points.len(), b.points.len());
+        for (x, y) in a.points.iter().zip(b.points.iter()) {
+            assert_eq!(x.requests, y.requests);
+            assert_eq!(x.completed, y.completed);
+            assert_eq!(x.p99_ms.to_bits(), y.p99_ms.to_bits());
+            assert_eq!(x.goodput_rps.to_bits(), y.goodput_rps.to_bits());
+            assert_eq!(x.little_rel_err.to_bits(), y.little_rel_err.to_bits());
+            assert_eq!(x.tokens_per_s.to_bits(), y.tokens_per_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn budget_truncates_load_points_loudly() {
+        let mut cfg = tiny(1);
+        cfg.budget = 1;
+        let out = run(&cfg);
+        assert_eq!(out.points.len(), 1);
+        assert_eq!(out.dropped_loads, 1);
+        assert!(out.render_markdown().contains("budget truncation"));
+    }
+
+    #[test]
+    fn p2_estimates_track_exact_percentiles_in_the_artifact() {
+        let mut cfg = tiny(1);
+        cfg.duration_s = 2.0;
+        cfg.loads = vec![1.0];
+        let out = run(&cfg);
+        let p = &out.points[0];
+        assert!(p.completed > 100, "need enough samples, got {}", p.completed);
+        // p50 estimates agree within 15% of the exact spread
+        let spread = (p.p999_ms - p.p50_ms).max(p.p50_ms).max(1e-9);
+        assert!(
+            (p.p2_p50_ms - p.p50_ms).abs() / spread < 0.15,
+            "p2 p50 {} vs exact {}",
+            p.p2_p50_ms,
+            p.p50_ms
+        );
+    }
+
+    #[test]
+    fn report_and_json_are_well_formed() {
+        let out = run(&tiny(0));
+        let md = out.render_markdown();
+        assert!(md.contains("saturation curve"));
+        assert!(md.contains("p99 latency vs offered load"));
+        assert!(md.contains("goodput vs offered load"));
+        let js = out.to_json().render_pretty();
+        for key in [
+            "\"artifact\"", "\"version\"", "\"arrivals\"", "\"slo_ms\"",
+            "\"batch_close\"", "\"service_model\"", "\"points\"",
+            "\"goodput_rps\"", "\"p99_ms\"", "\"p2_p99_ms\"",
+            "\"little_rel_err\"", "\"tokens_per_s_mm2\"", "\"oracle\"",
+        ] {
+            assert!(js.contains(key), "missing {key}");
+        }
+        assert!(js.contains("\"seed\": \"11\""));
+        assert!(js.contains("\"artifact\": \"serve\""));
+    }
+
+    #[test]
+    fn service_model_buckets_are_positive_and_ordered() {
+        let out = run(&tiny(1));
+        let b = out.model.buckets();
+        assert_eq!(b.len(), SERVICE_BUCKETS.len());
+        for w in b.windows(2) {
+            assert!(w[0].0 < w[1].0);
+            // more tokens never costs less (step latency grows with seq_len)
+            assert!(w[0].1 <= w[1].1, "bucket latencies not monotone: {b:?}");
+        }
+    }
+}

@@ -1,11 +1,13 @@
 //! Metrics: per-step energy accounting, the attention-vs-FFN roofline
-//! profiler (paper Appendix C.1, Figures 10-13), and the Pareto-dominance
+//! profiler (paper Appendix C.1, Figures 10-13), the Pareto-dominance
 //! analysis (batch + streaming archive) behind the design-space explorer
-//! and the guided search strategies.
+//! and the guided search strategies, and the serving SLO metrics
+//! (streaming P² percentiles, Little's-law consistency).
 
 pub mod energy;
 pub mod pareto;
 pub mod roofline;
+pub mod slo;
 
 pub use energy::{step_energy, EnergyBreakdown};
 // `pareto::Frontier` (the streaming archive) is deliberately NOT re-exported
@@ -16,3 +18,4 @@ pub use pareto::{
     non_dominated_sort, pareto_frontier,
 };
 pub use roofline::{profile_decoder_layer, Olmo2Scale, RooflineRow};
+pub use slo::{littles_law, LittlesLaw, P2Quantile};

@@ -1,0 +1,309 @@
+//! SLO metrics for the serving workload: streaming quantiles and the
+//! Little's-law consistency check.
+//!
+//! * [`P2Quantile`] — the P² (Jain & Chlamtac 1985) streaming quantile
+//!   estimator: five markers tracking a target percentile in O(1) space,
+//!   so `mozart serve` can report p50/p99/p999 without holding every
+//!   latency sample. The estimator is *checked against* the exact
+//!   sort-based [`crate::util::stats::percentile`] in the property
+//!   tests — both numbers appear in the `SERVE_*.json` artifact, and a
+//!   divergence is a bug.
+//! * [`littles_law`] — L = λW evaluated from two *independently
+//!   computed* sides: L as the time-average number of requests in the
+//!   system (an event-sweep integral of N(t)) and λW from the
+//!   completion count and mean sojourn time. A simulator that loses,
+//!   duplicates, or time-warps a request breaks the identity; every
+//!   emitted serve artifact must keep the relative error under 1%.
+
+use crate::util::stats;
+
+/// Streaming estimate of one quantile via the P² algorithm: five
+/// markers whose heights approximate the q-quantile without storing
+/// samples. Exact (sort-based) below five observations.
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    q: f64,
+    count: u64,
+    /// Marker heights (sorted ascending once initialized).
+    heights: [f64; 5],
+    /// Actual marker positions, 1-based.
+    pos: [f64; 5],
+    /// Desired marker positions.
+    desired: [f64; 5],
+    /// Per-observation increments of the desired positions.
+    incr: [f64; 5],
+    /// Holds the first few samples until five have arrived.
+    init: Vec<f64>,
+}
+
+impl P2Quantile {
+    /// Estimator for the `q`-quantile, `q` in (0, 1) — e.g. `0.99` for p99.
+    pub fn new(q: f64) -> Self {
+        assert!(q > 0.0 && q < 1.0, "quantile {q} outside (0, 1)");
+        P2Quantile {
+            q,
+            count: 0,
+            heights: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            incr: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            init: Vec::with_capacity(5),
+        }
+    }
+
+    /// Samples observed so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Feed one observation.
+    pub fn observe(&mut self, x: f64) {
+        self.count += 1;
+        if self.count <= 5 {
+            self.init.push(x);
+            if self.count == 5 {
+                self.init.sort_by(f64::total_cmp);
+                for (h, &v) in self.heights.iter_mut().zip(self.init.iter()) {
+                    *h = v;
+                }
+            }
+            return;
+        }
+
+        // locate the cell k with heights[k] <= x < heights[k+1],
+        // extending the extreme markers when x falls outside them
+        let h = &mut self.heights;
+        let k = if x < h[0] {
+            h[0] = x;
+            0
+        } else if x >= h[4] {
+            if x > h[4] {
+                h[4] = x;
+            }
+            3
+        } else {
+            let mut k = 0;
+            while k < 3 && x >= h[k + 1] {
+                k += 1;
+            }
+            k
+        };
+
+        for i in (k + 1)..5 {
+            self.pos[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.desired[i] += self.incr[i];
+        }
+
+        // nudge the three interior markers toward their desired positions
+        for i in 1..4 {
+            let d = self.desired[i] - self.pos[i];
+            let room_up = self.pos[i + 1] - self.pos[i] > 1.0;
+            let room_dn = self.pos[i - 1] - self.pos[i] < -1.0;
+            if (d >= 1.0 && room_up) || (d <= -1.0 && room_dn) {
+                let d = d.signum();
+                let qp = self.parabolic(i, d);
+                self.heights[i] = if self.heights[i - 1] < qp && qp < self.heights[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, d)
+                };
+                self.pos[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let q = &self.heights;
+        let n = &self.pos;
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.heights[i]
+            + d * (self.heights[j] - self.heights[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate of the quantile. NaN before the first sample;
+    /// exact (sort-based) while fewer than five samples have arrived.
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.count < 5 {
+            let mut s = self.init.clone();
+            s.sort_by(f64::total_cmp);
+            return stats::percentile(&s, self.q * 100.0);
+        }
+        self.heights[2]
+    }
+}
+
+/// Both sides of Little's law plus their relative disagreement
+/// (see [`littles_law`]).
+#[derive(Clone, Copy, Debug)]
+pub struct LittlesLaw {
+    /// Time-average number of requests in the system (event-sweep
+    /// integral of N(t) over the horizon).
+    pub l: f64,
+    /// Completion throughput over the horizon, requests/s.
+    pub lambda_per_s: f64,
+    /// Mean sojourn (arrival → completion) time, seconds.
+    pub mean_sojourn_s: f64,
+    /// `|L − λW| / max(L, ε)` — must stay under 0.01 on every emitted
+    /// serve artifact.
+    pub rel_err: f64,
+}
+
+/// Check Little's law L = λW over completed-request `(arrival_s,
+/// finish_s)` spans observed on `[0, horizon_s]`.
+///
+/// The two sides are computed independently: L by sweeping +1/−1
+/// events and integrating the in-system count N(t) (finishes clamped
+/// to the horizon), λW from the completion count and the mean
+/// *unclamped* sojourn. Requests still in flight at the horizon — or
+/// any accounting bug that loses, duplicates, or reorders a request —
+/// drive the two sides apart.
+pub fn littles_law(spans: &[(f64, f64)], horizon_s: f64) -> LittlesLaw {
+    assert!(horizon_s > 0.0, "horizon must be > 0");
+    if spans.is_empty() {
+        return LittlesLaw {
+            l: 0.0,
+            lambda_per_s: 0.0,
+            mean_sojourn_s: 0.0,
+            rel_err: 0.0,
+        };
+    }
+    let mut events: Vec<(f64, f64)> = Vec::with_capacity(2 * spans.len());
+    let mut sojourn_sum = 0.0;
+    for &(a, f) in spans {
+        assert!(f >= a, "finish {f} before arrival {a}");
+        sojourn_sum += f - a;
+        events.push((a.min(horizon_s), 1.0));
+        events.push((f.min(horizon_s), -1.0));
+    }
+    // departures before arrivals at equal timestamps: N(t) stays minimal
+    events.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.total_cmp(&y.1)));
+    let (mut area, mut n, mut prev) = (0.0, 0.0, 0.0);
+    for (t, delta) in events {
+        area += n * (t - prev);
+        n += delta;
+        prev = t;
+    }
+    let l = area / horizon_s;
+    let lambda = spans.len() as f64 / horizon_s;
+    let w = sojourn_sum / spans.len() as f64;
+    let rhs = lambda * w;
+    let rel_err = (l - rhs).abs() / l.max(1e-12);
+    LittlesLaw {
+        l,
+        lambda_per_s: lambda,
+        mean_sojourn_s: w,
+        rel_err,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn exact(samples: &[f64], q: f64) -> f64 {
+        let mut s = samples.to_vec();
+        s.sort_by(f64::total_cmp);
+        stats::percentile(&s, q * 100.0)
+    }
+
+    /// Satellite 3: the P² streaming estimate converges to the exact
+    /// sort-based percentile on seeded workloads, across distribution
+    /// shapes and target quantiles.
+    #[test]
+    fn p2_converges_to_exact_percentiles() {
+        let mut rng = Rng::new(42);
+        let n = 20_000;
+        let uniform: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let normal: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let expo: Vec<f64> = (0..n).map(|_| -(1.0 - rng.f64()).ln()).collect();
+        for (name, samples) in [("uniform", &uniform), ("normal", &normal), ("exp", &expo)] {
+            for q in [0.5, 0.9, 0.99] {
+                let mut p2 = P2Quantile::new(q);
+                for &x in samples.iter() {
+                    p2.observe(x);
+                }
+                let est = p2.value();
+                let truth = exact(samples, q);
+                let spread = exact(samples, 0.999) - exact(samples, 0.001);
+                let err = (est - truth).abs() / spread;
+                assert!(
+                    err < 0.02,
+                    "{name} q={q}: p2={est} exact={truth} relerr={err}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn p2_is_exact_below_five_samples() {
+        let mut p2 = P2Quantile::new(0.5);
+        assert!(p2.value().is_nan());
+        for (i, x) in [5.0, 1.0, 3.0].iter().enumerate() {
+            p2.observe(*x);
+            assert_eq!(p2.count(), i as u64 + 1);
+        }
+        assert_eq!(p2.value(), 3.0); // exact median of {1, 3, 5}
+    }
+
+    #[test]
+    fn p2_heights_stay_ordered_and_bounded() {
+        let mut rng = Rng::new(7);
+        let mut p2 = P2Quantile::new(0.99);
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for _ in 0..5_000 {
+            let x = rng.normal() * 10.0;
+            lo = lo.min(x);
+            hi = hi.max(x);
+            p2.observe(x);
+        }
+        let v = p2.value();
+        assert!(v >= lo && v <= hi, "estimate {v} outside [{lo}, {hi}]");
+        for w in p2.heights.windows(2) {
+            assert!(w[0] <= w[1], "marker heights out of order: {:?}", p2.heights);
+        }
+    }
+
+    #[test]
+    fn littles_law_holds_on_consistent_accounting() {
+        // random but complete spans: L and λW must agree to rounding
+        let mut rng = Rng::new(11);
+        let mut spans = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..2_000 {
+            t += rng.f64() * 0.01;
+            spans.push((t, t + 0.001 + rng.f64() * 0.05));
+        }
+        let horizon = spans.iter().map(|s| s.1).fold(0.0, f64::max) + 0.01;
+        let ll = littles_law(&spans, horizon);
+        assert!(ll.rel_err < 1e-9, "rel_err={}", ll.rel_err);
+        assert!(ll.l > 0.0 && ll.lambda_per_s > 0.0 && ll.mean_sojourn_s > 0.0);
+    }
+
+    #[test]
+    fn littles_law_flags_truncated_sojourns() {
+        // a request still in flight at the horizon breaks the identity:
+        // the integral clamps at the horizon, the sojourn side does not
+        let spans = vec![(0.0, 1.0), (0.1, 50.0)];
+        let ll = littles_law(&spans, 2.0);
+        assert!(ll.rel_err > 0.5, "rel_err={} should be large", ll.rel_err);
+    }
+
+    #[test]
+    fn littles_law_empty_is_clean() {
+        let ll = littles_law(&[], 1.0);
+        assert_eq!(ll.rel_err, 0.0);
+        assert_eq!(ll.l, 0.0);
+    }
+}

@@ -15,11 +15,21 @@
 //! upward-rank, or work-conserving greedy — all bit-reproducible, all
 //! checked by the schedule-validity oracle ([`ScheduleTrace::validate`])
 //! in debug builds and tests.
+//!
+//! [`serve`] layers an event-driven queueing simulation on top: open-loop
+//! request traffic, continuous dynamic batching with pluggable
+//! batch-close policies, and its own queueing-invariant oracle
+//! ([`ServeTrace::validate`]).
 
 pub mod engine;
 pub mod plan;
 pub mod sched;
+pub mod serve;
 
 pub use engine::{SimResult, SimScratch, Simulator};
 pub use plan::{Plan, ResourceId, Tag, TagBreakdown, TaskId, TaskSpec};
 pub use sched::{SchedPolicy, ScheduleTrace, Scheduler, TaskSlot};
+pub use serve::{
+    simulate_serve, BatchClose, CloseReason, Job, JobClass, ServeParams, ServeTrace,
+    ServiceModel,
+};

@@ -1,0 +1,1055 @@
+//! Event-driven queueing layer for the serving workload: continuous
+//! dynamic batching of prefill/decode jobs over a single logical server,
+//! plus the [`ServeTrace::validate`] queueing-invariant oracle.
+//!
+//! The model is deliberately the textbook one so it can be checked
+//! against closed-form queueing theory (M/D/1 Pollaczek–Khinchine in
+//! the differential tests) while still exercising the real batching
+//! semantics of LLM serving:
+//!
+//! * Each [`Request`](crate::trace::arrivals::Request) expands into a
+//!   **prefill job** (ready at arrival) followed by a chain of **decode
+//!   chunk jobs** — continuous batching: a request re-enters the ready
+//!   queue after every chunk, so new arrivals interleave with in-flight
+//!   decodes instead of waiting behind whole requests.
+//! * The server executes one batch at a time. **Batch close IS service
+//!   start**: when the server frees up, the [`BatchClose`] policy picks
+//!   the moment the next batch closes (`size:N` waits for N ready jobs,
+//!   `timeout:MS` closes a deadline after the oldest ready job,
+//!   `hybrid:MS:N` at whichever trigger fires first) and the batch
+//!   departs as one unit after a [`ServiceModel`] lookup on its total
+//!   token count. Once the arrival stream is exhausted the closer
+//!   switches to drain mode (serve whatever is ready, immediately) so
+//!   every run ends with an empty queue — which is what lets the
+//!   Little's-law check hold exactly.
+//! * Admission is FIFO with an optional queue cap: a request arriving
+//!   while `queue_cap` requests are in the system is dropped (and
+//!   counted — conservation is an oracle invariant, nothing vanishes).
+//!
+//! Everything the engine decides is recorded in a [`ServeTrace`];
+//! [`ServeTrace::validate`] re-derives every decision from first
+//! principles (FIFO-within-class order, no service before ready, batch
+//! tightness `start == max(prev_finish, trigger)` with exact f64
+//! equality, close-policy triggers, conservation, drop legality,
+//! service-duration exactness) and is run automatically under
+//! `debug_assertions` — the serving analogue of
+//! [`ScheduleTrace::validate`](crate::sim::sched::ScheduleTrace).
+
+use crate::trace::arrivals::Request;
+use anyhow::{bail, ensure, Context, Result};
+
+/// Which pass a job belongs to (prefill = prompt ingestion, decode =
+/// one autoregressive output chunk).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum JobClass {
+    /// Prompt-ingestion pass: one job per request, ready at arrival.
+    Prefill,
+    /// One decode chunk; ready when the previous chunk's batch finishes.
+    Decode,
+}
+
+impl JobClass {
+    /// Lowercase label for artifacts.
+    pub fn label(self) -> &'static str {
+        match self {
+            JobClass::Prefill => "prefill",
+            JobClass::Decode => "decode",
+        }
+    }
+}
+
+/// One schedulable unit of work: a request's prefill pass or one of its
+/// decode chunks.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Job {
+    /// Owning request id.
+    pub request: u64,
+    /// Prefill or decode.
+    pub class: JobClass,
+    /// Chunk index within the request: 0 = prefill, 1.. = decode chunks.
+    pub seq: u32,
+    /// Tokens processed by this job.
+    pub tokens: u32,
+    /// Earliest time the job can be served (arrival for prefill, the
+    /// producing batch's finish for a decode chunk).
+    pub ready_s: f64,
+}
+
+fn job_key(j: &Job) -> (f64, u64, u32) {
+    (j.ready_s, j.request, j.seq)
+}
+
+fn key_lt(a: (f64, u64, u32), b: (f64, u64, u32)) -> bool {
+    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)) == std::cmp::Ordering::Less
+}
+
+/// FIFO order: by ready time, ties by request id then chunk index.
+fn sort_jobs(jobs: &mut [Job]) {
+    jobs.sort_by(|a, b| {
+        a.ready_s
+            .total_cmp(&b.ready_s)
+            .then(a.request.cmp(&b.request))
+            .then(a.seq.cmp(&b.seq))
+    });
+}
+
+/// When the next batch closes (and, since batch close is service start,
+/// when the server begins executing it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BatchClose {
+    /// Close as soon as `N` jobs are ready; the batch is exactly `N` jobs.
+    Size(usize),
+    /// Close a fixed deadline (seconds) after the oldest ready job.
+    Timeout(f64),
+    /// Whichever of `Size(N)` / `Timeout(s)` fires first; batches are
+    /// capped at `N` jobs either way.
+    Hybrid(f64, usize),
+}
+
+impl BatchClose {
+    /// Parse the CLI grammar: `size:N` | `timeout:MS` | `hybrid:MS:N`
+    /// (milliseconds on the wire, seconds internally).
+    pub fn parse(spec: &str) -> Result<BatchClose> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let close = match parts.as_slice() {
+            ["size", n] => BatchClose::Size(
+                n.parse::<usize>()
+                    .with_context(|| format!("bad batch size in `{spec}`"))?,
+            ),
+            ["timeout", ms] => BatchClose::Timeout(
+                ms.parse::<f64>()
+                    .with_context(|| format!("bad timeout in `{spec}`"))?
+                    / 1e3,
+            ),
+            ["hybrid", ms, n] => BatchClose::Hybrid(
+                ms.parse::<f64>()
+                    .with_context(|| format!("bad timeout in `{spec}`"))?
+                    / 1e3,
+                n.parse::<usize>()
+                    .with_context(|| format!("bad batch size in `{spec}`"))?,
+            ),
+            _ => bail!("bad batch-close spec `{spec}` (expected size:N | timeout:MS | hybrid:MS:N)"),
+        };
+        close.check()?;
+        Ok(close)
+    }
+
+    fn check(&self) -> Result<()> {
+        match *self {
+            BatchClose::Size(n) => ensure!(n >= 1, "batch size must be >= 1"),
+            BatchClose::Timeout(s) => {
+                ensure!(s >= 0.0 && s.is_finite(), "batch timeout must be >= 0")
+            }
+            BatchClose::Hybrid(s, n) => {
+                ensure!(s >= 0.0 && s.is_finite(), "batch timeout must be >= 0");
+                ensure!(n >= 1, "batch size must be >= 1");
+            }
+        }
+        Ok(())
+    }
+
+    /// Short label (`size:8`, `timeout:5ms`, `hybrid:5ms:8`).
+    pub fn label(&self) -> String {
+        match *self {
+            BatchClose::Size(n) => format!("size:{n}"),
+            BatchClose::Timeout(s) => format!("timeout:{}ms", s * 1e3),
+            BatchClose::Hybrid(s, n) => format!("hybrid:{}ms:{n}", s * 1e3),
+        }
+    }
+}
+
+/// Token-bucketed batch service times: the cost of executing one closed
+/// batch, looked up by its total token count (smallest bucket that
+/// covers the count; the largest bucket is the ceiling). Built by the
+/// serve coordinator from real step simulations; tests construct
+/// degenerate models directly (e.g. [`ServiceModel::constant`] for the
+/// deterministic-service M/D/1 differential).
+#[derive(Clone, Debug)]
+pub struct ServiceModel {
+    /// `(max_tokens, latency_s)` rows, strictly increasing in tokens.
+    buckets: Vec<(u64, f64)>,
+}
+
+impl ServiceModel {
+    /// Build from `(max_tokens, latency_s)` rows (strictly increasing
+    /// token ceilings, positive finite latencies).
+    pub fn new(buckets: Vec<(u64, f64)>) -> Result<ServiceModel> {
+        ensure!(!buckets.is_empty(), "service model needs at least one bucket");
+        for w in buckets.windows(2) {
+            ensure!(
+                w[0].0 < w[1].0,
+                "service-model buckets must be strictly increasing"
+            );
+        }
+        for &(t, l) in &buckets {
+            ensure!(t >= 1, "bucket token ceiling must be >= 1");
+            ensure!(l > 0.0 && l.is_finite(), "bucket latency must be > 0");
+        }
+        Ok(ServiceModel { buckets })
+    }
+
+    /// A model that serves any batch in exactly `latency_s` seconds —
+    /// deterministic service, as the M/D/1 closed form assumes.
+    pub fn constant(latency_s: f64) -> ServiceModel {
+        ServiceModel::new(vec![(u64::MAX, latency_s)]).expect("constant model")
+    }
+
+    /// Service time for a batch totalling `tokens` tokens.
+    pub fn service_time(&self, tokens: u64) -> f64 {
+        for &(cap, lat) in &self.buckets {
+            if tokens <= cap {
+                return lat;
+            }
+        }
+        self.buckets.last().expect("non-empty").1
+    }
+
+    /// The `(max_tokens, latency_s)` rows (for artifacts and docs).
+    pub fn buckets(&self) -> &[(u64, f64)] {
+        &self.buckets
+    }
+}
+
+/// Engine knobs for one serving run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeParams {
+    /// Batch-close policy.
+    pub close: BatchClose,
+    /// Job cap per batch for timeout-closed and drain batches (`size` /
+    /// `hybrid` batches are capped by their own `N`).
+    pub max_batch_jobs: usize,
+    /// Admission cap on requests in the system; `0` = unbounded.
+    pub queue_cap: usize,
+    /// Decode tokens per chunk (>= 1); smaller chunks interleave decode
+    /// with new prefills more aggressively.
+    pub decode_chunk: u32,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        ServeParams {
+            close: BatchClose::Hybrid(0.005, 8),
+            max_batch_jobs: 32,
+            queue_cap: 0,
+            decode_chunk: 32,
+        }
+    }
+}
+
+/// Why a batch closed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CloseReason {
+    /// The size trigger fired: the Nth job became ready.
+    Size,
+    /// The timeout trigger fired: the oldest ready job hit its deadline.
+    Timeout,
+    /// The arrival stream was exhausted; the closer drains what is ready.
+    Drain,
+}
+
+impl CloseReason {
+    /// Lowercase label for artifacts.
+    pub fn label(self) -> &'static str {
+        match self {
+            CloseReason::Size => "size",
+            CloseReason::Timeout => "timeout",
+            CloseReason::Drain => "drain",
+        }
+    }
+}
+
+/// One executed batch: close/start time, finish, members.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchRec {
+    /// Batch close == service start time.
+    pub start_s: f64,
+    /// Service completion time (`start_s + service_time(tokens)`).
+    pub finish_s: f64,
+    /// Total tokens across member jobs.
+    pub tokens: u64,
+    /// Which trigger closed the batch.
+    pub reason: CloseReason,
+    /// Member jobs in selection (FIFO) order.
+    pub jobs: Vec<Job>,
+}
+
+/// Final disposition of one request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Outcome {
+    /// All jobs served; the request left the system at `finish_s`.
+    Completed {
+        /// Finish time of the request's last job's batch.
+        finish_s: f64,
+    },
+    /// Rejected at arrival because the queue cap was reached.
+    Dropped,
+}
+
+/// One request plus its disposition, as recorded in the trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestRec {
+    /// The original request.
+    pub request: Request,
+    /// Completed-or-dropped disposition (conservation: never neither).
+    pub outcome: Outcome,
+}
+
+/// Complete record of one serving run: every admission decision, every
+/// batch, every timestamp — enough for [`ServeTrace::validate`] to
+/// re-derive the engine's behavior from first principles.
+#[derive(Clone, Debug)]
+pub struct ServeTrace {
+    /// Engine knobs the run used.
+    pub params: ServeParams,
+    /// Every offered request with its disposition, in arrival (id) order.
+    pub requests: Vec<RequestRec>,
+    /// Executed batches in service order.
+    pub batches: Vec<BatchRec>,
+}
+
+/// Run the serving simulation: expand `requests` (sorted by arrival)
+/// into prefill/decode jobs, batch them per `params`, and time every
+/// batch with `model`. Drains to an empty queue after the last arrival.
+///
+/// Under `debug_assertions` the returned trace is validated by
+/// [`ServeTrace::validate`] before being returned.
+pub fn simulate_serve(
+    requests: &[Request],
+    model: &ServiceModel,
+    params: &ServeParams,
+) -> ServeTrace {
+    assert!(params.decode_chunk >= 1, "decode_chunk must be >= 1");
+    assert!(params.max_batch_jobs >= 1, "max_batch_jobs must be >= 1");
+    params.close.check().expect("valid close policy");
+    for w in requests.windows(2) {
+        assert!(
+            w[0].arrival_s <= w[1].arrival_s && w[0].id < w[1].id,
+            "requests must be sorted by arrival with increasing ids"
+        );
+    }
+
+    let n = requests.len();
+    let mut outcome: Vec<Option<Outcome>> = vec![None; n];
+    let mut pending: Vec<Job> = Vec::new();
+    let mut batches: Vec<BatchRec> = Vec::new();
+    // departures not yet applied to the in-system count, sorted ascending
+    let mut departures: Vec<f64> = Vec::new();
+    let mut in_system: usize = 0;
+    let mut arr_idx: usize = 0;
+    let mut free: f64 = 0.0;
+
+    let admit_until = |t: f64,
+                           arr_idx: &mut usize,
+                           pending: &mut Vec<Job>,
+                           departures: &mut Vec<f64>,
+                           in_system: &mut usize,
+                           outcome: &mut Vec<Option<Outcome>>| {
+        while *arr_idx < n && requests[*arr_idx].arrival_s <= t {
+            let r = &requests[*arr_idx];
+            // departures at or before this arrival free their slots first
+            while let Some(&d) = departures.first() {
+                if d <= r.arrival_s {
+                    departures.remove(0);
+                    *in_system -= 1;
+                } else {
+                    break;
+                }
+            }
+            if params.queue_cap > 0 && *in_system >= params.queue_cap {
+                outcome[r.id as usize] = Some(Outcome::Dropped);
+            } else {
+                pending.push(Job {
+                    request: r.id,
+                    class: JobClass::Prefill,
+                    seq: 0,
+                    tokens: r.prefill_tokens,
+                    ready_s: r.arrival_s,
+                });
+                *in_system += 1;
+            }
+            *arr_idx += 1;
+        }
+    };
+
+    loop {
+        admit_until(free, &mut arr_idx, &mut pending, &mut departures, &mut in_system, &mut outcome);
+        if pending.is_empty() {
+            if arr_idx == n {
+                break;
+            }
+            let t = requests[arr_idx].arrival_s;
+            admit_until(t, &mut arr_idx, &mut pending, &mut departures, &mut in_system, &mut outcome);
+            continue;
+        }
+        sort_jobs(&mut pending);
+
+        // decide the close time, batch cap, and reason
+        let (close, cap, reason) = if arr_idx == n {
+            // drain mode: serve whatever is ready, immediately
+            let cap = match params.close {
+                BatchClose::Size(nb) | BatchClose::Hybrid(_, nb) => nb,
+                BatchClose::Timeout(_) => params.max_batch_jobs,
+            };
+            (free.max(pending[0].ready_s), cap, CloseReason::Drain)
+        } else {
+            match params.close {
+                BatchClose::Size(nb) => {
+                    // wait for the Nth job, admitting any arrival that
+                    // would beat (or tie) the current trigger
+                    loop {
+                        if pending.len() >= nb {
+                            let t_sz = pending[nb - 1].ready_s;
+                            if arr_idx < n && requests[arr_idx].arrival_s <= t_sz {
+                                let t = requests[arr_idx].arrival_s;
+                                admit_until(t, &mut arr_idx, &mut pending, &mut departures, &mut in_system, &mut outcome);
+                                sort_jobs(&mut pending);
+                                continue;
+                            }
+                            break;
+                        }
+                        if arr_idx == n {
+                            break;
+                        }
+                        let t = requests[arr_idx].arrival_s;
+                        admit_until(t, &mut arr_idx, &mut pending, &mut departures, &mut in_system, &mut outcome);
+                        sort_jobs(&mut pending);
+                    }
+                    if pending.len() >= nb {
+                        (free.max(pending[nb - 1].ready_s), nb, CloseReason::Size)
+                    } else {
+                        // waiting exhausted the arrivals: drain
+                        (free.max(pending[0].ready_s), nb, CloseReason::Drain)
+                    }
+                }
+                BatchClose::Timeout(tmo) => {
+                    let t_to = pending[0].ready_s + tmo;
+                    let close = free.max(t_to);
+                    admit_until(close, &mut arr_idx, &mut pending, &mut departures, &mut in_system, &mut outcome);
+                    (close, params.max_batch_jobs, CloseReason::Timeout)
+                }
+                BatchClose::Hybrid(tmo, nb) => {
+                    let t_to = pending[0].ready_s + tmo;
+                    let horizon = free.max(t_to);
+                    admit_until(horizon, &mut arr_idx, &mut pending, &mut departures, &mut in_system, &mut outcome);
+                    sort_jobs(&mut pending);
+                    if pending.len() >= nb && pending[nb - 1].ready_s <= t_to {
+                        (free.max(pending[nb - 1].ready_s), nb, CloseReason::Size)
+                    } else {
+                        (horizon, nb, CloseReason::Timeout)
+                    }
+                }
+            }
+        };
+
+        // form the batch: the oldest ready jobs at `close`, up to `cap`
+        // (re-sort: the policy branches may have admitted new arrivals)
+        sort_jobs(&mut pending);
+        let mut batch: Vec<Job> = Vec::new();
+        let mut rest: Vec<Job> = Vec::new();
+        for job in pending.drain(..) {
+            if batch.len() < cap && job.ready_s <= close {
+                batch.push(job);
+            } else {
+                rest.push(job);
+            }
+        }
+        pending = rest;
+        debug_assert!(!batch.is_empty(), "closed an empty batch");
+
+        let tokens: u64 = batch.iter().map(|j| j.tokens as u64).sum();
+        let dur = model.service_time(tokens);
+        let finish = close + dur;
+
+        // spawn decode continuations / record completions
+        for job in &batch {
+            let req = &requests[job.request as usize];
+            let chunks = req.decode_tokens.div_ceil(params.decode_chunk);
+            if job.seq < chunks {
+                let done = job.seq * params.decode_chunk;
+                let next = (req.decode_tokens - done).min(params.decode_chunk);
+                pending.push(Job {
+                    request: job.request,
+                    class: JobClass::Decode,
+                    seq: job.seq + 1,
+                    tokens: next,
+                    ready_s: finish,
+                });
+            } else {
+                outcome[job.request as usize] = Some(Outcome::Completed { finish_s: finish });
+                let at = departures.partition_point(|&d| d <= finish);
+                departures.insert(at, finish);
+            }
+        }
+
+        batches.push(BatchRec {
+            start_s: close,
+            finish_s: finish,
+            tokens,
+            reason,
+            jobs: batch,
+        });
+        free = finish;
+    }
+
+    let trace = ServeTrace {
+        params: params.clone(),
+        requests: requests
+            .iter()
+            .map(|r| RequestRec {
+                request: *r,
+                outcome: outcome[r.id as usize].expect("conservation: drained to empty"),
+            })
+            .collect(),
+        batches,
+    };
+    #[cfg(debug_assertions)]
+    trace
+        .validate(model)
+        .expect("serve trace failed its own oracle");
+    trace
+}
+
+impl ServeTrace {
+    /// `(arrival_s, finish_s)` spans of completed requests (the input to
+    /// the Little's-law check).
+    pub fn completed_spans(&self) -> Vec<(f64, f64)> {
+        self.requests
+            .iter()
+            .filter_map(|r| match r.outcome {
+                Outcome::Completed { finish_s } => Some((r.request.arrival_s, finish_s)),
+                Outcome::Dropped => None,
+            })
+            .collect()
+    }
+
+    /// Number of dropped requests.
+    pub fn dropped(&self) -> usize {
+        self.requests
+            .iter()
+            .filter(|r| r.outcome == Outcome::Dropped)
+            .count()
+    }
+
+    /// The queueing-invariant oracle. Checks, with exact f64 equality
+    /// where the engine computes exactly:
+    ///
+    /// 1. **Conservation** — every request is completed XOR dropped;
+    ///    a completed request's jobs form exactly `prefill` +
+    ///    `ceil(decode/chunk)` decode chunks with the right token
+    ///    counts, served exactly once each, and its recorded finish is
+    ///    its last batch's finish; a dropped request has no jobs.
+    /// 2. **Causality** — no job served before it is ready; prefill
+    ///    ready == arrival; decode-chunk ready == producing batch finish.
+    /// 3. **FIFO within class** — flattened service order is sorted by
+    ///    `(ready_s, request, seq)` within each job class.
+    /// 4. **Server exclusivity + tightness** — batches do not overlap
+    ///    and `start == max(prev_finish, trigger)` where the trigger is
+    ///    re-derived per close reason (`Size`: Nth member's ready;
+    ///    `Timeout`: oldest member's ready + deadline; `Drain`: oldest
+    ///    member's ready).
+    /// 5. **Close policy honored** — `Size` batches carry exactly N
+    ///    jobs; `Timeout`/`Drain`/hybrid batches respect their caps,
+    ///    and an under-cap batch leaves no ready job behind
+    ///    (completeness / no starvation); `Drain` batches form a
+    ///    suffix of the run.
+    /// 6. **Service-duration exactness** — `finish == start +
+    ///    service_time(tokens)` and `tokens` equals the member sum.
+    /// 7. **Drop legality** — with a queue cap, a request is dropped
+    ///    iff the cap was reached at its arrival instant.
+    pub fn validate(&self, model: &ServiceModel) -> Result<()> {
+        let params = &self.params;
+        ensure!(params.decode_chunk >= 1, "decode_chunk must be >= 1");
+
+        // ---- per-request job accounting (conservation + causality) ----
+        let mut jobs_of: Vec<Vec<(usize, usize)>> = vec![Vec::new(); self.requests.len()];
+        for (bi, b) in self.batches.iter().enumerate() {
+            ensure!(!b.jobs.is_empty(), "batch {bi} is empty");
+            for (ji, j) in b.jobs.iter().enumerate() {
+                ensure!(
+                    (j.request as usize) < self.requests.len(),
+                    "batch {bi}: unknown request {}",
+                    j.request
+                );
+                jobs_of[j.request as usize].push((bi, ji));
+            }
+        }
+        for (ri, rec) in self.requests.iter().enumerate() {
+            ensure!(
+                rec.request.id as usize == ri,
+                "request ids must be dense and ordered"
+            );
+            let r = &rec.request;
+            let served = &jobs_of[ri];
+            match rec.outcome {
+                Outcome::Dropped => {
+                    ensure!(
+                        served.is_empty(),
+                        "dropped request {ri} was served (conservation)"
+                    );
+                    ensure!(
+                        params.queue_cap > 0,
+                        "request {ri} dropped without a queue cap"
+                    );
+                }
+                Outcome::Completed { finish_s } => {
+                    let chunks = r.decode_tokens.div_ceil(params.decode_chunk);
+                    ensure!(
+                        served.len() == 1 + chunks as usize,
+                        "request {ri}: {} jobs served, expected {} (conservation)",
+                        served.len(),
+                        1 + chunks
+                    );
+                    let mut prev_finish = r.arrival_s;
+                    for (seq, &(bi, ji)) in served.iter().enumerate() {
+                        let b = &self.batches[bi];
+                        let j = &b.jobs[ji];
+                        ensure!(
+                            j.seq as usize == seq,
+                            "request {ri}: job seq {} out of order",
+                            j.seq
+                        );
+                        let (class, want_tokens, want_ready) = if seq == 0 {
+                            (JobClass::Prefill, r.prefill_tokens, r.arrival_s)
+                        } else {
+                            let done = (seq as u32 - 1) * params.decode_chunk;
+                            (
+                                JobClass::Decode,
+                                (r.decode_tokens - done).min(params.decode_chunk),
+                                prev_finish,
+                            )
+                        };
+                        ensure!(j.class == class, "request {ri} job {seq}: wrong class");
+                        ensure!(
+                            j.tokens == want_tokens,
+                            "request {ri} job {seq}: {} tokens, expected {want_tokens}",
+                            j.tokens
+                        );
+                        ensure!(
+                            j.ready_s == want_ready,
+                            "request {ri} job {seq}: ready {} != {want_ready} \
+                             (no request served before arrival / chunk chaining)",
+                            j.ready_s
+                        );
+                        ensure!(
+                            b.start_s >= j.ready_s,
+                            "request {ri} job {seq}: served at {} before ready {}",
+                            b.start_s,
+                            j.ready_s
+                        );
+                        prev_finish = b.finish_s;
+                    }
+                    ensure!(
+                        finish_s == prev_finish,
+                        "request {ri}: recorded finish {finish_s} != last batch finish {prev_finish}"
+                    );
+                }
+            }
+        }
+
+        // ---- FIFO within class over the flattened service order ----
+        for class in [JobClass::Prefill, JobClass::Decode] {
+            let mut prev: Option<(f64, u64, u32)> = None;
+            for b in &self.batches {
+                for j in &b.jobs {
+                    if j.class != class {
+                        continue;
+                    }
+                    let k = job_key(j);
+                    if let Some(p) = prev {
+                        ensure!(
+                            key_lt(p, k),
+                            "{} jobs served out of FIFO order: {:?} then {:?}",
+                            class.label(),
+                            p,
+                            k
+                        );
+                    }
+                    prev = Some(k);
+                }
+            }
+        }
+
+        // ---- batch-level checks ----
+        let mut prev_finish = 0.0f64;
+        let mut seen_drain = false;
+        for (bi, b) in self.batches.iter().enumerate() {
+            // service-duration exactness
+            let tokens: u64 = b.jobs.iter().map(|j| j.tokens as u64).sum();
+            ensure!(
+                b.tokens == tokens,
+                "batch {bi}: recorded {} tokens, members sum to {tokens}",
+                b.tokens
+            );
+            let want_finish = b.start_s + model.service_time(tokens);
+            ensure!(
+                b.finish_s == want_finish,
+                "batch {bi}: finish {} != start + service_time = {want_finish}",
+                b.finish_s
+            );
+
+            // exclusivity
+            ensure!(
+                b.start_s >= prev_finish,
+                "batch {bi} starts at {} before previous finish {prev_finish} (server exclusivity)",
+                b.start_s
+            );
+
+            // drain batches form a suffix
+            if b.reason == CloseReason::Drain {
+                seen_drain = true;
+            } else {
+                ensure!(
+                    !seen_drain,
+                    "batch {bi}: {} batch after drain began",
+                    b.reason.label()
+                );
+            }
+
+            // tightness + policy trigger, re-derived from the members
+            let min_ready = b.jobs.iter().map(|j| j.ready_s).fold(f64::INFINITY, f64::min);
+            let max_ready = b.jobs.iter().map(|j| j.ready_s).fold(f64::NEG_INFINITY, f64::max);
+            let cap = match (params.close, b.reason) {
+                (BatchClose::Size(nb), CloseReason::Size) => {
+                    ensure!(
+                        b.jobs.len() == nb,
+                        "batch {bi}: size-closed with {} jobs, policy wants {nb}",
+                        b.jobs.len()
+                    );
+                    ensure!(
+                        b.start_s == prev_finish.max(max_ready),
+                        "batch {bi}: start {} != max(prev_finish, Nth ready) (tightness)",
+                        b.start_s
+                    );
+                    nb
+                }
+                (BatchClose::Timeout(tmo), CloseReason::Timeout) => {
+                    ensure!(
+                        b.start_s == prev_finish.max(min_ready + tmo),
+                        "batch {bi}: start {} != max(prev_finish, oldest + timeout) (tightness)",
+                        b.start_s
+                    );
+                    params.max_batch_jobs
+                }
+                (BatchClose::Hybrid(tmo, nb), CloseReason::Size) => {
+                    ensure!(
+                        b.jobs.len() == nb,
+                        "batch {bi}: size-closed with {} jobs, policy wants {nb}",
+                        b.jobs.len()
+                    );
+                    ensure!(
+                        max_ready <= min_ready + tmo,
+                        "batch {bi}: size trigger after the hybrid deadline"
+                    );
+                    ensure!(
+                        b.start_s == prev_finish.max(max_ready),
+                        "batch {bi}: start {} != max(prev_finish, Nth ready) (tightness)",
+                        b.start_s
+                    );
+                    nb
+                }
+                (BatchClose::Hybrid(tmo, nb), CloseReason::Timeout) => {
+                    ensure!(
+                        b.start_s == prev_finish.max(min_ready + tmo),
+                        "batch {bi}: start {} != max(prev_finish, oldest + timeout) (tightness)",
+                        b.start_s
+                    );
+                    nb
+                }
+                (close, CloseReason::Drain) => {
+                    ensure!(
+                        b.start_s == prev_finish.max(min_ready),
+                        "batch {bi}: drain start {} != max(prev_finish, oldest ready) (tightness)",
+                        b.start_s
+                    );
+                    match close {
+                        BatchClose::Size(nb) | BatchClose::Hybrid(_, nb) => nb,
+                        BatchClose::Timeout(_) => params.max_batch_jobs,
+                    }
+                }
+                (close, reason) => bail!(
+                    "batch {bi}: close reason `{}` impossible under policy `{}`",
+                    reason.label(),
+                    close.label()
+                ),
+            };
+            ensure!(
+                b.jobs.len() <= cap,
+                "batch {bi}: {} jobs exceed the cap {cap}",
+                b.jobs.len()
+            );
+
+            // completeness / no starvation: an under-cap batch leaves no
+            // ready job behind for a later batch
+            if b.jobs.len() < cap {
+                for later in &self.batches[bi + 1..] {
+                    for j in &later.jobs {
+                        ensure!(
+                            j.ready_s > b.start_s,
+                            "batch {bi} closed under cap at {} but job {:?} \
+                             (ready {}) was left waiting (completeness)",
+                            b.start_s,
+                            (j.request, j.seq),
+                            j.ready_s
+                        );
+                    }
+                }
+            }
+
+            prev_finish = b.finish_s;
+        }
+
+        // ---- drop legality under the queue cap ----
+        if params.queue_cap > 0 {
+            for (ri, rec) in self.requests.iter().enumerate() {
+                let a = rec.request.arrival_s;
+                // in-system at this arrival instant: admitted requests
+                // ordered before this one whose completion is after `a`
+                // (departures at exactly `a` free their slot first)
+                let live = self
+                    .requests
+                    .iter()
+                    .take(ri)
+                    .filter(|q| match q.outcome {
+                        Outcome::Completed { finish_s } => finish_s > a,
+                        Outcome::Dropped => false,
+                    })
+                    .count();
+                match rec.outcome {
+                    Outcome::Dropped => ensure!(
+                        live >= params.queue_cap,
+                        "request {ri} dropped with only {live} in system (cap {})",
+                        params.queue_cap
+                    ),
+                    Outcome::Completed { .. } => ensure!(
+                        live < params.queue_cap,
+                        "request {ri} admitted with {live} in system (cap {})",
+                        params.queue_cap
+                    ),
+                }
+            }
+        }
+
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::arrivals::{ArrivalProcess, RequestShape};
+
+    fn poisson_requests(rate: f64, dur: f64, seed: u64) -> Vec<Request> {
+        ArrivalProcess::Poisson { rate }.generate(dur, &RequestShape::fixed(128, 64), seed)
+    }
+
+    fn model() -> ServiceModel {
+        ServiceModel::new(vec![(256, 0.001), (1024, 0.003), (4096, 0.008)]).unwrap()
+    }
+
+    #[test]
+    fn batch_close_parse_grammar() {
+        assert_eq!(BatchClose::parse("size:8").unwrap(), BatchClose::Size(8));
+        assert_eq!(
+            BatchClose::parse("timeout:5").unwrap(),
+            BatchClose::Timeout(0.005)
+        );
+        assert_eq!(
+            BatchClose::parse("hybrid:2:4").unwrap(),
+            BatchClose::Hybrid(0.002, 4)
+        );
+        for bad in ["size", "size:0", "size:x", "timeout:-1", "hybrid:5", "grow:3", ""] {
+            assert!(BatchClose::parse(bad).is_err(), "`{bad}` should fail");
+        }
+        assert_eq!(BatchClose::Hybrid(0.005, 8).label(), "hybrid:5ms:8");
+    }
+
+    #[test]
+    fn service_model_bucket_lookup() {
+        let m = model();
+        assert_eq!(m.service_time(1), 0.001);
+        assert_eq!(m.service_time(256), 0.001);
+        assert_eq!(m.service_time(257), 0.003);
+        assert_eq!(m.service_time(9999), 0.008); // above all buckets: ceiling
+        assert!(ServiceModel::new(vec![]).is_err());
+        assert!(ServiceModel::new(vec![(5, 0.1), (5, 0.2)]).is_err());
+        assert!(ServiceModel::new(vec![(5, 0.0)]).is_err());
+    }
+
+    /// Every policy x arrival-process cell runs end to end and passes the
+    /// oracle explicitly (it also ran implicitly in debug builds).
+    #[test]
+    fn oracle_passes_across_policy_and_process_grid() {
+        let shape = RequestShape::fixed(96, 48);
+        let processes: Vec<(&str, Vec<Request>)> = vec![
+            (
+                "poisson",
+                ArrivalProcess::Poisson { rate: 300.0 }.generate(1.0, &shape, 5),
+            ),
+            (
+                "mmpp",
+                ArrivalProcess::Mmpp { rate: 300.0, burst: 6.0, dwell_s: 0.05 }
+                    .generate(1.0, &shape, 5),
+            ),
+            (
+                "diurnal",
+                ArrivalProcess::Diurnal { rate: 300.0, period_s: 0.5, amplitude: 0.8 }
+                    .generate(1.0, &shape, 5),
+            ),
+        ];
+        let policies = [
+            BatchClose::Size(4),
+            BatchClose::Timeout(0.004),
+            BatchClose::Hybrid(0.004, 4),
+        ];
+        let m = model();
+        for (pname, reqs) in &processes {
+            assert!(!reqs.is_empty(), "{pname}: no requests");
+            for close in policies {
+                let params = ServeParams { close, ..ServeParams::default() };
+                let trace = simulate_serve(reqs, &m, &params);
+                trace
+                    .validate(&m)
+                    .unwrap_or_else(|e| panic!("{pname} x {}: {e:#}", close.label()));
+                assert_eq!(
+                    trace.completed_spans().len() + trace.dropped(),
+                    reqs.len(),
+                    "{pname} x {}: conservation",
+                    close.label()
+                );
+                // drains to empty: last batch finish >= last arrival
+                let last = trace.batches.last().unwrap().finish_s;
+                assert!(last >= reqs.last().unwrap().arrival_s);
+            }
+        }
+    }
+
+    #[test]
+    fn size_policy_closes_exact_batches() {
+        let reqs = poisson_requests(500.0, 1.0, 9);
+        let m = model();
+        let params = ServeParams {
+            close: BatchClose::Size(4),
+            ..ServeParams::default()
+        };
+        let trace = simulate_serve(&reqs, &m, &params);
+        let sized = trace
+            .batches
+            .iter()
+            .filter(|b| b.reason == CloseReason::Size)
+            .count();
+        assert!(sized > 0, "no size-closed batches at this load");
+        for b in &trace.batches {
+            match b.reason {
+                CloseReason::Size => assert_eq!(b.jobs.len(), 4),
+                CloseReason::Drain => assert!(b.jobs.len() <= 4),
+                CloseReason::Timeout => panic!("timeout close under a size policy"),
+            }
+        }
+    }
+
+    #[test]
+    fn queue_cap_drops_and_conserves() {
+        let reqs = poisson_requests(2000.0, 0.5, 3);
+        let m = ServiceModel::constant(0.01); // slow server: forced backlog
+        let params = ServeParams {
+            close: BatchClose::Size(1),
+            queue_cap: 4,
+            ..ServeParams::default()
+        };
+        let trace = simulate_serve(&reqs, &m, &params);
+        trace.validate(&m).unwrap();
+        assert!(trace.dropped() > 0, "cap 4 at 20x overload must drop");
+        assert_eq!(trace.completed_spans().len() + trace.dropped(), reqs.len());
+    }
+
+    #[test]
+    fn simulation_is_deterministic() {
+        let reqs = poisson_requests(400.0, 1.0, 17);
+        let m = model();
+        let params = ServeParams::default();
+        let a = simulate_serve(&reqs, &m, &params);
+        let b = simulate_serve(&reqs, &m, &params);
+        assert_eq!(a.batches, b.batches);
+        assert_eq!(a.requests, b.requests);
+    }
+
+    // ---- oracle soundness: every mutation class is rejected ----
+
+    fn valid_trace() -> (ServeTrace, ServiceModel) {
+        let reqs = poisson_requests(300.0, 1.0, 21);
+        let m = model();
+        let params = ServeParams {
+            close: BatchClose::Size(4),
+            ..ServeParams::default()
+        };
+        let t = simulate_serve(&reqs, &m, &params);
+        t.validate(&m).unwrap();
+        (t, m)
+    }
+
+    #[test]
+    fn oracle_rejects_reordered_admissions() {
+        let (mut t, m) = valid_trace();
+        // swap the first jobs of two different batches: FIFO breaks
+        let (a, b) = (0, t.batches.len() / 2);
+        assert_ne!(a, b);
+        let ja = t.batches[a].jobs[0];
+        let jb = t.batches[b].jobs[0];
+        t.batches[a].jobs[0] = jb;
+        t.batches[b].jobs[0] = ja;
+        assert!(t.validate(&m).is_err(), "reordered admissions accepted");
+    }
+
+    #[test]
+    fn oracle_rejects_serve_before_arrival() {
+        let (mut t, m) = valid_trace();
+        // claim a job was ready (and served) before its request arrived
+        let bi = t.batches.len() / 2;
+        let j = &mut t.batches[bi].jobs[0];
+        j.ready_s -= 0.5;
+        assert!(t.validate(&m).is_err(), "serve-before-arrival accepted");
+    }
+
+    #[test]
+    fn oracle_rejects_dropped_completion() {
+        let (mut t, m) = valid_trace();
+        // lose a completion: mark a served request as dropped
+        let ri = t.requests.len() / 2;
+        t.requests[ri].outcome = Outcome::Dropped;
+        assert!(t.validate(&m).is_err(), "lost completion accepted");
+    }
+
+    #[test]
+    fn oracle_rejects_batch_close_violation() {
+        let (mut t, m) = valid_trace();
+        // shrink a size-closed batch below N (move its last job away)
+        let bi = t
+            .batches
+            .iter()
+            .position(|b| b.reason == CloseReason::Size)
+            .expect("a size-closed batch");
+        let j = t.batches[bi].jobs.pop().unwrap();
+        t.batches[bi].tokens -= j.tokens as u64;
+        // keep duration consistent so only the close policy is violated
+        t.batches[bi].finish_s = t.batches[bi].start_s + m.service_time(t.batches[bi].tokens);
+        assert!(t.validate(&m).is_err(), "undersized size batch accepted");
+    }
+
+    #[test]
+    fn oracle_rejects_overlapping_batches() {
+        let (mut t, m) = valid_trace();
+        let bi = t.batches.len() / 2;
+        // start a batch before its predecessor finished
+        t.batches[bi].start_s = t.batches[bi - 1].finish_s - 1e-6;
+        t.batches[bi].finish_s = t.batches[bi].start_s + m.service_time(t.batches[bi].tokens);
+        assert!(t.validate(&m).is_err(), "overlapping batches accepted");
+    }
+
+    #[test]
+    fn oracle_rejects_wrong_service_duration() {
+        let (mut t, m) = valid_trace();
+        let bi = t.batches.len() / 2;
+        t.batches[bi].finish_s += 1e-9;
+        assert!(t.validate(&m).is_err(), "padded service duration accepted");
+    }
+}

@@ -1,0 +1,635 @@
+//! Open-loop request-arrival processes for the serving workload.
+//!
+//! A serving experiment replays *traffic*, not a fixed batch: requests
+//! arrive according to a stochastic process regardless of whether the
+//! server keeps up (open-loop — the generator never waits for the
+//! system, which is what makes saturation visible). Four processes are
+//! supported, all seeded and bit-reproducible:
+//!
+//! * **Poisson** — memoryless baseline with exponential interarrivals
+//!   (CV = 1). The closed-form M/D/1 differential test anchors on it.
+//! * **MMPP** (`bursty`) — a two-state interrupted Poisson process: the
+//!   source alternates between an ON state emitting at `rate * burst`
+//!   and a silent OFF state, with exponential dwell times chosen so the
+//!   ON fraction is `1/burst`. The long-run mean rate equals `rate`,
+//!   but interarrivals are overdispersed (CV > 1) — the "burstier than
+//!   Poisson at the same rate" property the statistical tests assert.
+//! * **Diurnal** — a nonhomogeneous Poisson process with sinusoidally
+//!   modulated intensity `rate * (1 + amplitude * sin(2πt/period))`,
+//!   sampled exactly by thinning against the peak intensity.
+//! * **Trace** — timestamps and token counts loaded from a file, for
+//!   replaying recorded traffic (format: [`emit_trace`]).
+//!
+//! [`ArrivalProcess::generate`] turns a process plus a [`RequestShape`]
+//! into a sorted [`Request`] stream; [`ArrivalProcess::at_load`] scales
+//! the offered load for saturation sweeps.
+
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+
+/// One serving request: an arrival timestamp plus its token footprint.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    /// Arrival-order index (0-based; ties broken by generation order).
+    pub id: u64,
+    /// Arrival time in seconds from the start of the experiment.
+    pub arrival_s: f64,
+    /// Prompt tokens processed in the prefill pass.
+    pub prefill_tokens: u32,
+    /// Output tokens produced by the decode loop.
+    pub decode_tokens: u32,
+}
+
+/// Token-count distribution for generated requests: prefill and decode
+/// lengths drawn log-uniformly from inclusive ranges (log-uniform because
+/// real prompt-length distributions are heavy-tailed — a uniform draw
+/// over [16, 2048] would make almost every prompt long).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestShape {
+    /// Minimum prefill (prompt) tokens, inclusive.
+    pub prefill_min: u32,
+    /// Maximum prefill (prompt) tokens, inclusive.
+    pub prefill_max: u32,
+    /// Minimum decode (output) tokens, inclusive.
+    pub decode_min: u32,
+    /// Maximum decode (output) tokens, inclusive.
+    pub decode_max: u32,
+}
+
+impl Default for RequestShape {
+    fn default() -> Self {
+        RequestShape {
+            prefill_min: 64,
+            prefill_max: 1024,
+            decode_min: 16,
+            decode_max: 256,
+        }
+    }
+}
+
+impl RequestShape {
+    /// Degenerate shape: every request carries exactly `prefill` prompt
+    /// tokens and `decode` output tokens. Deterministic service demand is
+    /// what the M/D/1 Pollaczek–Khinchine differential test requires.
+    pub fn fixed(prefill: u32, decode: u32) -> Self {
+        RequestShape {
+            prefill_min: prefill,
+            prefill_max: prefill,
+            decode_min: decode,
+            decode_max: decode,
+        }
+    }
+
+    fn draw(&self, lo: u32, hi: u32, rng: &mut Rng) -> u32 {
+        assert!(hi >= lo, "token range [{lo}, {hi}]");
+        if lo == hi {
+            // degenerate range: any fixed value is fine, including 0
+            // (decode_tokens = 0 models single-shot prefill-only requests)
+            return lo;
+        }
+        assert!(lo >= 1, "log-uniform range needs lo >= 1, got [{lo}, {hi}]");
+        // log-uniform over [lo, hi], rounded to the nearest integer
+        let (a, b) = (lo as f64, hi as f64);
+        let v = a * (b / a).powf(rng.f64());
+        (v.round() as u32).clamp(lo, hi)
+    }
+
+    /// Draw one (prefill, decode) pair.
+    pub fn sample(&self, rng: &mut Rng) -> (u32, u32) {
+        let p = self.draw(self.prefill_min, self.prefill_max, rng);
+        let d = self.draw(self.decode_min, self.decode_max, rng);
+        (p, d)
+    }
+}
+
+/// A seeded open-loop arrival process (see the module docs for the four
+/// variants and their statistical contracts).
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson arrivals at `rate` requests/s.
+    Poisson {
+        /// Mean arrival rate in requests per second.
+        rate: f64,
+    },
+    /// Two-state Markov-modulated (interrupted) Poisson process with the
+    /// same long-run mean rate as `Poisson { rate }` but burstier
+    /// interarrivals (CV > 1).
+    Mmpp {
+        /// Long-run mean arrival rate in requests per second.
+        rate: f64,
+        /// Burstiness factor (> 1): the ON state emits at `rate * burst`
+        /// and occupies a `1/burst` fraction of time.
+        burst: f64,
+        /// Mean dwell time in the ON state, seconds (OFF dwells are
+        /// `dwell_s * (burst - 1)` so the ON fraction is `1/burst`).
+        dwell_s: f64,
+    },
+    /// Nonhomogeneous Poisson with sinusoidal intensity
+    /// `rate * (1 + amplitude * sin(2πt/period_s))`, sampled by thinning.
+    Diurnal {
+        /// Mean arrival rate in requests per second (the sinusoid's mean).
+        rate: f64,
+        /// Modulation period in seconds (a compressed "day").
+        period_s: f64,
+        /// Relative modulation depth in [0, 1].
+        amplitude: f64,
+    },
+    /// Arrivals replayed from a file (see [`emit_trace`] for the format).
+    Trace {
+        /// Path the trace was loaded from (for labels and artifacts).
+        path: String,
+        /// `(arrival_s, prefill_tokens, decode_tokens)` rows, sorted by
+        /// arrival time.
+        rows: Vec<(f64, u32, u32)>,
+    },
+}
+
+impl ArrivalProcess {
+    /// Parse a CLI spec:
+    ///
+    /// * `poisson:RATE`
+    /// * `mmpp:RATE[:BURST[:DWELL_S]]` (alias `bursty:`; defaults
+    ///   `BURST=4`, `DWELL_S=1`)
+    /// * `diurnal:RATE[:PERIOD_S[:AMPLITUDE]]` (defaults `PERIOD_S=60`,
+    ///   `AMPLITUDE=0.8`)
+    /// * `trace:FILE` (loads the file eagerly)
+    pub fn parse(spec: &str) -> Result<ArrivalProcess> {
+        let mut parts = spec.split(':');
+        let kind = parts.next().unwrap_or("");
+        let rest: Vec<&str> = parts.collect();
+        let num = |i: usize, name: &str, default: Option<f64>| -> Result<f64> {
+            match rest.get(i) {
+                Some(s) => s
+                    .parse::<f64>()
+                    .with_context(|| format!("bad {name} `{s}` in arrival spec `{spec}`")),
+                None => default
+                    .with_context(|| format!("arrival spec `{spec}` is missing {name}")),
+            }
+        };
+        let proc = match kind {
+            "poisson" => {
+                ensure!(rest.len() <= 1, "poisson takes one field: poisson:RATE");
+                ArrivalProcess::Poisson {
+                    rate: num(0, "RATE", None)?,
+                }
+            }
+            "mmpp" | "bursty" => {
+                ensure!(rest.len() <= 3, "{kind} takes mmpp:RATE[:BURST[:DWELL_S]]");
+                ArrivalProcess::Mmpp {
+                    rate: num(0, "RATE", None)?,
+                    burst: num(1, "BURST", Some(4.0))?,
+                    dwell_s: num(2, "DWELL_S", Some(1.0))?,
+                }
+            }
+            "diurnal" => {
+                ensure!(
+                    rest.len() <= 3,
+                    "diurnal takes diurnal:RATE[:PERIOD_S[:AMPLITUDE]]"
+                );
+                ArrivalProcess::Diurnal {
+                    rate: num(0, "RATE", None)?,
+                    period_s: num(1, "PERIOD_S", Some(60.0))?,
+                    amplitude: num(2, "AMPLITUDE", Some(0.8))?,
+                }
+            }
+            "trace" => {
+                ensure!(rest.len() == 1, "trace takes one field: trace:FILE");
+                let path = rest[0].to_string();
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading arrival trace `{path}`"))?;
+                let rows = parse_trace(&text)
+                    .with_context(|| format!("parsing arrival trace `{path}`"))?;
+                ArrivalProcess::Trace { path, rows }
+            }
+            other => bail!(
+                "unknown arrival process `{other}` in `{spec}` \
+                 (expected poisson | mmpp | bursty | diurnal | trace)"
+            ),
+        };
+        proc.check()?;
+        Ok(proc)
+    }
+
+    fn check(&self) -> Result<()> {
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                ensure!(rate > 0.0 && rate.is_finite(), "poisson rate must be > 0");
+            }
+            ArrivalProcess::Mmpp { rate, burst, dwell_s } => {
+                ensure!(rate > 0.0 && rate.is_finite(), "mmpp rate must be > 0");
+                ensure!(burst > 1.0 && burst.is_finite(), "mmpp burst must be > 1");
+                ensure!(dwell_s > 0.0 && dwell_s.is_finite(), "mmpp dwell must be > 0");
+            }
+            ArrivalProcess::Diurnal { rate, period_s, amplitude } => {
+                ensure!(rate > 0.0 && rate.is_finite(), "diurnal rate must be > 0");
+                ensure!(period_s > 0.0 && period_s.is_finite(), "diurnal period must be > 0");
+                ensure!(
+                    (0.0..=1.0).contains(&amplitude),
+                    "diurnal amplitude must be in [0, 1]"
+                );
+            }
+            ArrivalProcess::Trace { ref rows, .. } => {
+                ensure!(!rows.is_empty(), "arrival trace is empty");
+            }
+        }
+        Ok(())
+    }
+
+    /// Short human label for tables and artifacts (e.g. `poisson:100`).
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalProcess::Poisson { rate } => format!("poisson:{rate}"),
+            ArrivalProcess::Mmpp { rate, burst, dwell_s } => {
+                format!("mmpp:{rate}:{burst}:{dwell_s}")
+            }
+            ArrivalProcess::Diurnal { rate, period_s, amplitude } => {
+                format!("diurnal:{rate}:{period_s}:{amplitude}")
+            }
+            ArrivalProcess::Trace { path, .. } => format!("trace:{path}"),
+        }
+    }
+
+    /// Long-run mean arrival rate in requests per second. For a file
+    /// trace this is the empirical rate over the recorded span.
+    pub fn mean_rate(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate }
+            | ArrivalProcess::Mmpp { rate, .. }
+            | ArrivalProcess::Diurnal { rate, .. } => *rate,
+            ArrivalProcess::Trace { rows, .. } => {
+                let span = rows.last().map_or(0.0, |r| r.0);
+                if span > 0.0 {
+                    rows.len() as f64 / span
+                } else {
+                    rows.len() as f64
+                }
+            }
+        }
+    }
+
+    /// The same process at `mult` times the offered load: synthetic
+    /// processes scale their rate; a file trace compresses its
+    /// timestamps by `mult` (the standard trace-replay speedup).
+    pub fn at_load(&self, mult: f64) -> ArrivalProcess {
+        assert!(mult > 0.0, "load multiplier must be > 0");
+        match self.clone() {
+            ArrivalProcess::Poisson { rate } => ArrivalProcess::Poisson { rate: rate * mult },
+            ArrivalProcess::Mmpp { rate, burst, dwell_s } => ArrivalProcess::Mmpp {
+                rate: rate * mult,
+                burst,
+                dwell_s,
+            },
+            ArrivalProcess::Diurnal { rate, period_s, amplitude } => ArrivalProcess::Diurnal {
+                rate: rate * mult,
+                period_s,
+                amplitude,
+            },
+            ArrivalProcess::Trace { path, rows } => ArrivalProcess::Trace {
+                path,
+                rows: rows.into_iter().map(|(t, p, d)| (t / mult, p, d)).collect(),
+            },
+        }
+    }
+
+    /// Generate the request stream over `[0, duration_s)`.
+    ///
+    /// Deterministic in `(process, duration_s, shape, seed)` alone: the
+    /// arrival-time stream and the token-shape stream are independent
+    /// forks of one seeded [`Rng`], so the result is bit-identical
+    /// regardless of thread count or call site.
+    pub fn generate(&self, duration_s: f64, shape: &RequestShape, seed: u64) -> Vec<Request> {
+        assert!(duration_s > 0.0, "duration must be > 0");
+        let mut root = Rng::new(seed ^ 0x5e7e_a9b1_03d4_c2f7);
+        let mut time_rng = root.fork(1);
+        let mut shape_rng = root.fork(2);
+
+        let mut out = Vec::new();
+        match self {
+            ArrivalProcess::Poisson { rate } => {
+                let mut t = 0.0;
+                loop {
+                    t += exp_sample(&mut time_rng, 1.0 / rate);
+                    if t >= duration_s {
+                        break;
+                    }
+                    out.push((t, 0, 0));
+                }
+            }
+            ArrivalProcess::Mmpp { rate, burst, dwell_s } => {
+                // interrupted Poisson: ON emits at rate*burst for mean
+                // dwell_s, OFF emits nothing for mean dwell_s*(burst-1)
+                let on_rate = rate * burst;
+                let on_dwell = *dwell_s;
+                let off_dwell = dwell_s * (burst - 1.0);
+                // start in the stationary state distribution
+                let mut on = time_rng.f64() < 1.0 / burst;
+                let mut t = 0.0;
+                while t < duration_s {
+                    let dwell = exp_sample(&mut time_rng, if on { on_dwell } else { off_dwell });
+                    let end = (t + dwell).min(duration_s);
+                    if on {
+                        let mut a = t;
+                        loop {
+                            a += exp_sample(&mut time_rng, 1.0 / on_rate);
+                            if a >= end {
+                                break;
+                            }
+                            out.push((a, 0, 0));
+                        }
+                    }
+                    t = end;
+                    on = !on;
+                }
+            }
+            ArrivalProcess::Diurnal { rate, period_s, amplitude } => {
+                // exact thinning against the peak intensity
+                let lambda_max = rate * (1.0 + amplitude);
+                let mut t = 0.0;
+                loop {
+                    t += exp_sample(&mut time_rng, 1.0 / lambda_max);
+                    if t >= duration_s {
+                        break;
+                    }
+                    let lambda_t = rate
+                        * (1.0
+                            + amplitude
+                                * (2.0 * std::f64::consts::PI * t / period_s).sin());
+                    if time_rng.f64() * lambda_max < lambda_t {
+                        out.push((t, 0, 0));
+                    }
+                }
+            }
+            ArrivalProcess::Trace { rows, .. } => {
+                for &(t, p, d) in rows {
+                    if t < duration_s {
+                        out.push((t, p, d));
+                    }
+                }
+            }
+        }
+
+        let from_trace = matches!(self, ArrivalProcess::Trace { .. });
+        out.iter()
+            .enumerate()
+            .map(|(i, &(t, p, d))| {
+                let (p, d) = if from_trace { (p, d) } else { shape.sample(&mut shape_rng) };
+                Request {
+                    id: i as u64,
+                    arrival_s: t,
+                    prefill_tokens: p,
+                    decode_tokens: d,
+                }
+            })
+            .collect()
+    }
+}
+
+/// One exponential sample with the given mean (inverse CDF on `[0, 1)`).
+fn exp_sample(rng: &mut Rng, mean: f64) -> f64 {
+    -mean * (1.0 - rng.f64()).ln()
+}
+
+/// Render a request stream in the `mozart-serve-trace v1` text format:
+/// a magic header line, then one `arrival_s prefill decode` row per
+/// request. Round-trips through [`parse_trace`].
+pub fn emit_trace(requests: &[Request]) -> String {
+    let mut s = String::from("# mozart-serve-trace v1\n# arrival_s prefill_tokens decode_tokens\n");
+    for r in requests {
+        s.push_str(&format!(
+            "{:.9} {} {}\n",
+            r.arrival_s, r.prefill_tokens, r.decode_tokens
+        ));
+    }
+    s
+}
+
+/// Parse the `mozart-serve-trace v1` text format (see [`emit_trace`]).
+/// Comment lines start with `#`; rows must be sorted by arrival time.
+pub fn parse_trace(text: &str) -> Result<Vec<(f64, u32, u32)>> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().context("empty trace file")?;
+    ensure!(
+        header.trim() == "# mozart-serve-trace v1",
+        "bad trace header `{header}` (expected `# mozart-serve-trace v1`)"
+    );
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let line = line.trim();
+        if line.starts_with('#') {
+            continue;
+        }
+        let mut f = line.split_whitespace();
+        let t: f64 = f
+            .next()
+            .context("missing arrival_s")?
+            .parse()
+            .with_context(|| format!("trace row {i}: bad arrival_s in `{line}`"))?;
+        let p: u32 = f
+            .next()
+            .context("missing prefill_tokens")?
+            .parse()
+            .with_context(|| format!("trace row {i}: bad prefill_tokens in `{line}`"))?;
+        let d: u32 = f
+            .next()
+            .context("missing decode_tokens")?
+            .parse()
+            .with_context(|| format!("trace row {i}: bad decode_tokens in `{line}`"))?;
+        ensure!(f.next().is_none(), "trace row {i}: extra fields in `{line}`");
+        ensure!(t >= 0.0 && t.is_finite(), "trace row {i}: arrival_s {t} < 0");
+        // decode 0 is legal (prefill-only request); prefill 0 is not
+        ensure!(p >= 1, "trace row {i}: prefill_tokens must be >= 1");
+        if let Some(&(prev, _, _)) = rows.last() {
+            ensure!(
+                t >= prev,
+                "trace row {i}: arrivals out of order ({t} < {prev})"
+            );
+        }
+        rows.push((t, p, d));
+    }
+    ensure!(!rows.is_empty(), "trace has no rows");
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn interarrivals(reqs: &[Request]) -> Vec<f64> {
+        reqs.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect()
+    }
+
+    #[test]
+    fn parse_grammar_and_labels() {
+        match ArrivalProcess::parse("poisson:100").unwrap() {
+            ArrivalProcess::Poisson { rate } => assert_eq!(rate, 100.0),
+            p => panic!("{p:?}"),
+        }
+        match ArrivalProcess::parse("bursty:50").unwrap() {
+            ArrivalProcess::Mmpp { rate, burst, dwell_s } => {
+                assert_eq!((rate, burst, dwell_s), (50.0, 4.0, 1.0));
+            }
+            p => panic!("{p:?}"),
+        }
+        match ArrivalProcess::parse("mmpp:50:8:0.5").unwrap() {
+            ArrivalProcess::Mmpp { rate, burst, dwell_s } => {
+                assert_eq!((rate, burst, dwell_s), (50.0, 8.0, 0.5));
+            }
+            p => panic!("{p:?}"),
+        }
+        match ArrivalProcess::parse("diurnal:20:30:0.5").unwrap() {
+            ArrivalProcess::Diurnal { rate, period_s, amplitude } => {
+                assert_eq!((rate, period_s, amplitude), (20.0, 30.0, 0.5));
+            }
+            p => panic!("{p:?}"),
+        }
+        assert_eq!(
+            ArrivalProcess::parse("poisson:100").unwrap().label(),
+            "poisson:100"
+        );
+        for bad in [
+            "poisson", "poisson:0", "poisson:-3", "mmpp:10:1", "mmpp:10:4:0",
+            "diurnal:10:60:1.5", "uniform:5", "", "poisson:abc",
+        ] {
+            assert!(ArrivalProcess::parse(bad).is_err(), "`{bad}` should fail");
+        }
+    }
+
+    #[test]
+    fn generation_is_seeded_and_sorted() {
+        let shape = RequestShape::default();
+        for spec in ["poisson:200", "mmpp:200:4:0.2", "diurnal:200:10:0.8"] {
+            let p = ArrivalProcess::parse(spec).unwrap();
+            let a = p.generate(5.0, &shape, 42);
+            let b = p.generate(5.0, &shape, 42);
+            assert_eq!(a, b, "{spec} not reproducible");
+            let c = p.generate(5.0, &shape, 43);
+            assert_ne!(a, c, "{spec} ignores the seed");
+            assert!(!a.is_empty(), "{spec} generated nothing");
+            for w in a.windows(2) {
+                assert!(w[0].arrival_s <= w[1].arrival_s, "{spec} out of order");
+                assert_eq!(w[0].id + 1, w[1].id);
+            }
+            for r in &a {
+                assert!(r.arrival_s >= 0.0 && r.arrival_s < 5.0);
+                assert!((shape.prefill_min..=shape.prefill_max).contains(&r.prefill_tokens));
+                assert!((shape.decode_min..=shape.decode_max).contains(&r.decode_tokens));
+            }
+        }
+    }
+
+    /// Satellite 1: Poisson interarrival mean and CV within tolerance at a
+    /// fixed seed (exponential interarrivals: mean 1/rate, CV 1).
+    #[test]
+    fn poisson_interarrival_moments() {
+        let p = ArrivalProcess::Poisson { rate: 100.0 };
+        let reqs = p.generate(200.0, &RequestShape::fixed(64, 16), 7);
+        let gaps = interarrivals(&reqs);
+        assert!(gaps.len() > 10_000, "n={}", gaps.len());
+        let mean = stats::mean(&gaps);
+        let cv = stats::cv(&gaps);
+        assert!((mean - 0.01).abs() / 0.01 < 0.05, "mean={mean}");
+        assert!((cv - 1.0).abs() < 0.05, "cv={cv}");
+    }
+
+    /// Satellite 1: the MMPP is provably burstier than Poisson at the
+    /// same mean rate — interarrival CV well above 1 — while preserving
+    /// the long-run rate.
+    #[test]
+    fn mmpp_is_burstier_than_poisson_at_same_rate() {
+        let rate = 100.0;
+        let dur = 200.0;
+        let poisson = ArrivalProcess::Poisson { rate }
+            .generate(dur, &RequestShape::fixed(64, 16), 7);
+        let mmpp = ArrivalProcess::Mmpp { rate, burst: 8.0, dwell_s: 0.5 }
+            .generate(dur, &RequestShape::fixed(64, 16), 7);
+        // long-run mean rate preserved within 10%
+        let got_rate = mmpp.len() as f64 / dur;
+        assert!((got_rate - rate).abs() / rate < 0.10, "rate={got_rate}");
+        let cv_p = stats::cv(&interarrivals(&poisson));
+        let cv_m = stats::cv(&interarrivals(&mmpp));
+        assert!(cv_m > 1.5, "mmpp cv={cv_m} not bursty");
+        assert!(cv_m > cv_p + 0.3, "mmpp cv={cv_m} vs poisson cv={cv_p}");
+    }
+
+    #[test]
+    fn diurnal_mean_rate_and_modulation() {
+        let p = ArrivalProcess::Diurnal { rate: 100.0, period_s: 10.0, amplitude: 0.9 };
+        let reqs = p.generate(100.0, &RequestShape::fixed(64, 16), 11);
+        let got = reqs.len() as f64 / 100.0;
+        assert!((got - 100.0).abs() / 100.0 < 0.1, "rate={got}");
+        // peak half-periods (sin > 0) must carry more arrivals than troughs
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for r in &reqs {
+            let phase = (r.arrival_s / 10.0).fract();
+            if phase < 0.5 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 1.5 * trough as f64,
+            "peak={peak} trough={trough}: no visible modulation"
+        );
+    }
+
+    #[test]
+    fn at_load_scales_offered_rate() {
+        let p = ArrivalProcess::Poisson { rate: 50.0 };
+        let lo = p.generate(100.0, &RequestShape::default(), 3).len() as f64;
+        let hi = p.at_load(2.0).generate(100.0, &RequestShape::default(), 3).len() as f64;
+        assert!((hi / lo - 2.0).abs() < 0.15, "lo={lo} hi={hi}");
+    }
+
+    /// Satellite 1: file-trace round trip — emit, parse, regenerate.
+    #[test]
+    fn trace_round_trips_through_emit_and_parse() {
+        let p = ArrivalProcess::Poisson { rate: 40.0 };
+        let reqs = p.generate(2.0, &RequestShape::default(), 5);
+        let text = emit_trace(&reqs);
+        let rows = parse_trace(&text).unwrap();
+        assert_eq!(rows.len(), reqs.len());
+        let replay = ArrivalProcess::Trace { path: "mem".into(), rows };
+        let again = replay.generate(2.0, &RequestShape::default(), 999);
+        assert_eq!(again.len(), reqs.len());
+        for (a, b) in reqs.iter().zip(again.iter()) {
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-8);
+            assert_eq!(a.prefill_tokens, b.prefill_tokens);
+            assert_eq!(a.decode_tokens, b.decode_tokens);
+        }
+        // at_load on a trace compresses timestamps
+        let fast = replay.at_load(2.0).generate(2.0, &RequestShape::default(), 0);
+        assert_eq!(fast.len(), reqs.len());
+        assert!((fast[1].arrival_s - reqs[1].arrival_s / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_trace_rejects_malformed_input() {
+        for bad in [
+            "",
+            "0.1 64 16\n",                              // no header
+            "# mozart-serve-trace v1\n",                // no rows
+            "# mozart-serve-trace v1\nnope 64 16\n",    // bad float
+            "# mozart-serve-trace v1\n0.1 64\n",        // missing field
+            "# mozart-serve-trace v1\n0.1 64 16 9\n",   // extra field
+            "# mozart-serve-trace v1\n0.2 64 16\n0.1 64 16\n", // out of order
+            "# mozart-serve-trace v1\n0.1 0 16\n",      // zero prefill
+            "# mozart-serve-trace v2\n0.1 64 16\n",     // wrong version
+        ] {
+            assert!(parse_trace(bad).is_err(), "should reject: {bad:?}");
+        }
+        // decode 0 is a legal prefill-only request
+        let rows = parse_trace("# mozart-serve-trace v1\n0.1 64 0\n").unwrap();
+        assert_eq!(rows, vec![(0.1, 64, 0)]);
+    }
+
+    #[test]
+    fn fixed_shape_is_degenerate() {
+        let mut rng = Rng::new(1);
+        let s = RequestShape::fixed(128, 32);
+        for _ in 0..100 {
+            assert_eq!(s.sample(&mut rng), (128, 32));
+        }
+    }
+}

@@ -9,10 +9,16 @@
 //! collaboration* (latent groups of co-activated experts, scattered across
 //! the arbitrary expert-index order) — and the tiny real model trained in
 //! `examples/train_tiny_moe.rs` provides a real-trace cross-check.
+//!
+//! [`arrivals`] adds the *serving* side of trace generation: seeded
+//! open-loop request-arrival processes (Poisson / MMPP / diurnal / file
+//! replay) feeding the `mozart serve` queueing simulator.
 
+pub mod arrivals;
 pub mod gen;
 pub mod prior;
 
+pub use arrivals::{emit_trace, parse_trace, ArrivalProcess, Request, RequestShape};
 pub use gen::{TraceGen, TraceParams};
 pub use prior::{coactivation, workload_vector, Priors};
 

@@ -34,7 +34,7 @@ fn no_reuse() -> EvalOptions {
     EvalOptions {
         cache: false,
         retime: false,
-        cache_file: None,
+        ..Default::default()
     }
 }
 
