@@ -80,6 +80,64 @@ impl NopTree {
         tree
     }
 
+    /// Capacity view of the contiguous subtree `[start_group, start_group
+    /// + groups)` — the NoP a tenant owns under a multi-tenant partition
+    /// (`coordinator::tenants`). Per-link capacities are physical
+    /// properties of the wires and carry over unchanged; only the node
+    /// counts and the health slices shrink. The partition oracle's
+    /// realizability clause is exactly "every tenant's chiplet set is one
+    /// such subtree": contiguous groups, whole groups, so no trunk link is
+    /// ever shared between tenants.
+    pub fn subtree(&self, start_group: usize, groups: usize) -> NopTree {
+        assert!(
+            groups >= 1 && start_group + groups <= self.n_groups,
+            "subtree [{start_group}, +{groups}) outside the {}-group tree",
+            self.n_groups
+        );
+        let c0 = start_group * self.chiplets_per_group;
+        let c1 = (start_group + groups) * self.chiplets_per_group;
+        NopTree {
+            n_groups: groups,
+            chiplets_per_group: self.chiplets_per_group,
+            trunk_bw: self.trunk_bw,
+            leaf_bw: self.leaf_bw,
+            hop_latency: self.hop_latency,
+            trunk_health: self.trunk_health[start_group..start_group + groups].to_vec(),
+            leaf_health: self.leaf_health[c0..c1].to_vec(),
+        }
+    }
+
+    /// The contiguous group run covered by a set of flat chiplet indices,
+    /// if the set is *exactly* a run of whole groups: returns `(start_group,
+    /// n_groups)`, or `None` when the set has gaps, partial groups, or is
+    /// empty — i.e. when it is not realizable as one [`NopTree::subtree`].
+    pub fn group_run_of(&self, chiplets: &[usize]) -> Option<(usize, usize)> {
+        if chiplets.is_empty() {
+            return None;
+        }
+        let mut sorted = chiplets.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != chiplets.len() || *sorted.last().unwrap() >= self.n_chiplets() {
+            return None;
+        }
+        let g0 = self.group_of(sorted[0]);
+        let g1 = self.group_of(*sorted.last().unwrap());
+        let n_run = (g1 - g0 + 1) * self.chiplets_per_group;
+        // exactly the whole groups [g0, g1]: contiguous flat indices from
+        // the first chiplet of g0 through the last of g1
+        let c0 = g0 * self.chiplets_per_group;
+        if sorted.len() != n_run {
+            return None;
+        }
+        for (i, &c) in sorted.iter().enumerate() {
+            if c != c0 + i {
+                return None;
+            }
+        }
+        Some((g0, g1 - g0 + 1))
+    }
+
     /// Effective bandwidth of group `g`'s trunk (GB/s), health applied.
     pub fn trunk_bw_of(&self, g: usize) -> f64 {
         self.trunk_bw * self.trunk_health[g]
@@ -440,5 +498,43 @@ mod tests {
         t.trunk_health = vec![0.5; 4];
         let uniform = t.a2a_slowdown();
         assert!(uniform >= s, "uniform degrade is at least as slow");
+    }
+
+    #[test]
+    fn subtree_preserves_per_link_capacity() {
+        let mut t = tree();
+        t.trunk_health = vec![1.0, 0.5, 1.0, 1.0];
+        t.leaf_health[5] = 0.25;
+        let sub = t.subtree(1, 2);
+        assert_eq!(sub.n_groups, 2);
+        assert_eq!(sub.n_chiplets(), 8);
+        // per-link capacities are physical: unchanged under the view
+        assert_eq!(sub.trunk_bw.to_bits(), t.trunk_bw.to_bits());
+        assert_eq!(sub.leaf_bw.to_bits(), t.leaf_bw.to_bits());
+        // health slices line up with the parent's groups 1..3
+        assert_eq!(sub.trunk_health, vec![0.5, 1.0]);
+        assert_eq!(sub.leaf_bw_of(1).to_bits(), t.leaf_bw_of(5).to_bits());
+        // full-tree view is the identity
+        let full = t.subtree(0, 4);
+        assert_eq!(full.trunk_health, t.trunk_health);
+        assert_eq!(full.leaf_health, t.leaf_health);
+    }
+
+    #[test]
+    fn group_run_recognizes_exact_whole_group_runs() {
+        let t = tree(); // 4 groups x 4 chiplets
+        assert_eq!(t.group_run_of(&(0..16).collect::<Vec<_>>()), Some((0, 4)));
+        assert_eq!(t.group_run_of(&(4..12).collect::<Vec<_>>()), Some((1, 2)));
+        // order does not matter
+        let mut rev: Vec<usize> = (8..12).collect();
+        rev.reverse();
+        assert_eq!(t.group_run_of(&rev), Some((2, 1)));
+        // gaps, partial groups, duplicates, out-of-range: not a subtree
+        let gap: Vec<usize> = (0..4).chain(8..12).collect();
+        assert_eq!(t.group_run_of(&gap), None);
+        assert_eq!(t.group_run_of(&[0, 1, 2]), None);
+        assert_eq!(t.group_run_of(&[0, 0, 1, 2]), None);
+        assert_eq!(t.group_run_of(&[15, 16]), None);
+        assert_eq!(t.group_run_of(&[]), None);
     }
 }

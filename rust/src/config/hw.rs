@@ -405,6 +405,90 @@ impl HwOverride {
     }
 }
 
+/// One tenant's share of the wafer in a multi-tenant partition
+/// (`coordinator::tenants`): a contiguous run of switch groups (so the
+/// shape is a subtree of the NoP tree and no trunk link is shared across
+/// tenants) plus the integer cut of the group-coupled resources. Feed to
+/// [`HwConfig::carve`] to materialize the tenant's sub-platform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartitionSlice {
+    /// First switch group owned (groups are the partition unit: a group's
+    /// trunk link and DRAM channel cannot be split between tenants).
+    pub start_group: usize,
+    /// Number of consecutive switch groups owned (≥ 1).
+    pub groups: usize,
+    /// DRAM stacks owned out of the parent's `mem.group_dram_stacks`.
+    pub group_dram_stacks: usize,
+    /// Attention-chiplet tiles owned out of the parent's attention tiles
+    /// (the root chiplet is space-shared among tenants).
+    pub attn_tiles: usize,
+}
+
+/// Split `total` integer units into `weights.len()` shares proportional to
+/// `weights` (plus an unreturned idle share of weight `idle_weight`), by
+/// largest remainder with a floor of `min_each` per returned share. The
+/// returned shares plus the implied idle remainder sum to `total` exactly;
+/// ties break toward lower indices, so the split is deterministic — the
+/// partition policies and the conservation property tests both lean on
+/// that.
+pub fn split_proportional(
+    total: usize,
+    weights: &[f64],
+    min_each: usize,
+    idle_weight: f64,
+) -> Vec<usize> {
+    assert!(!weights.is_empty(), "split needs at least one share");
+    assert!(
+        weights.iter().all(|&w| w.is_finite() && w > 0.0),
+        "weights must be finite and > 0, got {weights:?}"
+    );
+    assert!(idle_weight >= 0.0, "idle weight must be >= 0");
+    assert!(
+        total >= min_each * weights.len(),
+        "cannot give {} parts {min_each} of {total} units",
+        weights.len()
+    );
+    let wsum: f64 = weights.iter().sum::<f64>() + idle_weight;
+    let quotas: Vec<f64> = weights.iter().map(|&w| total as f64 * w / wsum).collect();
+    let mut out: Vec<usize> = quotas.iter().map(|&q| q.floor() as usize).collect();
+    // Largest remainder over the tenant parts only: the idle share absorbs
+    // whatever the owned quotas leave behind.
+    let owned_quota: f64 = quotas.iter().sum();
+    let mut rem = (owned_quota.floor() as usize).saturating_sub(out.iter().sum::<usize>());
+    // Distribute the integer remainder of the *owned* quota by descending
+    // fractional part (stable: ties go to the lower index).
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - quotas[a].floor();
+        let fb = quotas[b] - quotas[b].floor();
+        fb.total_cmp(&fa).then(a.cmp(&b))
+    });
+    for &i in &order {
+        if rem == 0 {
+            break;
+        }
+        out[i] += 1;
+        rem -= 1;
+    }
+    // Enforce the floor by taking from the largest share (deterministic:
+    // first maximal index with room).
+    loop {
+        let Some(short) = out.iter().position(|&v| v < min_each) else {
+            break;
+        };
+        let donor = out
+            .iter()
+            .enumerate()
+            .filter(|&(i, &v)| i != short && v > min_each)
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .map(|(i, _)| i)
+            .expect("total >= min_each * parts guarantees a donor");
+        out[donor] -= 1;
+        out[short] += 1;
+    }
+    out
+}
+
 impl HwConfig {
     /// The paper's wafer-scale platform (§5.2): 16 MoE chiplets in 4 groups,
     /// 1 attention chiplet, 6 HBM2 stacks, 1 GHz, 28nm.
@@ -606,6 +690,109 @@ impl HwConfig {
     pub fn group_stream_bw(&self) -> f64 {
         let nop = self.chiplet_nop_bw() * self.knobs.group_concurrency as f64;
         self.group_dram_bw().min(nop)
+    }
+
+    /// Carve the sub-platform owned by one tenant of a multi-tenant
+    /// partition (`coordinator::tenants`): a contiguous run of
+    /// `slice.groups` switch groups with their chiplets, a proportional
+    /// cut of the attention chiplet (tiles and NoP perimeter), and the
+    /// slice's DRAM-stack share installed through the same
+    /// [`HwConfig::with_overrides`] path the explorer uses — so the
+    /// carved config passes [`HwConfig::validate`] or panics, exactly
+    /// like an explorer variant.
+    ///
+    /// Invariants the partition oracle relies on:
+    /// * chiplets-per-group, per-chiplet NoP edges, per-stack DRAM
+    ///   bandwidth, hybrid-bonding links, clock and knobs are untouched —
+    ///   those resources travel with the chiplets a tenant owns;
+    /// * the attention chiplet is space-shared: its tile count comes from
+    ///   the slice and its NoP edge shrinks by `groups / n_groups`, so a
+    ///   tenant's per-trunk root bandwidth (`a2a_root_bw`) matches the
+    ///   parent's, not the whole root edge;
+    /// * the attention DRAM channel pair is root-shared (kept at the
+    ///   parent's `attn_dram_stacks` — 2 stacks cannot split four ways);
+    /// * a full-wafer slice (`groups == n_groups` with all stacks and
+    ///   tiles) reproduces `self` bit-identically, which is what makes the
+    ///   single-tenant partition indistinguishable from the un-partitioned
+    ///   path.
+    pub fn carve(&self, slice: &PartitionSlice) -> HwConfig {
+        assert!(
+            slice.groups >= 1 && slice.start_group + slice.groups <= self.n_groups,
+            "slice [{}, +{}) outside the {}-group wafer",
+            slice.start_group,
+            slice.groups,
+            self.n_groups
+        );
+        let mut hw = self.clone();
+        hw.n_groups = slice.groups;
+        hw.n_moe_chiplets = slice.groups * self.chiplets_per_group();
+        hw.attn_chiplet.tiles = slice.attn_tiles;
+        // Root-edge share: exact (no floor drift) when groups/n_groups is a
+        // dyadic fraction, and *1.0 bit-identical on the full-wafer slice.
+        let share = slice.groups as f64 / self.n_groups as f64;
+        hw.attn_chiplet.edge_mm = self.attn_chiplet.edge_mm * share;
+        hw.with_overrides(&[HwOverride::GroupDramStacks(slice.group_dram_stacks)])
+    }
+
+    /// Plan the per-tenant [`PartitionSlice`]s for a share vector
+    /// (`shares[t]` = switch groups owned by tenant `t`, each ≥ 1, summing
+    /// to at most `n_groups`; the remainder idles). Group-coupled resources
+    /// (DRAM stacks, attention tiles) are split proportionally to the group
+    /// shares by largest remainder with a floor of one unit per tenant, so
+    /// the integer sums over tenants plus the idle remainder reconstruct
+    /// the parent exactly — the conservation clause of
+    /// `PartitionTrace::validate`.
+    pub fn partition_slices(&self, shares: &[usize]) -> Result<Vec<PartitionSlice>, String> {
+        if shares.is_empty() {
+            return Err("partition needs at least one tenant".to_string());
+        }
+        let owned: usize = shares.iter().sum();
+        if owned > self.n_groups {
+            return Err(format!(
+                "shares {shares:?} sum to {owned} > {} groups",
+                self.n_groups
+            ));
+        }
+        if shares.iter().any(|&s| s == 0) {
+            return Err(format!("every tenant needs >= 1 group, got {shares:?}"));
+        }
+        if self.mem.group_dram_stacks < shares.len() {
+            return Err(format!(
+                "{} tenants need >= 1 DRAM stack each, wafer has {}",
+                shares.len(),
+                self.mem.group_dram_stacks
+            ));
+        }
+        if self.attn_chiplet.tiles < shares.len() {
+            return Err(format!(
+                "{} tenants need >= 1 attention tile each, chiplet has {}",
+                shares.len(),
+                self.attn_chiplet.tiles
+            ));
+        }
+        let weights: Vec<f64> = shares.iter().map(|&s| s as f64).collect();
+        let idle = self.n_groups - owned;
+        // Idle groups keep their pro-rata stacks/tiles (weight = idle group
+        // count, no floor) so owned resources never exceed the owned share.
+        let stacks = split_proportional(
+            self.mem.group_dram_stacks,
+            &weights,
+            1,
+            idle as f64,
+        );
+        let tiles = split_proportional(self.attn_chiplet.tiles, &weights, 1, idle as f64);
+        let mut out = Vec::with_capacity(shares.len());
+        let mut start = 0;
+        for (t, &groups) in shares.iter().enumerate() {
+            out.push(PartitionSlice {
+                start_group: start,
+                groups,
+                group_dram_stacks: stacks[t],
+                attn_tiles: tiles[t],
+            });
+            start += groups;
+        }
+        Ok(out)
     }
 
     /// Canonical [`HwFingerprint`] of this platform. Every field of the
@@ -944,5 +1131,75 @@ mod tests {
     fn with_overrides_panics_on_invalid_variant() {
         let _ = HwConfig::mozart_wafer(DramKind::Hbm2)
             .with_overrides(&[HwOverride::FreqGhz(0.0)]);
+    }
+
+    #[test]
+    fn full_wafer_carve_is_bit_identical_to_the_parent() {
+        let hw = HwConfig::mozart_wafer(DramKind::Hbm2);
+        let slices = hw.partition_slices(&[hw.n_groups]).unwrap();
+        assert_eq!(slices.len(), 1);
+        assert_eq!(slices[0].groups, 4);
+        assert_eq!(slices[0].group_dram_stacks, hw.mem.group_dram_stacks);
+        assert_eq!(slices[0].attn_tiles, hw.attn_chiplet.tiles);
+        let carved = hw.carve(&slices[0]);
+        // the single-tenant partition must be indistinguishable from the
+        // un-partitioned platform, down to every float bit
+        assert_eq!(carved.fingerprint(), hw.fingerprint());
+    }
+
+    #[test]
+    fn symmetric_halves_carve_identically_and_conserve_resources() {
+        let hw = HwConfig::mozart_wafer(DramKind::Hbm2);
+        let slices = hw.partition_slices(&[2, 2]).unwrap();
+        assert_eq!(slices[0].groups, 2);
+        assert_eq!(slices[1].start_group, 2);
+        assert_eq!(
+            slices.iter().map(|s| s.group_dram_stacks).sum::<usize>(),
+            hw.mem.group_dram_stacks
+        );
+        assert_eq!(
+            slices.iter().map(|s| s.attn_tiles).sum::<usize>(),
+            hw.attn_chiplet.tiles
+        );
+        let a = hw.carve(&slices[0]);
+        let b = hw.carve(&slices[1]);
+        // halves differ only in placement, so their platforms are identical
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.n_moe_chiplets, 8);
+        assert_eq!(a.n_groups, 2);
+        assert_eq!(a.attn_chiplet.tiles, 50);
+        // per-trunk root bandwidth matches the parent's: the root edge is
+        // space-shared, not duplicated per tenant
+        assert_eq!(a.a2a_root_bw().to_bits(), hw.a2a_root_bw().to_bits());
+        // leaves keep their physical links
+        assert_eq!(a.chiplet_nop_bw().to_bits(), hw.chiplet_nop_bw().to_bits());
+        a.validate().expect("carved half validates");
+    }
+
+    #[test]
+    fn partition_slices_reject_impossible_shares() {
+        let hw = HwConfig::mozart_wafer(DramKind::Hbm2);
+        assert!(hw.partition_slices(&[]).is_err());
+        assert!(hw.partition_slices(&[3, 2]).is_err(), "5 > 4 groups");
+        assert!(hw.partition_slices(&[2, 0]).is_err(), "zero share");
+        // more tenants than DRAM stacks cannot each get a stack
+        assert!(hw.partition_slices(&[1, 1, 1, 1]).is_ok());
+        let mut small = hw.clone();
+        small.mem.group_dram_stacks = 2;
+        assert!(small.partition_slices(&[1, 1, 1]).is_err());
+    }
+
+    #[test]
+    fn split_proportional_is_exact_and_deterministic() {
+        // full coverage: shares sum to the total
+        assert_eq!(split_proportional(4, &[2.0, 2.0], 1, 0.0), vec![2, 2]);
+        assert_eq!(split_proportional(100, &[3.0, 1.0], 1, 0.0), vec![75, 25]);
+        // floor: a tiny weight still gets one unit, taken from the largest
+        let s = split_proportional(4, &[100.0, 1.0, 1.0], 1, 0.0);
+        assert_eq!(s.iter().sum::<usize>(), 4);
+        assert!(s.iter().all(|&v| v >= 1), "floor violated: {s:?}");
+        // idle weight shrinks the owned share
+        let with_idle = split_proportional(100, &[1.0, 1.0], 1, 2.0);
+        assert_eq!(with_idle, vec![25, 25]);
     }
 }

@@ -9,8 +9,8 @@ pub mod model;
 pub mod parse;
 
 pub use hw::{
-    CalibrationKnobs, ChipletSpec, DramKind, HwConfig, HwFingerprint, HwOverride, KnobId,
-    MemSpec, NopSpec,
+    split_proportional, CalibrationKnobs, ChipletSpec, DramKind, HwConfig, HwFingerprint,
+    HwOverride, KnobId, MemSpec, NopSpec, PartitionSlice,
 };
 pub use method::{Method, MethodConfig};
 pub use model::{ModelConfig, ModelId};

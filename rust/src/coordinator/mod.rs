@@ -14,6 +14,7 @@ pub mod explore;
 pub mod search;
 pub mod serve;
 pub mod sweep;
+pub mod tenants;
 
 use crate::allocation::ExpertLayout;
 use crate::config::ExperimentConfig;

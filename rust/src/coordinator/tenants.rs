@@ -1,0 +1,1461 @@
+//! `mozart tenants` — multi-tenant wafer partitioning with a
+//! partition-isolation oracle and per-tenant SLO accounting.
+//!
+//! One wafer, several independent workloads: the chiplet grid is split
+//! into contiguous runs of switch groups (the partition unit — a group's
+//! NoP trunk and DRAM channel cannot be shared between tenants), each
+//! tenant's cell is evaluated on its carved sub-platform
+//! ([`HwConfig::carve`]), and the fleet is scored on the minimized
+//! triple ([`fleet_objectives`]): worst per-tenant SLO violation,
+//! negated total token throughput, aggregate mean package power.
+//!
+//! * **Training tenants** (`train:MODEL:METHOD:WEIGHT`) run the step
+//!   simulator on their sub-wafer; their throughput is tokens per
+//!   training step over the mean step latency and their power is the
+//!   step-energy mean
+//!   ([`mean_power_w`](crate::metrics::energy::EnergyBreakdown::mean_power_w)).
+//! * **Serving tenants** (`serve:MODEL:LOAD_RPS:SLO_MS`) get their own
+//!   queueing instance ([`TenantServer`]): a service model built from
+//!   real step simulations of the carved platform
+//!   ([`build_service_model`]), a Poisson arrival stream at the
+//!   declared load, and the same measurement path as `mozart serve`
+//!   ([`measure_point`]) — so a tenant owning 100% of the wafer
+//!   reproduces [`serve_cell_eval`](crate::coordinator::serve::serve_cell_eval)
+//!   bit for bit.
+//!
+//! Four partitioning policies are swept: `even`, `weighted` (by
+//! declared demand), `slo-greedy` (hill-climbs groups toward the worst
+//! violator), and `search` (NSGA-II over the share vector, reusing the
+//! constrained selection machinery of `metrics::pareto`). Every
+//! evaluated feasible partition becomes one artifact point, and every
+//! point's [`PartitionTrace`] is checked by [`PartitionTrace::validate`]
+//! *unconditionally* before it is emitted — exclusive chiplet
+//! ownership, NoP-subtree realizability, resource conservation against
+//! the parent wafer, and the shared package power budget.
+//!
+//! Everything is seeded and thread-invariant: the same config
+//! reproduces the same `TENANTS_*.json` bit for bit at any `--threads`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::comm::NopTree;
+use crate::config::{
+    DramKind, ExperimentConfig, HwConfig, Method, ModelConfig, ModelId, PartitionSlice,
+    SchedPolicy,
+};
+use crate::coordinator::cache::{EvalCtx, EvalOptions, EvalSession, EvalStats};
+use crate::coordinator::serve::{build_service_model, measure_point, SERVICE_BUCKETS};
+use crate::coordinator::sweep::parallel_map_with;
+use crate::metrics::pareto::{constrained_selection_order, pareto_frontier};
+use crate::metrics::slo::{fleet_objectives, slo_violation};
+use crate::sim::serve::{ServeParams, TenantServer};
+use crate::trace::arrivals::{ArrivalProcess, RequestShape};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+/// What one tenant runs on its slice of the wafer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TenantKind {
+    /// A training tenant: repeated training steps of `method`, weighted
+    /// by `weight` in the demand-proportional policy.
+    Train {
+        /// Mozart ablation the tenant trains with.
+        method: Method,
+        /// Relative demand weight (> 0) for the `weighted` policy.
+        weight: f64,
+    },
+    /// A serving tenant: an open-loop Poisson stream against the
+    /// tenant's own continuous-batching queue.
+    Serve {
+        /// Offered load, requests per second (> 0).
+        load_rps: f64,
+        /// Latency SLO on the p99 sojourn time, milliseconds (> 0).
+        slo_ms: f64,
+    },
+}
+
+/// One tenant of the multi-tenant wafer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenantSpec {
+    /// Model the tenant runs (paper Table 1 presets).
+    pub model: ModelId,
+    /// Training or serving workload, with its policy inputs.
+    pub kind: TenantKind,
+}
+
+impl TenantSpec {
+    /// Parse one CLI tenant spec: `train:MODEL:METHOD:WEIGHT` or
+    /// `serve:MODEL:LOAD_RPS:SLO_MS` (model/method names as everywhere
+    /// else on the CLI).
+    pub fn parse(s: &str) -> std::result::Result<TenantSpec, String> {
+        let parts: Vec<&str> = s.split(':').map(str::trim).collect();
+        match parts.as_slice() {
+            ["train", model, method, weight] => {
+                let model = ModelId::from_name(model)
+                    .ok_or_else(|| format!("unknown model `{model}` in tenant `{s}`"))?;
+                let method = Method::from_name(method)
+                    .ok_or_else(|| format!("unknown method `{method}` in tenant `{s}`"))?;
+                let weight: f64 = weight
+                    .parse()
+                    .map_err(|_| format!("bad weight `{weight}` in tenant `{s}`"))?;
+                if !(weight.is_finite() && weight > 0.0) {
+                    return Err(format!("tenant weight must be > 0, got `{weight}` in `{s}`"));
+                }
+                Ok(TenantSpec {
+                    model,
+                    kind: TenantKind::Train { method, weight },
+                })
+            }
+            ["serve", model, load, slo] => {
+                let model = ModelId::from_name(model)
+                    .ok_or_else(|| format!("unknown model `{model}` in tenant `{s}`"))?;
+                let load_rps: f64 = load
+                    .parse()
+                    .map_err(|_| format!("bad load `{load}` in tenant `{s}`"))?;
+                let slo_ms: f64 = slo
+                    .parse()
+                    .map_err(|_| format!("bad SLO `{slo}` in tenant `{s}`"))?;
+                if !(load_rps.is_finite() && load_rps > 0.0) {
+                    return Err(format!("tenant load must be > 0 req/s in `{s}`"));
+                }
+                if !(slo_ms.is_finite() && slo_ms > 0.0) {
+                    return Err(format!("tenant SLO must be > 0 ms in `{s}`"));
+                }
+                Ok(TenantSpec {
+                    model,
+                    kind: TenantKind::Serve { load_rps, slo_ms },
+                })
+            }
+            _ => Err(format!(
+                "tenant `{s}` must be train:MODEL:METHOD:WEIGHT or serve:MODEL:LOAD_RPS:SLO_MS"
+            )),
+        }
+    }
+
+    /// Parse the comma-separated `--tenant` list.
+    pub fn parse_list(s: &str) -> std::result::Result<Vec<TenantSpec>, String> {
+        let mut out = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            out.push(TenantSpec::parse(part)?);
+        }
+        if out.is_empty() {
+            return Err("need at least one tenant spec".to_string());
+        }
+        Ok(out)
+    }
+
+    /// Stable human-readable label (artifact + report key).
+    pub fn label(&self) -> String {
+        match self.kind {
+            TenantKind::Train { method, weight } => {
+                format!("train:{}:{}:w{}", self.model.name(), method.name(), weight)
+            }
+            TenantKind::Serve { load_rps, slo_ms } => {
+                format!("serve:{}:{}rps:{}ms", self.model.name(), load_rps, slo_ms)
+            }
+        }
+    }
+
+    /// Demand weight in the `weighted` policy: the declared training
+    /// weight, or the declared serving load.
+    pub fn weight(&self) -> f64 {
+        match self.kind {
+            TenantKind::Train { weight, .. } => weight,
+            TenantKind::Serve { load_rps, .. } => load_rps,
+        }
+    }
+
+    /// The method the tenant's step simulations run (serving tenants
+    /// always serve the full Mozart method).
+    pub fn method(&self) -> Method {
+        match self.kind {
+            TenantKind::Train { method, .. } => method,
+            TenantKind::Serve { .. } => Method::MozartC,
+        }
+    }
+}
+
+/// How the share vector (groups per tenant) is chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionPolicy {
+    /// Equal group shares (largest remainder on equal weights).
+    Even,
+    /// Shares proportional to declared demand ([`TenantSpec::weight`]).
+    Weighted,
+    /// Hill-climb from `even`: move one group at a time to the worst
+    /// SLO violator while the fleet objectives strictly improve.
+    SloGreedy,
+    /// NSGA-II over the share vector (the partition as a search gene),
+    /// constrained by the package power budget.
+    Search,
+}
+
+impl PartitionPolicy {
+    /// Every policy, in sweep order.
+    pub const ALL: [PartitionPolicy; 4] = [
+        PartitionPolicy::Even,
+        PartitionPolicy::Weighted,
+        PartitionPolicy::SloGreedy,
+        PartitionPolicy::Search,
+    ];
+
+    /// CLI / artifact name.
+    pub fn name(self) -> &'static str {
+        match self {
+            PartitionPolicy::Even => "even",
+            PartitionPolicy::Weighted => "weighted",
+            PartitionPolicy::SloGreedy => "slo-greedy",
+            PartitionPolicy::Search => "search",
+        }
+    }
+
+    /// Inverse of [`PartitionPolicy::name`] (case-insensitive).
+    pub fn from_name(s: &str) -> Option<PartitionPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "even" => Some(PartitionPolicy::Even),
+            "weighted" => Some(PartitionPolicy::Weighted),
+            "slo-greedy" | "slo_greedy" | "greedy" => Some(PartitionPolicy::SloGreedy),
+            "search" => Some(PartitionPolicy::Search),
+            _ => None,
+        }
+    }
+
+    /// Parse the `--policies` spelling: `all` or a comma-separated
+    /// list, duplicates collapsed, order preserved.
+    pub fn parse_list(s: &str) -> std::result::Result<Vec<PartitionPolicy>, String> {
+        if s.trim().eq_ignore_ascii_case("all") {
+            return Ok(PartitionPolicy::ALL.to_vec());
+        }
+        let mut out: Vec<PartitionPolicy> = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let p = PartitionPolicy::from_name(part)
+                .ok_or_else(|| format!("unknown policy `{part}` (even|weighted|slo-greedy|search|all)"))?;
+            if !out.contains(&p) {
+                out.push(p);
+            }
+        }
+        if out.is_empty() {
+            return Err("need at least one partition policy".to_string());
+        }
+        Ok(out)
+    }
+}
+
+/// Configuration of one multi-tenant partitioning sweep.
+#[derive(Clone, Debug)]
+pub struct TenantsConfig {
+    /// The tenants sharing the wafer (CLI `--tenant`, comma-separated).
+    pub tenants: Vec<TenantSpec>,
+    /// DRAM technology of the parent platform.
+    pub dram: DramKind,
+    /// DAG scheduling policy for every step simulation.
+    pub sched: SchedPolicy,
+    /// Partitioning policies swept (each yields one share vector).
+    pub policies: Vec<PartitionPolicy>,
+    /// Sequence length of the training tenants' steps.
+    pub seq_len: usize,
+    /// Traffic duration per serving tenant, seconds.
+    pub duration_s: f64,
+    /// Shared package power budget, W (`f64::INFINITY` = unbounded;
+    /// the CLI spells unbounded as `--power-budget 0`).
+    pub budget_w: f64,
+    /// Queueing-engine knobs for every serving tenant.
+    pub params: ServeParams,
+    /// Simulated iterations averaged per step evaluation.
+    pub iters: usize,
+    /// Master seed (step sims, arrival streams, the search policy).
+    pub seed: u64,
+    /// Worker threads (0/1 = sequential); never changes a result bit.
+    pub threads: usize,
+    /// NSGA-II population of the `search` policy.
+    pub search_population: usize,
+    /// NSGA-II generations of the `search` policy.
+    pub search_generations: usize,
+    /// Evaluation-throughput toggles for the step simulations.
+    pub eval: EvalOptions,
+}
+
+impl TenantsConfig {
+    /// Paper-flavoured default: one training tenant and one serving
+    /// tenant of the fastest model, all four policies, no power cap.
+    pub fn paper_default() -> TenantsConfig {
+        TenantsConfig {
+            tenants: vec![
+                TenantSpec {
+                    model: ModelId::OlmoE_1B_7B,
+                    kind: TenantKind::Train {
+                        method: Method::MozartC,
+                        weight: 1.0,
+                    },
+                },
+                TenantSpec {
+                    model: ModelId::OlmoE_1B_7B,
+                    kind: TenantKind::Serve {
+                        load_rps: 100.0,
+                        slo_ms: 50.0,
+                    },
+                },
+            ],
+            dram: DramKind::Hbm2,
+            sched: SchedPolicy::Streaming,
+            policies: PartitionPolicy::ALL.to_vec(),
+            seq_len: 256,
+            duration_s: 2.0,
+            budget_w: f64::INFINITY,
+            params: ServeParams::default(),
+            iters: 2,
+            seed: 0x4D6F_5A54, // "MoZT"
+            threads: 0,
+            search_population: 8,
+            search_generations: 3,
+            eval: EvalOptions::default(),
+        }
+    }
+}
+
+/// The experiment config a tenant's step simulations run: the paper
+/// default of the tenant's (model, method) with the sweep's workload
+/// knobs and `hw` — pass the carved sub-platform for a real tenant, or
+/// the parent wafer to reproduce the un-partitioned path (the
+/// single-tenant differential contract).
+pub fn tenant_base_config(spec: &TenantSpec, hw: &HwConfig, cfg: &TenantsConfig) -> ExperimentConfig {
+    let mut ec = ExperimentConfig::paper_default(
+        ModelConfig::preset(spec.model),
+        spec.method().config(),
+    );
+    ec.hw = hw.clone();
+    ec.seq_len = cfg.seq_len;
+    ec.iters = cfg.iters;
+    ec.seed = cfg.seed;
+    ec.sched = cfg.sched;
+    ec
+}
+
+/// Measured outcome of one tenant on one partition. Fields that do not
+/// apply to the tenant kind are zero (e.g. `p99_ms` for training).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantMetrics {
+    /// Tenant label ([`TenantSpec::label`]).
+    pub label: String,
+    /// `"train"` or `"serve"`.
+    pub kind: &'static str,
+    /// Switch groups the tenant owns under this partition.
+    pub groups: usize,
+    /// Training: mean step latency. Serving: mean sojourn latency. ms.
+    pub latency_ms: f64,
+    /// Serving p99 sojourn latency, ms (0 for training tenants).
+    pub p99_ms: f64,
+    /// Serving SLO-goodput, requests/s (0 for training tenants).
+    pub goodput_rps: f64,
+    /// Declared SLO, ms (0 for training tenants).
+    pub slo_ms: f64,
+    /// Relative p99 SLO violation ([`slo_violation`]; 0 = within SLO,
+    /// and always 0 for training tenants).
+    pub slo_violation: f64,
+    /// Tokens per second the tenant processes on its slice.
+    pub tokens_per_s: f64,
+    /// Mean package power the tenant draws, W.
+    pub power_w: f64,
+}
+
+/// Evaluate one tenant on its carved slice of `parent`.
+fn eval_tenant(
+    ctx: &mut EvalCtx<'_>,
+    cfg: &TenantsConfig,
+    parent: &HwConfig,
+    spec: &TenantSpec,
+    slice: &PartitionSlice,
+) -> TenantMetrics {
+    let sub = parent.carve(slice);
+    let base = tenant_base_config(spec, &sub, cfg);
+    match spec.kind {
+        TenantKind::Train { .. } => {
+            let r = ctx.run(&base);
+            TenantMetrics {
+                label: spec.label(),
+                kind: "train",
+                groups: slice.groups,
+                latency_ms: r.latency * 1e3,
+                p99_ms: 0.0,
+                goodput_rps: 0.0,
+                slo_ms: 0.0,
+                slo_violation: 0.0,
+                tokens_per_s: base.tokens_per_step() as f64 / r.latency,
+                power_w: r.energy.mean_power_w(r.latency),
+            }
+        }
+        TenantKind::Serve { load_rps, slo_ms } => {
+            // Identical op sequence to `serve_cell_eval` so the
+            // single-tenant whole-wafer partition is bit-identical to
+            // the un-partitioned serving path.
+            let model = build_service_model(|ec| ctx.run(ec).latency, &base);
+            let server = TenantServer {
+                label: spec.label(),
+                model,
+                params: cfg.params.clone(),
+            };
+            let requests = ArrivalProcess::Poisson { rate: load_rps }.generate(
+                cfg.duration_s,
+                &RequestShape::default(),
+                base.seed ^ 0x5E2E_CE11,
+            );
+            let trace = server.run(&requests);
+            let p = measure_point(&trace, &server.model, 1.0, slo_ms / 1e3, cfg.duration_s, 0.0);
+            // Power: the slice's busy power (largest service bucket — a
+            // cache hit, it was just simulated for the model) derated by
+            // the measured server utilization.
+            let mut probe = base.clone();
+            probe.seq_len = SERVICE_BUCKETS[SERVICE_BUCKETS.len() - 1];
+            probe.batch_size = 1;
+            probe.micro_batch = 1;
+            let r = ctx.run(&probe);
+            let busy_w = r.energy.mean_power_w(r.latency);
+            TenantMetrics {
+                label: spec.label(),
+                kind: "serve",
+                groups: slice.groups,
+                latency_ms: p.mean_ms,
+                p99_ms: p.p99_ms,
+                goodput_rps: p.goodput_rps,
+                slo_ms,
+                slo_violation: slo_violation(p.p99_ms, slo_ms),
+                tokens_per_s: p.tokens_per_s,
+                power_w: busy_w * p.utilization.min(1.0),
+            }
+        }
+    }
+}
+
+/// One evaluated partition: the share vector, its slices, every
+/// tenant's metrics, and the fleet objectives.
+#[derive(Clone, Debug)]
+pub struct PartitionEval {
+    /// Groups per tenant (the gene).
+    pub shares: Vec<usize>,
+    /// Per-tenant resource slices ([`HwConfig::partition_slices`]).
+    pub slices: Vec<PartitionSlice>,
+    /// Per-tenant measured metrics, tenant order.
+    pub tenants: Vec<TenantMetrics>,
+    /// Minimized fleet objectives ([`fleet_objectives`]).
+    pub objectives: [f64; 3],
+    /// Aggregate mean package power, W.
+    pub power_w: f64,
+    /// Whether the partition respects the package power budget.
+    pub feasible: bool,
+}
+
+/// Memoizing partition evaluator shared by every policy: the same share
+/// vector is never evaluated twice, and every evaluation is one
+/// deterministic, thread-invariant parallel map over the tenants.
+struct Evaluator<'a> {
+    cfg: &'a TenantsConfig,
+    parent: &'a HwConfig,
+    session: &'a EvalSession,
+    memo: BTreeMap<Vec<usize>, PartitionEval>,
+}
+
+impl Evaluator<'_> {
+    fn eval(&mut self, shares: &[usize]) -> PartitionEval {
+        if let Some(e) = self.memo.get(shares) {
+            return e.clone();
+        }
+        let cfg = self.cfg;
+        let parent = self.parent;
+        let session = self.session;
+        let slices = parent
+            .partition_slices(shares)
+            .expect("partition policies emit realizable share vectors");
+        let jobs: Vec<(usize, PartitionSlice)> = slices.iter().copied().enumerate().collect();
+        let tenants: Vec<TenantMetrics> = parallel_map_with(
+            &jobs,
+            cfg.threads,
+            session.pools(),
+            || session.new_pool(),
+            |pool, &(ti, slice)| {
+                let mut ctx = session.ctx(pool);
+                eval_tenant(&mut ctx, cfg, parent, &cfg.tenants[ti], &slice)
+            },
+        );
+        let power_w: f64 = tenants.iter().map(|t| t.power_w).sum();
+        let violations: Vec<f64> = tenants.iter().map(|t| t.slo_violation).collect();
+        let tokens: f64 = tenants.iter().map(|t| t.tokens_per_s).sum();
+        let eval = PartitionEval {
+            shares: shares.to_vec(),
+            slices,
+            tenants,
+            objectives: fleet_objectives(&violations, tokens, power_w),
+            power_w,
+            feasible: power_w <= cfg.budget_w,
+        };
+        #[cfg(debug_assertions)]
+        if eval.feasible {
+            build_trace("debug", cfg, parent, &eval)
+                .validate(parent)
+                .expect("partition failed the isolation oracle");
+        }
+        self.memo.insert(shares.to_vec(), eval.clone());
+        eval
+    }
+}
+
+/// One tenant's entry in a [`PartitionTrace`].
+#[derive(Clone, Debug)]
+pub struct TenantAssignment {
+    /// Tenant index (must equal the position in the assignment list).
+    pub tenant: usize,
+    /// Tenant label (diagnostics).
+    pub label: String,
+    /// The resource slice the tenant was planned.
+    pub slice: PartitionSlice,
+    /// Flat chiplet indices the tenant owns on the parent wafer.
+    pub chiplets: Vec<usize>,
+    /// Mean package power the tenant draws, W.
+    pub power_w: f64,
+}
+
+/// The auditable record of one partition, checked by
+/// [`PartitionTrace::validate`] — the PR's isolation oracle.
+#[derive(Clone, Debug)]
+pub struct PartitionTrace {
+    /// Policy that proposed the partition (diagnostics).
+    pub policy: String,
+    /// Groups per tenant.
+    pub shares: Vec<usize>,
+    /// Per-tenant assignments, tenant order.
+    pub assignments: Vec<TenantAssignment>,
+    /// Owner per flat chiplet index (`None` = idle).
+    pub chiplet_owner: Vec<Option<usize>>,
+    /// Switch groups left idle.
+    pub idle_groups: usize,
+    /// Group DRAM stacks left idle.
+    pub idle_group_dram_stacks: usize,
+    /// Attention tiles left idle.
+    pub idle_attn_tiles: usize,
+    /// Aggregate mean package power, W.
+    pub power_w: f64,
+    /// Package power budget, W (`f64::INFINITY` = unbounded).
+    pub budget_w: f64,
+}
+
+/// Build the auditable trace of one evaluated partition.
+pub fn build_trace(
+    policy: &str,
+    cfg: &TenantsConfig,
+    parent: &HwConfig,
+    eval: &PartitionEval,
+) -> PartitionTrace {
+    let per = parent.chiplets_per_group();
+    let mut chiplet_owner: Vec<Option<usize>> = vec![None; parent.n_moe_chiplets];
+    let mut assignments = Vec::with_capacity(eval.slices.len());
+    for (t, slice) in eval.slices.iter().enumerate() {
+        let chiplets: Vec<usize> =
+            (slice.start_group * per..(slice.start_group + slice.groups) * per).collect();
+        for &c in &chiplets {
+            chiplet_owner[c] = Some(t);
+        }
+        assignments.push(TenantAssignment {
+            tenant: t,
+            label: eval.tenants[t].label.clone(),
+            slice: *slice,
+            chiplets,
+            power_w: eval.tenants[t].power_w,
+        });
+    }
+    let owned_groups: usize = eval.shares.iter().sum();
+    let owned_stacks: usize = eval.slices.iter().map(|s| s.group_dram_stacks).sum();
+    let owned_tiles: usize = eval.slices.iter().map(|s| s.attn_tiles).sum();
+    PartitionTrace {
+        policy: policy.to_string(),
+        shares: eval.shares.clone(),
+        assignments,
+        chiplet_owner,
+        idle_groups: parent.n_groups - owned_groups,
+        idle_group_dram_stacks: parent.mem.group_dram_stacks - owned_stacks,
+        idle_attn_tiles: parent.attn_chiplet.tiles - owned_tiles,
+        power_w: eval.power_w,
+        budget_w: cfg.budget_w,
+    }
+}
+
+impl PartitionTrace {
+    /// The partition-isolation oracle. Rejects the trace unless:
+    ///
+    /// 1. **Tenant-id integrity** — assignments are non-empty, carry
+    ///    their own index, and every chiplet owner refers to a live
+    ///    tenant (no stale tenant ids);
+    /// 2. **Exclusive assignment** — every chiplet belongs to at most
+    ///    one tenant and the owner map matches the assignments;
+    /// 3. **Subtree realizability** — each tenant's chiplets are a
+    ///    contiguous whole-group run of the parent's NoP tree matching
+    ///    its slice, so no NoP trunk is shared across tenants;
+    /// 4. **Resource conservation** — groups, DRAM stacks and attention
+    ///    tiles over tenants plus the idle remainder reconstruct the
+    ///    parent exactly (and a single tenant owning everything carves
+    ///    a platform fingerprint-identical to the parent);
+    /// 5. **Power budget** — per-tenant powers are finite and
+    ///    non-negative, their sum matches the aggregate, and the
+    ///    aggregate respects the package budget.
+    pub fn validate(&self, parent: &HwConfig) -> Result<()> {
+        // 1. tenant-id integrity
+        ensure!(!self.assignments.is_empty(), "partition has no tenants");
+        for (i, a) in self.assignments.iter().enumerate() {
+            ensure!(
+                a.tenant == i,
+                "stale tenant id: assignment {i} claims tenant {}",
+                a.tenant
+            );
+        }
+        ensure!(
+            self.chiplet_owner.len() == parent.n_moe_chiplets,
+            "owner map covers {} chiplets, wafer has {}",
+            self.chiplet_owner.len(),
+            parent.n_moe_chiplets
+        );
+        for (c, owner) in self.chiplet_owner.iter().enumerate() {
+            if let Some(t) = owner {
+                ensure!(
+                    *t < self.assignments.len(),
+                    "stale tenant id: chiplet {c} owned by unknown tenant {t}"
+                );
+            }
+        }
+        ensure!(
+            self.shares.len() == self.assignments.len()
+                && self
+                    .shares
+                    .iter()
+                    .zip(self.assignments.iter())
+                    .all(|(&s, a)| s == a.slice.groups),
+            "share vector {:?} disagrees with the assignments",
+            self.shares
+        );
+
+        // 2. exclusive assignment
+        let mut owner: Vec<Option<usize>> = vec![None; parent.n_moe_chiplets];
+        for a in &self.assignments {
+            for &c in &a.chiplets {
+                ensure!(c < owner.len(), "chiplet {c} outside the wafer");
+                ensure!(
+                    owner[c].is_none(),
+                    "chiplet {c} assigned to more than one tenant ({} and {})",
+                    owner[c].unwrap(),
+                    a.tenant
+                );
+                owner[c] = Some(a.tenant);
+            }
+        }
+        ensure!(
+            owner == self.chiplet_owner,
+            "chiplet owner map disagrees with the assignments"
+        );
+
+        // 3. subtree realizability on the parent's NoP tree
+        let tree = NopTree::from_hw(parent);
+        for a in &self.assignments {
+            let run = tree.group_run_of(&a.chiplets);
+            ensure!(
+                run == Some((a.slice.start_group, a.slice.groups)),
+                "tenant {} chiplets are not the contiguous whole-group NoP subtree \
+                 [{}, +{}) its slice claims (got {run:?})",
+                a.tenant,
+                a.slice.start_group,
+                a.slice.groups
+            );
+        }
+
+        // 4. resource conservation vs the parent wafer
+        let owned_groups: usize = self.assignments.iter().map(|a| a.slice.groups).sum();
+        ensure!(
+            owned_groups + self.idle_groups == parent.n_groups,
+            "group conservation violated: {owned_groups} owned + {} idle != {} on the wafer",
+            self.idle_groups,
+            parent.n_groups
+        );
+        let owned_stacks: usize = self
+            .assignments
+            .iter()
+            .map(|a| a.slice.group_dram_stacks)
+            .sum();
+        ensure!(
+            owned_stacks + self.idle_group_dram_stacks == parent.mem.group_dram_stacks,
+            "DRAM-stack conservation violated: {owned_stacks} owned + {} idle != {} on the wafer",
+            self.idle_group_dram_stacks,
+            parent.mem.group_dram_stacks
+        );
+        let owned_tiles: usize = self.assignments.iter().map(|a| a.slice.attn_tiles).sum();
+        ensure!(
+            owned_tiles + self.idle_attn_tiles == parent.attn_chiplet.tiles,
+            "attention-tile conservation violated: {owned_tiles} owned + {} idle != {} on the chiplet",
+            self.idle_attn_tiles,
+            parent.attn_chiplet.tiles
+        );
+        for a in &self.assignments {
+            ensure!(
+                a.slice.group_dram_stacks >= 1 && a.slice.attn_tiles >= 1,
+                "tenant {} slice starves a resource class: {:?}",
+                a.tenant,
+                a.slice
+            );
+        }
+        if self.assignments.len() == 1 && owned_groups == parent.n_groups {
+            // the single-tenant whole-wafer partition must be
+            // indistinguishable from the un-partitioned platform
+            let sub = parent.carve(&self.assignments[0].slice);
+            ensure!(
+                sub.fingerprint() == parent.fingerprint(),
+                "single-tenant whole-wafer carve does not reproduce the parent platform"
+            );
+        }
+
+        // 5. power accounting and the package budget
+        let mut sum = 0.0;
+        for a in &self.assignments {
+            ensure!(
+                a.power_w.is_finite() && a.power_w >= 0.0,
+                "tenant {} power {} W is not a sane draw",
+                a.tenant,
+                a.power_w
+            );
+            sum += a.power_w;
+        }
+        ensure!(
+            (sum - self.power_w).abs() <= 1e-9 * self.power_w.abs().max(1.0),
+            "aggregate power {} W does not match the per-tenant sum {} W",
+            self.power_w,
+            sum
+        );
+        ensure!(
+            self.power_w <= self.budget_w,
+            "aggregate power {:.1} W exceeds the package power budget {:.1} W",
+            self.power_w,
+            self.budget_w
+        );
+        Ok(())
+    }
+}
+
+/// Equal shares: every tenant gets the same group count (largest
+/// remainder, floor one group each, no idle remainder).
+pub fn even_shares(tenants: usize, parent: &HwConfig) -> Vec<usize> {
+    crate::config::split_proportional(parent.n_groups, &vec![1.0; tenants], 1, 0.0)
+}
+
+/// Demand-proportional shares ([`TenantSpec::weight`]).
+pub fn weighted_shares(specs: &[TenantSpec], parent: &HwConfig) -> Vec<usize> {
+    let weights: Vec<f64> = specs.iter().map(TenantSpec::weight).collect();
+    crate::config::split_proportional(parent.n_groups, &weights, 1, 0.0)
+}
+
+/// A random share vector: one group each, remainder scattered.
+pub fn random_shares(rng: &mut Rng, tenants: usize, groups: usize) -> Vec<usize> {
+    assert!(tenants >= 1 && groups >= tenants, "{tenants} tenants > {groups} groups");
+    let mut shares = vec![1usize; tenants];
+    for _ in 0..groups - tenants {
+        shares[rng.below(tenants)] += 1;
+    }
+    shares
+}
+
+/// Seeded mutation: move one group from a random donor (share > 1) to a
+/// random other tenant. No-op when no move is possible.
+pub fn mutate_shares(rng: &mut Rng, shares: &mut [usize]) {
+    if shares.len() < 2 {
+        return;
+    }
+    let donors: Vec<usize> = (0..shares.len()).filter(|&i| shares[i] > 1).collect();
+    if donors.is_empty() {
+        return;
+    }
+    let d = donors[rng.below(donors.len())];
+    let mut r = rng.below(shares.len() - 1);
+    if r >= d {
+        r += 1;
+    }
+    shares[d] -= 1;
+    shares[r] += 1;
+}
+
+/// Seeded uniform crossover with deterministic repair: each gene comes
+/// from either parent, then groups are taken from the largest gene (or
+/// given to the smallest) until the child sums to `groups` with every
+/// gene >= 1.
+pub fn crossover_shares(rng: &mut Rng, a: &[usize], b: &[usize], groups: usize) -> Vec<usize> {
+    assert_eq!(a.len(), b.len(), "crossover arity mismatch");
+    let mut c: Vec<usize> = a
+        .iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| if rng.f64() < 0.5 { x } else { y })
+        .collect();
+    loop {
+        let sum: usize = c.iter().sum();
+        if sum == groups {
+            return c;
+        }
+        if sum > groups {
+            // take from the largest gene that can give (ties: lowest index)
+            let i = (0..c.len())
+                .filter(|&i| c[i] > 1)
+                .max_by(|&x, &y| c[x].cmp(&c[y]).then(y.cmp(&x)))
+                .expect("sum > groups >= tenants implies a gene > 1");
+            c[i] -= 1;
+        } else {
+            // give to the smallest gene (ties: lowest index)
+            let i = (0..c.len())
+                .min_by(|&x, &y| c[x].cmp(&c[y]).then(x.cmp(&y)))
+                .expect("crossover needs at least one gene");
+            c[i] += 1;
+        }
+    }
+}
+
+/// The `slo-greedy` policy: from even shares, repeatedly move one group
+/// from the least-violating donor to the worst SLO violator, keeping a
+/// move only if the fleet objectives strictly improve lexicographically
+/// (worst violation, then negated throughput). Never worse than `even`.
+fn slo_greedy(ev: &mut Evaluator<'_>) -> Vec<usize> {
+    let mut shares = even_shares(ev.cfg.tenants.len(), ev.parent);
+    let mut cur = ev.eval(&shares);
+    for _ in 0..2 * ev.parent.n_groups {
+        let worst = cur
+            .tenants
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.slo_violation.total_cmp(&b.1.slo_violation).then(b.0.cmp(&a.0)))
+            .map(|(i, _)| i)
+            .expect("at least one tenant");
+        if cur.tenants[worst].slo_violation <= 0.0 {
+            break; // every tenant already meets its SLO
+        }
+        let donor = cur
+            .tenants
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != worst && shares[i] > 1)
+            .min_by(|a, b| a.1.slo_violation.total_cmp(&b.1.slo_violation).then(a.0.cmp(&b.0)))
+            .map(|(i, _)| i);
+        let Some(donor) = donor else { break };
+        let mut cand = shares.clone();
+        cand[donor] -= 1;
+        cand[worst] += 1;
+        let ce = ev.eval(&cand);
+        if (ce.objectives[0], ce.objectives[1]) < (cur.objectives[0], cur.objectives[1]) {
+            shares = cand;
+            cur = ce;
+        } else {
+            break;
+        }
+    }
+    shares
+}
+
+/// The `search` policy: NSGA-II over the share vector, seeded from the
+/// deterministic policies, constrained by the power budget, returning
+/// the best feasible partition evaluated anywhere in the run.
+fn search_shares(ev: &mut Evaluator<'_>) -> Vec<usize> {
+    let t = ev.cfg.tenants.len();
+    let g = ev.parent.n_groups;
+    let pop_n = ev.cfg.search_population.max(2);
+    let mut rng = Rng::new(ev.cfg.seed ^ 0x7E4A_475E);
+    let mut pop: Vec<Vec<usize>> = vec![
+        even_shares(t, ev.parent),
+        weighted_shares(&ev.cfg.tenants, ev.parent),
+    ];
+    pop.dedup();
+    while pop.len() < pop_n {
+        pop.push(random_shares(&mut rng, t, g));
+    }
+    for _ in 0..ev.cfg.search_generations {
+        let mut children = Vec::with_capacity(pop.len());
+        for _ in 0..pop.len() {
+            let pa = pop[rng.below(pop.len())].clone();
+            let pb = pop[rng.below(pop.len())].clone();
+            let mut child = crossover_shares(&mut rng, &pa, &pb, g);
+            mutate_shares(&mut rng, &mut child);
+            children.push(child);
+        }
+        let mut all = pop.clone();
+        all.extend(children);
+        all.sort();
+        all.dedup();
+        let evals: Vec<PartitionEval> = all.iter().map(|s| ev.eval(s)).collect();
+        let pts: Vec<Vec<f64>> = evals.iter().map(|e| e.objectives.to_vec()).collect();
+        // constraint violation = watts over budget (0 under an
+        // unbounded budget: x - inf saturates below zero)
+        let viol: Vec<f64> = evals
+            .iter()
+            .map(|e| (e.power_w - ev.cfg.budget_w).max(0.0))
+            .collect();
+        let order = constrained_selection_order(&pts, &viol);
+        pop = order.iter().take(pop_n).map(|&i| all[i].clone()).collect();
+    }
+    best_shares(ev)
+}
+
+/// The best share vector evaluated so far: feasible before infeasible,
+/// then lexicographic on the minimized objectives; deterministic ties
+/// resolve to the memo's (sorted) first entry.
+fn best_shares(ev: &Evaluator<'_>) -> Vec<usize> {
+    let mut best: Option<(Vec<usize>, (u8, f64, f64, f64))> = None;
+    for (s, e) in &ev.memo {
+        let key = (
+            u8::from(!e.feasible),
+            e.objectives[0],
+            e.objectives[1],
+            e.objectives[2],
+        );
+        let replace = match &best {
+            None => true,
+            Some((_, bk)) => key < *bk,
+        };
+        if replace {
+            best = Some((s.clone(), key));
+        }
+    }
+    best.expect("search evaluated at least one partition").0
+}
+
+/// One policy's chosen partition.
+#[derive(Clone, Debug)]
+pub struct PolicyOutcome {
+    /// The policy.
+    pub policy: PartitionPolicy,
+    /// The share vector it chose.
+    pub shares: Vec<usize>,
+    /// Whether the chosen partition respects the power budget.
+    pub feasible: bool,
+    /// Its fleet objectives.
+    pub objectives: [f64; 3],
+}
+
+/// One evaluated partition in the artifact.
+#[derive(Clone, Debug)]
+pub struct PartitionPoint {
+    /// Groups per tenant.
+    pub shares: Vec<usize>,
+    /// Per-tenant metrics.
+    pub tenants: Vec<TenantMetrics>,
+    /// Minimized fleet objectives.
+    pub objectives: [f64; 3],
+    /// Aggregate mean package power, W.
+    pub power_w: f64,
+    /// Whether the partition respects the power budget.
+    pub feasible: bool,
+    /// The validated isolation trace (feasible partitions only —
+    /// over-budget points are reported but carry no realizable trace).
+    pub trace: Option<PartitionTrace>,
+}
+
+/// Outcome of one multi-tenant partitioning sweep.
+#[derive(Clone, Debug)]
+pub struct TenantsOutcome {
+    /// Sweep configuration echo.
+    pub cfg: TenantsConfig,
+    /// The parent (un-partitioned) wafer.
+    pub parent: HwConfig,
+    /// One outcome per swept policy, `cfg.policies` order.
+    pub policies: Vec<PolicyOutcome>,
+    /// Every distinct evaluated partition, sorted by share vector.
+    pub points: Vec<PartitionPoint>,
+    /// Indices into `points` of the feasible Pareto frontier over
+    /// (worst SLO violation, -total tokens/s, power).
+    pub frontier: Vec<usize>,
+    /// Evaluation accounting for the step simulations.
+    pub eval: EvalStats,
+}
+
+/// Run the sweep: evaluate every policy's partition (sharing one
+/// memoized evaluator, so policies agreeing on a share vector cost one
+/// evaluation), validate every feasible partition against the isolation
+/// oracle, and take the feasible Pareto frontier.
+pub fn run(cfg: &TenantsConfig) -> TenantsOutcome {
+    assert!(!cfg.tenants.is_empty(), "tenants sweep needs tenants");
+    assert!(!cfg.policies.is_empty(), "tenants sweep needs a policy");
+    assert!(cfg.duration_s > 0.0, "serve duration must be > 0");
+    assert!(cfg.budget_w > 0.0, "power budget must be > 0 (or unbounded)");
+    let parent = HwConfig::mozart_wafer(cfg.dram);
+    assert!(
+        cfg.tenants.len() <= parent.n_groups,
+        "{} tenants cannot each own a switch group on a {}-group wafer",
+        cfg.tenants.len(),
+        parent.n_groups
+    );
+    let session = EvalSession::new(cfg.eval.clone());
+    let mut ev = Evaluator {
+        cfg,
+        parent: &parent,
+        session: &session,
+        memo: BTreeMap::new(),
+    };
+    let mut policies = Vec::with_capacity(cfg.policies.len());
+    for &p in &cfg.policies {
+        let shares = match p {
+            PartitionPolicy::Even => even_shares(cfg.tenants.len(), &parent),
+            PartitionPolicy::Weighted => weighted_shares(&cfg.tenants, &parent),
+            PartitionPolicy::SloGreedy => slo_greedy(&mut ev),
+            PartitionPolicy::Search => search_shares(&mut ev),
+        };
+        let e = ev.eval(&shares);
+        policies.push(PolicyOutcome {
+            policy: p,
+            shares,
+            feasible: e.feasible,
+            objectives: e.objectives,
+        });
+    }
+    let mut points = Vec::with_capacity(ev.memo.len());
+    for (shares, e) in &ev.memo {
+        let trace = if e.feasible {
+            let tr = build_trace("evaluated", cfg, &parent, e);
+            // every emitted partition passes the oracle, in every build
+            tr.validate(&parent)
+                .expect("partition failed the isolation oracle");
+            Some(tr)
+        } else {
+            None
+        };
+        points.push(PartitionPoint {
+            shares: shares.clone(),
+            tenants: e.tenants.clone(),
+            objectives: e.objectives,
+            power_w: e.power_w,
+            feasible: e.feasible,
+            trace,
+        });
+    }
+    let feas: Vec<usize> = (0..points.len()).filter(|&i| points[i].feasible).collect();
+    let objs: Vec<Vec<f64>> = feas.iter().map(|&i| points[i].objectives.to_vec()).collect();
+    let frontier: Vec<usize> = pareto_frontier(&objs).into_iter().map(|k| feas[k]).collect();
+    drop(ev);
+    TenantsOutcome {
+        cfg: cfg.clone(),
+        parent,
+        policies,
+        points,
+        frontier,
+        eval: session.finish(),
+    }
+}
+
+impl TenantsOutcome {
+    /// Human-readable report: the policy table plus per-tenant metrics
+    /// of every policy's chosen partition.
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# Multi-tenant wafer partitioning\n\n");
+        out.push_str(&format!(
+            "- wafer: {} groups x {} chiplets/group, {} DRAM stacks, {} attention tiles ({})\n",
+            self.parent.n_groups,
+            self.parent.chiplets_per_group(),
+            self.parent.mem.group_dram_stacks,
+            self.parent.attn_chiplet.tiles,
+            self.cfg.dram.name(),
+        ));
+        out.push_str(&format!(
+            "- power budget: {}\n- tenants:\n",
+            if self.cfg.budget_w.is_finite() {
+                format!("{:.0} W", self.cfg.budget_w)
+            } else {
+                "unbounded".to_string()
+            }
+        ));
+        for t in &self.cfg.tenants {
+            out.push_str(&format!("  - {}\n", t.label()));
+        }
+        out.push('\n');
+
+        let mut pt = Table::new(
+            "policies",
+            &["policy", "shares", "feasible", "worst SLO viol", "tokens/s", "power W"],
+        );
+        for p in &self.policies {
+            pt.row(&[
+                p.policy.name().to_string(),
+                format!("{:?}", p.shares),
+                format!("{}", p.feasible),
+                format!("{:.4}", p.objectives[0]),
+                format!("{:.1}", -p.objectives[1]),
+                format!("{:.1}", p.objectives[2]),
+            ]);
+        }
+        out.push_str(&pt.render());
+        out.push('\n');
+
+        for p in &self.policies {
+            let Some(point) = self.points.iter().find(|x| x.shares == p.shares) else {
+                continue;
+            };
+            let mut tt = Table::new(
+                &format!("{} partition {:?}", p.policy.name(), p.shares),
+                &["tenant", "groups", "lat ms", "p99 ms", "SLO ms", "viol", "tokens/s", "power W"],
+            );
+            for t in &point.tenants {
+                tt.row(&[
+                    t.label.clone(),
+                    format!("{}", t.groups),
+                    format!("{:.2}", t.latency_ms),
+                    format!("{:.2}", t.p99_ms),
+                    format!("{:.0}", t.slo_ms),
+                    format!("{:.4}", t.slo_violation),
+                    format!("{:.1}", t.tokens_per_s),
+                    format!("{:.1}", t.power_w),
+                ]);
+            }
+            out.push_str(&tt.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "frontier: {} of {} evaluated partitions are Pareto-optimal \
+             (worst SLO violation, total throughput, power)\n",
+            self.frontier.len(),
+            self.points.len()
+        ));
+        out
+    }
+
+    /// Machine-readable artifact (`TENANTS_*.json`, schema version 1).
+    /// Re-validates every emitted partition trace against the isolation
+    /// oracle before rendering.
+    pub fn to_json(&self) -> Json {
+        let tenants: Vec<Json> = self
+            .cfg
+            .tenants
+            .iter()
+            .map(|t| match t.kind {
+                TenantKind::Train { method, weight } => Json::obj([
+                    ("kind", Json::str("train")),
+                    ("model", Json::str(t.model.name())),
+                    ("method", Json::str(method.name())),
+                    ("weight", Json::num(weight)),
+                    ("label", Json::str(&t.label())),
+                ]),
+                TenantKind::Serve { load_rps, slo_ms } => Json::obj([
+                    ("kind", Json::str("serve")),
+                    ("model", Json::str(t.model.name())),
+                    ("load_rps", Json::num(load_rps)),
+                    ("slo_ms", Json::num(slo_ms)),
+                    ("label", Json::str(&t.label())),
+                ]),
+            })
+            .collect();
+        let policies: Vec<Json> = self
+            .policies
+            .iter()
+            .map(|p| {
+                Json::obj([
+                    ("policy", Json::str(p.policy.name())),
+                    (
+                        "shares",
+                        Json::Arr(p.shares.iter().map(|&s| Json::int(s)).collect()),
+                    ),
+                    ("feasible", Json::Bool(p.feasible)),
+                    (
+                        "objectives",
+                        Json::Arr(p.objectives.iter().map(|&o| Json::num(o)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                let tenants: Vec<Json> = p
+                    .tenants
+                    .iter()
+                    .map(|t| {
+                        Json::obj([
+                            ("label", Json::str(&t.label)),
+                            ("kind", Json::str(t.kind)),
+                            ("groups", Json::int(t.groups)),
+                            ("latency_ms", Json::num(t.latency_ms)),
+                            ("p99_ms", Json::num(t.p99_ms)),
+                            ("goodput_rps", Json::num(t.goodput_rps)),
+                            ("slo_ms", Json::num(t.slo_ms)),
+                            ("slo_violation", Json::num(t.slo_violation)),
+                            ("tokens_per_s", Json::num(t.tokens_per_s)),
+                            ("power_w", Json::num(t.power_w)),
+                        ])
+                    })
+                    .collect();
+                let trace = p.trace.as_ref().map(|tr| {
+                    // the artifact only ever carries oracle-clean traces
+                    tr.validate(&self.parent)
+                        .expect("partition failed the isolation oracle");
+                    let assignments: Vec<Json> = tr
+                        .assignments
+                        .iter()
+                        .map(|a| {
+                            Json::obj([
+                                ("tenant", Json::int(a.tenant)),
+                                ("label", Json::str(&a.label)),
+                                ("start_group", Json::int(a.slice.start_group)),
+                                ("groups", Json::int(a.slice.groups)),
+                                ("group_dram_stacks", Json::int(a.slice.group_dram_stacks)),
+                                ("attn_tiles", Json::int(a.slice.attn_tiles)),
+                                (
+                                    "chiplets",
+                                    Json::Arr(a.chiplets.iter().map(|&c| Json::int(c)).collect()),
+                                ),
+                                ("power_w", Json::num(a.power_w)),
+                            ])
+                        })
+                        .collect();
+                    let owner: Vec<Json> = tr
+                        .chiplet_owner
+                        .iter()
+                        .map(|o| match o {
+                            Some(t) => Json::int(*t),
+                            None => Json::num(-1.0), // -1 = idle chiplet
+                        })
+                        .collect();
+                    Json::obj([
+                        ("assignments", Json::Arr(assignments)),
+                        ("chiplet_owner", Json::Arr(owner)),
+                        ("idle_groups", Json::int(tr.idle_groups)),
+                        ("idle_group_dram_stacks", Json::int(tr.idle_group_dram_stacks)),
+                        ("idle_attn_tiles", Json::int(tr.idle_attn_tiles)),
+                    ])
+                });
+                Json::obj([
+                    (
+                        "shares",
+                        Json::Arr(p.shares.iter().map(|&s| Json::int(s)).collect()),
+                    ),
+                    ("feasible", Json::Bool(p.feasible)),
+                    ("worst_slo_violation", Json::num(p.objectives[0])),
+                    ("total_tokens_per_s", Json::num(-p.objectives[1])),
+                    ("power_w", Json::num(p.power_w)),
+                    (
+                        "objectives",
+                        Json::Arr(p.objectives.iter().map(|&o| Json::num(o)).collect()),
+                    ),
+                    ("tenants", Json::Arr(tenants)),
+                    (
+                        "partition",
+                        trace.unwrap_or(Json::Bool(false)),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj([
+            ("artifact", Json::str("tenants")),
+            ("version", Json::int(1)),
+            ("dram", Json::str(self.cfg.dram.name())),
+            ("sched", Json::str(self.cfg.sched.name())),
+            ("seq_len", Json::int(self.cfg.seq_len)),
+            ("duration_s", Json::num(self.cfg.duration_s)),
+            ("iters", Json::int(self.cfg.iters)),
+            // string, not number: JSON numbers are f64 and would corrupt
+            // u64 seeds above 2^53, breaking reproduction from the artifact
+            ("seed", Json::str(self.cfg.seed.to_string())),
+            // 0 spells "unbounded" (JSON has no Infinity literal)
+            (
+                "power_budget_w",
+                Json::num(if self.cfg.budget_w.is_finite() {
+                    self.cfg.budget_w
+                } else {
+                    0.0
+                }),
+            ),
+            ("oracle", Json::str("validated")),
+            (
+                "wafer",
+                Json::obj([
+                    ("n_groups", Json::int(self.parent.n_groups)),
+                    ("n_moe_chiplets", Json::int(self.parent.n_moe_chiplets)),
+                    (
+                        "group_dram_stacks",
+                        Json::int(self.parent.mem.group_dram_stacks),
+                    ),
+                    ("attn_tiles", Json::int(self.parent.attn_chiplet.tiles)),
+                ]),
+            ),
+            ("tenants", Json::Arr(tenants)),
+            ("policies", Json::Arr(policies)),
+            ("points", Json::Arr(points)),
+            (
+                "frontier",
+                Json::Arr(self.frontier.iter().map(|&i| Json::int(i)).collect()),
+            ),
+            ("cache", self.eval.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(threads: usize) -> TenantsConfig {
+        TenantsConfig {
+            tenants: vec![
+                TenantSpec {
+                    model: ModelId::TinyMoE,
+                    kind: TenantKind::Train {
+                        method: Method::MozartC,
+                        weight: 1.0,
+                    },
+                },
+                TenantSpec {
+                    model: ModelId::TinyMoE,
+                    kind: TenantKind::Serve {
+                        load_rps: 60.0,
+                        slo_ms: 50.0,
+                    },
+                },
+            ],
+            policies: vec![PartitionPolicy::Even, PartitionPolicy::Weighted],
+            seq_len: 64,
+            duration_s: 0.5,
+            iters: 1,
+            seed: 13,
+            threads,
+            ..TenantsConfig::paper_default()
+        }
+    }
+
+    #[test]
+    fn tenant_spec_parse_roundtrip_and_errors() {
+        let t = TenantSpec::parse("train:tiny:mozart-c:2.5").unwrap();
+        assert_eq!(t.model, ModelId::TinyMoE);
+        assert_eq!(
+            t.kind,
+            TenantKind::Train {
+                method: Method::MozartC,
+                weight: 2.5
+            }
+        );
+        assert_eq!(t.weight(), 2.5);
+        let s = TenantSpec::parse("serve:olmoe:120:50").unwrap();
+        assert_eq!(s.model, ModelId::OlmoE_1B_7B);
+        assert_eq!(s.method(), Method::MozartC);
+        assert!(s.label().contains("120rps"));
+        for bad in [
+            "train:tiny:mozart-c", // missing weight
+            "serve:tiny:0:50",     // zero load
+            "serve:tiny:100:0",    // zero SLO
+            "train:gpt5:c:1",      // unknown model
+            "train:tiny:z:1",      // unknown method
+            "park:tiny:c:1",       // unknown kind
+        ] {
+            assert!(TenantSpec::parse(bad).is_err(), "`{bad}` parsed");
+        }
+        let list = TenantSpec::parse_list("train:tiny:c:1, serve:tiny:80:40").unwrap();
+        assert_eq!(list.len(), 2);
+        assert!(TenantSpec::parse_list("  ,  ").is_err());
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in PartitionPolicy::ALL {
+            assert_eq!(PartitionPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(
+            PartitionPolicy::parse_list("all").unwrap(),
+            PartitionPolicy::ALL.to_vec()
+        );
+        assert_eq!(
+            PartitionPolicy::parse_list("even,search,even").unwrap(),
+            vec![PartitionPolicy::Even, PartitionPolicy::Search]
+        );
+        assert!(PartitionPolicy::parse_list("fair").is_err());
+    }
+
+    #[test]
+    fn even_and_weighted_shares_conserve_the_wafer() {
+        let parent = HwConfig::mozart_wafer(DramKind::Hbm2);
+        let cfg = tiny(0);
+        let even = even_shares(cfg.tenants.len(), &parent);
+        assert_eq!(even.iter().sum::<usize>(), parent.n_groups);
+        assert!(even.iter().all(|&s| s >= 1));
+        let mut heavy = cfg.tenants.clone();
+        heavy[1] = TenantSpec {
+            model: ModelId::TinyMoE,
+            kind: TenantKind::Serve {
+                load_rps: 300.0,
+                slo_ms: 50.0,
+            },
+        };
+        let w = weighted_shares(&heavy, &parent);
+        assert_eq!(w.iter().sum::<usize>(), parent.n_groups);
+        assert!(w[1] > w[0], "heavier tenant should own more groups: {w:?}");
+    }
+
+    #[test]
+    fn seeded_share_operators_are_reproducible() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let sa = random_shares(&mut a, 3, 8);
+        let sb = random_shares(&mut b, 3, 8);
+        assert_eq!(sa, sb);
+        assert_eq!(sa.iter().sum::<usize>(), 8);
+        let (mut ma, mut mb) = (sa.clone(), sb);
+        mutate_shares(&mut a, &mut ma);
+        mutate_shares(&mut b, &mut mb);
+        assert_eq!(ma, mb);
+        assert_eq!(ma.iter().sum::<usize>(), 8);
+        let ca = crossover_shares(&mut a, &sa, &ma, 8);
+        let cb = crossover_shares(&mut b, &sa, &ma, 8);
+        assert_eq!(ca, cb);
+        assert_eq!(ca.iter().sum::<usize>(), 8);
+        assert!(ca.iter().all(|&s| s >= 1));
+    }
+
+    #[test]
+    fn run_emits_validated_points_and_a_frontier() {
+        let out = run(&tiny(1));
+        assert_eq!(out.policies.len(), 2);
+        assert!(!out.points.is_empty());
+        for p in &out.points {
+            assert_eq!(p.tenants.len(), 2);
+            assert!(p.feasible, "unbounded budget cannot be infeasible");
+            let tr = p.trace.as_ref().expect("feasible point carries a trace");
+            tr.validate(&out.parent).expect("oracle");
+            assert!(p.power_w > 0.0);
+            assert_eq!(p.tenants[0].kind, "train");
+            assert_eq!(p.tenants[1].kind, "serve");
+            assert!(p.tenants[0].tokens_per_s > 0.0);
+        }
+        assert!(!out.frontier.is_empty());
+        for &i in &out.frontier {
+            assert!(i < out.points.len());
+        }
+        let md = out.render_markdown();
+        assert!(md.contains("policies"));
+        assert!(md.contains("frontier:"));
+        let js = out.to_json().render_pretty();
+        for key in [
+            "\"artifact\": \"tenants\"",
+            "\"oracle\": \"validated\"",
+            "\"power_budget_w\"",
+            "\"worst_slo_violation\"",
+            "\"slo_violation\"",
+            "\"chiplet_owner\"",
+            "\"frontier\"",
+            "\"seed\": \"13\"",
+        ] {
+            assert!(js.contains(key), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn over_budget_partitions_are_reported_infeasible_without_traces() {
+        let mut cfg = tiny(0);
+        cfg.budget_w = 1e-3; // nothing fits
+        let out = run(&cfg);
+        assert!(out.points.iter().all(|p| !p.feasible && p.trace.is_none()));
+        assert!(out.frontier.is_empty());
+        assert!(out.policies.iter().all(|p| !p.feasible));
+    }
+}

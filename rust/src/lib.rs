@@ -7,9 +7,11 @@
 //!
 //! - **L3 (this crate)**: the coordinator — the paper's expert clustering /
 //!   allocation / all-to-all / fine-grained-scheduling algorithms, the
-//!   wafer-scale platform's discrete-event simulator, the report generators
-//!   for every table and figure of the paper, and the PJRT runtime that
-//!   executes real AOT-compiled MoE training steps.
+//!   wafer-scale platform's discrete-event simulator, the multi-tenant
+//!   wafer partitioner with its partition-isolation oracle
+//!   (`coordinator::tenants`), the report generators for every table and
+//!   figure of the paper, and the PJRT runtime that executes real
+//!   AOT-compiled MoE training steps.
 //! - **L2** (`python/compile/model.py`): the JAX MoE transformer, lowered
 //!   once to HLO text by `python/compile/aot.py`.
 //! - **L1** (`python/compile/kernels/`): Pallas kernels for the expert-FFN

@@ -20,6 +20,7 @@ use mozart::coordinator::sweep::{
     self, cell_config, cell_config_sched, parallel_map_with, run_cells_seq, run_cells_sched,
     run_cells_with, Cell, SweepOptions,
 };
+use mozart::coordinator::tenants::{self, PartitionPolicy, TenantSpec, TenantsConfig};
 use mozart::report::{self, ReportOpts};
 use mozart::sim::serve::BatchClose;
 use mozart::testkit::bench;
@@ -28,9 +29,9 @@ use mozart::util::cli::Args;
 use mozart::util::json::Json;
 
 /// Every dispatchable subcommand, in help order.
-const SUBCOMMANDS: [&str; 10] = [
-    "report", "simulate", "layout", "bench", "explore", "degrade", "serve", "train",
-    "platform", "help",
+const SUBCOMMANDS: [&str; 11] = [
+    "report", "simulate", "layout", "bench", "explore", "degrade", "serve", "tenants",
+    "train", "platform", "help",
 ];
 
 /// The full usage text (`mozart help`). Documents every subcommand and every
@@ -60,8 +61,12 @@ COMMANDS:
                   checks streaming reproduces the default path bit for bit.
                   The serve grid times a short saturation sweep (simulated
                   requests/second, sequential vs parallel load points,
-                  bit-identical by construction):
-                  [--grid table3|appendix|explore|search|degrade|sched|serve|all]
+                  bit-identical by construction). The tenants grid times a
+                  small two-tenant partition sweep sequentially and in
+                  parallel, bailing if any per-tenant metric diverges by a
+                  bit:
+                  [--grid table3|appendix|explore|search|degrade|sched|serve
+                   |tenants|all]
                   [--iters N]
                   [--seed N] [--threads N] [--reps N] [--out BENCH_sweep.json]
   explore         design-space exploration: enumerate or search a hardware
@@ -171,6 +176,37 @@ COMMANDS:
                   [--no-eval-cache] [--no-delta-retime] [--cache-file FILE]
                   [--iters N] [--seed N] [--threads N]
                   [--out SERVE_saturation.json]
+  tenants         multi-tenant wafer partitioning: split the chiplet grid
+                  among N tenants — each owns a contiguous run of switch
+                  groups (the partition unit: a group's NoP trunk and DRAM
+                  channel are never shared) — evaluate every tenant on its
+                  carved sub-platform (training tenants run the step
+                  simulator; serving tenants get their own continuous-
+                  batching queue with per-tenant SLO accounting), sweep the
+                  partition policies under a shared package power budget,
+                  and write a TENANTS_*.json artifact with the feasible
+                  Pareto frontier over (worst-tenant SLO violation, total
+                  throughput, power). Every emitted partition passes the
+                  partition-isolation oracle unconditionally: exclusive
+                  chiplet ownership, contiguous NoP subtrees, resource
+                  conservation against the parent wafer, power within
+                  budget — and a single tenant owning the whole wafer
+                  reproduces the un-partitioned simulate/serve paths bit
+                  for bit. --tenant is a comma-separated list of
+                  train:MODEL:METHOD:WEIGHT and serve:MODEL:LOAD_RPS:SLO_MS
+                  specs; --policies picks from
+                  even|weighted|slo-greedy|search|all; --power-budget caps
+                  aggregate mean power in watts (0 = unbounded);
+                  --population/--generations size the search policy's
+                  NSGA-II over the share vector:
+                  [--tenant train:olmoe:c:1,serve:olmoe:100:50]
+                  [--policies all] [--power-budget 0]
+                  [--duration S] [--seq N] [--dram hbm2|ssd]
+                  [--sched streaming|list|heft|greedy]
+                  [--population N] [--generations N]
+                  [--no-eval-cache] [--no-delta-retime] [--cache-file FILE]
+                  [--iters N] [--seed N] [--threads N]
+                  [--out TENANTS_partition.json]
   train           real end-to-end training of the tiny MoE via PJRT:
                   [--steps N] [--artifacts artifacts/] [--log-every N]
                   [--seed N]
@@ -188,6 +224,7 @@ fn main() -> Result<()> {
         "explore" => cmd_explore(&args),
         "degrade" => cmd_degrade(&args),
         "serve" => cmd_serve(&args),
+        "tenants" => cmd_tenants(&args),
         "train" => cmd_train(&args),
         "platform" => cmd_platform(),
         "help" | "--help" => {
@@ -702,6 +739,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `mozart tenants`: multi-tenant wafer partitioning — carve the chiplet
+/// grid among the declared tenants under each partition policy, score the
+/// fleet on (worst-tenant SLO violation, total throughput, power), validate
+/// every emitted partition against the isolation oracle, and write a
+/// `TENANTS_*.json` artifact.
+fn cmd_tenants(args: &Args) -> Result<()> {
+    let mut cfg = TenantsConfig::paper_default();
+    if let Some(spec) = args.get("tenant") {
+        cfg.tenants = TenantSpec::parse_list(spec)
+            .map_err(|e| anyhow::anyhow!("bad --tenant: {e}"))?;
+    }
+    cfg.policies = PartitionPolicy::parse_list(args.get_or("policies", "all"))
+        .map_err(|e| anyhow::anyhow!("bad --policies: {e}"))?;
+    // 0 spells "unbounded" (the internal representation is +inf)
+    let budget: f64 = args.get_parse("power-budget", 0.0)?;
+    if !(budget.is_finite() && budget >= 0.0) {
+        bail!("--power-budget must be >= 0 watts (0 = unbounded), got {budget}");
+    }
+    cfg.budget_w = if budget == 0.0 { f64::INFINITY } else { budget };
+    cfg.dram = parse_dram(args)?;
+    cfg.sched = parse_sched(args)?;
+    cfg.seq_len = args.get_parse("seq", cfg.seq_len)?;
+    cfg.duration_s = args.get_parse("duration", cfg.duration_s)?;
+    if !(cfg.duration_s.is_finite() && cfg.duration_s > 0.0) {
+        bail!("--duration must be finite and > 0 seconds, got {}", cfg.duration_s);
+    }
+    cfg.iters = args.get_parse("iters", cfg.iters)?;
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    cfg.threads = args.get_parse("threads", 0)?;
+    cfg.search_population = args.get_parse("population", cfg.search_population)?;
+    cfg.search_generations = args.get_parse("generations", cfg.search_generations)?;
+    cfg.eval = parse_eval(args);
+
+    let outcome = tenants::run(&cfg);
+    println!("{}", outcome.render_markdown());
+    let out_path = args.get_or("out", "TENANTS_partition.json");
+    std::fs::write(out_path, outcome.to_json().render_pretty())
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
 /// `mozart bench`: time the sweep, explore, and guided-search grids through
 /// the sequential reference path and the parallel executor, verify the
 /// results are bit-identical, and write a machine-readable
@@ -722,6 +801,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let mut bench_degrade = false;
     let mut bench_sched = false;
     let mut bench_serve = false;
+    let mut bench_tenants = false;
     match grid.as_str() {
         "table3" => grids.push(("table3", sweep::table3_cells())),
         "appendix" => grids.push(("appendix_seq128", sweep::appendix_cells(128))),
@@ -730,6 +810,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "degrade" => bench_degrade = true,
         "sched" => bench_sched = true,
         "serve" => bench_serve = true,
+        "tenants" => bench_tenants = true,
         "all" => {
             grids.push(("table3", sweep::table3_cells()));
             grids.push(("appendix_seq128", sweep::appendix_cells(128)));
@@ -738,11 +819,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
             bench_degrade = true;
             bench_sched = true;
             bench_serve = true;
+            bench_tenants = true;
         }
         other => {
             bail!(
                 "unknown --grid {other} \
-                 (table3|appendix|explore|search|degrade|sched|serve|all)"
+                 (table3|appendix|explore|search|degrade|sched|serve|tenants|all)"
             )
         }
     }
@@ -1181,6 +1263,70 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ]));
         if !identical {
             bail!("parallel serve diverged from sequential");
+        }
+    }
+
+    if bench_tenants {
+        // multi-tenant hot path: a two-tenant partition sweep over the
+        // deterministic policies; sequential vs parallel tenant evaluation
+        // must agree bit for bit (tenant order is fixed by the share map)
+        let mut tcfg = TenantsConfig::paper_default();
+        tcfg.tenants = TenantSpec::parse_list("train:tiny:c:1,serve:tiny:60:50")
+            .map_err(|e| anyhow::anyhow!("tenants bench specs: {e}"))?;
+        tcfg.policies = vec![PartitionPolicy::Even, PartitionPolicy::Weighted];
+        tcfg.seq_len = 64;
+        tcfg.duration_s = 0.5;
+        tcfg.iters = iters;
+        tcfg.seed = seed;
+        let mut seq_cfg = tcfg.clone();
+        seq_cfg.threads = 1;
+        let mut par_cfg = tcfg;
+        par_cfg.threads = threads;
+
+        let mut seq_out = None;
+        let seq = bench("tenants[partition sweep]: sequential", reps, || {
+            seq_out = Some(tenants::run(&seq_cfg));
+        });
+        let mut par_out = None;
+        let par = bench("tenants[partition sweep]: parallel", reps, || {
+            par_out = Some(tenants::run(&par_cfg));
+        });
+
+        let a = seq_out.expect("reps >= 1 guarantees one sequential pass");
+        let b = par_out.expect("reps >= 1 guarantees one parallel pass");
+        let n = a.points.len();
+        let n_workers =
+            SweepOptions { threads }.effective_threads(par_cfg.tenants.len());
+        let identical = a.points.len() == b.points.len()
+            && a.points.iter().zip(b.points.iter()).all(|(x, y)| {
+                x.shares == y.shares
+                    && x.power_w.to_bits() == y.power_w.to_bits()
+                    && x.objectives
+                        .iter()
+                        .zip(y.objectives.iter())
+                        .all(|(p, q)| p.to_bits() == q.to_bits())
+                    && x.tenants == y.tenants
+            });
+        let speedup = seq.mean_s / par.mean_s;
+        println!(
+            "  -> tenants: {:.2}x speedup, {:.2} partitions/s parallel, \
+             bit-identical: {identical}\n",
+            speedup,
+            n as f64 / par.mean_s
+        );
+        grid_reports.push(Json::obj([
+            ("name", Json::str("tenants_partition")),
+            ("cells", Json::int(n)),
+            ("workers", Json::int(n_workers)),
+            ("sequential", seq.to_json()),
+            ("parallel", par.to_json()),
+            ("cells_per_s_sequential", Json::num(n as f64 / seq.mean_s)),
+            ("cells_per_s_parallel", Json::num(n as f64 / par.mean_s)),
+            ("speedup_parallel_vs_sequential", Json::num(speedup)),
+            ("bit_identical", Json::Bool(identical)),
+        ]));
+        if !identical {
+            bail!("parallel tenants diverged from sequential");
         }
     }
 

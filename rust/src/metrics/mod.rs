@@ -2,7 +2,8 @@
 //! profiler (paper Appendix C.1, Figures 10-13), the Pareto-dominance
 //! analysis (batch + streaming archive) behind the design-space explorer
 //! and the guided search strategies, and the serving SLO metrics
-//! (streaming P² percentiles, Little's-law consistency).
+//! (streaming P² percentiles, Little's-law consistency, per-tenant SLO
+//! attainment and the fleet objectives of the multi-tenant partitioner).
 
 pub mod energy;
 pub mod pareto;
@@ -18,4 +19,4 @@ pub use pareto::{
     non_dominated_sort, pareto_frontier,
 };
 pub use roofline::{profile_decoder_layer, Olmo2Scale, RooflineRow};
-pub use slo::{littles_law, LittlesLaw, P2Quantile};
+pub use slo::{fleet_objectives, littles_law, slo_violation, LittlesLaw, P2Quantile};

@@ -207,6 +207,30 @@ pub fn littles_law(spans: &[(f64, f64)], horizon_s: f64) -> LittlesLaw {
     }
 }
 
+/// Relative SLO violation of a measured tail latency: `max(0, (p99 −
+/// slo) / slo)`. Zero means the tenant met its objective; `1.0` means the
+/// tail ran at twice the agreed latency. Training tenants (no latency
+/// SLO) report `0.0` by convention, so fleet aggregation can treat every
+/// tenant uniformly.
+pub fn slo_violation(p99_ms: f64, slo_ms: f64) -> f64 {
+    assert!(slo_ms > 0.0, "SLO must be > 0, got {slo_ms}");
+    ((p99_ms - slo_ms) / slo_ms).max(0.0)
+}
+
+/// Fleet objectives of one multi-tenant partition, in the minimized
+/// orientation the Pareto machinery expects: worst per-tenant SLO
+/// violation, negated total token throughput (so more is better), and
+/// aggregate mean package power. This triple is the frontier space of the
+/// `TENANTS_*.json` artifact.
+pub fn fleet_objectives(
+    violations: &[f64],
+    total_tokens_per_s: f64,
+    power_w: f64,
+) -> [f64; 3] {
+    let worst = violations.iter().copied().fold(0.0f64, f64::max);
+    [worst, -total_tokens_per_s, power_w]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -305,5 +329,23 @@ mod tests {
         let ll = littles_law(&[], 1.0);
         assert_eq!(ll.rel_err, 0.0);
         assert_eq!(ll.l, 0.0);
+    }
+
+    #[test]
+    fn slo_violation_is_zero_within_slo_and_relative_beyond() {
+        assert_eq!(slo_violation(30.0, 50.0), 0.0);
+        assert_eq!(slo_violation(50.0, 50.0), 0.0);
+        assert!((slo_violation(100.0, 50.0) - 1.0).abs() < 1e-12);
+        assert!((slo_violation(75.0, 50.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_objectives_orientation() {
+        let o = fleet_objectives(&[0.0, 0.4, 0.1], 1000.0, 250.0);
+        assert_eq!(o[0], 0.4, "worst violation");
+        assert_eq!(o[1], -1000.0, "throughput is negated for minimization");
+        assert_eq!(o[2], 250.0);
+        // no tenants (degenerate): worst violation is zero, not NaN
+        assert_eq!(fleet_objectives(&[], 0.0, 0.0)[0], 0.0);
     }
 }

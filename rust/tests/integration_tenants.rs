@@ -1,0 +1,259 @@
+//! Multi-tenant partitioning contracts at the integration level: the
+//! partition-isolation oracle rejects every corruption class with its own
+//! clause (mutation tests), a single tenant owning the whole wafer is
+//! bit-identical to the un-partitioned simulate / serve paths, identical
+//! tenants on symmetric halves measure identically, and the policy sweep
+//! is bit-identical across worker-thread counts.
+
+use mozart::config::{DramKind, HwConfig, Method, ModelId};
+use mozart::coordinator::cache::EvalSession;
+use mozart::coordinator::run_experiment;
+use mozart::coordinator::serve::{serve_cell_eval, ServeEvalSpec};
+use mozart::coordinator::tenants::{
+    self, build_trace, tenant_base_config, PartitionEval, PartitionPolicy, PartitionTrace,
+    TenantKind, TenantMetrics, TenantSpec, TenantsConfig,
+};
+use mozart::trace::arrivals::{ArrivalProcess, RequestShape};
+
+fn train_spec(weight: f64) -> TenantSpec {
+    TenantSpec {
+        model: ModelId::TinyMoE,
+        kind: TenantKind::Train {
+            method: Method::MozartC,
+            weight,
+        },
+    }
+}
+
+fn serve_spec(load_rps: f64, slo_ms: f64) -> TenantSpec {
+    TenantSpec {
+        model: ModelId::TinyMoE,
+        kind: TenantKind::Serve { load_rps, slo_ms },
+    }
+}
+
+fn tiny(tenants: Vec<TenantSpec>, policies: Vec<PartitionPolicy>, threads: usize) -> TenantsConfig {
+    TenantsConfig {
+        tenants,
+        policies,
+        seq_len: 64,
+        duration_s: 0.5,
+        iters: 1,
+        seed: 13,
+        threads,
+        ..TenantsConfig::paper_default()
+    }
+}
+
+/// A structurally valid two-tenant trace built without any simulation:
+/// synthetic per-tenant metrics over the real wafer's `[2, 2]` slices.
+/// Every mutation test starts from this trace (asserted valid first) and
+/// corrupts exactly one clause.
+fn synthetic_trace() -> (HwConfig, PartitionTrace) {
+    let parent = HwConfig::mozart_wafer(DramKind::Hbm2);
+    let cfg = tiny(
+        vec![train_spec(1.0), serve_spec(80.0, 50.0)],
+        vec![PartitionPolicy::Even],
+        1,
+    );
+    let shares = vec![2usize, 2];
+    let slices = parent.partition_slices(&shares).expect("realizable");
+    let tenants: Vec<TenantMetrics> = cfg
+        .tenants
+        .iter()
+        .zip(slices.iter())
+        .map(|(spec, slice)| TenantMetrics {
+            label: spec.label(),
+            kind: "synthetic",
+            groups: slice.groups,
+            latency_ms: 1.0,
+            p99_ms: 2.0,
+            goodput_rps: 10.0,
+            slo_ms: 50.0,
+            slo_violation: 0.0,
+            tokens_per_s: 100.0,
+            power_w: 120.0,
+        })
+        .collect();
+    let eval = PartitionEval {
+        shares: shares.clone(),
+        slices,
+        tenants,
+        objectives: [0.0, -200.0, 240.0],
+        power_w: 240.0,
+        feasible: true,
+    };
+    let mut cfg = cfg;
+    cfg.budget_w = 500.0;
+    let trace = build_trace("synthetic", &cfg, &parent, &eval);
+    trace.validate(&parent).expect("uncorrupted trace is valid");
+    (parent, trace)
+}
+
+fn rejects_with(trace: &PartitionTrace, parent: &HwConfig, needle: &str) {
+    let err = trace
+        .validate(parent)
+        .expect_err("corrupted trace must be rejected")
+        .to_string();
+    assert!(
+        err.contains(needle),
+        "expected the `{needle}` clause to fire, got: {err}"
+    );
+}
+
+/// Mutation 1: a chiplet pushed into a second tenant's assignment trips
+/// the exclusive-assignment clause.
+#[test]
+fn oracle_rejects_a_double_assigned_chiplet() {
+    let (parent, mut tr) = synthetic_trace();
+    let stolen = tr.assignments[1].chiplets[0];
+    tr.assignments[0].chiplets.push(stolen);
+    rejects_with(&tr, &parent, "more than one tenant");
+}
+
+/// Mutation 2: swapping one chiplet between the tenants (owner map kept
+/// consistent, so the exclusivity clause stays quiet) breaks the
+/// contiguous whole-group NoP-subtree requirement.
+#[test]
+fn oracle_rejects_a_non_contiguous_partition() {
+    let (parent, mut tr) = synthetic_trace();
+    let a = *tr.assignments[0].chiplets.last().unwrap();
+    let b = tr.assignments[1].chiplets[0];
+    *tr.assignments[0].chiplets.last_mut().unwrap() = b;
+    tr.assignments[1].chiplets[0] = a;
+    tr.chiplet_owner[a] = Some(1);
+    tr.chiplet_owner[b] = Some(0);
+    rejects_with(&tr, &parent, "contiguous");
+}
+
+/// Mutation 3: inflating one slice's DRAM stacks breaks resource
+/// conservation against the parent wafer.
+#[test]
+fn oracle_rejects_resource_sum_drift() {
+    let (parent, mut tr) = synthetic_trace();
+    tr.assignments[0].slice.group_dram_stacks += 1;
+    rejects_with(&tr, &parent, "conservation violated");
+}
+
+/// Mutation 4: shrinking the budget below the aggregate draw trips the
+/// package power clause.
+#[test]
+fn oracle_rejects_power_over_budget() {
+    let (parent, mut tr) = synthetic_trace();
+    tr.budget_w = tr.power_w / 2.0;
+    rejects_with(&tr, &parent, "exceeds the package power budget");
+}
+
+/// Mutation 5: an assignment claiming the wrong tenant index is a stale
+/// tenant id.
+#[test]
+fn oracle_rejects_a_stale_tenant_id() {
+    let (parent, mut tr) = synthetic_trace();
+    tr.assignments[1].tenant = 7;
+    rejects_with(&tr, &parent, "stale tenant id");
+}
+
+/// Differential: one training tenant owning 100% of the wafer carves a
+/// fingerprint-identical platform, so its latency is bit-identical to the
+/// un-partitioned `run_experiment` path.
+#[test]
+fn single_train_tenant_reproduces_the_unpartitioned_simulation() {
+    let cfg = tiny(vec![train_spec(1.0)], vec![PartitionPolicy::Even], 1);
+    let out = tenants::run(&cfg);
+    assert_eq!(out.points.len(), 1);
+    let point = &out.points[0];
+    assert_eq!(point.shares, vec![out.parent.n_groups]);
+    let trace = point.trace.as_ref().expect("feasible point carries a trace");
+    trace.validate(&out.parent).expect("oracle");
+
+    let base = tenant_base_config(&cfg.tenants[0], &out.parent, &cfg);
+    let r = run_experiment(&base);
+    assert_eq!(
+        point.tenants[0].latency_ms.to_bits(),
+        (r.latency * 1e3).to_bits(),
+        "whole-wafer tenant latency diverged from run_experiment"
+    );
+    assert_eq!(
+        point.tenants[0].power_w.to_bits(),
+        r.energy.mean_power_w(r.latency).to_bits()
+    );
+}
+
+/// Differential: one serving tenant owning 100% of the wafer reproduces
+/// the `serve_cell_eval` search path bit-identically — same service
+/// model, same seeded arrival stream, same measured p99 and goodput.
+#[test]
+fn single_serve_tenant_reproduces_the_unpartitioned_serving_path() {
+    let cfg = tiny(vec![serve_spec(80.0, 50.0)], vec![PartitionPolicy::Even], 1);
+    let out = tenants::run(&cfg);
+    assert_eq!(out.points.len(), 1);
+    let t = &out.points[0].tenants[0];
+
+    let base = tenant_base_config(&cfg.tenants[0], &out.parent, &cfg);
+    let session = EvalSession::new(cfg.eval.clone());
+    let mut pool = session.new_pool();
+    let mut ctx = session.ctx(&mut pool);
+    let spec = ServeEvalSpec {
+        arrivals: ArrivalProcess::Poisson { rate: 80.0 },
+        shape: RequestShape::default(),
+        duration_s: cfg.duration_s,
+        slo_ms: 50.0,
+        params: cfg.params.clone(),
+    };
+    let m = serve_cell_eval(|ec| ctx.run(ec).latency, &base, &spec);
+    assert_eq!(
+        t.p99_ms.to_bits(),
+        m.p99_ms.to_bits(),
+        "whole-wafer serving tenant p99 diverged from serve_cell_eval"
+    );
+    assert_eq!(t.goodput_rps.to_bits(), m.goodput_rps.to_bits());
+}
+
+/// Two identical serving tenants on the symmetric halves of the wafer see
+/// fingerprint-identical platforms and the same seeded traffic, so their
+/// per-tenant metrics are identical.
+#[test]
+fn identical_tenants_on_symmetric_halves_measure_identically() {
+    let cfg = tiny(
+        vec![serve_spec(60.0, 50.0), serve_spec(60.0, 50.0)],
+        vec![PartitionPolicy::Even],
+        1,
+    );
+    let out = tenants::run(&cfg);
+    let point = &out.points[0];
+    assert_eq!(point.shares, vec![2, 2]);
+    assert_eq!(
+        point.tenants[0], point.tenants[1],
+        "symmetric tenants must be indistinguishable"
+    );
+}
+
+/// The whole policy sweep is bit-identical across worker-thread counts:
+/// per-tenant evaluations are seeded by the tenant, not by scheduling
+/// order, so `--threads` affects wall-clock only.
+#[test]
+fn tenants_sweep_is_bit_identical_across_threads() {
+    let specs = vec![train_spec(1.0), serve_spec(60.0, 50.0)];
+    let policies = vec![
+        PartitionPolicy::Even,
+        PartitionPolicy::Weighted,
+        PartitionPolicy::SloGreedy,
+    ];
+    let seq = tenants::run(&tiny(specs.clone(), policies.clone(), 1));
+    let par = tenants::run(&tiny(specs, policies, 4));
+    assert_eq!(seq.points.len(), par.points.len());
+    for (x, y) in seq.points.iter().zip(par.points.iter()) {
+        assert_eq!(x.shares, y.shares);
+        assert_eq!(x.feasible, y.feasible);
+        assert_eq!(x.power_w.to_bits(), y.power_w.to_bits());
+        for k in 0..3 {
+            assert_eq!(x.objectives[k].to_bits(), y.objectives[k].to_bits());
+        }
+        assert_eq!(x.tenants, y.tenants, "per-tenant metrics diverged");
+    }
+    assert_eq!(seq.frontier, par.frontier);
+    for (x, y) in seq.policies.iter().zip(par.policies.iter()) {
+        assert_eq!(x.policy, y.policy);
+        assert_eq!(x.shares, y.shares);
+    }
+}

@@ -689,3 +689,155 @@ fn prop_makespan_never_beats_the_dependency_critical_path() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_partition_policies_conserve_the_wafer() {
+    // every share-vector generator (even, weighted, random, and the search
+    // operators mutate/crossover) hands out exactly the wafer's groups with
+    // every tenant kept alive, and the derived slices conserve DRAM stacks
+    // and attention tiles against the parent
+    use mozart::config::{DramKind, HwConfig, Method, ModelId};
+    use mozart::coordinator::tenants::{
+        crossover_shares, even_shares, mutate_shares, random_shares, weighted_shares, TenantKind,
+        TenantSpec,
+    };
+    forall("tenant-shares-conserve", 60, |rng| {
+        let parent = HwConfig::mozart_wafer(DramKind::Hbm2);
+        let n = 1 + rng.below(parent.n_groups);
+        let specs: Vec<TenantSpec> = (0..n)
+            .map(|i| TenantSpec {
+                model: ModelId::TinyMoE,
+                kind: if i % 2 == 0 {
+                    TenantKind::Train {
+                        method: Method::MozartC,
+                        weight: 0.25 + rng.f64() * 4.0,
+                    }
+                } else {
+                    TenantKind::Serve {
+                        load_rps: 10.0 + rng.f64() * 200.0,
+                        slo_ms: 20.0 + rng.f64() * 80.0,
+                    }
+                },
+            })
+            .collect();
+        let mut op_rng = Rng::new(rng.next_u64());
+        let mut mutated = random_shares(&mut op_rng, n, parent.n_groups);
+        mutate_shares(&mut op_rng, &mut mutated);
+        let pa = random_shares(&mut op_rng, n, parent.n_groups);
+        let pb = random_shares(&mut op_rng, n, parent.n_groups);
+        let child = crossover_shares(&mut op_rng, &pa, &pb, parent.n_groups);
+        for shares in [
+            even_shares(n, &parent),
+            weighted_shares(&specs, &parent),
+            random_shares(&mut op_rng, n, parent.n_groups),
+            mutated,
+            child,
+        ] {
+            prop_assert!(shares.len() == n, "share arity {shares:?} for {n} tenants");
+            let total: usize = shares.iter().sum();
+            prop_assert!(
+                total == parent.n_groups,
+                "no-idle policy leaked groups: {shares:?} sums to {total}"
+            );
+            prop_assert!(
+                shares.iter().all(|&s| s >= 1),
+                "a tenant was starved of groups: {shares:?}"
+            );
+            let slices = parent.partition_slices(&shares)?;
+            let stacks: usize = slices.iter().map(|s| s.group_dram_stacks).sum();
+            let tiles: usize = slices.iter().map(|s| s.attn_tiles).sum();
+            prop_assert!(
+                stacks == parent.mem.group_dram_stacks,
+                "DRAM stacks not conserved: {stacks} != {}",
+                parent.mem.group_dram_stacks
+            );
+            prop_assert!(
+                tiles == parent.attn_chiplet.tiles,
+                "attention tiles not conserved: {tiles} != {}",
+                parent.attn_chiplet.tiles
+            );
+            prop_assert!(
+                slices.iter().all(|s| s.group_dram_stacks >= 1 && s.attn_tiles >= 1),
+                "a slice starves a resource class: {slices:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slo_greedy_never_worse_than_even_on_worst_violation() {
+    // slo-greedy starts from the even partition and only accepts moves that
+    // strictly improve (worst violation, -throughput) lexicographically, so
+    // its worst-tenant SLO violation can never exceed even's
+    use mozart::config::ModelId;
+    use mozart::coordinator::tenants::{
+        self, PartitionPolicy, TenantKind, TenantSpec, TenantsConfig,
+    };
+    forall("slo-greedy-dominates-even", 2, |rng| {
+        let specs = vec![
+            TenantSpec {
+                model: ModelId::TinyMoE,
+                kind: TenantKind::Serve {
+                    load_rps: 40.0 + rng.f64() * 120.0,
+                    slo_ms: 5.0 + rng.f64() * 45.0,
+                },
+            },
+            TenantSpec {
+                model: ModelId::TinyMoE,
+                kind: TenantKind::Serve {
+                    load_rps: 40.0 + rng.f64() * 120.0,
+                    slo_ms: 5.0 + rng.f64() * 45.0,
+                },
+            },
+        ];
+        let cfg = TenantsConfig {
+            tenants: specs,
+            policies: vec![PartitionPolicy::Even, PartitionPolicy::SloGreedy],
+            seq_len: 64,
+            duration_s: 0.5,
+            iters: 1,
+            seed: rng.next_u64(),
+            threads: 1,
+            ..TenantsConfig::paper_default()
+        };
+        let out = tenants::run(&cfg);
+        let even = &out.policies[0];
+        let greedy = &out.policies[1];
+        prop_assert!(
+            greedy.objectives[0] <= even.objectives[0],
+            "slo-greedy worst violation {} > even's {}",
+            greedy.objectives[0],
+            even.objectives[0]
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_seeded_share_operators_are_bit_reproducible() {
+    // identically-seeded mutation/crossover streams replay identically —
+    // the search gene operators are pure functions of (seed, parents)
+    use mozart::config::{DramKind, HwConfig};
+    use mozart::coordinator::tenants::{crossover_shares, mutate_shares, random_shares};
+    forall("share-operators-reproducible", 40, |rng| {
+        let parent = HwConfig::mozart_wafer(DramKind::Hbm2);
+        let n = 1 + rng.below(parent.n_groups);
+        let seed = rng.next_u64();
+        let replay = |seed: u64| {
+            let mut r = Rng::new(seed);
+            let mut s = random_shares(&mut r, n, parent.n_groups);
+            for _ in 0..4 {
+                mutate_shares(&mut r, &mut s);
+            }
+            let other = random_shares(&mut r, n, parent.n_groups);
+            let child = crossover_shares(&mut r, &s, &other, parent.n_groups);
+            (s, other, child)
+        };
+        prop_assert!(
+            replay(seed) == replay(seed),
+            "seeded share operators diverged on replay (seed {seed})"
+        );
+        Ok(())
+    });
+}
